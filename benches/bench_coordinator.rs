@@ -1,0 +1,49 @@
+//! Hot-path benchmark: coordinator logic (batch planning, request packing,
+//! stats) and the end-to-end serving rate through the PJRT runtime.
+
+use std::path::PathBuf;
+
+use descnet::coordinator::server::{synthetic_image, ServeOptions, Server};
+use descnet::coordinator::BatchPolicy;
+use descnet::util::bench::{throughput, time};
+use descnet::util::prng::Prng;
+
+fn main() {
+    // Pure policy throughput.
+    let policy = BatchPolicy::new(vec![1, 4], 2e-3);
+    let r = time("batch planning x10k queues", 50, || {
+        let mut acc = 0usize;
+        for pending in 0..10_000usize {
+            acc += policy.plan(pending % 64, pending % 7 == 0).len();
+        }
+        std::hint::black_box(acc);
+    });
+    println!("    -> {}", throughput(&r, 10_000));
+
+    let mut rng = Prng::new(2);
+    time("synthetic image generation x100", 20, || {
+        for _ in 0..100 {
+            std::hint::black_box(synthetic_image(&mut rng, 28));
+        }
+    });
+
+    // End-to-end serving rate (needs artifacts).
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built; skipping end-to-end serve bench");
+        return;
+    }
+    for (label, staged) in [("serve 32 reqs (full)", false), ("serve 32 reqs (staged)", true)] {
+        let opts = ServeOptions {
+            artifacts_dir: dir.clone(),
+            requests: 32,
+            batch_max: 4,
+            stage_pipeline: staged,
+            seed: 3,
+        };
+        let r = time(label, 2, || {
+            std::hint::black_box(Server::run_synthetic(&opts).expect("serve"));
+        });
+        println!("    -> {:.1} req/s end-to-end", 32.0 / r.mean_s);
+    }
+}

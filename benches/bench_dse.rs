@@ -1,0 +1,73 @@
+//! Hot-path benchmark: DSE enumeration + evaluation throughput (the L3
+//! optimization target of EXPERIMENTS.md section Perf).  Reports configs/s
+//! and thread scaling for both networks.
+
+use descnet::config::{Accelerator, Technology};
+use descnet::dataflow::profile_network;
+use descnet::dse;
+use descnet::model::{capsnet_mnist, deepcaps_cifar10};
+use descnet::dse::heuristic::{anneal, AnnealOptions};
+use descnet::util::bench::{throughput, time};
+
+fn main() {
+    let accel = Accelerator::default();
+    let tech = Technology::default();
+
+    for net in [capsnet_mnist(), deepcaps_cifar10()] {
+        let profile = profile_network(&net, &accel);
+        println!("== {} ==", net.name);
+
+        let mut orgs = Vec::new();
+        let r = time(&format!("{} enumerate", net.name), 3, || {
+            orgs = dse::enumerate(&profile);
+        });
+        println!("    -> {} configurations, {}", orgs.len(), throughput(&r, orgs.len()));
+
+        for threads in [1usize, 2, 4, 8] {
+            let r = time(
+                &format!("{} evaluate ({} threads)", net.name, threads),
+                2,
+                || {
+                    std::hint::black_box(dse::evaluate_all(&orgs, &profile, &tech, threads));
+                },
+            );
+            println!("    -> {}", throughput(&r, orgs.len()));
+        }
+
+        let points = dse::evaluate_all(&orgs, &profile, &tech, 8);
+        time(&format!("{} pareto extraction", net.name), 5, || {
+            std::hint::black_box(dse::pareto_indices(&points));
+        });
+        time(&format!("{} per-option selection", net.name), 5, || {
+            std::hint::black_box(dse::select_per_option(&points));
+        });
+
+        // Heuristic (section V-D): speed/quality vs the exhaustive sweep.
+        let hy_opt = points
+            .iter()
+            .filter(|p| p.option().starts_with("HY"))
+            .map(|p| p.energy_j)
+            .fold(f64::INFINITY, f64::min);
+        // Iterations scaled to the space (DeepCaps' HY space is ~11x larger).
+        let mut opts = AnnealOptions::default();
+        opts.iterations = if net.name == "capsnet" { 2_000 } else { 30_000 };
+        let iters_label = opts.iterations / 1000;
+        let mut result = None;
+        let r = time(
+            &format!("{} simulated annealing ({}k iters)", net.name, iters_label),
+            3,
+            || {
+                result = Some(anneal(&profile, &tech, &opts));
+            },
+        );
+        let res = result.unwrap();
+        println!(
+            "    -> best {:.4} mJ vs exhaustive HY optimum {:.4} mJ ({:+.1}%), {} evals in {}",
+            res.best.energy_j * 1e3,
+            hy_opt * 1e3,
+            (res.best.energy_j / hy_opt - 1.0) * 100.0,
+            res.evaluations,
+            descnet::util::units::fmt_time(r.mean_s),
+        );
+    }
+}

@@ -1,0 +1,62 @@
+//! Hot-path benchmark: the per-configuration evaluation pipeline — workload
+//! profiling, SRAM model, coverage, PMU scheduling and the energy rollup —
+//! each timed in isolation so the profile tells which stage dominates the
+//! DSE inner loop.
+
+use descnet::cacti::{Sram, SramConfig};
+use descnet::config::{Accelerator, Technology};
+use descnet::dataflow::profile_network;
+use descnet::dse;
+use descnet::energy;
+use descnet::memory::{cover_op, MemSpec, Organization};
+use descnet::model::{capsnet_mnist, deepcaps_cifar10};
+use descnet::pmu;
+use descnet::util::bench::{throughput, time};
+use descnet::util::units::KIB;
+
+fn main() {
+    let accel = Accelerator::default();
+    let tech = Technology::default();
+
+    time("profile capsnet (9 ops)", 50, || {
+        std::hint::black_box(profile_network(&capsnet_mnist(), &accel));
+    });
+    time("profile deepcaps (31 ops)", 50, || {
+        std::hint::black_box(profile_network(&deepcaps_cifar10(), &accel));
+    });
+
+    let profile = profile_network(&capsnet_mnist(), &accel);
+    let sram = Sram::new(&tech);
+    let r = time("sram evaluate x1000 configs", 20, || {
+        for i in 0..1000u32 {
+            let size = 8 * KIB << (i % 8);
+            std::hint::black_box(sram.evaluate(&SramConfig::new(size, 1 + (i % 3) as usize, 1)));
+        }
+    });
+    println!("    -> {}", throughput(&r, 1000));
+
+    let org = Organization::hy(
+        MemSpec::new(32 * KIB, 2),
+        MemSpec::new(25 * KIB, 2),
+        MemSpec::new(25 * KIB, 4),
+        MemSpec::new(32 * KIB, 2),
+        3,
+    );
+    time("cover_op x9 (one HY org)", 200, || {
+        for op in &profile.ops {
+            std::hint::black_box(cover_op(&org, op));
+        }
+    });
+    time("pmu::evaluate (HY-PG, capsnet)", 100, || {
+        std::hint::black_box(pmu::evaluate(&org, &profile, &tech));
+    });
+    time("energy::evaluate_org (HY-PG, capsnet)", 100, || {
+        std::hint::black_box(energy::evaluate_org(&org, &profile, &tech));
+    });
+    time("energy::per_op_energy (HY-PG, capsnet)", 100, || {
+        std::hint::black_box(energy::per_op_energy(&org, &profile, &tech));
+    });
+    time("hy_shared_size (Algorithm 1 inner)", 200, || {
+        std::hint::black_box(dse::hy_shared_size(&profile, 8 * KIB, 32 * KIB, 16 * KIB));
+    });
+}

@@ -1,0 +1,84 @@
+//! Hot-path benchmark: PJRT execution latency per artifact — the serving
+//! request path (compile once, then per-batch execute).  Skips gracefully
+//! when `make artifacts` has not run.
+
+use std::path::PathBuf;
+
+use descnet::coordinator::server::synthetic_image;
+use descnet::runtime::Runtime;
+use descnet::util::bench::time;
+use descnet::util::prng::Prng;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built; skipping runtime bench");
+        return;
+    }
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let mut rng = Prng::new(1);
+
+    // Startup cost: parse + compile each artifact once.
+    for (net, stage, b) in [
+        ("capsnet", "full", 1usize),
+        ("capsnet", "full", 4),
+        ("capsnet", "conv1", 4),
+        ("capsnet", "primarycaps", 4),
+        ("capsnet", "classcaps", 4),
+    ] {
+        let name = format!("compile {net}/{stage} b{b}");
+        // (load is cached, so time only the first call per artifact)
+        let t = std::time::Instant::now();
+        rt.load_stage(net, stage, b).expect("load");
+        println!(
+            "{:44} {:>12}   (one-time)",
+            name,
+            descnet::util::units::fmt_time(t.elapsed().as_secs_f64())
+        );
+    }
+
+    // Steady-state execution latency.
+    for b in [1usize, 4] {
+        let mut input = Vec::new();
+        for _ in 0..b {
+            input.extend(synthetic_image(&mut rng, 28));
+        }
+        let stage_names: Vec<String> = {
+            let stage = rt.load_stage("capsnet", "full", b).unwrap();
+            let _ = &stage.entry;
+            vec![format!("execute capsnet/full b{b}")]
+        };
+        let stage = rt.load_stage("capsnet", "full", b).unwrap();
+        let r = time(&stage_names[0], 10, || {
+            std::hint::black_box(stage.execute(&input).expect("execute"));
+        });
+        println!(
+            "    -> {:.1} images/s",
+            b as f64 / r.mean_s
+        );
+    }
+
+    // Per-stage split (the Fig 7 measured counterpart).
+    let mut input = Vec::new();
+    for _ in 0..4 {
+        input.extend(synthetic_image(&mut rng, 28));
+    }
+    let h = {
+        let conv1 = rt.load_stage("capsnet", "conv1", 4).unwrap();
+        time("execute capsnet/conv1 b4", 10, || {
+            std::hint::black_box(conv1.execute(&input).unwrap());
+        });
+        conv1.execute(&input).unwrap().remove(0)
+    };
+    let u = {
+        let prim = rt.load_stage("capsnet", "primarycaps", 4).unwrap();
+        time("execute capsnet/primarycaps b4", 10, || {
+            std::hint::black_box(prim.execute(&h).unwrap());
+        });
+        prim.execute(&h).unwrap().remove(0)
+    };
+    let class = rt.load_stage("capsnet", "classcaps", 4).unwrap();
+    time("execute capsnet/classcaps+routing b4", 10, || {
+        std::hint::black_box(class.execute(&u).unwrap());
+    });
+}

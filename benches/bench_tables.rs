@@ -1,0 +1,73 @@
+//! One benchmark per paper table/figure: times the regeneration of every
+//! artifact in the DESIGN.md E-index (the same code paths `descnet report
+//! all` runs), so `cargo bench` both re-produces the paper's evaluation and
+//! reports how long each piece takes.
+
+use descnet::config::SystemConfig;
+use descnet::report::{self, ReportCtx};
+use descnet::util::bench::time;
+
+fn main() {
+    let dir = std::env::temp_dir().join("descnet_bench_tables");
+    let ctx = ReportCtx::new(SystemConfig::default(), &dir);
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+
+    println!("== per-figure/table regeneration (E01-E18) ==");
+    time("E01 fig1  memory utilization (CapsAcc vs TPU)", 20, || {
+        report::fig1(&ctx);
+    });
+    time("E02 fig7  params vs time", 20, || {
+        report::fig7(&ctx);
+    });
+    time("E03 fig9  per-op cycles", 20, || {
+        report::fig9(&ctx);
+    });
+    time("E04 fig10 capsnet usage/accesses", 20, || {
+        report::fig10(&ctx);
+    });
+    time("E05 fig11 deepcaps usage/accesses", 20, || {
+        report::fig11(&ctx);
+    });
+    time("E06 fig12 version (a)/(b) energy", 20, || {
+        report::fig12(&ctx);
+    });
+    time("E07 fig18+table1 capsnet DSE", 3, || {
+        report::dse_scatter(&ctx, "capsnet", threads);
+    });
+    time("E08 fig19 capsnet breakdowns", 3, || {
+        report::breakdowns(&ctx, "capsnet", threads);
+    });
+    time("E09 fig20+table2 deepcaps DSE", 2, || {
+        report::dse_scatter(&ctx, "deepcaps", threads);
+    });
+    time("E10 fig21 deepcaps breakdowns", 2, || {
+        report::breakdowns(&ctx, "deepcaps", threads);
+    });
+    time("E11 fig22 port-constrained HY-PG DSE", 2, || {
+        report::fig22(&ctx, threads);
+    });
+    time("E12 fig23/24 capsnet whole accelerator", 3, || {
+        report::whole_accelerator(&ctx, "capsnet", threads);
+    });
+    time("E13 fig25/26 deepcaps whole accelerator", 2, || {
+        report::whole_accelerator(&ctx, "deepcaps", threads);
+    });
+    time("E14 table3 full area/energy table", 2, || {
+        report::table3(&ctx, threads);
+    });
+    time("E15 fig27/28 off-chip accesses", 20, || {
+        report::fig27_28(&ctx);
+    });
+    time("E16 fig29/31 memory breakdowns", 3, || {
+        report::memory_breakdown(&ctx, "capsnet", threads);
+        report::memory_breakdown(&ctx, "deepcaps", threads);
+    });
+    time("E17 fig30 HY-PG sector schedule", 3, || {
+        report::fig30(&ctx, threads);
+    });
+    time("E18 headline summary", 3, || {
+        report::headline(&ctx, threads);
+    });
+}

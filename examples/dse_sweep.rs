@@ -1,0 +1,97 @@
+//! Technology-sensitivity ablation: how the DSE's Pareto selections shift
+//! as the technology constants move away from the 32nm calibration —
+//! answering "does the paper's conclusion (SEP/HY-PG win, SMP loses)
+//! survive model error?" (DESIGN.md section 7 commits to order-correctness,
+//! this sweep demonstrates it).
+//!
+//!   cargo run --release --example dse_sweep
+//!
+//! Sweeps leakage (±4x), DRAM energy (±4x) and the multi-port energy
+//! exponent, rerunning the full CapsNet DSE each time; writes
+//! results/dse_sweep.csv.
+
+use descnet::config::{SystemConfig, Technology};
+use descnet::dataflow::profile_network;
+use descnet::dse;
+use descnet::model::capsnet_mnist;
+use descnet::util::csv::{f, s, Csv};
+
+fn run_one(label: &str, tech: &Technology, csv: &mut Csv) {
+    let cfg = SystemConfig::default();
+    let profile = profile_network(&capsnet_mnist(), &cfg.accel);
+    let result = dse::run(&profile, tech, 8);
+    let sel: std::collections::BTreeMap<_, _> = result.selected.iter().cloned().collect();
+    let frontier_opts: std::collections::BTreeSet<String> =
+        result.pareto.iter().map(|&i| result.points[i].option()).collect();
+
+    let hy_pg = &result.points[sel["HY-PG"]];
+    let sep = &result.points[sel["SEP"]];
+    let smp = &result.points[sel["SMP"]];
+    // The paper's structural conclusions, re-checked per technology point:
+    let hy_pg_near_best = result
+        .selected
+        .iter()
+        .all(|(_, i)| hy_pg.energy_j <= result.points[*i].energy_j * 1.05);
+    let sep_lowest_area = result
+        .selected
+        .iter()
+        .all(|(_, i)| sep.area_mm2 <= result.points[*i].area_mm2 * 1.001);
+    csv.row(vec![
+        s(label),
+        f(sep.energy_j * 1e3),
+        f(hy_pg.energy_j * 1e3),
+        f(smp.energy_j * 1e3),
+        f(sep.area_mm2),
+        f(hy_pg.area_mm2),
+        f(smp.area_mm2),
+        s(if hy_pg_near_best { "1" } else { "0" }),
+        s(if sep_lowest_area { "1" } else { "0" }),
+        s(if frontier_opts.contains("SMP") { "1" } else { "0" }),
+    ]);
+    println!(
+        "{label:28}  HY-PG {:8.3} mJ  SEP {:8.3} mJ  SMP {:8.3} mJ  [hy-best={} sep-area={} smp-on-frontier={}]",
+        hy_pg.energy_j * 1e3,
+        sep.energy_j * 1e3,
+        smp.energy_j * 1e3,
+        hy_pg_near_best,
+        sep_lowest_area,
+        frontier_opts.contains("SMP"),
+    );
+}
+
+fn main() {
+    let mut csv = Csv::new(&[
+        "tech_point",
+        "sep_mj",
+        "hy_pg_mj",
+        "smp_mj",
+        "sep_mm2",
+        "hy_pg_mm2",
+        "smp_mm2",
+        "hy_pg_near_best",
+        "sep_lowest_area",
+        "smp_on_frontier",
+    ]);
+
+    run_one("baseline-32nm", &Technology::default(), &mut csv);
+
+    for scale in [0.25, 0.5, 2.0, 4.0] {
+        let mut t = Technology::default();
+        t.sram_leak_w_per_byte *= scale;
+        run_one(&format!("leakage x{scale}"), &t, &mut csv);
+    }
+    for scale in [0.25, 0.5, 2.0, 4.0] {
+        let mut t = Technology::default();
+        t.dram_j_per_byte *= scale;
+        run_one(&format!("dram-energy x{scale}"), &t, &mut csv);
+    }
+    for exp in [1.2, 1.7, 2.0] {
+        let mut t = Technology::default();
+        t.sram_dyn_port_exp = exp;
+        run_one(&format!("port-exp {exp}"), &t, &mut csv);
+    }
+
+    let out = std::path::PathBuf::from("results/dse_sweep.csv");
+    csv.write_file(&out).expect("writing results");
+    println!("wrote {}", out.display());
+}

@@ -1,0 +1,128 @@
+//! Power-gating deep dive: sector-count sweep, break-even analysis and the
+//! Fig 30-style ON/OFF schedule for the CapsNet weight memory.
+//!
+//!   cargo run --release --example powergate_explorer
+//!
+//! Shows, per sector count, the static-energy saving vs the area overhead —
+//! the exact trade-off Algorithm 2 explores — and prints the PMU schedule
+//! that masks the 0.072 ns wakeup latency.
+
+use descnet::cacti::{powergate, Sram, SramConfig};
+use descnet::config::SystemConfig;
+use descnet::dataflow::profile_network;
+use descnet::dse;
+use descnet::energy;
+use descnet::memory::{Component, MemSpec, Organization};
+use descnet::model::capsnet_mnist;
+use descnet::pmu;
+use descnet::util::csv::{f, u, Csv};
+use descnet::util::table::Table;
+use descnet::util::units::{fmt_energy, fmt_size, fmt_time, KIB};
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let profile = profile_network(&capsnet_mnist(), &cfg.accel);
+    let (d_sz, w_sz, a_sz) = dse::sep_sizes(&profile);
+
+    // --- sector sweep on the SEP weight memory (64 kiB).
+    println!("== sector sweep: SEP weight memory ({}) ==", fmt_size(w_sz));
+    let mut csv = Csv::new(&[
+        "sectors",
+        "static_mj",
+        "saving_frac",
+        "area_mm2",
+        "area_overhead_frac",
+        "wakeups",
+        "wakeup_nj",
+    ]);
+    let sram = Sram::new(&cfg.tech);
+    let base_area = sram.area_mm2(&SramConfig::new(w_sz, 1, 1));
+    let mut base_static = 0.0;
+    for sc in [1usize, 2, 4, 8, 16] {
+        let org = Organization::sep(
+            MemSpec::new(d_sz, 1),
+            MemSpec::new(w_sz, sc),
+            MemSpec::new(a_sz, 1),
+        );
+        let report = pmu::evaluate(&org, &profile, &cfg.tech);
+        let w = report
+            .components
+            .iter()
+            .find(|c| c.component == Component::Weight)
+            .unwrap();
+        if sc == 1 {
+            base_static = w.static_energy_j;
+        }
+        let area = sram.area_mm2(&SramConfig::new(w_sz, 1, sc));
+        println!(
+            "  SC={sc:2}  static {}  (saves {:5.1}%)  area {:.3} mm² (+{:4.1}%)  wakeups {} ({})",
+            fmt_energy(w.static_energy_j),
+            100.0 * (1.0 - w.static_energy_j / base_static),
+            area,
+            100.0 * (area / base_area - 1.0),
+            w.wakeups,
+            fmt_energy(w.wakeup_energy_j),
+        );
+        csv.row(vec![
+            u(sc),
+            f(w.static_energy_j * 1e3),
+            f(1.0 - w.static_energy_j / base_static),
+            f(area),
+            f(area / base_area - 1.0),
+            u(w.wakeups as usize),
+            f(w.wakeup_energy_j * 1e9),
+        ]);
+    }
+
+    // --- break-even: how long must a sector sleep to amortize its wakeup?
+    let costs = sram.evaluate(&SramConfig::new(w_sz, 1, 8));
+    println!(
+        "\nbreak-even sleep time: {} (average op duration: {})",
+        fmt_time(powergate::break_even_s(&costs)),
+        fmt_time(profile.inference_s() / profile.ops.len() as f64),
+    );
+
+    // --- Fig 30: the HY-PG schedule.
+    println!("\n== Fig 30: HY-PG sector schedule (Table I configuration) ==");
+    let hy_pg = Organization::hy(
+        MemSpec::new(32 * KIB, 2),
+        MemSpec::new(25 * KIB, 2),
+        MemSpec::new(25 * KIB, 4),
+        MemSpec::new(32 * KIB, 2),
+        3,
+    );
+    let report = pmu::evaluate(&hy_pg, &profile, &cfg.tech);
+    let mut table = Table::new(&["op", "shared", "data", "weight", "acc"]);
+    for (i, op) in profile.ops.iter().enumerate() {
+        let cell = |c: Component| {
+            let s = report.schedule(c).unwrap();
+            format!("{}/{}", s.on[i], s.sectors)
+        };
+        table.row(vec![
+            op.name.clone(),
+            cell(Component::Shared),
+            cell(Component::Data),
+            cell(Component::Weight),
+            cell(Component::Acc),
+        ]);
+    }
+    println!("{}", table.to_ascii());
+    println!(
+        "HY-PG static {} vs un-gated {}  (wakeup latency masked: {})",
+        fmt_energy(report.static_energy_j()),
+        fmt_energy(report.static_no_pg_j()),
+        report.wakeup_masked(),
+    );
+    let e = energy::evaluate_org(&hy_pg, &profile, &cfg.tech);
+    println!(
+        "HY-PG on-chip total: {} ({} dynamic, {} static, {} wakeup)",
+        fmt_energy(e.energy_j()),
+        fmt_energy(e.dyn_j()),
+        fmt_energy(e.static_j()),
+        fmt_energy(e.wakeup_j()),
+    );
+
+    let out = std::path::PathBuf::from("results/powergate_sweep.csv");
+    csv.write_file(&out).expect("writing results");
+    println!("wrote {}", out.display());
+}

@@ -1,0 +1,66 @@
+//! Quickstart: the DESCNet public API in ~60 lines.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Profiles Google's CapsNet on the CapsAcc model, sizes the three DESCNet
+//! organizations, runs the DSE and prints the Pareto selections with the
+//! headline savings vs the all-on-chip baseline of [1].
+
+use descnet::config::SystemConfig;
+use descnet::dataflow::profile_network;
+use descnet::dse;
+use descnet::energy;
+use descnet::model::capsnet_mnist;
+use descnet::util::units::{fmt_energy, fmt_size};
+
+fn main() {
+    let cfg = SystemConfig::default();
+
+    // 1. Profile the workload on the accelerator (Figs 1/9/10).
+    let profile = profile_network(&capsnet_mnist(), &cfg.accel);
+    println!(
+        "CapsNet on CapsAcc: {} ops, {:.1} fps, routing share {:.1}%",
+        profile.ops.len(),
+        profile.fps(),
+        100.0 * profile.routing_cycle_share()
+    );
+
+    // 2. Size the organizations from the usage maxima (Eqs 1-2, Table I).
+    let (d, w, a) = dse::sep_sizes(&profile);
+    println!(
+        "SEP sizes: data {}, weight {}, acc {}; SMP: {}",
+        fmt_size(d),
+        fmt_size(w),
+        fmt_size(a),
+        fmt_size(dse::smp_size(&profile))
+    );
+
+    // 3. Exhaustive DSE (Algorithms 1-2) + Pareto selection (Fig 18).
+    let result = dse::run(&profile, &cfg.tech, 8);
+    println!(
+        "DSE: {} configurations, {} on the Pareto frontier",
+        result.points.len(),
+        result.pareto.len()
+    );
+    for (option, idx) in &result.selected {
+        let p = &result.points[*idx];
+        println!(
+            "  {:7}  area {:6.3} mm²  energy {}",
+            option,
+            p.area_mm2,
+            fmt_energy(p.energy_j)
+        );
+    }
+
+    // 4. Headline: complete accelerator vs the baseline of [1] (Fig 23/24).
+    let baseline = energy::version_a(&profile, &cfg.tech);
+    let selected: std::collections::BTreeMap<_, _> = result.selected.iter().cloned().collect();
+    let hy_pg = &result.points[selected["HY-PG"]];
+    let system = energy::system_with_org(&profile, &cfg.tech, &hy_pg.org, "DESCNet");
+    println!(
+        "HY-PG complete accelerator: {} vs baseline {} -> {:.0}% energy saved (paper: 79%)",
+        fmt_energy(system.total_j()),
+        fmt_energy(baseline.total_j()),
+        100.0 * (1.0 - system.total_j() / baseline.total_j())
+    );
+}

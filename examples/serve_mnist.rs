@@ -1,0 +1,74 @@
+//! End-to-end validation driver (EXPERIMENTS.md E19).
+//!
+//!   make artifacts && cargo run --release --example serve_mnist
+//!
+//! Loads the AOT CapsNet artifacts (Pallas kernels -> JAX stages -> HLO
+//! text), serves batched synthetic-MNIST requests through the rust
+//! coordinator on the PJRT CPU client, and reports latency/throughput plus
+//! the co-simulated DESCNet energy — proving all three layers compose with
+//! python nowhere on the request path.
+//!
+//! Runs both execution modes (fused full-net and 3-stage pipeline) and
+//! writes results/serve_mnist.csv.
+
+use std::path::PathBuf;
+
+use descnet::coordinator::server::{ServeOptions, Server};
+use descnet::util::csv::{f, s, u, Csv};
+
+fn main() {
+    let artifacts = PathBuf::from(
+        std::env::args()
+            .nth(1)
+            .unwrap_or_else(|| "artifacts".to_string()),
+    );
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!(
+            "no artifacts under {} — run `make artifacts` first",
+            artifacts.display()
+        );
+        std::process::exit(2);
+    }
+
+    let mut csv = Csv::new(&[
+        "mode",
+        "requests",
+        "batches",
+        "mean_batch",
+        "throughput_rps",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "batch_exec_ms",
+        "energy_per_inference_mj",
+    ]);
+
+    for (mode, staged) in [("full", false), ("staged", true)] {
+        let opts = ServeOptions {
+            artifacts_dir: artifacts.clone(),
+            requests: 64,
+            batch_max: 4,
+            stage_pipeline: staged,
+            seed: 7,
+        };
+        println!("== serving 64 synthetic MNIST requests ({mode} mode) ==");
+        let mut stats = Server::run_synthetic(&opts).expect("serving failed");
+        println!("{}\n", stats.summary());
+        csv.row(vec![
+            s(mode),
+            u(stats.requests as usize),
+            u(stats.batches as usize),
+            f(stats.mean_batch()),
+            f(stats.throughput_rps()),
+            f(stats.latency.p50() * 1e3),
+            f(stats.latency.p95() * 1e3),
+            f(stats.latency.p99() * 1e3),
+            f(stats.batch_exec.mean() * 1e3),
+            f(stats.energy_j / stats.requests.max(1) as f64 * 1e3),
+        ]);
+    }
+
+    let out = PathBuf::from("results/serve_mnist.csv");
+    csv.write_file(&out).expect("writing results");
+    println!("wrote {}", out.display());
+}

@@ -1,0 +1,230 @@
+"""AOT lowering: JAX models -> HLO-text artifacts + weights + manifest.
+
+This is the single build-time bridge between python and rust:
+
+  * every CapsNet *stage* (conv1 / primarycaps / classcaps) and the fused
+    full net, at each serving batch size, becomes one ``artifacts/*.hlo.txt``
+  * weights are serialized to ``artifacts/<net>_weights.bin`` (DSCW format,
+    parsed by rust/src/runtime/weights.rs) and fed as leading PJRT literals —
+    keeping weights out of the HLO keeps the text small and lets the same
+    artifact serve retrained weights
+  * ``artifacts/manifest.json`` indexes everything (shapes, dtypes, files)
+    for rust/src/runtime/artifacts.rs
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+WEIGHTS_MAGIC = b"DSCW"
+WEIGHTS_VERSION = 1
+_DTYPE_CODES = {"float32": 0, "int32": 1}
+
+
+# --------------------------------------------------------------------------
+# HLO text lowering (the gotcha-laden part — see module docstring)
+# --------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True, so
+    the rust side unwraps with ``to_tuple``)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stage(fn, param_order, params, input_shape):
+    """Lower ``fn(*flat_params, x)`` with params as explicit leading args in
+    ``param_order`` — fixing the PJRT argument order the rust runtime uses."""
+    def flat_fn(*args):
+        p = dict(zip(param_order, args[:-1]))
+        return fn(p, args[-1])
+
+    specs = [jax.ShapeDtypeStruct(params[k].shape, params[k].dtype)
+             for k in param_order]
+    specs.append(jax.ShapeDtypeStruct(input_shape, jnp.float32))
+    # keep_unused: each stage receives the full weight list so the PJRT
+    # argument convention is uniform across stages (rust feeds all weights
+    # plus the input to every stage).
+    return jax.jit(flat_fn, keep_unused=True).lower(*specs)
+
+
+# --------------------------------------------------------------------------
+# Weights serialization (DSCW v1; mirrored by rust/src/runtime/weights.rs)
+#
+#   magic "DSCW" | u32 version | u32 count
+#   per tensor:  u16 name_len | name utf8 | u8 dtype | u8 ndim
+#                | u32 dims[ndim] | u64 byte_len | raw LE bytes
+# --------------------------------------------------------------------------
+
+def write_weights(path, params, order):
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(struct.pack("<II", WEIGHTS_VERSION, len(order)))
+        for name in order:
+            arr = np.asarray(params[name])
+            code = _DTYPE_CODES[str(arr.dtype)]
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            raw = arr.astype("<" + str(arr.dtype)[0] + "4").tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+# --------------------------------------------------------------------------
+# Artifact bundles
+# --------------------------------------------------------------------------
+
+def _shape_entry(shape):
+    return {"shape": list(shape), "dtype": "f32"}
+
+
+def build_capsnet(out_dir, batches, seed, use_pallas=True, stages=None):
+    cfg = M.CapsNetConfig.google()
+    params = M.init_capsnet(jax.random.PRNGKey(seed), cfg)
+    order = M.capsnet_param_order(cfg)
+    write_weights(os.path.join(out_dir, "capsnet_weights.bin"), params, order)
+
+    stage_fns = M.capsnet_stage_fns(cfg, use_pallas=use_pallas)
+    wanted = stages or list(stage_fns)
+    entries = []
+    for stage in wanted:
+        fn, in_shape_fn = stage_fns[stage]
+        for b in batches:
+            in_shape = in_shape_fn(b)
+            lowered = lower_stage(fn, order, params, in_shape)
+            name = f"capsnet_{stage}_b{b}"
+            fname = f"{name}.hlo.txt"
+            text = to_hlo_text(lowered)
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            outs = jax.eval_shape(
+                lambda *a: fn(dict(zip(order, a[:-1])), a[-1]),
+                *[params[k] for k in order],
+                jax.ShapeDtypeStruct(in_shape, jnp.float32))
+            entries.append({
+                "name": name, "file": fname, "net": "capsnet",
+                "stage": stage, "batch": b,
+                "params": order,
+                "inputs": [_shape_entry(in_shape)],
+                "outputs": [_shape_entry(o.shape) for o in outs],
+            })
+            print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB)")
+    return entries, {"net": "capsnet", "file": "capsnet_weights.bin",
+                     "params": order,
+                     "shapes": {k: list(params[k].shape) for k in order}}
+
+
+def build_deepcaps_lite(out_dir, seed, use_pallas=True):
+    cfg = M.DeepCapsConfig.lite()
+    params = M.init_deepcaps(jax.random.PRNGKey(seed + 1), cfg)
+    order = M.deepcaps_param_order(cfg)
+    write_weights(os.path.join(out_dir, "deepcaps_lite_weights.bin"), params, order)
+
+    def fn(p, x):
+        return M.deepcaps_forward(p, x, cfg, use_pallas=use_pallas)
+
+    in_shape = (1, cfg.image_hw, cfg.image_hw, cfg.image_c)
+    lowered = lower_stage(fn, order, params, in_shape)
+    fname = "deepcaps_lite_full_b1.hlo.txt"
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(
+        lambda *a: fn(dict(zip(order, a[:-1])), a[-1]),
+        *[params[k] for k in order],
+        jax.ShapeDtypeStruct(in_shape, jnp.float32))
+    print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB)")
+    entry = {
+        "name": "deepcaps_lite_full_b1", "file": fname, "net": "deepcaps_lite",
+        "stage": "full", "batch": 1, "params": order,
+        "inputs": [_shape_entry(in_shape)],
+        "outputs": [_shape_entry(o.shape) for o in outs],
+    }
+    return [entry], {"net": "deepcaps_lite", "file": "deepcaps_lite_weights.bin",
+                     "params": order,
+                     "shapes": {k: list(params[k].shape) for k in order}}
+
+
+def write_golden(out_dir, seed, use_pallas=True):
+    """Golden cross-check consumed by rust/tests/runtime_golden.rs: a fixed
+    synthetic input and the expected full-net outputs, so the rust PJRT
+    execution path is pinned numerically against this python session."""
+    from . import data
+    cfg = M.CapsNetConfig.google()
+    params = M.init_capsnet(jax.random.PRNGKey(seed), cfg)
+    x, _ = data.synthetic_digits(2, seed=1234, hw=cfg.image_hw)
+    x = jnp.asarray(x[:1])
+    lengths, v = M.capsnet_forward(params, x, cfg, use_pallas=use_pallas)
+    golden = {
+        "artifact": "capsnet_full_b1",
+        "input": [float(f) for f in np.asarray(x).reshape(-1)],
+        "lengths": [float(f) for f in np.asarray(lengths).reshape(-1)],
+        "poses_l2": float(np.linalg.norm(np.asarray(v))),
+        "tolerance": 2e-4,
+    }
+    with open(os.path.join(out_dir, "golden_capsnet.json"), "w") as f:
+        json.dump(golden, f)
+    print("  wrote golden_capsnet.json")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batches", default="1,4")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--no-deepcaps", action="store_true")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the oracle path instead of the Pallas kernels")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    batches = [int(b) for b in args.batches.split(",")]
+    use_pallas = not args.no_pallas
+
+    print(f"AOT lowering -> {out_dir} (batches={batches}, pallas={use_pallas})")
+    entries, caps_w = build_capsnet(out_dir, batches, args.seed, use_pallas)
+    weights = [caps_w]
+    if not args.no_deepcaps:
+        dc_entries, dc_w = build_deepcaps_lite(out_dir, args.seed, use_pallas)
+        entries += dc_entries
+        weights.append(dc_w)
+
+    write_golden(out_dir, args.seed, use_pallas)
+
+    manifest = {
+        "format": "descnet-artifacts-v1",
+        "interchange": "hlo-text",
+        "seed": args.seed,
+        "artifacts": entries,
+        "weights": weights,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(entries)} artifacts, {len(weights)} weight bundles")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Synthetic structured datasets (MNIST / CIFAR10 stand-ins).
+
+The image has no network access and no dataset files, so — per DESIGN.md
+section Substitutions — we generate *procedural* classification tasks whose
+tensor shapes match the paper's benchmarks exactly:
+
+  * ``synthetic_digits``  : 28x28x1, 10 classes of digit-like stroke
+    patterns (each class = a fixed polyline skeleton, rendered with random
+    translation/rotation/thickness/noise).  Learnable but non-trivial.
+  * ``synthetic_cifar``   : HWxHWx3, 10 classes of oriented-texture patches.
+
+Accuracy on these is NOT a paper claim (the paper inherits 99.67% / 92.74%
+from [2]/[3]); they exist to give the training demo a real learning signal
+and the serving path realistic inputs.
+"""
+
+import numpy as np
+
+# Polyline skeletons (in a unit box) loosely tracing the 10 digits.
+_DIGIT_STROKES = {
+    0: [(0.3, 0.2), (0.7, 0.2), (0.8, 0.5), (0.7, 0.8), (0.3, 0.8), (0.2, 0.5), (0.3, 0.2)],
+    1: [(0.5, 0.15), (0.5, 0.85)],
+    2: [(0.25, 0.25), (0.6, 0.15), (0.75, 0.35), (0.3, 0.8), (0.75, 0.8)],
+    3: [(0.3, 0.2), (0.7, 0.25), (0.45, 0.5), (0.7, 0.7), (0.3, 0.8)],
+    4: [(0.65, 0.85), (0.65, 0.15), (0.25, 0.6), (0.8, 0.6)],
+    5: [(0.7, 0.2), (0.3, 0.2), (0.3, 0.5), (0.65, 0.55), (0.6, 0.8), (0.3, 0.8)],
+    6: [(0.6, 0.15), (0.35, 0.5), (0.3, 0.7), (0.5, 0.85), (0.7, 0.65), (0.4, 0.55)],
+    7: [(0.25, 0.2), (0.75, 0.2), (0.45, 0.85)],
+    8: [(0.5, 0.5), (0.3, 0.3), (0.5, 0.15), (0.7, 0.3), (0.5, 0.5), (0.3, 0.7), (0.5, 0.85), (0.7, 0.7), (0.5, 0.5)],
+    9: [(0.65, 0.45), (0.45, 0.2), (0.3, 0.35), (0.55, 0.5), (0.65, 0.3), (0.55, 0.85)],
+}
+
+
+def _render_polyline(img, pts, thickness):
+    h, w = img.shape
+    for (x0, y0), (x1, y1) in zip(pts[:-1], pts[1:]):
+        steps = max(2, int(3 * h))
+        for t in np.linspace(0.0, 1.0, steps):
+            cx, cy = (x0 + (x1 - x0) * t) * w, (y0 + (y1 - y0) * t) * h
+            lo_y, hi_y = int(cy - thickness), int(cy + thickness) + 1
+            lo_x, hi_x = int(cx - thickness), int(cx + thickness) + 1
+            for yy in range(max(0, lo_y), min(h, hi_y)):
+                for xx in range(max(0, lo_x), min(w, hi_x)):
+                    d2 = (yy - cy) ** 2 + (xx - cx) ** 2
+                    if d2 <= thickness ** 2:
+                        img[yy, xx] = 1.0
+
+
+def synthetic_digits(num, seed=0, hw=28):
+    """Returns (images [N, hw, hw, 1] float32 in [0,1], labels [N] int32)."""
+    rng = np.random.default_rng(seed)
+    images = np.zeros((num, hw, hw, 1), np.float32)
+    labels = rng.integers(0, 10, size=num).astype(np.int32)
+    for n in range(num):
+        pts = np.array(_DIGIT_STROKES[int(labels[n])], np.float64)
+        # Random similarity transform: rotation, scale, translation.
+        ang = rng.normal(0, 0.15)
+        scale = rng.uniform(0.8, 1.1)
+        ca, sa = np.cos(ang) * scale, np.sin(ang) * scale
+        center = pts.mean(axis=0)
+        pts = (pts - center) @ np.array([[ca, -sa], [sa, ca]]) + center
+        pts += rng.normal(0, 0.03, size=2)
+        img = np.zeros((hw, hw), np.float32)
+        _render_polyline(img, pts, thickness=rng.uniform(0.9, 1.6))
+        img += rng.normal(0, 0.05, size=img.shape).astype(np.float32)
+        images[n, :, :, 0] = np.clip(img, 0.0, 1.0)
+    return images, labels
+
+
+def synthetic_cifar(num, seed=0, hw=32):
+    """Oriented-texture patches, 10 classes: class k = sinusoidal grating at
+    angle k*18deg with class-coloured channels + noise.
+    Returns (images [N, hw, hw, 3] float32, labels [N] int32)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=num).astype(np.int32)
+    yy, xx = np.mgrid[0:hw, 0:hw].astype(np.float32) / hw
+    images = np.zeros((num, hw, hw, 3), np.float32)
+    for n in range(num):
+        k = int(labels[n])
+        ang = k * np.pi / 10.0 + rng.normal(0, 0.08)
+        freq = rng.uniform(3.0, 5.0)
+        phase = rng.uniform(0, 2 * np.pi)
+        g = 0.5 + 0.5 * np.sin(2 * np.pi * freq * (xx * np.cos(ang) + yy * np.sin(ang)) + phase)
+        tint = np.array([0.4 + 0.06 * k, 0.9 - 0.07 * k, 0.5 + 0.04 * ((k * 3) % 10)], np.float32)
+        img = g[:, :, None] * tint[None, None, :]
+        img += rng.normal(0, 0.05, size=img.shape)
+        images[n] = np.clip(img, 0.0, 1.0)
+    return images, labels

@@ -1,0 +1,22 @@
+"""L1 — Pallas kernels for the CapsNet compute hot-spots.
+
+Modules:
+  squash  : capsule squash non-linearity (VPU-style row kernel)
+  votes   : capsule prediction vectors uhat = u @ W (MXU-style tiles)
+  routing : fused Softmax+Sum and Update kernels for dynamic routing
+  ref     : pure-jnp oracle, the correctness ground truth for all of the above
+
+All kernels are lowered with ``interpret=True`` so the resulting HLO runs on
+the CPU PJRT client (see /opt/xla-example/README.md for why real-TPU Mosaic
+lowering cannot be executed here).
+"""
+
+from . import ref  # noqa: F401
+from .squash import squash, squash_nd  # noqa: F401
+from .votes import votes  # noqa: F401
+from .routing import (  # noqa: F401
+    softmax_sum,
+    update,
+    routing_iteration,
+    dynamic_routing,
+)

@@ -1,0 +1,99 @@
+"""Pure-jnp reference oracle for the DESCNet L1 kernels.
+
+Every Pallas kernel in this package has a mathematically identical
+implementation here, written with plain ``jax.numpy`` ops only.  The pytest
+suite (``python/tests/test_kernels.py``) pins each kernel against its oracle
+with ``assert_allclose`` over a hypothesis-driven sweep of shapes and dtypes.
+
+The reference also *defines* the semantics used by the L2 models, so any
+change to a kernel must keep this file in sync.
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-7
+
+
+def squash(s, axis=-1):
+    """CapsNet squash non-linearity (Sabour et al., Eq. 1).
+
+    v = (|s|^2 / (1 + |s|^2)) * s / |s|
+    """
+    norm2 = jnp.sum(jnp.square(s), axis=axis, keepdims=True)
+    scale = norm2 / (1.0 + norm2) / jnp.sqrt(norm2 + EPS)
+    return (s * scale).astype(s.dtype)
+
+
+def votes(u, w):
+    """Capsule prediction vectors (the ClassCaps transformation).
+
+    u: [NI, DI]            input capsule poses
+    w: [NI, NO, DI, DO]    per-(input, output)-pair transformation matrices
+    returns uhat: [NI, NO, DO] with uhat[i, j] = u[i] @ w[i, j]
+    """
+    return jnp.einsum("id,indo->ino", u, w.astype(u.dtype)).astype(u.dtype)
+
+
+def routing_softmax(b):
+    """Coupling coefficients: softmax of the routing logits over the
+    *output*-capsule axis (axis 1).  b: [NI, NO] -> c: [NI, NO]."""
+    m = jnp.max(b, axis=1, keepdims=True)
+    e = jnp.exp(b - m)
+    return (e / jnp.sum(e, axis=1, keepdims=True)).astype(b.dtype)
+
+
+def routing_sum(c, uhat):
+    """Weighted vote aggregation: s[j] = sum_i c[i, j] * uhat[i, j].
+
+    c: [NI, NO], uhat: [NI, NO, DO] -> s: [NO, DO]
+    """
+    return jnp.einsum("in,ind->nd", c, uhat).astype(uhat.dtype)
+
+
+def routing_update(b, uhat, v):
+    """Routing-logit update: b[i, j] += <uhat[i, j], v[j]>."""
+    agreement = jnp.einsum("ind,nd->in", uhat, v.astype(uhat.dtype))
+    return (b + agreement.astype(b.dtype)).astype(b.dtype)
+
+
+def routing_iteration(b, uhat):
+    """One full dynamic-routing iteration (Softmax -> Sum -> Squash -> Update).
+
+    Returns (b_next, v).
+    """
+    c = routing_softmax(b)
+    s = routing_sum(c, uhat)
+    v = squash(s, axis=-1)
+    b_next = routing_update(b, uhat, v)
+    return b_next, v
+
+
+def dynamic_routing(uhat, num_iterations=3):
+    """Full dynamic-routing loop; returns the output capsule poses v: [NO, DO].
+
+    The final iteration does not need the logit update to produce v, but the
+    hardware schedule (and the paper's operation list) performs it anyway, so
+    we keep the update for op-count parity with the performance model.
+    """
+    b = jnp.zeros(uhat.shape[:2], dtype=uhat.dtype)
+    v = None
+    for _ in range(num_iterations):
+        b, v = routing_iteration(b, uhat)
+    return v
+
+
+def classcaps(u, w, num_iterations=3):
+    """Fully-connected capsule layer with dynamic routing (votes + routing)."""
+    return dynamic_routing(votes(u, w), num_iterations=num_iterations)
+
+
+def margin_loss(v, labels, m_pos=0.9, m_neg=0.1, lam=0.5):
+    """CapsNet margin loss over output capsule lengths.
+
+    v: [B, NO, DO], labels: [B] int -> scalar loss.
+    """
+    lengths = jnp.sqrt(jnp.sum(jnp.square(v), axis=-1) + EPS)  # [B, NO]
+    t = jnp.eye(lengths.shape[1], dtype=v.dtype)[labels]       # [B, NO]
+    pos = t * jnp.square(jnp.maximum(0.0, m_pos - lengths))
+    neg = (1.0 - t) * jnp.square(jnp.maximum(0.0, lengths - m_neg))
+    return jnp.mean(jnp.sum(pos + lam * neg, axis=1))

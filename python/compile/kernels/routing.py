@@ -1,0 +1,138 @@
+"""Pallas kernels for one dynamic-routing iteration.
+
+The iteration is decomposed into the same operations the CapsAcc schedule
+executes (and that the rust performance model accounts for, see
+DESIGN.md section 6):
+
+  Softmax+Sum : c = softmax(b, axis=out); partial s_j accumulated per
+                input-capsule tile                      (`_softmax_sum_kernel`)
+  Squash      : v_j = squash(s_j)                       (kernels/squash.py)
+  Update      : b   += <uhat_ij, v_j>                   (`_update_kernel`)
+
+TPU mapping: the softmax reduction axis (output capsules, NO <= 32 for both
+networks) is kept whole inside each block, so the grid only tiles the large
+input-capsule axis (NI = 1152 for CapsNet, 2048 for DeepCaps ClassCaps).
+Each grid step emits a *partial* vote sum; the (tiny, [G, NO, DO]) partials
+are reduced by XLA outside the kernel.  This mirrors the accelerator, whose
+16-PE accumulator row drains per-tile partial sums into the accumulator SPM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .squash import squash
+
+# One grid step covers CapsNet's 1152-capsule axis: b (46 kB) + uhat
+# (737 kB) + partials ~= 0.8 MB of VMEM << 16 MB (see votes.py note).
+DEFAULT_TILE = 1152
+
+
+def _softmax_sum_kernel(b_ref, uhat_ref, c_ref, s_ref):
+    b = b_ref[...].astype(jnp.float32)            # [TI, NO]
+    uhat = uhat_ref[...].astype(jnp.float32)      # [TI, NO, DO]
+    m = jnp.max(b, axis=1, keepdims=True)
+    e = jnp.exp(b - m)
+    c = e / jnp.sum(e, axis=1, keepdims=True)     # [TI, NO]
+    c_ref[...] = c.astype(c_ref.dtype)
+    # Partial weighted vote sum for this input tile: s[n,d] = sum_i c*uhat.
+    part = jnp.sum(c[:, :, None] * uhat, axis=0)  # [NO, DO]
+    s_ref[...] = part[None].astype(s_ref.dtype)
+
+
+def _update_kernel(b_ref, uhat_ref, v_ref, o_ref):
+    b = b_ref[...].astype(jnp.float32)            # [TI, NO]
+    uhat = uhat_ref[...].astype(jnp.float32)      # [TI, NO, DO]
+    v = v_ref[...].astype(jnp.float32)            # [NO, DO]
+    agreement = jnp.sum(uhat * v[None], axis=-1)  # [TI, NO]
+    o_ref[...] = (b + agreement).astype(o_ref.dtype)
+
+
+def _pad_rows(x, tile):
+    pad = (-x.shape[0]) % tile
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def softmax_sum(b, uhat, tile=DEFAULT_TILE):
+    """c = softmax(b, axis=1); s = sum_i c[i,:,None]*uhat[i].
+
+    b: [NI, NO], uhat: [NI, NO, DO] -> (c: [NI, NO], s: [NO, DO]).
+    """
+    ni, no = b.shape
+    do = uhat.shape[2]
+    tile = min(tile, max(1, ni))
+    bp, up = _pad_rows(b, tile), _pad_rows(uhat, tile)
+    grid = (bp.shape[0] // tile,)
+    c, s_parts = pl.pallas_call(
+        _softmax_sum_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(bp.shape, b.dtype),
+            jax.ShapeDtypeStruct((grid[0], no, do), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, no), lambda i: (i, 0)),
+            pl.BlockSpec((tile, no, do), lambda i: (i, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tile, no), lambda i: (i, 0)),
+            pl.BlockSpec((1, no, do), lambda i: (i, 0, 0)),
+        ),
+        interpret=True,
+    )(bp, up)
+    # NOTE on padding correctness: padded b rows are all-zero -> softmax gives
+    # uniform c, but the matching uhat rows are all-zero, so the partial sums
+    # they contribute are exactly zero.
+    s = jnp.sum(s_parts, axis=0).astype(uhat.dtype)
+    return c[:ni], s
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def update(b, uhat, v, tile=DEFAULT_TILE):
+    """b' = b + <uhat, v> ; b: [NI, NO], uhat: [NI, NO, DO], v: [NO, DO]."""
+    ni, no = b.shape
+    do = uhat.shape[2]
+    tile = min(tile, max(1, ni))
+    bp, up = _pad_rows(b, tile), _pad_rows(uhat, tile)
+    grid = (bp.shape[0] // tile,)
+    out = pl.pallas_call(
+        _update_kernel,
+        out_shape=jax.ShapeDtypeStruct(bp.shape, b.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, no), lambda i: (i, 0)),
+            pl.BlockSpec((tile, no, do), lambda i: (i, 0, 0)),
+            pl.BlockSpec((no, do), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, no), lambda i: (i, 0)),
+        interpret=True,
+    )(bp, up, v)
+    return out[:ni]
+
+
+def routing_iteration(b, uhat, tile=DEFAULT_TILE):
+    """One full iteration; returns (b_next, v).  Matches ref.routing_iteration."""
+    _, s = softmax_sum(b, uhat, tile=tile)
+    v = squash(s)
+    b_next = update(b, uhat, v, tile=tile)
+    return b_next, v
+
+
+def dynamic_routing(uhat, num_iterations=3, tile=DEFAULT_TILE):
+    """Unrolled dynamic routing (3 iterations in both paper networks).
+
+    Unrolling (vs ``lax.fori_loop``) keeps the lowered HLO free of While ops,
+    which compiles to a flatter module for the PJRT runtime; the L2 AOT step
+    relies on this (see python/compile/aot.py and EXPERIMENTS.md section Perf/L2).
+    """
+    b = jnp.zeros(uhat.shape[:2], dtype=uhat.dtype)
+    v = None
+    for _ in range(num_iterations):
+        b, v = routing_iteration(b, uhat, tile=tile)
+    return v

@@ -1,0 +1,64 @@
+"""Pallas kernel for the CapsNet squash non-linearity.
+
+TPU mapping (see DESIGN.md Hardware-Adaptation): squash is a row-wise vector
+op (norm + scale) — it runs on the VPU, with capsule poses tiled into VMEM in
+``TN``-row blocks.  On CapsAcc this is the dedicated activation unit; the
+BlockSpec row tile mirrors the 16-wide accumulator drain of the array.
+
+Lowered with ``interpret=True`` so that the emitted HLO is executable on the
+CPU PJRT client (real-TPU lowering emits a Mosaic custom-call).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default row tile.  128 matches the VPU lane width on TPU; any positive
+# value is functionally correct (the wrapper pads).
+DEFAULT_TILE = 1024
+
+
+def _squash_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    f32 = x.astype(jnp.float32)
+    norm2 = jnp.sum(f32 * f32, axis=-1, keepdims=True)
+    scale = norm2 / (1.0 + norm2) / jnp.sqrt(norm2 + ref.EPS)
+    o_ref[...] = (f32 * scale).astype(x.dtype)
+
+
+def _pad_rows(x, tile):
+    n = x.shape[0]
+    pad = (-n) % tile
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x, n
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def squash(s, tile=DEFAULT_TILE):
+    """Squash over the last axis of ``s: [N, D]`` (2-D only; the L2 models
+    flatten leading axes before calling)."""
+    assert s.ndim == 2, f"squash kernel expects [N, D], got {s.shape}"
+    x, n = _pad_rows(s, tile)
+    grid = (x.shape[0] // tile,)
+    out = pl.pallas_call(
+        _squash_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, s.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, x.shape[1]), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, x.shape[1]), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+    return out[:n]
+
+
+def squash_nd(s, tile=DEFAULT_TILE):
+    """Squash over the last axis of an arbitrary-rank tensor by flattening
+    the leading axes into the row dimension."""
+    lead = s.shape[:-1]
+    flat = s.reshape((-1, s.shape[-1]))
+    return squash(flat, tile=tile).reshape(lead + (s.shape[-1],))

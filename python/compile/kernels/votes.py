@@ -1,0 +1,70 @@
+"""Pallas kernel for the capsule vote (prediction-vector) computation.
+
+``uhat[i, j, :] = u[i, :] @ W[i, j, :, :]`` — the ClassCaps transformation
+that feeds dynamic routing.  This is the MXU hot-spot of the ClassCaps layer:
+each (input-tile, output-capsule) grid step performs a ``[TI, DI] x
+[TI, DI, DO]`` batched contraction.
+
+TPU mapping: the grid dimension ``i`` walks ``TI``-capsule tiles (HBM -> VMEM
+streaming of u and W, double-buffered by the Pallas pipeline), ``j`` walks
+output capsules, mirroring the output-capsule-stationary schedule of the
+CapsAcc dataflow model (rust/src/dataflow/routing.rs).  VMEM footprint per
+step = TI*DI + TI*DI*DO + TI*DO elements, far below the 16 MiB VMEM budget
+for the CapsNet/DeepCaps shapes (see DESIGN.md section 10).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sized to cover CapsNet's full input-capsule axis in one grid step
+# (1152 caps): VMEM footprint per step = u (36.9 kB) + W (589 kB) + out
+# (73.7 kB) ~= 0.7 MB << 16 MB, and interpret-mode grid-step overhead
+# dominates CPU execution (EXPERIMENTS.md section Perf/L1: 3.6x on classcaps).
+DEFAULT_TILE = 1152
+
+
+def _votes_kernel(u_ref, w_ref, o_ref):
+    u = u_ref[...].astype(jnp.float32)          # [TI, DI]
+    w = w_ref[...].astype(jnp.float32)[:, 0]    # [TI, DI, DO]
+    # Batched vector-matrix product over the capsule tile: one MXU pass per
+    # input capsule row; contraction over DI.
+    uhat = jax.lax.dot_general(
+        u, w,
+        dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                            # [TI, DO]
+    o_ref[...] = uhat[:, None, :].astype(o_ref.dtype)
+
+
+def _pad_rows(x, tile):
+    pad = (-x.shape[0]) % tile
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def votes(u, w, tile=DEFAULT_TILE):
+    """u: [NI, DI], w: [NI, NO, DI, DO] -> uhat: [NI, NO, DO]."""
+    ni, di = u.shape
+    assert w.shape[0] == ni and w.shape[2] == di, (u.shape, w.shape)
+    no, do = w.shape[1], w.shape[3]
+    tile = min(tile, max(1, ni))
+    up = _pad_rows(u, tile)
+    wp = _pad_rows(w.astype(u.dtype), tile)
+    grid = (up.shape[0] // tile, no)
+    out = pl.pallas_call(
+        _votes_kernel,
+        out_shape=jax.ShapeDtypeStruct((up.shape[0], no, do), u.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, di), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile, 1, di, do), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, 1, do), lambda i, j: (i, j, 0)),
+        interpret=True,
+    )(up, wp)
+    return out[:ni]

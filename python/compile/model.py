@@ -1,0 +1,362 @@
+"""L2 — JAX functional models: Google CapsNet (MNIST) and DeepCaps (CIFAR10).
+
+Built from the L1 Pallas kernels (``compile.kernels``); the pure-jnp oracle
+path (``use_pallas=False``) computes the identical function with ``ref.py``
+ops and is used (a) as the correctness pin in tests and (b) for the fast
+training demo, where interpret-mode Pallas in the backward pass would be
+needlessly slow.
+
+The *stage* functions (conv1 / primarycaps / classcaps) are the units the
+rust coordinator schedules: ``aot.py`` lowers each stage (and the fused full
+net) to one HLO-text artifact, and the rust performance model
+(rust/src/dataflow) accounts cycles/memory for exactly the same stages.
+
+Weights are passed as explicit arguments (not closed-over constants) so the
+HLO stays small; ``aot.py`` serializes them to ``artifacts/*_weights.bin``
+and the rust runtime feeds them as leading PJRT literals.
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+from .kernels import ref
+
+Params = Dict[str, jnp.ndarray]
+
+
+# --------------------------------------------------------------------------
+# Configurations
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CapsNetConfig:
+    """Google's CapsNet [Sabour et al. 2017] geometry (MNIST)."""
+    image_hw: int = 28
+    image_c: int = 1
+    conv1_channels: int = 256
+    conv1_kernel: int = 9
+    primary_channels: int = 256   # 32 capsule types x 8D
+    primary_kernel: int = 9
+    primary_stride: int = 2
+    caps_dim: int = 8
+    num_classes: int = 10
+    class_caps_dim: int = 16
+    routing_iterations: int = 3
+
+    @property
+    def conv1_hw(self) -> int:
+        return self.image_hw - self.conv1_kernel + 1  # valid conv
+
+    @property
+    def primary_hw(self) -> int:
+        return (self.conv1_hw - self.primary_kernel) // self.primary_stride + 1
+
+    @property
+    def num_primary_caps(self) -> int:
+        return self.primary_hw * self.primary_hw * self.primary_channels // self.caps_dim
+
+    @staticmethod
+    def google() -> "CapsNetConfig":
+        """The exact paper geometry: 20x20x256 conv1, 6x6x256 primary,
+        1152 x 8D -> 10 x 16D ClassCaps."""
+        return CapsNetConfig()
+
+    @staticmethod
+    def small() -> "CapsNetConfig":
+        """Reduced geometry for fast CPU tests / the training demo."""
+        return CapsNetConfig(conv1_channels=32, primary_channels=32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepCapsConfig:
+    """DeepCaps [Rajasegaran et al. 2019] geometry, adapted per DESIGN.md:
+    4 cells x 4 ConvCaps2D (strides 2,2,1,1), 32 capsule types x 8D,
+    3D ConvCaps with routing in the last cell, ClassCaps 10 x 32D."""
+    image_hw: int = 64
+    image_c: int = 3
+    conv1_channels: int = 128
+    caps_types: int = 32
+    caps_dim: int = 8
+    cell_strides: Tuple[int, ...] = (2, 2, 1, 1)
+    convs_per_cell: int = 4        # 3 sequential + 1 parallel skip
+    num_classes: int = 10
+    class_caps_dim: int = 32
+    routing_iterations: int = 3
+
+    @property
+    def caps_channels(self) -> int:
+        return self.caps_types * self.caps_dim  # 256
+
+    @property
+    def final_hw(self) -> int:
+        hw = self.image_hw
+        for s in self.cell_strides:
+            hw //= s
+        return hw  # 16 for the full config
+
+    @property
+    def num_final_caps(self) -> int:
+        return self.final_hw * self.final_hw * self.caps_types  # 8192
+
+    @staticmethod
+    def full() -> "DeepCapsConfig":
+        return DeepCapsConfig()
+
+    @staticmethod
+    def lite() -> "DeepCapsConfig":
+        """Runtime-servable reduction (CPU interpret-mode artifacts): 32x32
+        input, 8 caps types x 8D, final 4x4 grid.  The analytical model in
+        rust uses full(); see DESIGN.md section Substitutions."""
+        return DeepCapsConfig(
+            image_hw=32,
+            conv1_channels=32,
+            caps_types=8,
+            cell_strides=(2, 2, 2, 1),
+            class_caps_dim=16,
+        )
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+
+def _conv_init(key, kh, kw, cin, cout, scale=None):
+    fan_in = kh * kw * cin
+    scale = scale or (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * scale
+
+
+def init_capsnet(key, cfg: CapsNetConfig = CapsNetConfig.google()) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "conv1_w": _conv_init(k1, cfg.conv1_kernel, cfg.conv1_kernel,
+                              cfg.image_c, cfg.conv1_channels),
+        "conv1_b": jnp.zeros((cfg.conv1_channels,), jnp.float32),
+        "primary_w": _conv_init(k2, cfg.primary_kernel, cfg.primary_kernel,
+                                cfg.conv1_channels, cfg.primary_channels),
+        "primary_b": jnp.zeros((cfg.primary_channels,), jnp.float32),
+        "class_w": jax.random.normal(
+            k3, (cfg.num_primary_caps, cfg.num_classes,
+                 cfg.caps_dim, cfg.class_caps_dim), jnp.float32) * 0.05,
+    }
+
+
+def capsnet_param_order(cfg: CapsNetConfig) -> List[str]:
+    """Deterministic argument order used by aot.py and the rust runtime."""
+    return ["conv1_w", "conv1_b", "primary_w", "primary_b", "class_w"]
+
+
+def init_deepcaps(key, cfg: DeepCapsConfig = DeepCapsConfig.lite()) -> Params:
+    keys = jax.random.split(key, 64)
+    ki = iter(keys)
+    params: Params = {
+        "conv1_w": _conv_init(next(ki), 3, 3, cfg.image_c, cfg.conv1_channels),
+        "conv1_b": jnp.zeros((cfg.conv1_channels,), jnp.float32),
+    }
+    cell_in = cfg.conv1_channels
+    for cell in range(len(cfg.cell_strides)):
+        for conv in range(cfg.convs_per_cell):
+            # conv0 (sequential head) and the last conv (parallel skip) both
+            # see the cell input; the middle sequential convs see caps_channels.
+            cin = cell_in if conv in (0, cfg.convs_per_cell - 1) else cfg.caps_channels
+            name = f"cell{cell}_conv{conv}"
+            params[f"{name}_w"] = _conv_init(next(ki), 3, 3, cin, cfg.caps_channels)
+            params[f"{name}_b"] = jnp.zeros((cfg.caps_channels,), jnp.float32)
+        cell_in = cfg.caps_channels
+    # 3D ConvCaps: per-(in-type, out-type) pose transforms, shared spatially.
+    params["caps3d_w"] = jax.random.normal(
+        next(ki), (cfg.caps_types, cfg.caps_types, cfg.caps_dim, cfg.caps_dim),
+        jnp.float32) * 0.1
+    params["class_w"] = jax.random.normal(
+        next(ki), (cfg.num_final_caps, cfg.num_classes,
+                   cfg.caps_dim, cfg.class_caps_dim), jnp.float32) * 0.03
+    return params
+
+
+def deepcaps_param_order(cfg: DeepCapsConfig) -> List[str]:
+    order = ["conv1_w", "conv1_b"]
+    for cell in range(len(cfg.cell_strides)):
+        for conv in range(cfg.convs_per_cell):
+            order += [f"cell{cell}_conv{conv}_w", f"cell{cell}_conv{conv}_b"]
+    order += ["caps3d_w", "class_w"]
+    return order
+
+
+# --------------------------------------------------------------------------
+# Shared pieces
+# --------------------------------------------------------------------------
+
+def _conv2d(x, w, b, stride=1, padding="VALID"):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def _squash_last(x, use_pallas: bool):
+    if use_pallas:
+        return K.squash_nd(x)
+    return ref.squash(x)
+
+
+def _classcaps(u, w, iterations, use_pallas: bool):
+    """u: [B, NI, DI], w: [NI, NO, DI, DO] -> v: [B, NO, DO]."""
+    if use_pallas:
+        def one(ui):
+            uhat = K.votes(ui, w)
+            return K.dynamic_routing(uhat, num_iterations=iterations)
+    else:
+        def one(ui):
+            return ref.classcaps(ui, w, num_iterations=iterations)
+    return jax.vmap(one)(u)
+
+
+def caps_lengths(v):
+    """Output capsule lengths == class scores: [B, NO, DO] -> [B, NO]."""
+    return jnp.sqrt(jnp.sum(jnp.square(v), axis=-1) + ref.EPS)
+
+
+# --------------------------------------------------------------------------
+# CapsNet stages (the units the rust coordinator schedules)
+# --------------------------------------------------------------------------
+
+def capsnet_conv1(params: Params, x, cfg: CapsNetConfig):
+    """x: [B, 28, 28, 1] -> ReLU conv features [B, 20, 20, 256]."""
+    return jax.nn.relu(_conv2d(x, params["conv1_w"], params["conv1_b"]))
+
+
+def capsnet_primarycaps(params: Params, h, cfg: CapsNetConfig,
+                        use_pallas: bool = True):
+    """h: [B, 20, 20, 256] -> primary capsule poses [B, 1152, 8] (squashed)."""
+    p = _conv2d(h, params["primary_w"], params["primary_b"],
+                stride=cfg.primary_stride)
+    b = p.shape[0]
+    u = p.reshape(b, cfg.num_primary_caps, cfg.caps_dim)
+    return _squash_last(u, use_pallas)
+
+
+def capsnet_classcaps(params: Params, u, cfg: CapsNetConfig,
+                      use_pallas: bool = True):
+    """u: [B, 1152, 8] -> (lengths [B, 10], v [B, 10, 16])."""
+    v = _classcaps(u, params["class_w"], cfg.routing_iterations, use_pallas)
+    return caps_lengths(v), v
+
+
+def capsnet_forward(params: Params, x, cfg: CapsNetConfig = CapsNetConfig.google(),
+                    use_pallas: bool = True):
+    """Full inference: x [B, 28, 28, 1] -> (lengths [B, 10], v [B, 10, 16])."""
+    h = capsnet_conv1(params, x, cfg)
+    u = capsnet_primarycaps(params, h, cfg, use_pallas)
+    return capsnet_classcaps(params, u, cfg, use_pallas)
+
+
+# --------------------------------------------------------------------------
+# DeepCaps
+# --------------------------------------------------------------------------
+
+def _convcaps2d(x, w, b, stride, cfg: DeepCapsConfig, use_pallas: bool):
+    """ConvCaps2D: conv over flattened capsule channels + squash per capsule."""
+    p = _conv2d(x, w, b, stride=stride, padding="SAME")
+    bsz, h, wd, _ = p.shape
+    caps = p.reshape(bsz, h, wd, cfg.caps_types, cfg.caps_dim)
+    caps = _squash_last(caps, use_pallas)
+    return caps.reshape(bsz, h, wd, cfg.caps_channels)
+
+
+def deepcaps_cell(params: Params, x, cell: int, cfg: DeepCapsConfig,
+                  use_pallas: bool):
+    """3 sequential ConvCaps2D + 1 parallel skip ConvCaps2D (summed), as in
+    DeepCaps Fig 5: the skip branch sees the cell input."""
+    stride = cfg.cell_strides[cell]
+    seq = x
+    for conv in range(cfg.convs_per_cell - 1):
+        name = f"cell{cell}_conv{conv}"
+        s = stride if conv == 0 else 1
+        seq = _convcaps2d(seq, params[f"{name}_w"], params[f"{name}_b"],
+                          s, cfg, use_pallas)
+    name = f"cell{cell}_conv{cfg.convs_per_cell - 1}"
+    skip = _convcaps2d(x, params[f"{name}_w"], params[f"{name}_b"],
+                       stride, cfg, use_pallas)
+    return seq + skip
+
+
+def deepcaps_caps3d(params: Params, x, cfg: DeepCapsConfig, use_pallas: bool):
+    """3D ConvCaps with dynamic routing: every spatial position's input
+    capsule votes for each output capsule type via a spatially-shared
+    transform; routing aggregates over (position x in-type).
+
+    x: [B, S, S, 256] -> v3d: [B, caps_types, caps_dim].
+    The vote buffer here is exactly the 8 MiB accumulator working set of the
+    analytical model (DESIGN.md section 6)."""
+    bsz, s, _, _ = x.shape
+    ni = s * s * cfg.caps_types
+    u = x.reshape(bsz, ni, cfg.caps_dim)
+    # Spatially-shared transforms, tiled to per-input-capsule form.
+    w = jnp.tile(params["caps3d_w"], (s * s, 1, 1, 1))  # [NI, CJ, D, D]
+    if use_pallas:
+        def one(ui):
+            uhat = K.votes(ui, w)
+            return K.dynamic_routing(uhat, num_iterations=cfg.routing_iterations)
+    else:
+        def one(ui):
+            return ref.classcaps(ui, w, num_iterations=cfg.routing_iterations)
+    return jax.vmap(one)(u)
+
+
+def deepcaps_forward(params: Params, x,
+                     cfg: DeepCapsConfig = DeepCapsConfig.lite(),
+                     use_pallas: bool = True):
+    """Full DeepCaps inference.
+
+    x: [B, HW, HW, 3] -> (lengths [B, 10], v [B, 10, class_caps_dim]).
+    The flattened final-cell capsules feed ClassCaps (FC caps with routing);
+    the 3D-ConvCaps output poses modulate the class capsules additively on
+    their leading dims (a faithful simplification of DeepCaps' concatenation,
+    documented in DESIGN.md)."""
+    h = jax.nn.relu(_conv2d(x, params["conv1_w"], params["conv1_b"],
+                            padding="SAME"))
+    for cell in range(len(cfg.cell_strides)):
+        h = deepcaps_cell(params, h, cell, cfg, use_pallas)
+    v3d = deepcaps_caps3d(params, h, cfg, use_pallas)          # [B, CT, D]
+
+    bsz = h.shape[0]
+    u = h.reshape(bsz, cfg.num_final_caps, cfg.caps_dim)
+    v = _classcaps(u, params["class_w"], cfg.routing_iterations, use_pallas)
+    # Inject the routed 3D-caps pose summary into the class capsules.
+    pose = jnp.mean(v3d, axis=1)                               # [B, D]
+    v = v + jnp.pad(pose, ((0, 0), (0, cfg.class_caps_dim - cfg.caps_dim))
+                    )[:, None, :] * 0.1
+    return caps_lengths(v), v
+
+
+# --------------------------------------------------------------------------
+# Stage table used by aot.py
+# --------------------------------------------------------------------------
+
+def capsnet_stage_fns(cfg: CapsNetConfig, use_pallas: bool = True):
+    """Returns {stage_name: (fn(params, x) -> tuple, input_shape_fn(batch))}
+    used by the AOT lowering and mirrored by rust/src/runtime/artifacts.rs."""
+    hw, c1 = cfg.conv1_hw, cfg.conv1_channels
+
+    return {
+        "conv1": (
+            lambda p, x: (capsnet_conv1(p, x, cfg),),
+            lambda b: (b, cfg.image_hw, cfg.image_hw, cfg.image_c),
+        ),
+        "primarycaps": (
+            lambda p, h: (capsnet_primarycaps(p, h, cfg, use_pallas),),
+            lambda b: (b, hw, hw, c1),
+        ),
+        "classcaps": (
+            lambda p, u: capsnet_classcaps(p, u, cfg, use_pallas),
+            lambda b: (b, cfg.num_primary_caps, cfg.caps_dim),
+        ),
+        "full": (
+            lambda p, x: capsnet_forward(p, x, cfg, use_pallas),
+            lambda b: (b, cfg.image_hw, cfg.image_hw, cfg.image_c),
+        ),
+    }

@@ -1,0 +1,122 @@
+"""Training demo (end-to-end validation, EXPERIMENTS.md E20).
+
+Trains a CapsNet on the synthetic-digits task for a few hundred steps with
+margin loss + Adam and logs the loss/accuracy curve to
+``results/train_loss.csv``.  Build-time only — the served artifacts embed the
+weights this script (or ``aot.py``'s fixed-seed init) produced; python never
+runs at request time.
+
+Uses the pure-jnp oracle path (``use_pallas=False``): interpret-mode Pallas
+has no efficient VJP and tests pin it numerically equal to the oracle, so
+training through the oracle is exact w.r.t. the served function.
+
+Usage: cd python && python -m compile.train [--steps 300] [--small]
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .kernels import ref
+from .model import CapsNetConfig, capsnet_forward, init_capsnet
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t)
+    vhat_scale = 1.0 / (1 - b2 ** t)
+    params = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * (mm * mhat_scale) / (jnp.sqrt(vv * vhat_scale) + eps),
+        params, m, v)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def make_step(cfg: CapsNetConfig):
+    def loss_fn(params, x, y):
+        _, v = capsnet_forward(params, x, cfg, use_pallas=False)
+        return ref.margin_loss(v, y)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        params, opt = adam_update(params, grads, opt)
+        return params, opt, loss
+
+    return step
+
+
+@jax.jit
+def _accuracy_scores(lengths, y):
+    return jnp.mean((jnp.argmax(lengths, axis=1) == y).astype(jnp.float32))
+
+
+def train(steps=300, batch=16, cfg=None, seed=0, log_path=None, verbose=True):
+    """Returns (params, history) where history is a list of dicts."""
+    cfg = cfg or CapsNetConfig.small()
+    key = jax.random.PRNGKey(seed)
+    params = init_capsnet(key, cfg)
+    opt = adam_init(params)
+    step_fn = make_step(cfg)
+
+    # A fixed pool regenerated per epoch keeps memory flat and is equivalent
+    # to streaming the procedural generator.
+    pool_x, pool_y = data.synthetic_digits(1024, seed=seed, hw=cfg.image_hw)
+    test_x, test_y = data.synthetic_digits(256, seed=seed + 1, hw=cfg.image_hw)
+    test_x, test_y = jnp.asarray(test_x), jnp.asarray(test_y)
+
+    rng = np.random.default_rng(seed)
+    history = []
+    t0 = time.time()
+    for it in range(steps):
+        idx = rng.integers(0, len(pool_x), size=batch)
+        params, opt, loss = step_fn(params, opt,
+                                    jnp.asarray(pool_x[idx]), jnp.asarray(pool_y[idx]))
+        if it % 20 == 0 or it == steps - 1:
+            lengths, _ = capsnet_forward(params, test_x, cfg, use_pallas=False)
+            acc = float(_accuracy_scores(lengths, test_y))
+            rec = {"step": it, "loss": float(loss), "test_acc": acc,
+                   "elapsed_s": time.time() - t0}
+            history.append(rec)
+            if verbose:
+                print(f"step {it:4d}  loss {rec['loss']:.4f}  "
+                      f"test_acc {acc:.3f}  ({rec['elapsed_s']:.1f}s)")
+    if log_path:
+        os.makedirs(os.path.dirname(log_path), exist_ok=True)
+        with open(log_path, "w") as f:
+            f.write("step,loss,test_acc,elapsed_s\n")
+            for rec in history:
+                f.write(f"{rec['step']},{rec['loss']:.6f},"
+                        f"{rec['test_acc']:.4f},{rec['elapsed_s']:.2f}\n")
+    return params, history
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--google", action="store_true",
+                    help="full Google geometry (slow on CPU); default: small")
+    ap.add_argument("--out", default="../results/train_loss.csv")
+    args = ap.parse_args()
+    cfg = CapsNetConfig.google() if args.google else CapsNetConfig.small()
+    _, history = train(steps=args.steps, batch=args.batch, cfg=cfg,
+                       log_path=args.out)
+    first, last = history[0], history[-1]
+    print(f"loss {first['loss']:.4f} -> {last['loss']:.4f}; "
+          f"test_acc {first['test_acc']:.3f} -> {last['test_acc']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""AOT bridge tests: DSCW weight serialization roundtrip, manifest
+consistency, and HLO-text sanity (the rust loader's expectations)."""
+
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def read_weights(path):
+    """Independent DSCW v1 reader (deliberately not reusing aot.py code)."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"DSCW"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == 1
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            (blen,) = struct.unpack("<Q", f.read(8))
+            raw = f.read(blen)
+            dtype = {0: "<f4", 1: "<i4"}[code]
+            out[name] = np.frombuffer(raw, dtype=dtype).reshape(dims)
+    return out
+
+
+def test_weights_roundtrip(tmp_path):
+    cfg = M.CapsNetConfig.small()
+    params = M.init_capsnet(jax.random.PRNGKey(7), cfg)
+    order = M.capsnet_param_order(cfg)
+    path = tmp_path / "w.bin"
+    aot.write_weights(str(path), params, order)
+    back = read_weights(str(path))
+    assert list(back) == order  # order-preserving
+    for k in order:
+        np.testing.assert_array_equal(back[k], np.asarray(params[k]))
+
+
+def test_hlo_text_lowering_small():
+    cfg = M.CapsNetConfig.small()
+    params = M.init_capsnet(jax.random.PRNGKey(8), cfg)
+    order = M.capsnet_param_order(cfg)
+    fn = lambda p, x: M.capsnet_forward(p, x, cfg, use_pallas=False)
+    lowered = aot.lower_stage(fn, order, params,
+                              (1, cfg.image_hw, cfg.image_hw, 1))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # Params + input = 6 HLO parameters, in the fixed order.
+    assert text.count("parameter(") >= len(order) + 1
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestManifest:
+    @pytest.fixture(autouse=True)
+    def _load(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            self.manifest = json.load(f)
+
+    def test_format(self):
+        assert self.manifest["format"] == "descnet-artifacts-v1"
+        assert self.manifest["interchange"] == "hlo-text"
+
+    def test_files_exist_and_are_hlo_text(self):
+        for e in self.manifest["artifacts"]:
+            path = os.path.join(ART, e["file"])
+            assert os.path.exists(path), e["file"]
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), e["file"]
+
+    def test_weight_bundles_match_manifest_shapes(self):
+        for wb in self.manifest["weights"]:
+            weights = read_weights(os.path.join(ART, wb["file"]))
+            assert list(weights) == wb["params"]
+            for k, shape in wb["shapes"].items():
+                assert list(weights[k].shape) == shape
+
+    def test_capsnet_stage_shapes_chain(self):
+        """conv1 output shape == primarycaps input shape etc. per batch."""
+        by = {(e["stage"], e["batch"]): e for e in self.manifest["artifacts"]
+              if e["net"] == "capsnet"}
+        batches = sorted({b for (_, b) in by})
+        for b in batches:
+            conv1, prim = by[("conv1", b)], by[("primarycaps", b)]
+            cls, full = by[("classcaps", b)], by[("full", b)]
+            assert conv1["outputs"][0]["shape"] == prim["inputs"][0]["shape"]
+            assert prim["outputs"][0]["shape"] == cls["inputs"][0]["shape"]
+            assert full["inputs"][0]["shape"] == conv1["inputs"][0]["shape"]
+            assert full["outputs"] == cls["outputs"]
+            assert full["outputs"][0]["shape"] == [b, 10]
+
+    def test_paper_geometry_in_manifest(self):
+        full_b1 = next(e for e in self.manifest["artifacts"]
+                       if e["name"] == "capsnet_full_b1")
+        assert full_b1["inputs"][0]["shape"] == [1, 28, 28, 1]
+        cls_b1 = next(e for e in self.manifest["artifacts"]
+                      if e["name"] == "capsnet_classcaps_b1")
+        assert cls_b1["inputs"][0]["shape"] == [1, 1152, 8]

@@ -1,0 +1,211 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against ref.py.
+
+This is the CORE correctness signal for L1 (see DESIGN.md section 2): the HLO
+the rust runtime executes is lowered from exactly these kernels, so numerical
+agreement here transfers to the served model.
+
+hypothesis sweeps shapes/dtypes/tiles; fixed tests pin the exact paper shapes
+(CapsNet ClassCaps 1152x10x8x16, DeepCaps ClassCaps 2048x10x8x32).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-5)
+
+
+def _allclose(a, b, dtype=jnp.float32):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------- squash
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 300),
+    d=st.integers(1, 64),
+    tile=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_squash_matches_ref(n, d, tile, seed):
+    x = jnp.asarray(_rng(seed).normal(size=(n, d)).astype(np.float32) * 3.0)
+    _allclose(K.squash(x, tile=tile), ref.squash(x))
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 64), d=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_squash_bf16(n, d, seed):
+    x = jnp.asarray(_rng(seed).normal(size=(n, d)).astype(np.float32)).astype(jnp.bfloat16)
+    out = K.squash(x, tile=32)
+    assert out.dtype == jnp.bfloat16
+    _allclose(out, ref.squash(x), dtype=jnp.bfloat16)
+
+
+def test_squash_norm_bound():
+    # |squash(s)| < 1 always, and monotone in |s|.
+    x = jnp.asarray(_rng(1).normal(size=(256, 16)).astype(np.float32) * 10)
+    v = np.asarray(K.squash(x))
+    norms = np.linalg.norm(v, axis=1)
+    assert (norms < 1.0 + 1e-5).all()
+
+
+def test_squash_zero_vector_is_finite():
+    x = jnp.zeros((4, 8), jnp.float32)
+    v = np.asarray(K.squash(x))
+    assert np.isfinite(v).all()
+    assert np.abs(v).max() < 1e-3
+
+
+def test_squash_nd_reshapes():
+    x = jnp.asarray(_rng(2).normal(size=(6, 6, 32, 8)).astype(np.float32))
+    _allclose(K.squash_nd(x), ref.squash(x))
+
+
+# ---------------------------------------------------------------- votes
+
+@settings(**SETTINGS)
+@given(
+    ni=st.integers(1, 160),
+    no=st.integers(1, 12),
+    di=st.sampled_from([4, 8, 16]),
+    do=st.sampled_from([8, 16, 32]),
+    tile=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_votes_matches_ref(ni, no, di, do, tile, seed):
+    r = _rng(seed)
+    u = jnp.asarray(r.normal(size=(ni, di)).astype(np.float32))
+    w = jnp.asarray(r.normal(size=(ni, no, di, do)).astype(np.float32) * 0.1)
+    _allclose(K.votes(u, w, tile=tile), ref.votes(u, w))
+
+
+def test_votes_capsnet_classcaps_shape():
+    # Exact Google-CapsNet ClassCaps geometry: 1152 caps x 8D -> 10 caps x 16D.
+    r = _rng(3)
+    u = jnp.asarray(r.normal(size=(1152, 8)).astype(np.float32))
+    w = jnp.asarray(r.normal(size=(1152, 10, 8, 16)).astype(np.float32) * 0.05)
+    out = K.votes(u, w)
+    assert out.shape == (1152, 10, 16)
+    _allclose(out, ref.votes(u, w))
+
+
+def test_votes_bf16_dtype_propagates():
+    r = _rng(4)
+    u = jnp.asarray(r.normal(size=(32, 8))).astype(jnp.bfloat16)
+    w = jnp.asarray(r.normal(size=(32, 4, 8, 16)) * 0.1).astype(jnp.bfloat16)
+    out = K.votes(u, w, tile=16)
+    assert out.dtype == jnp.bfloat16
+    _allclose(out, ref.votes(u, w), dtype=jnp.bfloat16)
+
+
+# ---------------------------------------------------------------- routing
+
+@settings(**SETTINGS)
+@given(
+    ni=st.integers(1, 200),
+    no=st.integers(1, 12),
+    do=st.sampled_from([4, 8, 16]),
+    tile=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_sum_matches_ref(ni, no, do, tile, seed):
+    r = _rng(seed)
+    b = jnp.asarray(r.normal(size=(ni, no)).astype(np.float32))
+    uhat = jnp.asarray(r.normal(size=(ni, no, do)).astype(np.float32))
+    c, s = K.softmax_sum(b, uhat, tile=tile)
+    c_ref = ref.routing_softmax(b)
+    _allclose(c, c_ref)
+    _allclose(s, ref.routing_sum(c_ref, uhat))
+
+
+@settings(**SETTINGS)
+@given(
+    ni=st.integers(1, 200),
+    no=st.integers(1, 12),
+    do=st.sampled_from([4, 8, 16]),
+    tile=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_update_matches_ref(ni, no, do, tile, seed):
+    r = _rng(seed)
+    b = jnp.asarray(r.normal(size=(ni, no)).astype(np.float32))
+    uhat = jnp.asarray(r.normal(size=(ni, no, do)).astype(np.float32))
+    v = jnp.asarray(r.normal(size=(no, do)).astype(np.float32))
+    _allclose(K.update(b, uhat, v, tile=tile), ref.routing_update(b, uhat, v))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    ni=st.integers(2, 128),
+    no=st.integers(2, 10),
+    do=st.sampled_from([4, 8, 16]),
+    iters=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dynamic_routing_matches_ref(ni, no, do, iters, seed):
+    uhat = jnp.asarray(_rng(seed).normal(size=(ni, no, do)).astype(np.float32))
+    _allclose(
+        K.dynamic_routing(uhat, num_iterations=iters, tile=32),
+        ref.dynamic_routing(uhat, num_iterations=iters),
+    )
+
+
+def test_coupling_coefficients_are_distribution():
+    # sum_j c_ij == 1 for every input capsule (softmax over output axis).
+    r = _rng(7)
+    b = jnp.asarray(r.normal(size=(96, 10)).astype(np.float32))
+    uhat = jnp.asarray(r.normal(size=(96, 10, 16)).astype(np.float32))
+    c, _ = K.softmax_sum(b, uhat, tile=32)
+    np.testing.assert_allclose(np.asarray(c).sum(axis=1), np.ones(96), rtol=1e-5)
+
+
+def test_routing_uniform_logits_equal_average():
+    # With b == 0 the first Sum is the plain mean-like aggregation: s_j =
+    # (1/NO-normalized) softmax weights, identical across i.
+    r = _rng(8)
+    uhat = jnp.asarray(r.normal(size=(64, 5, 8)).astype(np.float32))
+    b = jnp.zeros((64, 5), jnp.float32)
+    _, s = K.softmax_sum(b, uhat, tile=32)
+    expected = np.asarray(uhat).sum(axis=0) / 5.0
+    np.testing.assert_allclose(np.asarray(s), expected, rtol=1e-4, atol=1e-4)
+
+
+def test_routing_agreement_increases_coupling():
+    # An input capsule whose vote aligns with the output pose must gain
+    # coupling relative to one voting orthogonally (paper section II-A).
+    uhat = np.zeros((2, 2, 4), np.float32)
+    uhat[0, 0] = [1, 0, 0, 0]     # capsule 0 votes strongly for output 0
+    uhat[1, 0] = [-0.5, 0, 0, 0]  # capsule 1 votes (more weakly) against it
+    uhat = jnp.asarray(uhat)
+    b = jnp.zeros((2, 2), jnp.float32)
+    b1, _ = K.routing_iteration(b, uhat, tile=2)
+    b1 = np.asarray(b1)
+    assert b1[0, 0] > b1[1, 0]
+
+
+def test_margin_loss_reference_sanity():
+    # Perfect prediction (long correct capsule, short others) -> near-zero loss.
+    v = np.zeros((2, 10, 16), np.float32)
+    v[0, 3, 0] = 0.95
+    v[1, 7, 0] = 0.95
+    loss = ref.margin_loss(jnp.asarray(v), jnp.asarray([3, 7]))
+    assert float(loss) < 1e-3
+    # Uniformly wrong -> large loss.
+    v2 = np.full((2, 10, 16), 0.3, np.float32)
+    loss2 = ref.margin_loss(jnp.asarray(v2), jnp.asarray([0, 0]))
+    assert float(loss2) > float(loss)

@@ -1,0 +1,163 @@
+"""L2 model tests: shapes, stage composition, pallas-vs-oracle equivalence,
+and a short end-to-end learning check on the synthetic-digits task."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data
+from compile import model as M
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return M.CapsNetConfig.small()
+
+
+@pytest.fixture(scope="module")
+def small_params(small_cfg):
+    return M.init_capsnet(jax.random.PRNGKey(0), small_cfg)
+
+
+def _digits(n, hw=28, seed=0):
+    x, y = data.synthetic_digits(n, seed=seed, hw=hw)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+# ----------------------------------------------------------------- geometry
+
+def test_google_config_matches_paper():
+    cfg = M.CapsNetConfig.google()
+    assert cfg.conv1_hw == 20           # 28 - 9 + 1
+    assert cfg.primary_hw == 6          # (20 - 9) / 2 + 1
+    assert cfg.num_primary_caps == 1152  # 6 * 6 * 32 capsule types
+    assert cfg.class_caps_dim == 16
+
+
+def test_deepcaps_full_config_matches_design():
+    cfg = M.DeepCapsConfig.full()
+    assert cfg.caps_channels == 256
+    assert cfg.final_hw == 16
+    assert cfg.num_final_caps == 8192
+    # The 8 MiB vote buffer of DESIGN.md section 6:
+    votes_bytes = cfg.final_hw**2 * cfg.caps_types * cfg.caps_types * cfg.caps_dim * 4
+    assert votes_bytes == 8 * 1024 * 1024
+
+
+def test_capsnet_param_shapes(small_cfg, small_params):
+    assert small_params["conv1_w"].shape == (9, 9, 1, 32)
+    assert small_params["class_w"].shape[0] == small_cfg.num_primary_caps
+    order = M.capsnet_param_order(small_cfg)
+    assert set(order) == set(small_params)
+
+
+def test_deepcaps_param_order_covers_params():
+    cfg = M.DeepCapsConfig.lite()
+    params = M.init_deepcaps(jax.random.PRNGKey(1), cfg)
+    order = M.deepcaps_param_order(cfg)
+    assert set(order) == set(params)
+    assert len(order) == len(set(order))
+
+
+# ----------------------------------------------------------------- forward
+
+def test_capsnet_forward_shapes(small_cfg, small_params):
+    x, _ = _digits(3)
+    lengths, v = M.capsnet_forward(small_params, x, small_cfg, use_pallas=False)
+    assert lengths.shape == (3, 10)
+    assert v.shape == (3, 10, small_cfg.class_caps_dim)
+    assert np.isfinite(np.asarray(lengths)).all()
+    # capsule lengths are squash outputs -> in (0, 1)
+    assert (np.asarray(lengths) < 1.0).all() and (np.asarray(lengths) >= 0).all()
+
+
+def test_capsnet_pallas_matches_oracle(small_cfg, small_params):
+    x, _ = _digits(2)
+    l_pal, v_pal = M.capsnet_forward(small_params, x, small_cfg, use_pallas=True)
+    l_ref, v_ref = M.capsnet_forward(small_params, x, small_cfg, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(v_pal), np.asarray(v_ref),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l_pal), np.asarray(l_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_capsnet_stage_composition_equals_full(small_cfg, small_params):
+    x, _ = _digits(2)
+    h = M.capsnet_conv1(small_params, x, small_cfg)
+    u = M.capsnet_primarycaps(small_params, h, small_cfg, use_pallas=False)
+    l_st, v_st = M.capsnet_classcaps(small_params, u, small_cfg, use_pallas=False)
+    l_full, v_full = M.capsnet_forward(small_params, x, small_cfg, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(v_st), np.asarray(v_full),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(l_st), np.asarray(l_full),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_primarycaps_squashed(small_cfg, small_params):
+    x, _ = _digits(2)
+    h = M.capsnet_conv1(small_params, x, small_cfg)
+    u = M.capsnet_primarycaps(small_params, h, small_cfg, use_pallas=False)
+    norms = np.linalg.norm(np.asarray(u), axis=-1)
+    assert (norms < 1.0 + 1e-5).all()
+
+
+def test_capsnet_batch_invariance(small_cfg, small_params):
+    # Row i of a batch must equal the same image run at batch 1.
+    x, _ = _digits(3)
+    l_b, _ = M.capsnet_forward(small_params, x, small_cfg, use_pallas=False)
+    l_1, _ = M.capsnet_forward(small_params, x[1:2], small_cfg, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(l_b[1:2]), np.asarray(l_1),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------------------------- deepcaps
+
+def test_deepcaps_lite_forward_shapes():
+    cfg = M.DeepCapsConfig.lite()
+    params = M.init_deepcaps(jax.random.PRNGKey(2), cfg)
+    x = jnp.asarray(data.synthetic_cifar(2, hw=cfg.image_hw)[0])
+    lengths, v = M.deepcaps_forward(params, x, cfg, use_pallas=False)
+    assert lengths.shape == (2, 10)
+    assert v.shape == (2, 10, cfg.class_caps_dim)
+    assert np.isfinite(np.asarray(v)).all()
+
+
+def test_deepcaps_pallas_matches_oracle():
+    cfg = M.DeepCapsConfig.lite()
+    params = M.init_deepcaps(jax.random.PRNGKey(3), cfg)
+    x = jnp.asarray(data.synthetic_cifar(1, hw=cfg.image_hw)[0])
+    l_pal, v_pal = M.deepcaps_forward(params, x, cfg, use_pallas=True)
+    l_ref, v_ref = M.deepcaps_forward(params, x, cfg, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(v_pal), np.asarray(v_ref),
+                               rtol=1e-3, atol=1e-4)
+
+
+# ----------------------------------------------------------------- data
+
+def test_synthetic_digits_separable():
+    x, y = data.synthetic_digits(64, seed=0)
+    assert x.shape == (64, 28, 28, 1) and x.dtype == np.float32
+    assert x.min() >= 0 and x.max() <= 1
+    assert len(np.unique(y)) > 3
+    # Same class, same seed-stream -> images correlate more within class
+    # than across (weak structural check).
+    x2, y2 = data.synthetic_digits(64, seed=0)
+    np.testing.assert_array_equal(y, y2)
+    np.testing.assert_allclose(x, x2)
+
+
+def test_synthetic_cifar_shapes():
+    x, y = data.synthetic_cifar(8, hw=32)
+    assert x.shape == (8, 32, 32, 3)
+    assert (y >= 0).all() and (y < 10).all()
+
+
+# ----------------------------------------------------------------- training
+
+def test_margin_loss_decreases_quickly():
+    from compile.train import train
+    _, hist = train(steps=41, batch=8, cfg=M.CapsNetConfig.small(),
+                    seed=0, verbose=False)
+    assert hist[-1]["loss"] < hist[0]["loss"]

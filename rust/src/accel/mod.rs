@@ -1,0 +1,260 @@
+//! Event-level NP-array simulator.
+//!
+//! The analytical model (`crate::dataflow`) computes per-op cycle counts in
+//! closed form; this module *simulates* the same schedule at tile
+//! granularity — weight-tile loads double-buffered against row streaming,
+//! accumulator drains through the activation unit, and the per-output-
+//! capsule serialization of dynamic routing — and reports where time goes
+//! (compute / weight-stream / drain / normalization).
+//!
+//! Purpose (DESIGN.md inventory row "event-level simulator"):
+//!   1. cross-validate the closed forms: `sim_op` must agree with
+//!      `dataflow::profile_op` within a small tolerance for every op of
+//!      both networks (asserted in tests and in `tests/paper_claims.rs`);
+//!   2. expose the *phase breakdown* the closed form hides (used by the
+//!      `descnet analyze --sim` view and the ablation bench).
+
+use crate::config::Accelerator;
+use crate::dataflow::{profile_op, OpProfile};
+use crate::model::{Network, OpKind, Operation};
+
+/// Where an operation's cycles went.
+#[derive(Debug, Clone, Default)]
+pub struct OpSim {
+    pub name: String,
+    /// MAC-array busy cycles.
+    pub compute: u64,
+    /// Cycles stalled on the weight-SPM stream (port-width bound).
+    pub weight_stream: u64,
+    /// Activation-unit drain cycles not hidden behind compute.
+    pub drain: u64,
+    /// Routing normalization serialization (per output capsule).
+    pub normalization: u64,
+    /// Fixed pipeline fill/drain overhead.
+    pub overhead: u64,
+}
+
+impl OpSim {
+    pub fn total(&self) -> u64 {
+        self.compute + self.weight_stream + self.drain + self.normalization + self.overhead
+    }
+
+    /// Utilization of the MAC array over the op.
+    pub fn utilization(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.compute as f64 / self.total() as f64
+        }
+    }
+}
+
+/// Simulates one operation tile by tile.
+pub fn sim_op(op: &Operation, accel: &Accelerator) -> OpSim {
+    let pes = accel.pes() as u64;
+    let cols = accel.array_cols as u64;
+    match &op.kind {
+        OpKind::Conv2d {
+            hin: _,
+            win: _,
+            cin,
+            hout,
+            wout,
+            cout,
+            kh,
+            kw,
+            squash_caps,
+            ..
+        } => {
+            // Tile loop: output-channel tiles of 16 x input-channel tiles of
+            // 16; each tile's weights (kh*kw*16*16 bytes) stream at 16 B/cyc
+            // double-buffered against the tile's MAC work.
+            let co_tiles = (cout + accel.array_cols - 1) / accel.array_cols;
+            let ci_tiles = (cin + accel.array_rows - 1) / accel.array_rows;
+            let mut compute = 0u64;
+            let mut weight_stream = 0u64;
+            let mut pending_load = 0u64; // first tile load is exposed
+            for _co in 0..co_tiles {
+                for _ci in 0..ci_tiles {
+                    let co_width = accel.array_cols.min(*cout) as u64;
+                    let ci_width = accel.array_rows.min(*cin) as u64;
+                    let tile_macs =
+                        (hout * wout) as u64 * co_width * ci_width * (*kh as u64) * (*kw as u64);
+                    let tile_cycles = tile_macs / pes;
+                    let load_cycles = (kh * kw) as u64 * ci_width * co_width / cols;
+                    // Double buffering: the *previous* pending load overlaps
+                    // this tile's compute.
+                    weight_stream += pending_load.saturating_sub(tile_cycles);
+                    compute += tile_cycles.max(if pending_load > tile_cycles {
+                        0
+                    } else {
+                        tile_cycles
+                    });
+                    pending_load = load_cycles;
+                }
+            }
+            // First tile's load was never overlapped.
+            let first_load = (kh * kw) as u64 * accel.array_rows.min(*cin) as u64
+                * accel.array_cols.min(*cout) as u64
+                / cols;
+            weight_stream += first_load;
+            let drain =
+                (squash_caps * accel.squash_cycles_per_elem / accel.array_cols.max(1)) as u64;
+            OpSim {
+                name: op.name.clone(),
+                compute,
+                weight_stream,
+                drain,
+                normalization: 0,
+                overhead: accel.op_overhead_cycles as u64,
+            }
+        }
+        OpKind::Votes {
+            ni,
+            no,
+            di,
+            dout,
+            weights_in_pe_regs,
+            ..
+        } => {
+            // Per-(input-tile, output-capsule) vote matmuls; transform tiles
+            // stream unless pinned in PE registers.
+            let macs = (ni * no * di * dout) as u64;
+            let compute = macs / pes;
+            let stream = if *weights_in_pe_regs {
+                0
+            } else {
+                op.param_bytes() / cols
+            };
+            OpSim {
+                name: op.name.clone(),
+                compute: compute.min(stream.max(compute)),
+                weight_stream: stream.saturating_sub(compute),
+                drain: 0,
+                normalization: 0,
+                overhead: accel.op_overhead_cycles as u64,
+            }
+        }
+        OpKind::Routing {
+            ni, no, dout, ..
+        } => {
+            // One 16-long dot per cycle on the PE row; per output capsule a
+            // serialized normalization tail, overlapped past the
+            // double-buffer depth.
+            let pairs = (ni * no) as u64;
+            let compute = pairs * (*dout as u64) / accel.array_rows as u64;
+            let tail =
+                (ni * accel.routing_act_serial_cycles).min(accel.routing_j_overhead_cap) as u64;
+            let mut normalization = 0;
+            for _j in 0..*no {
+                normalization += tail;
+            }
+            OpSim {
+                name: op.name.clone(),
+                compute,
+                weight_stream: 0,
+                drain: 0,
+                normalization,
+                overhead: accel.op_overhead_cycles as u64,
+            }
+        }
+    }
+}
+
+/// Simulates a whole network; returns per-op simulations.
+pub fn sim_network(net: &Network, accel: &Accelerator) -> Vec<OpSim> {
+    net.ops.iter().map(|op| sim_op(op, accel)).collect()
+}
+
+/// Cross-validation: relative disagreement between the event simulation and
+/// the analytical closed form for one op.
+pub fn rel_disagreement(sim: &OpSim, analytical: &OpProfile) -> f64 {
+    let a = analytical.cycles as f64;
+    (sim.total() as f64 - a).abs() / a
+}
+
+/// Convenience: validate a whole network; returns the max disagreement.
+pub fn validate_network(net: &Network, accel: &Accelerator) -> f64 {
+    net.ops
+        .iter()
+        .map(|op| {
+            let sim = sim_op(op, accel);
+            let ana = profile_op(op, accel);
+            rel_disagreement(&sim, &ana)
+        })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{capsnet_mnist, deepcaps_cifar10};
+
+    #[test]
+    fn simulation_agrees_with_closed_form_capsnet() {
+        let accel = Accelerator::default();
+        let net = capsnet_mnist();
+        for op in &net.ops {
+            let sim = sim_op(op, &accel);
+            let ana = profile_op(op, &accel);
+            assert!(
+                rel_disagreement(&sim, &ana) < 0.08,
+                "{}: sim {} vs analytical {}",
+                op.name,
+                sim.total(),
+                ana.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn simulation_agrees_with_closed_form_deepcaps() {
+        let accel = Accelerator::default();
+        assert!(validate_network(&deepcaps_cifar10(), &accel) < 0.08);
+    }
+
+    #[test]
+    fn conv_utilization_is_high_routing_low() {
+        // The architectural story of Fig 7/9: convolutions keep the array
+        // busy; routing is serialization-bound.
+        let accel = Accelerator::default();
+        let net = capsnet_mnist();
+        let sims = sim_network(&net, &accel);
+        let prim = sims.iter().find(|s| s.name == "Prim").unwrap();
+        assert!(prim.utilization() > 0.9, "{}", prim.utilization());
+        let routing = sims
+            .iter()
+            .find(|s| s.name == "Class-Update+Softmax1")
+            .unwrap();
+        assert!(routing.utilization() < 0.15, "{}", routing.utilization());
+        assert!(routing.normalization > routing.compute);
+    }
+
+    #[test]
+    fn classcaps_is_weight_stream_bound() {
+        let accel = Accelerator::default();
+        let net = capsnet_mnist();
+        let sims = sim_network(&net, &accel);
+        let class = sims.iter().find(|s| s.name == "Class").unwrap();
+        assert!(
+            class.weight_stream > class.compute,
+            "stream {} <= compute {}",
+            class.weight_stream,
+            class.compute
+        );
+    }
+
+    #[test]
+    fn phase_totals_are_consistent() {
+        let accel = Accelerator::default();
+        for net in [capsnet_mnist(), deepcaps_cifar10()] {
+            for sim in sim_network(&net, &accel) {
+                assert_eq!(
+                    sim.total(),
+                    sim.compute + sim.weight_stream + sim.drain + sim.normalization + sim.overhead
+                );
+                assert!(sim.utilization() <= 1.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Dynamic batching policy: the coordinator compiles one executable per
+//! batch size (PJRT artifacts are shape-static), so the batcher decomposes
+//! the pending queue into a sequence of available batch sizes — largest
+//! first, padding only when a request would otherwise wait beyond the
+//! flush deadline.
+
+/// Pure batching policy (threading-free, property-tested).
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Available executable batch sizes, ascending (e.g. [1, 4]).
+    pub sizes: Vec<usize>,
+    /// Max time a request may wait for peers before we pad-and-flush [s].
+    pub flush_deadline_s: f64,
+}
+
+impl BatchPolicy {
+    pub fn new(mut sizes: Vec<usize>, flush_deadline_s: f64) -> BatchPolicy {
+        assert!(!sizes.is_empty(), "need at least one batch size");
+        sizes.sort_unstable();
+        sizes.dedup();
+        BatchPolicy {
+            sizes,
+            flush_deadline_s,
+        }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Greedy decomposition of `pending` requests into executable batch
+    /// sizes (largest-first).  The remainder below the smallest size stays
+    /// queued unless `force_flush` (deadline hit), in which case it is
+    /// emitted as the smallest size that covers it (callers pad the tail).
+    pub fn plan(&self, pending: usize, force_flush: bool) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut left = pending;
+        for &size in self.sizes.iter().rev() {
+            while left >= size {
+                out.push(size);
+                left -= size;
+            }
+        }
+        if left > 0 && force_flush {
+            let cover = self
+                .sizes
+                .iter()
+                .copied()
+                .find(|&s| s >= left)
+                .unwrap_or(self.max_batch());
+            out.push(cover);
+        }
+        out
+    }
+
+    /// Requests consumed by a plan (padding excluded).
+    pub fn planned_requests(&self, pending: usize, force_flush: bool) -> usize {
+        let planned: usize = self.plan(pending, force_flush).iter().sum();
+        planned.min(pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn greedy_largest_first() {
+        let p = BatchPolicy::new(vec![1, 4], 5e-3);
+        assert_eq!(p.plan(9, false), vec![4, 4, 1]);
+        assert_eq!(p.plan(3, false), vec![1, 1, 1]);
+        assert_eq!(p.plan(0, false), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn remainder_waits_unless_flushed() {
+        let p = BatchPolicy::new(vec![4, 8], 5e-3);
+        assert_eq!(p.plan(3, false), Vec::<usize>::new()); // waits for peers
+        assert_eq!(p.plan(3, true), vec![4]); // padded flush
+        assert_eq!(p.plan(11, true), vec![8, 4]);
+    }
+
+    #[test]
+    fn sizes_are_sorted_and_deduped() {
+        let p = BatchPolicy::new(vec![4, 1, 4], 5e-3);
+        assert_eq!(p.sizes, vec![1, 4]);
+        assert_eq!(p.max_batch(), 4);
+    }
+
+    #[test]
+    fn prop_plan_covers_exactly_without_flush() {
+        // Without flush, the plan serves as many requests as possible using
+        // exact sizes; the remainder is strictly smaller than the smallest
+        // batch size.
+        check("batcher-exact-cover", 200, |rng| {
+            let sizes: Vec<usize> = match rng.below(3) {
+                0 => vec![1, 4],
+                1 => vec![2, 8],
+                _ => vec![1, 2, 4, 8],
+            };
+            let p = BatchPolicy::new(sizes.clone(), 1e-3);
+            let pending = rng.below(100) as usize;
+            let plan = p.plan(pending, false);
+            let served: usize = plan.iter().sum();
+            prop_assert!(served <= pending, "over-served {served} > {pending}");
+            prop_assert!(
+                pending - served < sizes[0],
+                "remainder {} >= smallest size {}",
+                pending - served,
+                sizes[0]
+            );
+            for b in &plan {
+                prop_assert!(sizes.contains(b), "plan used unknown size {b}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_flush_always_serves_everything() {
+        check("batcher-flush-covers", 200, |rng| {
+            let p = BatchPolicy::new(vec![1 + rng.below(4) as usize * 3], 1e-3);
+            let pending = rng.below(50) as usize;
+            let plan = p.plan(pending, true);
+            let capacity: usize = plan.iter().sum();
+            prop_assert!(capacity >= pending, "{capacity} < {pending}");
+            // Padding never exceeds one batch's worth.
+            prop_assert!(capacity - pending < p.max_batch());
+            Ok(())
+        });
+    }
+}

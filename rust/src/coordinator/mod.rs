@@ -1,0 +1,17 @@
+//! L3 coordinator: request routing, dynamic batching, worker pool and the
+//! serving loop around the PJRT runtime — with the DESCNet memory-subsystem
+//! co-simulation attached to every executed batch (each served inference is
+//! also accounted through the analytical energy model, so the server
+//! reports joules next to latency).
+//!
+//! No async runtime is vendored in this environment; the coordinator uses
+//! std::thread + mpsc channels, which is deterministic and plenty for a
+//! single-host serving loop.
+
+pub mod batcher;
+pub mod request;
+pub mod server;
+pub mod stats;
+
+pub use batcher::BatchPolicy;
+pub use request::{Request, Response};

@@ -1,0 +1,52 @@
+//! Request/response types for the serving path.
+
+use std::time::Instant;
+
+/// One inference request (a single image).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Target network ("capsnet" or "deepcaps_lite").
+    pub net: String,
+    /// Flattened input tensor (row-major, matching the manifest shape
+    /// without the batch dimension).
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, net: &str, image: Vec<f32>) -> Request {
+        Request {
+            id,
+            net: net.to_string(),
+            image,
+            enqueued: Instant::now(),
+        }
+    }
+}
+
+/// One classified response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub class: usize,
+    pub lengths: Vec<f32>,
+    /// End-to-end latency (enqueue -> response) [s].
+    pub latency_s: f64,
+    /// Batch size this request was served in.
+    pub batch: usize,
+    /// Co-simulated accelerator+memory energy attributed to this request [J].
+    pub energy_j: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_records_enqueue_time() {
+        let r = Request::new(1, "capsnet", vec![0.0; 784]);
+        assert!(r.enqueued.elapsed().as_secs_f64() < 1.0);
+        assert_eq!(r.image.len(), 784);
+    }
+}

@@ -1,0 +1,300 @@
+//! The serving loop: synthetic-client generator -> dynamic batcher ->
+//! PJRT execution (full-net or 3-stage pipeline) -> stats + DESCNet energy
+//! co-simulation.
+//!
+//! This is the end-to-end driver of EXPERIMENTS.md E19: it proves the three
+//! layers compose — Pallas kernels (L1) lowered into the stage HLO (L2)
+//! executed under the rust coordinator (L3) — while the analytical DESCNet
+//! model accounts energy for every served inference.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::BatchPolicy;
+use super::request::{Request, Response};
+use super::stats::ServeStats;
+use crate::config::SystemConfig;
+use crate::dataflow::profile_network;
+use crate::dse;
+use crate::energy::system_with_org;
+use crate::memory::{MemSpec, Organization};
+use crate::model::capsnet_mnist;
+use crate::runtime::{argmax_per_row, Runtime};
+use crate::util::prng::Prng;
+
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub artifacts_dir: PathBuf,
+    pub requests: usize,
+    pub batch_max: usize,
+    pub stage_pipeline: bool,
+    pub seed: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            artifacts_dir: PathBuf::from("artifacts"),
+            requests: 64,
+            batch_max: 4,
+            stage_pipeline: false,
+            seed: 7,
+        }
+    }
+}
+
+pub struct Server;
+
+/// Synthetic MNIST-like image: a couple of random strokes plus noise —
+/// shape-compatible stand-in for the python generator (DESIGN.md
+/// Substitutions; classification content is irrelevant to serving metrics).
+pub fn synthetic_image(rng: &mut Prng, hw: usize) -> Vec<f32> {
+    let mut img = vec![0.0f32; hw * hw];
+    for _ in 0..2 {
+        let (x0, y0) = (rng.f64() * hw as f64, rng.f64() * hw as f64);
+        let (x1, y1) = (rng.f64() * hw as f64, rng.f64() * hw as f64);
+        for t in 0..(3 * hw) {
+            let f = t as f64 / (3 * hw - 1) as f64;
+            let cx = x0 + (x1 - x0) * f;
+            let cy = y0 + (y1 - y0) * f;
+            let (xi, yi) = (cx as usize, cy as usize);
+            if xi < hw && yi < hw {
+                img[yi * hw + xi] = 1.0;
+            }
+        }
+    }
+    for v in img.iter_mut() {
+        *v = (*v + rng.f64() as f32 * 0.1).min(1.0);
+    }
+    img
+}
+
+/// Per-inference co-simulated energy: the complete DESCNet system (SEP
+/// organization, Table I) around one CapsNet inference.
+fn per_inference_energy_j(cfg: &SystemConfig) -> f64 {
+    let profile = profile_network(&capsnet_mnist(), &cfg.accel);
+    let (d, w, a) = dse::sep_sizes(&profile);
+    let org = Organization::sep(MemSpec::new(d, 1), MemSpec::new(w, 1), MemSpec::new(a, 1));
+    system_with_org(&profile, &cfg.tech, &org, "serving").total_j()
+}
+
+impl Server {
+    /// Serves `opts.requests` synthetic requests and returns the stats.
+    pub fn run_synthetic(opts: &ServeOptions) -> Result<ServeStats> {
+        let cfg = SystemConfig::default();
+        let mut runtime = Runtime::new(&opts.artifacts_dir)
+            .context("loading artifacts (run `make artifacts` first)")?;
+        let platform = runtime.platform();
+        let energy_per_inf = per_inference_energy_j(&cfg);
+
+        // Discover batch sizes and pre-compile executables (outside the
+        // serving loop — compilation is a startup cost).
+        let batches: Vec<usize> = runtime
+            .manifest
+            .batches("capsnet", "full")
+            .into_iter()
+            .filter(|&b| b <= opts.batch_max)
+            .collect();
+        anyhow::ensure!(!batches.is_empty(), "no capsnet batch <= {}", opts.batch_max);
+        let stages: &[&str] = if opts.stage_pipeline {
+            &["conv1", "primarycaps", "classcaps"]
+        } else {
+            &["full"]
+        };
+        for stage in stages {
+            for &b in &batches {
+                runtime.load_stage("capsnet", stage, b)?;
+            }
+        }
+        let policy = BatchPolicy::new(batches, 2e-3);
+
+        // Generator thread: Poisson-ish arrivals.
+        let (tx, rx) = mpsc::channel::<Request>();
+        let n = opts.requests;
+        let seed = opts.seed;
+        let hw = 28;
+        let gen = std::thread::spawn(move || {
+            let mut rng = Prng::new(seed);
+            for id in 0..n as u64 {
+                let img = synthetic_image(&mut rng, hw);
+                if tx.send(Request::new(id, "capsnet", img)).is_err() {
+                    return;
+                }
+                std::thread::sleep(Duration::from_micros(rng.exp(300.0) as u64));
+            }
+        });
+
+        let mut stats = ServeStats::default();
+        stats.platform = platform;
+        let t0 = Instant::now();
+        let mut pending: Vec<Request> = Vec::new();
+        let mut served = 0usize;
+        let mut closed = false;
+
+        while served < opts.requests {
+            // Fill the pending queue up to the largest batch or deadline.
+            let deadline = Instant::now() + Duration::from_secs_f64(policy.flush_deadline_s);
+            while pending.len() < policy.max_batch() && !closed {
+                let now = Instant::now();
+                if now >= deadline && !pending.is_empty() {
+                    break;
+                }
+                let timeout = if pending.is_empty() {
+                    Duration::from_millis(200)
+                } else {
+                    deadline - now
+                };
+                match rx.recv_timeout(timeout) {
+                    Ok(req) => pending.push(req),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if !pending.is_empty() {
+                            break;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        closed = true;
+                    }
+                }
+            }
+            if pending.is_empty() {
+                if closed {
+                    break;
+                }
+                continue;
+            }
+
+            let force = closed || pending.len() < policy.sizes[0];
+            let _ = force;
+            let plan = policy.plan(pending.len(), true);
+            for batch in plan {
+                if pending.is_empty() {
+                    break;
+                }
+                let take = batch.min(pending.len());
+                let reqs: Vec<Request> = pending.drain(..take).collect();
+                let pad = batch - take;
+                let t_exec = Instant::now();
+                let responses = if opts.stage_pipeline {
+                    Self::execute_staged(&mut runtime, batch, &reqs, pad, energy_per_inf)?
+                } else {
+                    Self::execute_full(&mut runtime, batch, &reqs, pad, energy_per_inf)?
+                };
+                stats.batch_exec.add(t_exec.elapsed().as_secs_f64());
+                for resp in responses {
+                    stats.latency.add(resp.latency_s);
+                    stats.energy_j += resp.energy_j;
+                    if resp.class < 10 {
+                        stats.class_histogram[resp.class] += 1;
+                    }
+                    served += 1;
+                }
+                stats.batches += 1;
+                stats.padded_slots += pad as u64;
+            }
+        }
+        stats.requests = served as u64;
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        gen.join().ok();
+        Ok(stats)
+    }
+
+    fn pack_input(batch: usize, reqs: &[Request], pad: usize) -> Vec<f32> {
+        let per = reqs.first().map(|r| r.image.len()).unwrap_or(0);
+        let mut input = Vec::with_capacity(batch * per);
+        for r in reqs {
+            input.extend_from_slice(&r.image);
+        }
+        for _ in 0..pad {
+            input.extend(std::iter::repeat(0.0f32).take(per));
+        }
+        input
+    }
+
+    fn to_responses(
+        reqs: &[Request],
+        lengths: &[f32],
+        batch: usize,
+        energy_per_inf: f64,
+    ) -> Vec<Response> {
+        let classes = argmax_per_row(lengths, 10);
+        reqs.iter()
+            .enumerate()
+            .map(|(i, r)| Response {
+                id: r.id,
+                class: classes[i],
+                lengths: lengths[i * 10..(i + 1) * 10].to_vec(),
+                latency_s: r.enqueued.elapsed().as_secs_f64(),
+                batch,
+                energy_j: energy_per_inf,
+            })
+            .collect()
+    }
+
+    fn execute_full(
+        runtime: &mut Runtime,
+        batch: usize,
+        reqs: &[Request],
+        pad: usize,
+        energy_per_inf: f64,
+    ) -> Result<Vec<Response>> {
+        let input = Self::pack_input(batch, reqs, pad);
+        let (lengths, _poses) = runtime.infer_full("capsnet", batch, &input)?;
+        Ok(Self::to_responses(reqs, &lengths, batch, energy_per_inf))
+    }
+
+    /// Stage-wise execution through the three per-stage artifacts — the
+    /// operation granularity the DESCNet memory model schedules.
+    fn execute_staged(
+        runtime: &mut Runtime,
+        batch: usize,
+        reqs: &[Request],
+        pad: usize,
+        energy_per_inf: f64,
+    ) -> Result<Vec<Response>> {
+        let input = Self::pack_input(batch, reqs, pad);
+        let h = runtime
+            .load_stage("capsnet", "conv1", batch)?
+            .execute(&input)?
+            .remove(0);
+        let u = runtime
+            .load_stage("capsnet", "primarycaps", batch)?
+            .execute(&h)?
+            .remove(0);
+        let outs = runtime
+            .load_stage("capsnet", "classcaps", batch)?
+            .execute(&u)?;
+        let lengths = &outs[0];
+        Ok(Self::to_responses(reqs, lengths, batch, energy_per_inf))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_image_in_range() {
+        let mut rng = Prng::new(3);
+        let img = synthetic_image(&mut rng, 28);
+        assert_eq!(img.len(), 784);
+        assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(img.iter().any(|&v| v > 0.5), "strokes present");
+    }
+
+    #[test]
+    fn per_inference_energy_is_millijoule_scale() {
+        let e = per_inference_energy_j(&SystemConfig::default());
+        assert!(e > 1e-4 && e < 0.1, "{e}");
+    }
+
+    #[test]
+    fn pack_input_pads_with_zeros() {
+        let reqs = vec![Request::new(0, "capsnet", vec![1.0; 4])];
+        let input = Server::pack_input(3, &reqs, 2);
+        assert_eq!(input.len(), 12);
+        assert!(input[4..].iter().all(|&v| v == 0.0));
+    }
+}

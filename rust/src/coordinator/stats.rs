@@ -1,0 +1,107 @@
+//! Serving statistics: latency percentiles, throughput, co-simulated
+//! energy — the numbers EXPERIMENTS.md E19 records.
+
+use crate::util::stats::{Percentiles, Summary};
+use crate::util::units::{fmt_energy, fmt_time};
+
+#[derive(Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub latency: Percentiles,
+    pub batch_exec: Summary,
+    pub wall_s: f64,
+    pub energy_j: f64,
+    pub platform: String,
+    pub class_histogram: [u64; 10],
+}
+
+impl ServeStats {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.requests as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches > 0 {
+            (self.requests + self.padded_slots) as f64 / self.batches as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn summary(&mut self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "served {} requests in {} on {} ({:.1} req/s)\n",
+            self.requests,
+            fmt_time(self.wall_s),
+            self.platform,
+            self.throughput_rps()
+        ));
+        out.push_str(&format!(
+            "batches: {} (mean size {:.2}, {} padded slots)\n",
+            self.batches,
+            self.mean_batch(),
+            self.padded_slots
+        ));
+        out.push_str(&format!(
+            "latency: p50 {}  p95 {}  p99 {}  max {}\n",
+            fmt_time(self.latency.p50()),
+            fmt_time(self.latency.p95()),
+            fmt_time(self.latency.p99()),
+            fmt_time(self.latency.percentile(100.0)),
+        ));
+        out.push_str(&format!(
+            "batch exec: mean {}  min {}  max {}\n",
+            fmt_time(self.batch_exec.mean()),
+            fmt_time(self.batch_exec.min()),
+            fmt_time(self.batch_exec.max()),
+        ));
+        out.push_str(&format!(
+            "co-simulated DESCNet energy: {} total, {} per inference\n",
+            fmt_energy(self.energy_j),
+            fmt_energy(self.energy_j / self.requests.max(1) as f64),
+        ));
+        out.push_str(&format!("class histogram: {:?}", self.class_histogram));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_and_mean_batch() {
+        let mut s = ServeStats::default();
+        s.requests = 100;
+        s.batches = 30;
+        s.padded_slots = 20;
+        s.wall_s = 2.0;
+        assert!((s.throughput_rps() - 50.0).abs() < 1e-9);
+        assert!((s.mean_batch() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_contains_key_lines() {
+        let mut s = ServeStats::default();
+        s.requests = 4;
+        s.batches = 1;
+        s.wall_s = 0.1;
+        s.platform = "cpu".into();
+        for l in [0.01, 0.02, 0.03, 0.04] {
+            s.latency.add(l);
+        }
+        s.batch_exec.add(0.02);
+        s.energy_j = 4.0 * 12e-3;
+        let text = s.summary();
+        assert!(text.contains("served 4 requests"));
+        assert!(text.contains("p95"));
+        assert!(text.contains("per inference"));
+    }
+}

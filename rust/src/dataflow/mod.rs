@@ -1,0 +1,710 @@
+//! CapsAcc dataflow model: maps each network operation onto the 16x16 NP
+//! array and derives, analytically, the quantities the paper measures —
+//! per-operation SPM working sets (Figs 1, 10a, 11a), read/write access
+//! counts (Figs 10b/c, 11b/c), off-chip traffic (Figs 27, 28), and clock
+//! cycles (Fig 9).
+//!
+//! The tiling/schedule policies and their calibration are documented in
+//! DESIGN.md section 6; `tests/workload.rs` pins the emergent maxima against
+//! the paper's Table I/II sizes and the throughput/share claims (116 fps,
+//! routing > 50%; 9.7 fps, ConvCaps2D ~= 73%).
+//!
+//! Scheduling summary:
+//!  * Convolutions: weight tiles of 16x16 channel pairs double-buffered in
+//!    the weight SPM; input rows stream through kh-row windows (or stay
+//!    fully resident when a DeepCaps skip branch re-reads them and they fit
+//!    below the residency threshold); 16 output channels accumulate per
+//!    pass.
+//!  * ClassCaps votes: input capsules resident in the data SPM, transform
+//!    tiles of `classcaps_w_tile_caps` input capsules streamed through the
+//!    weight SPM.
+//!  * Dynamic routing: output-capsule-stationary — per-j vote tiles resident
+//!    in the data SPM, coupling state (b, c) in the weight SPM, per-i
+//!    normalization handled by the activation tail (the calibrated
+//!    `routing_j_overhead_cap` serialization).  Off-chip is touched only by
+//!    the first (vote fetch) and last (pose write-back) routing operations —
+//!    the paper's pointer (4).
+//!  * DeepCaps 3-D ConvCaps: spatially-shared transforms pinned in PE-local
+//!    registers; the full vote tensor lives in an accumulator ring buffer
+//!    (8 MiB minus one drained position slot overlaid by routing state).
+
+pub mod tpu;
+
+use crate::config::Accelerator;
+use crate::model::{LayerGroup, Network, OpKind, Operation, RoutingHalf};
+
+/// Bytes of the 3-D ConvCaps vote tensor NOT buffered in the accumulator
+/// ring: three position slots stay in flight (drained while the next is
+/// computed), and their space is overlaid by the input-pose staging and the
+/// routing/normalization state.  Keeps the ring + staging within 8 MiB —
+/// the Table II accumulator size.
+pub const VOTE_RING_OVERLAY: usize = 96 * 1024;
+
+/// Everything the paper measures about one operation, per inference.
+#[derive(Debug, Clone)]
+pub struct OpProfile {
+    pub name: String,
+    pub group: LayerGroup,
+    /// Clock cycles on the CapsAcc array.
+    pub cycles: u64,
+    /// SPM working sets [bytes] (Figs 1/10a/11a).
+    pub usage_d: usize,
+    pub usage_w: usize,
+    pub usage_a: usize,
+    /// SPM accesses (port transactions; D/W at byte granularity, A at
+    /// word-update granularity — see DESIGN.md section 7).
+    pub rd_d: u64,
+    pub wr_d: u64,
+    pub rd_w: u64,
+    pub wr_w: u64,
+    pub rd_a: u64,
+    pub wr_a: u64,
+    /// Off-chip traffic [bytes] (Figs 27/28; appendix Eqs 3-4).
+    pub off_rd: u64,
+    pub off_wr: u64,
+    /// Compute work (for accelerator energy).
+    pub macs: u64,
+    pub act_ops: u64,
+}
+
+impl OpProfile {
+    pub fn usage_total(&self) -> usize {
+        self.usage_d + self.usage_w + self.usage_a
+    }
+
+    pub fn spm_accesses(&self) -> u64 {
+        self.rd_d + self.wr_d + self.rd_w + self.wr_w + self.rd_a + self.wr_a
+    }
+}
+
+/// Profile of a full network on the accelerator.
+#[derive(Debug, Clone)]
+pub struct NetworkProfile {
+    pub network: String,
+    pub ops: Vec<OpProfile>,
+    pub clock_hz: f64,
+}
+
+impl NetworkProfile {
+    pub fn total_cycles(&self) -> u64 {
+        self.ops.iter().map(|o| o.cycles).sum()
+    }
+
+    /// Inference latency [s] (compute-bound; the prefetcher check in
+    /// `memory::prefetch` verifies off-chip latency is hidden).
+    pub fn inference_s(&self) -> f64 {
+        self.total_cycles() as f64 / self.clock_hz
+    }
+
+    pub fn fps(&self) -> f64 {
+        1.0 / self.inference_s()
+    }
+
+    /// Component-wise maxima -> the SEP sizes of Eq. 2.
+    pub fn max_d(&self) -> usize {
+        self.ops.iter().map(|o| o.usage_d).max().unwrap_or(0)
+    }
+
+    pub fn max_w(&self) -> usize {
+        self.ops.iter().map(|o| o.usage_w).max().unwrap_or(0)
+    }
+
+    pub fn max_a(&self) -> usize {
+        self.ops.iter().map(|o| o.usage_a).max().unwrap_or(0)
+    }
+
+    /// Operation-wise maximum of D+W+A -> the SMP size of Eq. 1.
+    pub fn max_total(&self) -> usize {
+        self.ops.iter().map(|o| o.usage_total()).max().unwrap_or(0)
+    }
+
+    pub fn routing_cycle_share(&self) -> f64 {
+        let routing: u64 = self
+            .ops
+            .iter()
+            .filter(|o| o.group == LayerGroup::DynRouting)
+            .map(|o| o.cycles)
+            .sum();
+        routing as f64 / self.total_cycles() as f64
+    }
+
+    pub fn group_cycle_share(&self, group: LayerGroup) -> f64 {
+        let g: u64 = self
+            .ops
+            .iter()
+            .filter(|o| o.group == group)
+            .map(|o| o.cycles)
+            .sum();
+        g as f64 / self.total_cycles() as f64
+    }
+
+    pub fn total_off_chip(&self) -> u64 {
+        self.ops.iter().map(|o| o.off_rd + o.off_wr).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.ops.iter().map(|o| o.macs).sum()
+    }
+
+    pub fn total_act_ops(&self) -> u64 {
+        self.ops.iter().map(|o| o.act_ops).sum()
+    }
+
+    pub fn op(&self, name: &str) -> Option<&OpProfile> {
+        self.ops.iter().find(|o| o.name == name)
+    }
+}
+
+/// Profiles a whole network on the given accelerator.
+pub fn profile_network(net: &Network, accel: &Accelerator) -> NetworkProfile {
+    NetworkProfile {
+        network: net.name.clone(),
+        ops: net.ops.iter().map(|op| profile_op(op, accel)).collect(),
+        clock_hz: accel.clock_hz,
+    }
+}
+
+/// Profiles one operation (the core analytical model).
+pub fn profile_op(op: &Operation, accel: &Accelerator) -> OpProfile {
+    match &op.kind {
+        OpKind::Conv2d {
+            hin,
+            win,
+            cin,
+            hout,
+            wout,
+            cout,
+            kh,
+            kw,
+            squash_caps,
+            skip_reuse,
+            ..
+        } => conv_profile(
+            op,
+            accel,
+            (*hin, *win, *cin),
+            (*hout, *wout, *cout),
+            (*kh, *kw),
+            *squash_caps,
+            *skip_reuse,
+        ),
+        OpKind::Votes {
+            ni,
+            no,
+            di,
+            dout,
+            weights_in_pe_regs,
+            votes_in_acc,
+        } => votes_profile(op, accel, *ni, *no, *di, *dout, *weights_in_pe_regs, *votes_in_acc),
+        OpKind::Routing {
+            ni,
+            no,
+            dout,
+            iter,
+            total_iters,
+            half,
+            votes_in_acc,
+        } => routing_profile(op, accel, *ni, *no, *dout, *iter, *total_iters, *half, *votes_in_acc),
+    }
+}
+
+fn conv_profile(
+    op: &Operation,
+    accel: &Accelerator,
+    (hin, win, cin): (usize, usize, usize),
+    (hout, wout, cout): (usize, usize, usize),
+    (kh, kw): (usize, usize),
+    squash_caps: usize,
+    skip_reuse: bool,
+) -> OpProfile {
+    let db = accel.data_bytes;
+    let pes = accel.pes() as u64;
+    let macs = (hout * wout * cout * kh * kw * cin) as u64;
+    let fmap_in = hin * win * cin * db;
+    let out_bytes = (hout * wout * cout * db) as u64;
+    let params = op.param_bytes();
+
+    // --- cycles: MAC-bound streaming + squash drain through the 16-lane
+    // activation unit + pipeline fill/drain.
+    let squash_cycles =
+        (squash_caps * accel.squash_cycles_per_elem / accel.array_cols.max(1)) as u64;
+    // Weight-port bound: the weight SPM delivers one `array_cols`-byte row
+    // per cycle, so layers whose weight volume outruns their MAC count (the
+    // FC ClassCaps, notably) are weight-stream bound — as in CapsAcc.
+    let w_stream = params / accel.array_cols as u64;
+    let cycles = (macs / pes).max(w_stream) + squash_cycles + accel.op_overhead_cycles as u64;
+
+    // --- working sets (DESIGN.md section 6 policies).
+    let usage_d = if skip_reuse && fmap_in <= accel.fmap_resident_threshold {
+        fmap_in // resident: the parallel skip branch re-reads it
+    } else {
+        kh * win * cin.min(accel.window_tci) * db * 2 // kh-row window, x2
+    };
+    let usage_w = kh * kw * cin.min(accel.array_rows) * cout.min(accel.array_cols) * db * 2;
+    // Output-tile psums plus the array-edge drain/staging registers.
+    let usage_a = hout * wout * cout.min(accel.array_cols) * accel.acc_bytes
+        + accel.array_rows * accel.array_cols * accel.acc_bytes;
+
+    // --- accesses.
+    let wr_d = fmap_in as u64; // filled from DRAM once
+    let rd_d = 2 * fmap_in as u64; // window-overlap re-reads (row-reuse regs)
+    let rd_w = params;
+    let wr_w = params;
+    // One psum update per column per cycle -> macs/rows accumulator
+    // read-modify-writes, plus the activation drain reads.
+    let acc_updates = macs / accel.array_rows as u64;
+    let rd_a = acc_updates + out_bytes;
+    let wr_a = acc_updates;
+
+    OpProfile {
+        name: op.name.clone(),
+        group: op.group,
+        cycles,
+        usage_d,
+        usage_w,
+        usage_a,
+        rd_d,
+        wr_d,
+        rd_w,
+        wr_w,
+        rd_a,
+        wr_a,
+        off_rd: wr_d + wr_w, // appendix Eq. 3
+        off_wr: out_bytes,   // appendix Eq. 4
+        macs,
+        act_ops: (squash_caps + hout * wout * cout) as u64, // squash + relu
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn votes_profile(
+    op: &Operation,
+    accel: &Accelerator,
+    ni: usize,
+    no: usize,
+    di: usize,
+    dout: usize,
+    weights_in_pe_regs: bool,
+    votes_in_acc: bool,
+) -> OpProfile {
+    let db = accel.data_bytes;
+    let pes = accel.pes() as u64;
+    let macs = (ni * no * di * dout) as u64;
+    let params = op.param_bytes();
+    let uhat_bytes = (ni * no * dout * db) as u64;
+
+    // Weight-stream bound (see conv_profile): the 1.47 MB ClassCaps
+    // transform stream at 16 B/cycle dominates its 5.8 k MAC cycles.
+    let w_stream = if weights_in_pe_regs { 0 } else { params / accel.array_cols as u64 };
+    let cycles = (macs / pes).max(w_stream) + accel.op_overhead_cycles as u64;
+
+    let usage_d = ni * di * db; // input capsule poses resident
+    let usage_w = if weights_in_pe_regs {
+        0 // spatially-shared transforms pinned in PE register files
+    } else {
+        accel.classcaps_w_tile_caps * no * di * dout * db // streamed tile
+    };
+    let usage_a = if votes_in_acc {
+        // 3-D ConvCaps vote ring buffer: full vote tensor minus one drained
+        // position slot (overlaid by routing state) — stays <= 8 MiB.
+        ni * no * dout * accel.acc_bytes - VOTE_RING_OVERLAY
+    } else {
+        // psum staging for one output capsule across the 16 row-groups
+        accel.array_rows * dout * accel.acc_bytes
+    };
+
+    let acc_updates = macs / accel.array_rows as u64;
+    let (off_wr, wr_a_extra) = if votes_in_acc {
+        (0, uhat_bytes / db as u64) // votes written into the acc SPM ring
+    } else {
+        (uhat_bytes, 0) // uhat drained to DRAM (re-fetched by routing op 1)
+    };
+
+    OpProfile {
+        name: op.name.clone(),
+        group: op.group,
+        cycles,
+        usage_d,
+        usage_w,
+        usage_a,
+        rd_d: (ni * di * no) as u64, // u re-read per output capsule
+        wr_d: (ni * di) as u64,
+        // PE-register-pinned transforms never touch the weight SPM (they
+        // are loaded once from DRAM straight into the register files).
+        rd_w: if weights_in_pe_regs { 0 } else { params },
+        wr_w: if weights_in_pe_regs { 0 } else { params },
+        rd_a: acc_updates,
+        wr_a: acc_updates + wr_a_extra,
+        off_rd: (ni * di) as u64 * db as u64 + params,
+        off_wr,
+        macs,
+        act_ops: 0,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn routing_profile(
+    op: &Operation,
+    accel: &Accelerator,
+    ni: usize,
+    no: usize,
+    dout: usize,
+    iter: usize,
+    total_iters: usize,
+    half: RoutingHalf,
+    votes_in_acc: bool,
+) -> OpProfile {
+    let db = accel.data_bytes;
+    let pairs = (ni * no) as u64;
+    let macs = pairs * dout as u64;
+    let uhat_bytes = (ni * no * dout * db) as u64;
+    let state_bytes = (ni * no * 2 * accel.routing_state_bytes) as u64;
+
+    // --- cycles: one 16-long dot product per cycle on the PE row (so
+    // pairs*dout/16), plus the per-output-capsule serialized normalization
+    // tail, capped by the double-buffered normalization unit (DESIGN.md
+    // section 6 calibration).
+    let j_overhead = (ni * accel.routing_act_serial_cycles).min(accel.routing_j_overhead_cap);
+    let cycles =
+        pairs * dout as u64 / accel.array_rows as u64 + (no * j_overhead) as u64
+            + accel.op_overhead_cycles as u64;
+
+    // --- working sets.
+    let (usage_d, usage_w, usage_a);
+    if votes_in_acc {
+        // 3-D ConvCaps routing runs in place over the vote ring buffer;
+        // state overlays the drained slot.
+        usage_d = 0;
+        usage_w = 0;
+        usage_a = ni * no * dout * accel.acc_bytes - VOTE_RING_OVERLAY;
+    } else {
+        usage_d = ni * dout * db; // per-j vote tile
+        usage_w = if state_bytes as usize <= 65_536 {
+            state_bytes as usize // b and c fully resident
+        } else {
+            ni * 4 * accel.routing_state_bytes // streamed normalization state
+        };
+        usage_a = 2 * no * dout * accel.acc_bytes; // s_j / v_j staging
+    }
+
+    // --- accesses.
+    let mut rd_d = 0;
+    let mut wr_d = 0;
+    let mut rd_w = 0;
+    let mut wr_w = 0;
+    let mut rd_a = 0;
+    let mut wr_a = 0;
+    let mut off_rd = 0;
+    let mut off_wr = 0;
+    let mut act_ops = 0u64;
+
+    match half {
+        RoutingHalf::SumSquash => {
+            // s_j = sum_i c_ij uhat_ij ; v_j = squash(s_j)
+            if votes_in_acc {
+                rd_a += uhat_bytes / db as u64;
+                rd_a += pairs; // c_ij (state overlaid in the acc ring)
+            } else {
+                rd_d += uhat_bytes;
+                rd_w += pairs; // c_ij
+            }
+            wr_a += macs / accel.array_rows as u64; // psum updates
+            rd_a += macs / accel.array_rows as u64;
+            act_ops += (no * dout) as u64; // squash
+            if iter == 1 && !votes_in_acc {
+                // per-j vote tiles fetched from DRAM exactly once for the
+                // whole routing phase — the paper's pointer (4).
+                off_rd = uhat_bytes;
+            }
+        }
+        RoutingHalf::UpdateSoftmax => {
+            // b += <uhat, v> ; c = softmax(b)
+            if votes_in_acc {
+                rd_a += uhat_bytes / db as u64;
+                rd_a += pairs; // b (state overlaid in the acc ring)
+                wr_a += 2 * pairs;
+            } else {
+                rd_d += uhat_bytes;
+                rd_w += pairs; // b
+                wr_w += 2 * pairs; // b update + c write
+            }
+            rd_a += (no * dout) as u64; // v_j
+            act_ops += pairs; // exp per coupling coefficient
+            if iter == total_iters {
+                // final poses written back (last routing op writes off-chip,
+                // staged through whichever SPM holds the routing state)
+                off_wr = (no * dout * accel.acc_bytes) as u64;
+                if votes_in_acc {
+                    wr_a += (no * dout) as u64;
+                } else {
+                    wr_d += (no * dout) as u64;
+                }
+            }
+        }
+    }
+
+    OpProfile {
+        name: op.name.clone(),
+        group: op.group,
+        cycles,
+        usage_d,
+        usage_w,
+        usage_a,
+        rd_d,
+        wr_d,
+        rd_w,
+        wr_w,
+        rd_a,
+        wr_a,
+        off_rd,
+        off_wr,
+        macs,
+        act_ops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{capsnet_mnist, deepcaps_cifar10};
+    use crate::util::units::KIB;
+
+    fn capsnet_profile() -> NetworkProfile {
+        profile_network(&capsnet_mnist(), &Accelerator::default())
+    }
+
+    fn deepcaps_profile() -> NetworkProfile {
+        profile_network(&deepcaps_cifar10(), &Accelerator::default())
+    }
+
+    // ------------------------------------------------ Table I reproduction
+
+    #[test]
+    fn capsnet_component_maxima_match_table_i_pools() {
+        let p = capsnet_profile();
+        // Emergent maxima must land in the (prev_pool, pool] interval that
+        // selects exactly the paper's Table I SEP sizes: 25/64/32 kiB.
+        assert!(p.max_d() > 16 * KIB && p.max_d() <= 25 * KIB, "D={}", p.max_d());
+        assert!(p.max_w() > 32 * KIB && p.max_w() <= 64 * KIB, "W={}", p.max_w());
+        assert!(p.max_a() > 16 * KIB && p.max_a() <= 32 * KIB, "A={}", p.max_a());
+        // And the SMP size: 108 kiB (between 64 kiB and 108 kiB).
+        assert!(
+            p.max_total() > 64 * KIB && p.max_total() <= 108 * KIB,
+            "total={}",
+            p.max_total()
+        );
+    }
+
+    #[test]
+    fn capsnet_exact_calibrated_working_sets() {
+        let p = capsnet_profile();
+        assert_eq!(p.op("Prim").unwrap().usage_d, 23_040);
+        assert_eq!(p.op("Prim").unwrap().usage_w, 41_472);
+        assert_eq!(p.op("Class").unwrap().usage_w, 53_760);
+        assert_eq!(p.op("Conv1").unwrap().usage_a, 26_624);
+        assert_eq!(p.op("Class-Sum+Squash1").unwrap().usage_d, 18_432);
+    }
+
+    #[test]
+    fn primarycaps_is_largest_total_usage_op() {
+        // Fig 1: "the overall size can be determined by the operation that
+        // requires the largest amount of memory (the PrimaryCaps layer)".
+        let p = capsnet_profile();
+        let prim = p.op("Prim").unwrap().usage_total();
+        for op in &p.ops {
+            assert!(op.usage_total() <= prim, "{} exceeds Prim", op.name);
+        }
+    }
+
+    #[test]
+    fn weight_peak_is_at_classcaps() {
+        // Fig 10 pointer (1): the weight-SPM peak is the FC ClassCaps.
+        let p = capsnet_profile();
+        let class_w = p.op("Class").unwrap().usage_w;
+        assert_eq!(p.max_w(), class_w);
+    }
+
+    #[test]
+    fn classcaps_data_usage_is_low() {
+        // Fig 10 pointer (2).
+        let p = capsnet_profile();
+        assert!(p.op("Class").unwrap().usage_d < p.op("Prim").unwrap().usage_d / 2);
+    }
+
+    // ---------------------------------------------- performance (Fig 9a)
+
+    #[test]
+    fn capsnet_fps_close_to_paper_116() {
+        let p = capsnet_profile();
+        let fps = p.fps();
+        assert!(
+            (fps - 116.0).abs() / 116.0 < 0.05,
+            "fps = {fps:.1}, paper reports 116"
+        );
+    }
+
+    #[test]
+    fn routing_exceeds_half_of_execution_time() {
+        // "the dynamic routing operations contribute for more than half of
+        // the execution time of the complete CapsNet inference"
+        let p = capsnet_profile();
+        let share = p.routing_cycle_share();
+        assert!(share > 0.50 && share < 0.65, "share = {share:.3}");
+    }
+
+    // ------------------------------------------------ off-chip (Fig 27)
+
+    #[test]
+    fn routing_touches_offchip_only_at_boundaries() {
+        // Pointer (4): reads only in the first routing op, writes only in
+        // the last one.
+        let p = capsnet_profile();
+        let routing: Vec<_> = p
+            .ops
+            .iter()
+            .filter(|o| o.group == LayerGroup::DynRouting)
+            .collect();
+        assert!(routing[0].off_rd > 0);
+        assert_eq!(routing[0].off_wr, 0);
+        for mid in &routing[1..routing.len() - 1] {
+            assert_eq!(mid.off_rd + mid.off_wr, 0, "{} hits DRAM", mid.name);
+        }
+        let last = routing.last().unwrap();
+        assert!(last.off_wr > 0);
+        assert_eq!(last.off_rd, 0);
+    }
+
+    #[test]
+    fn offchip_peak_at_primarycaps() {
+        // Fig 27: "the peak of accesses are measured for the Prim layer"
+        // (its 5.3M weights dominate).
+        let p = capsnet_profile();
+        let prim = p.op("Prim").unwrap();
+        for op in &p.ops {
+            assert!(op.off_rd <= prim.off_rd, "{}", op.name);
+        }
+    }
+
+    #[test]
+    fn accumulator_accesses_dominate() {
+        // Section IV: "the accumulators have the major contributions in
+        // memory usage and accesses".
+        let p = capsnet_profile();
+        let acc: u64 = p.ops.iter().map(|o| o.rd_a + o.wr_a).sum();
+        let dw: u64 = p.ops.iter().map(|o| o.rd_d + o.wr_d + o.rd_w + o.wr_w).sum();
+        assert!(acc > dw, "acc={acc} dw={dw}");
+    }
+
+    // ------------------------------------------------ Table II (DeepCaps)
+
+    #[test]
+    fn deepcaps_component_maxima_match_table_ii_pools() {
+        let p = deepcaps_profile();
+        const MIB: usize = 1024 * 1024;
+        assert!(p.max_d() > 128 * KIB && p.max_d() <= 256 * KIB, "D={}", p.max_d());
+        assert!(p.max_w() > 64 * KIB && p.max_w() <= 128 * KIB, "W={}", p.max_w());
+        assert!(p.max_a() > 4 * MIB && p.max_a() <= 8 * MIB, "A={}", p.max_a());
+        assert!(
+            p.max_total() > 4 * MIB && p.max_total() <= 8 * MIB,
+            "total={}",
+            p.max_total()
+        );
+    }
+
+    #[test]
+    fn deepcaps_vote_ring_is_accumulator_peak() {
+        let p = deepcaps_profile();
+        let ring = p.op("Caps3D-Votes").unwrap().usage_a;
+        assert_eq!(ring, 8 * 1024 * 1024 - VOTE_RING_OVERLAY);
+        assert_eq!(p.max_a(), ring);
+    }
+
+    #[test]
+    fn deepcaps_data_peak_is_resident_cell_input() {
+        let p = deepcaps_profile();
+        assert_eq!(p.max_d(), 256 * KIB); // cell-1 input 32x32x256 resident
+        assert_eq!(p.op("Cell1-Conv0").unwrap().usage_d, 256 * KIB);
+    }
+
+    #[test]
+    fn deepcaps_fps_close_to_paper() {
+        let p = deepcaps_profile();
+        let fps = p.fps();
+        assert!((fps - 9.7).abs() / 9.7 < 0.12, "fps = {fps:.2}, paper 9.7");
+    }
+
+    #[test]
+    fn convcaps2d_share_close_to_73_percent() {
+        let p = deepcaps_profile();
+        let share = p.group_cycle_share(LayerGroup::ConvCaps2D);
+        assert!((0.66..=0.80).contains(&share), "share = {share:.3}");
+    }
+
+    #[test]
+    fn deepcaps_weight_usage_low_in_convs_high_in_routing() {
+        // Section IV-B: "usage and accesses for the weight memory are low in
+        // the convolutional layers, but higher for the dynamic routing".
+        let p = deepcaps_profile();
+        let conv_w = p.op("Cell1-Conv1").unwrap().usage_w;
+        let routing_w = p.op("Class-Update+Softmax1").unwrap().usage_w;
+        assert!(routing_w > conv_w, "routing {routing_w} <= conv {conv_w}");
+    }
+
+    #[test]
+    fn deepcaps_offchip_peak_at_classcaps_start() {
+        // Fig 28 pointer (5): the off-chip peak is the ClassCaps weight
+        // fetch.
+        let p = deepcaps_profile();
+        let class = p.op("Class").unwrap().off_rd;
+        for op in &p.ops {
+            assert!(op.off_rd <= class, "{}", op.name);
+        }
+    }
+
+    #[test]
+    fn caps3d_routing_never_touches_offchip() {
+        // Votes live in the accumulator ring, so 3-D routing never reads
+        // DRAM; only the final pose write-back (last op) leaves the chip.
+        let p = deepcaps_profile();
+        for op in &p.ops {
+            if op.name.starts_with("Caps3D-Sum") || op.name.starts_with("Caps3D-Update") {
+                assert_eq!(op.off_rd, 0, "{}", op.name);
+                if op.name != "Caps3D-Update+Softmax3" {
+                    assert_eq!(op.off_wr, 0, "{}", op.name);
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------ cross-checks
+
+    #[test]
+    fn cycles_are_positive_and_finite_everywhere() {
+        for p in [capsnet_profile(), deepcaps_profile()] {
+            for op in &p.ops {
+                assert!(op.cycles > 0, "{}", op.name);
+                assert!(op.usage_total() > 0 || op.name.starts_with("Caps3D-"), "{}", op.name);
+            }
+        }
+    }
+
+    #[test]
+    fn appendix_eq3_holds_for_feedforward_ops() {
+        // RD_off_i = WR_D_i + WR_W_i for the conv stages.
+        let p = capsnet_profile();
+        for name in ["Conv1", "Prim"] {
+            let op = p.op(name).unwrap();
+            assert_eq!(op.off_rd, op.wr_d + op.wr_w, "{name}");
+        }
+    }
+
+    #[test]
+    fn faster_clock_same_cycles() {
+        let mut accel = Accelerator::default();
+        accel.clock_hz = 400e6;
+        let p = profile_network(&capsnet_mnist(), &accel);
+        let base = capsnet_profile();
+        assert_eq!(p.total_cycles(), base.total_cycles());
+        assert!((p.fps() - 2.0 * base.fps()).abs() < 0.5);
+    }
+}

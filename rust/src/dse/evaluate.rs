@@ -1,0 +1,159 @@
+//! Allocation-free fast path for the DSE inner loop.
+//!
+//! `energy::evaluate_org` + `pmu::evaluate` are the readable, reporting
+//! implementations — but they build `OrgEnergy`/`PmuReport`/`String`s per
+//! configuration, and the exhaustive sweep evaluates ~half a million
+//! configurations.  This module computes the identical (area, energy)
+//! objective with one pass over the operations and zero heap allocation
+//! per configuration; `tests::fast_matches_reference` pins it bit-close to
+//! the reference implementation (see EXPERIMENTS.md section Perf/L3 for the
+//! before/after).
+
+use crate::cacti::Sram;
+use crate::config::Technology;
+use crate::dataflow::NetworkProfile;
+use crate::memory::{Component, Organization};
+
+// NOTE (EXPERIMENTS.md section Perf/L3): memoizing the per-geometry SRAM costs in
+// a HashMap was tried and reverted — on this single-core testbed the hash
+// lookup costs as much as the powf calls it saves (-6%).
+
+/// Per-component constants hoisted out of the op loop.
+#[derive(Clone, Copy, Default)]
+struct CompCosts {
+    present: bool,
+    size: usize,
+    sectors: usize,
+    sector_bytes: usize,
+    access_e: f64,
+    leak_on: f64,
+    leak_sector_on: f64,
+    leak_sector_off: f64,
+    wakeup_e: f64,
+    area: f64,
+}
+
+/// Fast (area_mm2, energy_j) evaluation of one organization.
+pub fn area_energy(org: &Organization, profile: &NetworkProfile, tech: &Technology) -> (f64, f64) {
+    let sram = Sram::new(tech);
+    let mut comps = [CompCosts::default(); 4]; // shared, data, weight, acc
+    for (idx, c) in Component::ALL.iter().enumerate() {
+        if let Some(cfg) = org.sram_config(*c) {
+            let costs = sram.evaluate(&cfg);
+            comps[idx] = CompCosts {
+                present: true,
+                size: cfg.size_bytes,
+                sectors: cfg.sectors,
+                sector_bytes: cfg.sector_bytes().max(1),
+                access_e: costs.access_energy_j,
+                leak_on: costs.leak_on_w,
+                leak_sector_on: costs.leak_sector_on_w,
+                leak_sector_off: costs.leak_sector_off_w,
+                wakeup_e: costs.wakeup_energy_j,
+                area: costs.area_mm2,
+            };
+        }
+    }
+    let [shared, data, weight, acc] = &comps;
+
+    let cap = |c: &CompCosts| if c.present { c.size } else { 0 };
+    let inv_clock = 1.0 / profile.clock_hz;
+
+    let mut energy = 0.0;
+    // Previous ON-sector counts for wakeup accounting (all start OFF).
+    let mut prev_on = [0usize; 4];
+
+    for op in &profile.ops {
+        let dur = op.cycles as f64 * inv_clock;
+
+        // Coverage (inline cover_op, no struct).
+        let ded_d = op.usage_d.min(cap(data));
+        let ded_w = op.usage_w.min(cap(weight));
+        let ded_a = op.usage_a.min(cap(acc));
+        let sh = (op.usage_d - ded_d) + (op.usage_w - ded_w) + (op.usage_a - ded_a);
+        debug_assert!(sh <= cap(shared), "org must fit profile");
+
+        // Dynamic energy: accesses split proportionally to covered bytes.
+        let d_acc = (op.rd_d + op.wr_d) as f64;
+        let w_acc = (op.rd_w + op.wr_w) as f64;
+        let a_acc = (op.rd_a + op.wr_a) as f64;
+        // Split fractions; zero-usage classes carry no SPM traffic (their
+        // accesses, if any, are accounted elsewhere by the dataflow model).
+        let split = |acc_count: f64, ded: usize, total: usize| -> (f64, f64) {
+            if total == 0 {
+                (0.0, 0.0)
+            } else {
+                let f = ded as f64 / total as f64;
+                (acc_count * f, acc_count * (1.0 - f))
+            }
+        };
+        let (dd, ds) = split(d_acc, ded_d, op.usage_d);
+        let (wd, ws) = split(w_acc, ded_w, op.usage_w);
+        let (ad, as_) = split(a_acc, ded_a, op.usage_a);
+        energy += dd * data.access_e
+            + wd * weight.access_e
+            + ad * acc.access_e
+            + (ds + ws + as_) * shared.access_e;
+
+        // Static + wakeup per component.
+        let needs = [sh, ded_d, ded_w, ded_a];
+        for (i, c) in comps.iter().enumerate() {
+            if !c.present {
+                continue;
+            }
+            if c.sectors <= 1 {
+                energy += c.leak_on * dur;
+            } else {
+                let on = (needs[i] + c.sector_bytes - 1) / c.sector_bytes;
+                let off = c.sectors - on;
+                energy += dur * (on as f64 * c.leak_sector_on + off as f64 * c.leak_sector_off);
+                energy += on.saturating_sub(prev_on[i]) as f64 * c.wakeup_e;
+                prev_on[i] = on;
+            }
+        }
+    }
+
+    let area = comps.iter().filter(|c| c.present).map(|c| c.area).sum();
+    (area, energy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Accelerator;
+    use crate::dataflow::profile_network;
+    use crate::dse;
+    use crate::energy::evaluate_org;
+    use crate::model::{capsnet_mnist, deepcaps_cifar10};
+
+    #[test]
+    fn fast_matches_reference() {
+        // The fast path must agree with the readable evaluator on every
+        // enumerated configuration class (sampled) for both networks.
+        let accel = Accelerator::default();
+        let tech = Technology::default();
+        for net in [capsnet_mnist(), deepcaps_cifar10()] {
+            let p = profile_network(&net, &accel);
+            let orgs = dse::enumerate(&p);
+            for (k, org) in orgs.iter().enumerate() {
+                if k % 97 != 0 {
+                    continue; // sample ~1%
+                }
+                let (fast_area, fast_e) = area_energy(org, &p, &tech);
+                let slow = evaluate_org(org, &p, &tech);
+                let slow_e = slow.energy_j();
+                assert!(
+                    (fast_area - slow.area_mm2()).abs() < 1e-12,
+                    "{}: area {fast_area} vs {}",
+                    org.label(),
+                    slow.area_mm2()
+                );
+                assert!(
+                    (fast_e - slow_e).abs() <= slow_e * 1e-12 + 1e-18,
+                    "{}: energy {fast_e} vs {slow_e}",
+                    org.label()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,423 @@
+//! Design-space exploration (paper section V-C/V-D, Algorithms 1–2):
+//! exhaustive enumeration of SMP/SEP/HY organizations (sizes x sectors x
+//! shared-port constraints), parallel evaluation through the CACTI/PMU
+//! energy models, Pareto-frontier extraction, and the per-design-option
+//! lowest-energy selection that produces Tables I and II.
+
+pub mod evaluate;
+pub mod heuristic;
+pub mod pools;
+
+use crate::config::Technology;
+use crate::dataflow::NetworkProfile;
+
+use crate::memory::{cover_op, org_fits, required_shared_ports, MemSpec, OrgKind, Organization};
+use crate::util::pareto::{frontier, Point};
+
+/// One evaluated configuration: the DSE objective space of Figs 18/20/22.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    pub org: Organization,
+    pub area_mm2: f64,
+    /// Total on-chip SPM energy per inference (dynamic+static+wakeup) [J].
+    pub energy_j: f64,
+}
+
+impl DsePoint {
+    /// Design-option bucket: "SMP", "SMP-PG", "SEP", "SEP-PG", "HY", "HY-PG".
+    pub fn option(&self) -> String {
+        let pg = if self.org.power_gated() { "-PG" } else { "" };
+        format!("{}{}", self.org.kind.label(), pg)
+    }
+}
+
+/// The SEP sizes of Eq. 2 (component-wise maxima, pool-rounded).
+pub fn sep_sizes(profile: &NetworkProfile) -> (usize, usize, usize) {
+    (
+        pools::roundup(profile.max_d()),
+        pools::roundup(profile.max_w()),
+        pools::roundup(profile.max_a()),
+    )
+}
+
+/// The SMP size of Eq. 1.
+pub fn smp_size(profile: &NetworkProfile) -> usize {
+    pools::roundup(profile.max_total())
+}
+
+/// The shared-memory size Algorithm 1 computes for a dedicated-size triple:
+/// the operation-wise worst-case residual, pool-rounded.
+pub fn hy_shared_size(profile: &NetworkProfile, d: usize, w: usize, a: usize) -> usize {
+    let probe = Organization::hy(
+        MemSpec::new(usize::MAX / 4, 1),
+        MemSpec::new(d, 1),
+        MemSpec::new(w, 1),
+        MemSpec::new(a, 1),
+        3,
+    );
+    let max_residual = profile
+        .ops
+        .iter()
+        .map(|op| cover_op(&probe, op).expect("unbounded shared").shared_total())
+        .max()
+        .unwrap_or(0);
+    pools::roundup(max_residual)
+}
+
+/// Full enumeration: SMP + SEP + HY, each with every valid sector
+/// combination (Algorithm 2).  SEP and SMP boundary cases of HY are
+/// emitted once, as their own design options.
+pub fn enumerate(profile: &NetworkProfile) -> Vec<Organization> {
+    let mut out = Vec::new();
+    let (sd, sw, sa) = sep_sizes(profile);
+
+    // --- SEP (Eq. 2) with all sector combinations.
+    for scd in pools::sector_pool_with_off(sd) {
+        for scw in pools::sector_pool_with_off(sw) {
+            for sca in pools::sector_pool_with_off(sa) {
+                out.push(Organization::sep(
+                    MemSpec::new(sd, scd),
+                    MemSpec::new(sw, scw),
+                    MemSpec::new(sa, sca),
+                ));
+            }
+        }
+    }
+
+    // --- SMP (Eq. 1).
+    for scs in pools::sector_pool_with_off(smp_size(profile)) {
+        out.push(Organization::smp(MemSpec::new(smp_size(profile), scs)));
+    }
+
+    // --- HY (Algorithm 1 x Algorithm 2).
+    for &d in &pools::size_pool(profile.max_d()) {
+        for &w in &pools::size_pool(profile.max_w()) {
+            for &a in &pools::size_pool(profile.max_a()) {
+                let s = hy_shared_size(profile, d, w, a);
+                if s == 0 {
+                    continue; // degenerates to SEP (emitted above)
+                }
+                if d == 0 && w == 0 && a == 0 {
+                    continue; // degenerates to SMP (emitted above)
+                }
+                let scs_pool = pools::sector_pool_with_off(s);
+                let scd_pool = or_one(pools::sector_pool_with_off(d));
+                let scw_pool = or_one(pools::sector_pool_with_off(w));
+                let sca_pool = or_one(pools::sector_pool_with_off(a));
+                for &scs in &scs_pool {
+                    for &scd in &scd_pool {
+                        for &scw in &scw_pool {
+                            for &sca in &sca_pool {
+                                out.push(Organization::hy(
+                                    MemSpec::new(s, scs),
+                                    MemSpec::new(d, scd),
+                                    MemSpec::new(w, scw),
+                                    MemSpec::new(a, sca),
+                                    3,
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    debug_assert!(out.iter().all(|o| org_fits(o, profile)));
+    out
+}
+
+fn or_one(pool: Vec<usize>) -> Vec<usize> {
+    if pool.is_empty() {
+        vec![1] // absent memory: single no-op sector slot
+    } else {
+        pool
+    }
+}
+
+/// The Fig 22 study: HY organizations with the shared memory constrained to
+/// `ports` ports (only configurations whose spill pattern actually needs no
+/// more than that many value types simultaneously are valid).
+pub fn enumerate_hy_ports(profile: &NetworkProfile, ports: usize) -> Vec<Organization> {
+    let mut out = Vec::new();
+    for org in enumerate(profile) {
+        if org.kind != OrgKind::Hy {
+            continue;
+        }
+        let mut constrained = org.clone();
+        constrained.shared_ports = ports;
+        if required_shared_ports(&constrained, profile) <= ports {
+            out.push(constrained);
+        }
+    }
+    out
+}
+
+/// Evaluates organizations in parallel over `threads` workers.
+pub fn evaluate_all(
+    orgs: &[Organization],
+    profile: &NetworkProfile,
+    tech: &Technology,
+    threads: usize,
+) -> Vec<DsePoint> {
+    let threads = threads.max(1);
+    if threads == 1 || orgs.len() < 64 {
+        return orgs.iter().map(|o| eval_one(o, profile, tech)).collect();
+    }
+    let chunk = (orgs.len() + threads - 1) / threads;
+    let mut results: Vec<Vec<DsePoint>> = Vec::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = orgs
+            .chunks(chunk)
+            .map(|slice| {
+                scope.spawn(move || {
+                    slice
+                        .iter()
+                        .map(|o| eval_one(o, profile, tech))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            results.push(h.join().expect("DSE worker panicked"));
+        }
+    });
+    results.into_iter().flatten().collect()
+}
+
+fn eval_one(org: &Organization, profile: &NetworkProfile, tech: &Technology) -> DsePoint {
+    // Fast path (see dse::evaluate): identical numbers to
+    // energy::evaluate_org, ~10x cheaper — pinned by
+    // evaluate::tests::fast_matches_reference.
+    let (area_mm2, energy_j) = evaluate::area_energy(org, profile, tech);
+    DsePoint {
+        org: org.clone(),
+        area_mm2,
+        energy_j,
+    }
+}
+
+/// Indices of the Pareto-optimal points (area vs energy minimization).
+pub fn pareto_indices(points: &[DsePoint]) -> Vec<usize> {
+    let ps: Vec<Point> = points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Point::new(p.area_mm2, p.energy_j, i))
+        .collect();
+    frontier(&ps)
+}
+
+/// Per-design-option lowest-energy selection (the Table I/II rule:
+/// "for each design option ... the Pareto-optimal solutions with
+/// lowest-energy are selected").
+pub fn select_per_option(points: &[DsePoint]) -> Vec<(String, usize)> {
+    let mut best: std::collections::BTreeMap<String, usize> = Default::default();
+    for (i, p) in points.iter().enumerate() {
+        let key = p.option();
+        match best.get(&key) {
+            Some(&j) if points[j].energy_j <= p.energy_j => {}
+            _ => {
+                best.insert(key, i);
+            }
+        }
+    }
+    best.into_iter().collect()
+}
+
+/// Convenience: the full DSE for one network profile.
+pub struct DseResult {
+    pub points: Vec<DsePoint>,
+    pub pareto: Vec<usize>,
+    pub selected: Vec<(String, usize)>,
+}
+
+pub fn run(profile: &NetworkProfile, tech: &Technology, threads: usize) -> DseResult {
+    let orgs = enumerate(profile);
+    let points = evaluate_all(&orgs, profile, tech, threads);
+    let pareto = pareto_indices(&points);
+    let selected = select_per_option(&points);
+    DseResult {
+        points,
+        pareto,
+        selected,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Accelerator;
+    use crate::dataflow::profile_network;
+    use crate::model::capsnet_mnist;
+    use crate::util::units::KIB;
+
+    fn profile() -> NetworkProfile {
+        profile_network(&capsnet_mnist(), &Accelerator::default())
+    }
+
+    #[test]
+    fn eq1_eq2_reproduce_table_i() {
+        let p = profile();
+        assert_eq!(sep_sizes(&p), (25 * KIB, 64 * KIB, 32 * KIB));
+        assert_eq!(smp_size(&p), 108 * KIB);
+    }
+
+    #[test]
+    fn hy_shared_size_boundaries() {
+        let p = profile();
+        // Dedicated memories at SEP sizes -> nothing spills -> shared = 0.
+        let (d, w, a) = sep_sizes(&p);
+        assert_eq!(hy_shared_size(&p, d, w, a), 0);
+        // No dedicated memories -> shared covers the SMP worst case.
+        assert_eq!(hy_shared_size(&p, 0, 0, 0), 108 * KIB);
+        // Partial coverage -> something in between.
+        let s = hy_shared_size(&p, 8 * KIB, 32 * KIB, 16 * KIB);
+        assert!(s > 0 && s < 108 * KIB, "{s}");
+    }
+
+    #[test]
+    fn enumeration_covers_all_design_options() {
+        let p = profile();
+        let orgs = enumerate(&p);
+        let opts: std::collections::BTreeSet<String> = orgs
+            .iter()
+            .map(|o| {
+                format!(
+                    "{}{}",
+                    o.kind.label(),
+                    if o.power_gated() { "-PG" } else { "" }
+                )
+            })
+            .collect();
+        for want in ["SMP", "SMP-PG", "SEP", "SEP-PG", "HY", "HY-PG"] {
+            assert!(opts.contains(want), "missing {want}");
+        }
+        // Same order of magnitude as the paper's 15,233 CapsNet configs.
+        assert!(
+            orgs.len() > 3_000 && orgs.len() < 150_000,
+            "{} configs",
+            orgs.len()
+        );
+    }
+
+    #[test]
+    fn every_enumerated_org_fits_the_profile() {
+        let p = profile();
+        for org in enumerate(&p) {
+            assert!(crate::memory::org_fits(&org, &p), "{:?}", org.label());
+        }
+    }
+
+    #[test]
+    fn evaluation_is_deterministic_and_parallel_consistent() {
+        let p = profile();
+        let tech = Technology::default();
+        let orgs: Vec<_> = enumerate(&p).into_iter().take(300).collect();
+        let seq = evaluate_all(&orgs, &p, &tech, 1);
+        let par = evaluate_all(&orgs, &p, &tech, 4);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.org, b.org);
+            assert!((a.energy_j - b.energy_j).abs() < 1e-15);
+            assert!((a.area_mm2 - b.area_mm2).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn selected_sep_matches_table_i_and_frontier_shape() {
+        let p = profile();
+        let tech = Technology::default();
+        let res = run(&p, &tech, 4);
+        let sel: std::collections::BTreeMap<_, _> = res.selected.iter().cloned().collect();
+
+        // SEP selection == Table I sizes by construction.
+        let sep = &res.points[sel["SEP"]];
+        assert_eq!(sep.org.data.unwrap().size, 25 * KIB);
+        assert_eq!(sep.org.weight.unwrap().size, 64 * KIB);
+        assert_eq!(sep.org.acc.unwrap().size, 32 * KIB);
+
+        // Paper Fig 18: HY-PG is the lowest-energy option overall...
+        let hy_pg = &res.points[sel["HY-PG"]];
+        for (name, &i) in &sel {
+            assert!(
+                hy_pg.energy_j <= res.points[i].energy_j + 1e-15,
+                "HY-PG not lowest energy vs {name}"
+            );
+        }
+        // ... SMP designs are dominated (not on the frontier) ...
+        let pareto_opts: std::collections::BTreeSet<String> = res
+            .pareto
+            .iter()
+            .map(|&i| res.points[i].option())
+            .collect();
+        assert!(!pareto_opts.contains("SMP"), "SMP on frontier");
+        // ... and some SEP/SEP-PG/HY-PG configuration is on the frontier.
+        assert!(
+            pareto_opts.contains("SEP")
+                || pareto_opts.contains("SEP-PG")
+                || pareto_opts.contains("HY-PG"),
+            "frontier options: {pareto_opts:?}"
+        );
+    }
+
+    #[test]
+    fn pg_variant_always_saves_energy_at_same_sizes() {
+        let p = profile();
+        let tech = Technology::default();
+        let (d, w, a) = sep_sizes(&p);
+        let base = eval_one(
+            &Organization::sep(
+                MemSpec::new(d, 1),
+                MemSpec::new(w, 1),
+                MemSpec::new(a, 1),
+            ),
+            &p,
+            &tech,
+        );
+        let pg = eval_one(
+            &Organization::sep(
+                MemSpec::new(d, 2),
+                MemSpec::new(w, 8),
+                MemSpec::new(a, 2),
+            ),
+            &p,
+            &tech,
+        );
+        assert!(pg.energy_j < base.energy_j);
+        assert!(pg.area_mm2 > base.area_mm2); // PG costs area
+    }
+
+    #[test]
+    fn port_constrained_enumeration_is_nonempty_and_valid() {
+        let p = profile();
+        let one_port = enumerate_hy_ports(&p, 1);
+        assert!(!one_port.is_empty());
+        for org in &one_port {
+            assert_eq!(org.shared_ports, 1);
+            assert!(required_shared_ports(org, &p) <= 1);
+        }
+        // More ports admit at least as many configurations.
+        let two_port = enumerate_hy_ports(&p, 2);
+        assert!(two_port.len() >= one_port.len());
+    }
+
+    #[test]
+    fn pareto_members_not_dominated() {
+        let p = profile();
+        let tech = Technology::default();
+        let orgs: Vec<_> = enumerate(&p).into_iter().take(2_000).collect();
+        let points = evaluate_all(&orgs, &p, &tech, 4);
+        let front = pareto_indices(&points);
+        assert!(!front.is_empty());
+        for &i in &front {
+            for (j, q) in points.iter().enumerate() {
+                if i != j {
+                    let dominated = q.area_mm2 <= points[i].area_mm2
+                        && q.energy_j <= points[i].energy_j
+                        && (q.area_mm2 < points[i].area_mm2
+                            || q.energy_j < points[i].energy_j);
+                    assert!(!dominated, "{i} dominated by {j}");
+                }
+            }
+        }
+    }
+}

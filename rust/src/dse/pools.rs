@@ -1,0 +1,144 @@
+//! Size and sector pools for the DSE (paper section V-C).
+//!
+//! Acceptable memory sizes are powers of two plus the paper's four
+//! "randomly selected" fine-grained sizes (25, 108, 450, 460 kiB); sector
+//! counts follow CACTI-P's constraint sigma(s) = powers of two in
+//! [2, s/128], capped at 16 sectors (the largest the paper's selected
+//! configurations use) to keep the exhaustive product tractable.
+
+use crate::util::units::KIB;
+
+/// The paper's four extra sizes (section V-C).
+pub const RANDOM_SIZES: [usize; 4] = [25 * KIB, 108 * KIB, 450 * KIB, 460 * KIB];
+
+/// Smallest memory size considered (one 16-bank array of 512 B banks).
+pub const MIN_SIZE: usize = 8 * KIB;
+
+/// Largest sector count considered in the HY sweep.
+pub const MAX_SECTORS: usize = 16;
+
+/// Smallest acceptable size >= `bytes` (power of two or a random size) —
+/// footnote 12's rounding rule.  `bytes == 0` maps to 0 (memory absent).
+pub fn roundup(bytes: usize) -> usize {
+    if bytes == 0 {
+        return 0;
+    }
+    let pow2 = bytes.next_power_of_two().max(MIN_SIZE);
+    RANDOM_SIZES
+        .iter()
+        .copied()
+        .filter(|&r| r >= bytes)
+        .chain(std::iter::once(pow2))
+        .min()
+        .unwrap()
+}
+
+/// Ascending pool of candidate sizes for one HY component: {0} followed by
+/// every acceptable size up to (and including) the component's standalone
+/// requirement `max_needed` rounded up.
+pub fn size_pool(max_needed: usize) -> Vec<usize> {
+    let cap = roundup(max_needed);
+    let mut pool = vec![0];
+    let mut p = MIN_SIZE;
+    while p <= cap {
+        pool.push(p);
+        p *= 2;
+    }
+    pool.extend(RANDOM_SIZES.iter().copied().filter(|&r| r <= cap));
+    pool.sort_unstable();
+    pool.dedup();
+    pool
+}
+
+/// sigma(s): valid power-gating sector counts for a memory of `size` bytes
+/// — powers of two in [2, size/128], capped at [`MAX_SECTORS`].  Empty for
+/// absent (size 0) memories.
+pub fn sector_pool(size: usize) -> Vec<usize> {
+    if size == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut sc = 2;
+    while sc <= (size / 128).min(MAX_SECTORS) {
+        out.push(sc);
+        sc *= 2;
+    }
+    out
+}
+
+/// sigma(s) including the no-gating option (SC = 1).
+pub fn sector_pool_with_off(size: usize) -> Vec<usize> {
+    if size == 0 {
+        return Vec::new();
+    }
+    let mut v = vec![1];
+    v.extend(sector_pool(size));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MIB;
+
+    #[test]
+    fn roundup_reproduces_table_i_sizes() {
+        // The calibrated CapsNet maxima -> the paper's Table I selections.
+        assert_eq!(roundup(23_040), 25 * KIB); // data
+        assert_eq!(roundup(53_760), 64 * KIB); // weight
+        assert_eq!(roundup(26_624), 32 * KIB); // acc
+        assert_eq!(roundup(66_816), 108 * KIB); // SMP
+    }
+
+    #[test]
+    fn roundup_reproduces_table_ii_sizes() {
+        assert_eq!(roundup(262_144), 256 * KIB); // DeepCaps data
+        assert_eq!(roundup(107_520), 108 * KIB); // DeepCaps weight: the
+        // 108 kiB random size undercuts 128 kiB — both acceptable; the DSE
+        // keeps whichever, the paper's table prints the pow2 rounding.
+        assert_eq!(roundup(8 * MIB - 96 * KIB), 8 * MIB); // DeepCaps acc
+    }
+
+    #[test]
+    fn roundup_prefers_exact_and_random_sizes() {
+        assert_eq!(roundup(64 * KIB), 64 * KIB);
+        assert_eq!(roundup(65 * KIB), 108 * KIB); // random beats 128 kiB
+        assert_eq!(roundup(200 * KIB), 256 * KIB);
+        assert_eq!(roundup(300 * KIB), 450 * KIB);
+        assert_eq!(roundup(0), 0);
+        assert_eq!(roundup(1), MIN_SIZE);
+    }
+
+    #[test]
+    fn size_pool_is_sorted_unique_and_capped() {
+        let pool = size_pool(53_760); // -> cap 64 kiB
+        assert_eq!(pool, vec![0, 8 * KIB, 16 * KIB, 25 * KIB, 32 * KIB, 64 * KIB]);
+        let pool_a = size_pool(26_624); // -> cap 32 kiB
+        assert_eq!(pool_a, vec![0, 8 * KIB, 16 * KIB, 25 * KIB, 32 * KIB]);
+    }
+
+    #[test]
+    fn sector_pool_respects_cacti_constraint() {
+        // size/128 lower-bounds the sector size.
+        assert_eq!(sector_pool(64 * KIB), vec![2, 4, 8, 16]); // capped at 16
+        assert_eq!(sector_pool(512), vec![2, 4]);
+        assert_eq!(sector_pool(256), vec![2]);
+        assert_eq!(sector_pool(128), Vec::<usize>::new());
+        assert_eq!(sector_pool(0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn sector_pool_with_off_prepends_one() {
+        assert_eq!(sector_pool_with_off(64 * KIB), vec![1, 2, 4, 8, 16]);
+        assert!(sector_pool_with_off(0).is_empty());
+    }
+
+    #[test]
+    fn every_sector_choice_keeps_sectors_at_least_128_bytes() {
+        for size in [8 * KIB, 25 * KIB, 64 * KIB, 8 * MIB] {
+            for sc in sector_pool(size) {
+                assert!(size / sc >= 128, "size {size} sc {sc}");
+            }
+        }
+    }
+}

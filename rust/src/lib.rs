@@ -1,0 +1,19 @@
+//! DESCNet: scratchpad-memory design-space exploration for Capsule-Network
+//! accelerators — reproduction of Marchisio et al., IEEE TCAD 2020.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod accel;
+pub mod cacti;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod dse;
+pub mod energy;
+pub mod memory;
+pub mod model;
+pub mod pmu;
+pub mod report;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,308 @@
+//! `descnet` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   analyze   print the per-operation workload profile (Figs 1/9/10/11)
+//!   dse       run the design-space exploration (Figs 18/20/22, Tables I/II)
+//!   report    regenerate paper figures/tables into results/ (see DESIGN.md E-index)
+//!   serve     serve CapsNet inference via the PJRT runtime + coordinator
+//!   headline  print the paper-vs-ours headline metrics
+
+use std::path::PathBuf;
+
+use descnet::accel;
+use descnet::config::SystemConfig;
+use descnet::coordinator::server::{ServeOptions, Server};
+use descnet::dataflow::profile_network;
+use descnet::model::{capsnet_mnist, deepcaps_cifar10};
+use descnet::report::{self, ReportCtx};
+use descnet::util::table::Table;
+use descnet::util::units::{fmt_count, fmt_size};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { &args[..] } else { &args[1..] };
+    let code = match cmd {
+        "analyze" => cmd_analyze(rest),
+        "dse" => cmd_dse(rest),
+        "report" => cmd_report(rest),
+        "serve" => cmd_serve(rest),
+        "headline" => cmd_headline(rest),
+        "config" => cmd_config(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "descnet — DESCNet scratchpad-memory DSE for CapsNet accelerators\n\n\
+         USAGE: descnet <command> [options]\n\n\
+         COMMANDS:\n\
+           analyze  [--net capsnet|deepcaps] [--sim]        per-op workload profile\n\
+           dse      [--net capsnet|deepcaps] [--ports]      design-space exploration\n\
+                    [--threads N] [--out DIR]\n\
+           report   [all|fig1|fig7|fig9|fig10|fig11|fig12|fig18|fig19|fig20|fig21|\n\
+                     fig22|fig23|fig25|fig27|fig29|fig30|fig31|table3|headline]\n\
+                    [--out DIR] [--threads N] [--config FILE]\n\
+           serve    [--artifacts DIR] [--requests N] [--batch-max B] [--stage-pipeline]\n\
+           headline [--threads N]                           paper-vs-ours summary\n\
+           config   [--save FILE] [--config FILE]           print/snapshot the technology config"
+    );
+}
+
+/// Tiny flag parser: `--key value` pairs plus positional words.
+struct Flags {
+    positional: Vec<String>,
+    kv: std::collections::BTreeMap<String, String>,
+}
+
+fn parse_flags(args: &[String]) -> Flags {
+    let mut positional = Vec::new();
+    let mut kv = std::collections::BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                kv.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                kv.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(args[i].clone());
+            i += 1;
+        }
+    }
+    Flags { positional, kv }
+}
+
+impl Flags {
+    fn get(&self, key: &str, default: &str) -> String {
+        self.kv
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.kv
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.kv.contains_key(key)
+    }
+}
+
+fn load_config(flags: &Flags) -> SystemConfig {
+    match flags.kv.get("config") {
+        Some(path) => SystemConfig::load(std::path::Path::new(path)).unwrap_or_else(|e| {
+            eprintln!("failed to load config {path}: {e}");
+            std::process::exit(2);
+        }),
+        None => SystemConfig::default(),
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+fn cmd_analyze(args: &[String]) -> i32 {
+    let flags = parse_flags(args);
+    let cfg = load_config(&flags);
+    let net = flags.get("net", "capsnet");
+    let network = match net.as_str() {
+        "capsnet" => capsnet_mnist(),
+        "deepcaps" => deepcaps_cifar10(),
+        other => {
+            eprintln!("unknown network {other}");
+            return 2;
+        }
+    };
+    let p = profile_network(&network, &cfg.accel);
+    let mut table = Table::new(&[
+        "op", "group", "cycles", "D usage", "W usage", "A usage", "off rd", "off wr",
+    ]);
+    for op in &p.ops {
+        table.row(vec![
+            op.name.clone(),
+            op.group.label().to_string(),
+            fmt_count(op.cycles),
+            fmt_size(op.usage_d),
+            fmt_size(op.usage_w),
+            fmt_size(op.usage_a),
+            fmt_size(op.off_rd as usize),
+            fmt_size(op.off_wr as usize),
+        ]);
+    }
+    println!("{}", table.to_ascii());
+    println!(
+        "total: {} cycles  ->  {:.1} fps @ {:.0} MHz (paper: {} fps)",
+        fmt_count(p.total_cycles()),
+        p.fps(),
+        cfg.accel.clock_hz / 1e6,
+        network.paper_fps,
+    );
+    println!(
+        "maxima: D {}  W {}  A {}  SMP {}",
+        fmt_size(p.max_d()),
+        fmt_size(p.max_w()),
+        fmt_size(p.max_a()),
+        fmt_size(p.max_total()),
+    );
+    if flags.has("sim") {
+        // Event-level simulation: phase breakdown + closed-form validation.
+        let mut t = Table::new(&["op", "compute", "w-stream", "drain", "normalize", "util"]);
+        for sim in accel::sim_network(&network, &cfg.accel) {
+            t.row(vec![
+                sim.name.clone(),
+                fmt_count(sim.compute),
+                fmt_count(sim.weight_stream),
+                fmt_count(sim.drain),
+                fmt_count(sim.normalization),
+                format!("{:.1}%", 100.0 * sim.utilization()),
+            ]);
+        }
+        println!("{}", t.to_ascii());
+        println!(
+            "event-sim vs closed form: max disagreement {:.2}%",
+            100.0 * accel::validate_network(&network, &cfg.accel)
+        );
+    }
+    0
+}
+
+fn cmd_dse(args: &[String]) -> i32 {
+    let flags = parse_flags(args);
+    let cfg = load_config(&flags);
+    let out = PathBuf::from(flags.get("out", "results"));
+    let threads = flags.usize("threads", default_threads());
+    let net = flags.get("net", "capsnet");
+    let ctx = ReportCtx::new(cfg, &out);
+
+    if flags.has("ports") {
+        let csv = report::fig22(&ctx, threads);
+        println!(
+            "port-constrained HY-PG DSE: {} configurations (paper: 113,337)",
+            fmt_count(csv.len() as u64)
+        );
+        return 0;
+    }
+    let (csv, table) = report::dse_scatter(&ctx, &net, threads);
+    println!(
+        "{net} DSE: {} configurations evaluated (paper: {})",
+        fmt_count(csv.len() as u64),
+        if net == "capsnet" { "15,233" } else { "215,693" },
+    );
+    println!("{}", table.to_ascii());
+    0
+}
+
+fn cmd_report(args: &[String]) -> i32 {
+    let flags = parse_flags(args);
+    let cfg = load_config(&flags);
+    let out = PathBuf::from(flags.get("out", "results"));
+    let threads = flags.usize("threads", default_threads());
+    let what = flags
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let ctx = ReportCtx::new(cfg, &out);
+    match what.as_str() {
+        "all" => {
+            let done = report::all(&ctx, threads);
+            println!("regenerated: {}", done.join(", "));
+        }
+        "fig1" => drop(report::fig1(&ctx)),
+        "fig7" => drop(report::fig7(&ctx)),
+        "fig9" => drop(report::fig9(&ctx)),
+        "fig10" => drop(report::fig10(&ctx)),
+        "fig11" => drop(report::fig11(&ctx)),
+        "fig12" => drop(report::fig12(&ctx)),
+        "fig18" => drop(report::dse_scatter(&ctx, "capsnet", threads)),
+        "fig19" => drop(report::breakdowns(&ctx, "capsnet", threads)),
+        "fig20" => drop(report::dse_scatter(&ctx, "deepcaps", threads)),
+        "fig21" => drop(report::breakdowns(&ctx, "deepcaps", threads)),
+        "fig22" => drop(report::fig22(&ctx, threads)),
+        "fig23" | "fig24" => drop(report::whole_accelerator(&ctx, "capsnet", threads)),
+        "fig25" | "fig26" => drop(report::whole_accelerator(&ctx, "deepcaps", threads)),
+        "fig27" | "fig28" => drop(report::fig27_28(&ctx)),
+        "fig29" => drop(report::memory_breakdown(&ctx, "capsnet", threads)),
+        "fig30" => drop(report::fig30(&ctx, threads)),
+        "fig31" | "fig32" => drop(report::memory_breakdown(&ctx, "deepcaps", threads)),
+        "table3" => println!("{}", report::table3(&ctx, threads).to_ascii()),
+        "headline" => println!("{}", report::headline(&ctx, threads).to_string()),
+        other => {
+            eprintln!("unknown report target '{other}'");
+            return 2;
+        }
+    }
+    println!("results under {}", out.display());
+    0
+}
+
+fn cmd_headline(args: &[String]) -> i32 {
+    let flags = parse_flags(args);
+    let cfg = load_config(&flags);
+    let threads = flags.usize("threads", default_threads());
+    let dir = std::env::temp_dir().join("descnet_headline");
+    let ctx = ReportCtx::new(cfg, &dir);
+    println!("{}", report::headline(&ctx, threads).to_string());
+    0
+}
+
+/// `descnet config --save configs/default.json`: snapshot the calibrated
+/// defaults so experiments can pin/modify them (DESIGN.md section 7).
+fn cmd_config(args: &[String]) -> i32 {
+    let flags = parse_flags(args);
+    let cfg = load_config(&flags);
+    match flags.kv.get("save") {
+        Some(path) => {
+            let p = std::path::Path::new(path);
+            if let Err(e) = cfg.save(p) {
+                eprintln!("saving {path}: {e}");
+                return 1;
+            }
+            println!("wrote {path}");
+        }
+        None => println!("{}", cfg.to_json().to_string_pretty()),
+    }
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let flags = parse_flags(args);
+    let opts = ServeOptions {
+        artifacts_dir: PathBuf::from(flags.get("artifacts", "artifacts")),
+        requests: flags.usize("requests", 64),
+        batch_max: flags.usize("batch-max", 4),
+        stage_pipeline: flags.has("stage-pipeline"),
+        seed: flags.usize("seed", 7) as u64,
+    };
+    match Server::run_synthetic(&opts) {
+        Ok(mut stats) => {
+            println!("{}", stats.summary());
+            0
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            1
+        }
+    }
+}

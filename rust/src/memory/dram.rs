@@ -1,0 +1,72 @@
+//! Off-chip DRAM model (LPDDR-class edge memory).
+//!
+//! Energy is charged per byte moved (interface + array, amortized over
+//! bursts); a background power term covers refresh/standby attributable to
+//! this accelerator.  Latency/bandwidth feed the prefetch latency-hiding
+//! check (`memory::prefetch`).
+
+use crate::config::Technology;
+
+pub struct Dram<'t> {
+    pub tech: &'t Technology,
+}
+
+impl<'t> Dram<'t> {
+    pub fn new(tech: &'t Technology) -> Dram<'t> {
+        Dram { tech }
+    }
+
+    /// Transfer energy for `bytes` moved in either direction [J].
+    pub fn transfer_energy_j(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.tech.dram_j_per_byte
+    }
+
+    /// Background (standby/refresh) energy over an interval [J].
+    pub fn background_energy_j(&self, duration_s: f64) -> f64 {
+        self.tech.dram_background_w * duration_s
+    }
+
+    /// Time to move `bytes` as one streamed burst train [s].
+    pub fn transfer_time_s(&self, bytes: u64) -> f64 {
+        self.tech.dram_latency_s + bytes as f64 / self.tech.dram_bandwidth_bps
+    }
+
+    pub fn bandwidth_bps(&self) -> f64 {
+        self.tech.dram_bandwidth_bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_linear_in_bytes() {
+        let tech = Technology::default();
+        let d = Dram::new(&tech);
+        let e1 = d.transfer_energy_j(1_000_000);
+        let e2 = d.transfer_energy_j(2_000_000);
+        assert!((e2 - 2.0 * e1).abs() < 1e-15);
+        // ~1.2 nJ/B default -> 1 MB costs ~1.2 mJ.
+        assert!((e1 - 1.2e-3).abs() / 1.2e-3 < 1e-9);
+    }
+
+    #[test]
+    fn transfer_time_includes_latency() {
+        let tech = Technology::default();
+        let d = Dram::new(&tech);
+        let t0 = d.transfer_time_s(0);
+        assert!((t0 - 100e-9).abs() < 1e-12);
+        let t = d.transfer_time_s(12_800);
+        assert!(t > t0);
+        assert!((t - (100e-9 + 1e-6)).abs() < 1e-9); // 12.8 kB @ 12.8 GB/s
+    }
+
+    #[test]
+    fn background_power_over_capsnet_inference() {
+        let tech = Technology::default();
+        let d = Dram::new(&tech);
+        let e = d.background_energy_j(8.6e-3);
+        assert!(e > 0.0 && e < 1e-3); // sub-mJ share
+    }
+}

@@ -1,0 +1,450 @@
+//! DESCNet SPM organizations (paper Fig 14): Shared Multi-Port (SMP),
+//! Separated (SEP), and Hybrid (HY), with per-operation usage *coverage* —
+//! which physical memory holds which logical data (the Fig 29/31 memory
+//! breakdowns), and validity checks (every operation's working set must fit,
+//! Algorithm 1's constraint).
+
+pub mod dram;
+pub mod prefetch;
+
+use crate::cacti::SramConfig;
+use crate::dataflow::{NetworkProfile, OpProfile};
+
+/// The four physical memories an organization can instantiate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Component {
+    Shared,
+    Data,
+    Weight,
+    Acc,
+}
+
+impl Component {
+    pub const ALL: [Component; 4] = [
+        Component::Shared,
+        Component::Data,
+        Component::Weight,
+        Component::Acc,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Component::Shared => "shared",
+            Component::Data => "data",
+            Component::Weight => "weight",
+            Component::Acc => "acc",
+        }
+    }
+}
+
+/// Size + sector count of one physical memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MemSpec {
+    pub size: usize,
+    pub sectors: usize,
+}
+
+impl MemSpec {
+    pub fn new(size: usize, sectors: usize) -> MemSpec {
+        MemSpec { size, sectors }
+    }
+}
+
+/// Organization kind (design option in the paper's terminology).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OrgKind {
+    Smp,
+    Sep,
+    Hy,
+}
+
+impl OrgKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            OrgKind::Smp => "SMP",
+            OrgKind::Sep => "SEP",
+            OrgKind::Hy => "HY",
+        }
+    }
+}
+
+/// A concrete DESCNet organization: which memories exist, their sizes,
+/// sector counts and the shared memory's port count.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Organization {
+    pub kind: OrgKind,
+    pub shared: Option<MemSpec>,
+    pub data: Option<MemSpec>,
+    pub weight: Option<MemSpec>,
+    pub acc: Option<MemSpec>,
+    /// Ports of the shared memory (3 in the base design; the Fig 22 study
+    /// constrains it to 1 or 2).
+    pub shared_ports: usize,
+}
+
+impl Organization {
+    pub fn smp(shared: MemSpec) -> Organization {
+        Organization {
+            kind: OrgKind::Smp,
+            shared: Some(shared),
+            data: None,
+            weight: None,
+            acc: None,
+            shared_ports: 3,
+        }
+    }
+
+    pub fn sep(data: MemSpec, weight: MemSpec, acc: MemSpec) -> Organization {
+        Organization {
+            kind: OrgKind::Sep,
+            shared: None,
+            data: Some(data),
+            weight: Some(weight),
+            acc: Some(acc),
+            shared_ports: 3,
+        }
+    }
+
+    pub fn hy(
+        shared: MemSpec,
+        data: MemSpec,
+        weight: MemSpec,
+        acc: MemSpec,
+        shared_ports: usize,
+    ) -> Organization {
+        Organization {
+            kind: OrgKind::Hy,
+            shared: Some(shared),
+            data: Some(data),
+            weight: Some(weight),
+            acc: Some(acc),
+            shared_ports,
+        }
+    }
+
+    /// "SEP", "SEP-PG", "HY-PG (P_S=1)", ... as used in the paper's tables.
+    pub fn label(&self) -> String {
+        let pg = if self.power_gated() { "-PG" } else { "" };
+        let ports = if self.kind == OrgKind::Hy && self.shared_ports != 3 {
+            format!(" (P_S={})", self.shared_ports)
+        } else {
+            String::new()
+        };
+        format!("{}{}{}", self.kind.label(), pg, ports)
+    }
+
+    pub fn power_gated(&self) -> bool {
+        self.components()
+            .iter()
+            .any(|(_, spec)| spec.sectors > 1)
+    }
+
+    /// The instantiated (component, spec) pairs.
+    pub fn components(&self) -> Vec<(Component, MemSpec)> {
+        let mut v = Vec::new();
+        if let Some(s) = self.shared {
+            v.push((Component::Shared, s));
+        }
+        if let Some(s) = self.data {
+            v.push((Component::Data, s));
+        }
+        if let Some(s) = self.weight {
+            v.push((Component::Weight, s));
+        }
+        if let Some(s) = self.acc {
+            v.push((Component::Acc, s));
+        }
+        v
+    }
+
+    pub fn spec(&self, c: Component) -> Option<MemSpec> {
+        match c {
+            Component::Shared => self.shared,
+            Component::Data => self.data,
+            Component::Weight => self.weight,
+            Component::Acc => self.acc,
+        }
+    }
+
+    /// SRAM geometry of a component for the CACTI model.
+    pub fn sram_config(&self, c: Component) -> Option<SramConfig> {
+        let ports = match c {
+            Component::Shared => self.shared_ports,
+            _ => 1,
+        };
+        self.spec(c)
+            .map(|s| SramConfig::new(s.size, ports, s.sectors))
+    }
+
+    pub fn total_size(&self) -> usize {
+        self.components().iter().map(|(_, s)| s.size).sum()
+    }
+}
+
+/// How one operation's working set maps onto the physical memories: bytes
+/// of {data, weight, acc} usage held by each component (the paper's Fig
+/// 29/31 "memory breakdown").
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Coverage {
+    /// Bytes of each logical class in its dedicated memory.
+    pub ded_d: usize,
+    pub ded_w: usize,
+    pub ded_a: usize,
+    /// Bytes of each logical class spilled to the shared memory.
+    pub sh_d: usize,
+    pub sh_w: usize,
+    pub sh_a: usize,
+}
+
+impl Coverage {
+    pub fn shared_total(&self) -> usize {
+        self.sh_d + self.sh_w + self.sh_a
+    }
+
+    /// Number of distinct value types in the shared memory — the port
+    /// requirement of this op for the Fig 22 / Appendix B.2 analysis.
+    pub fn shared_types(&self) -> usize {
+        [self.sh_d, self.sh_w, self.sh_a]
+            .iter()
+            .filter(|&&b| b > 0)
+            .count()
+    }
+}
+
+/// Maps an op's usage onto an organization: dedicated memories absorb up to
+/// their size; the remainder spills to the shared memory (Algorithm 1's
+/// residual rule).  Returns None if the op does not fit.
+pub fn cover_op(org: &Organization, op: &OpProfile) -> Option<Coverage> {
+    let cap = |c: Component| org.spec(c).map(|s| s.size).unwrap_or(0);
+    let ded_d = op.usage_d.min(cap(Component::Data));
+    let ded_w = op.usage_w.min(cap(Component::Weight));
+    let ded_a = op.usage_a.min(cap(Component::Acc));
+    let cov = Coverage {
+        ded_d,
+        ded_w,
+        ded_a,
+        sh_d: op.usage_d - ded_d,
+        sh_w: op.usage_w - ded_w,
+        sh_a: op.usage_a - ded_a,
+    };
+    if cov.shared_total() <= cap(Component::Shared) {
+        Some(cov)
+    } else {
+        None
+    }
+}
+
+/// Whether every operation of the profile fits this organization
+/// (Algorithm 1's "still guarantees the minimum memory usage required by
+/// each operation").
+pub fn org_fits(org: &Organization, profile: &NetworkProfile) -> bool {
+    profile.ops.iter().all(|op| cover_op(org, op).is_some())
+}
+
+/// Max over ops of the number of value types simultaneously in the shared
+/// memory — the minimum port count the shared memory actually needs
+/// (Appendix B.2's observation enabling the P_S-constrained study).
+pub fn required_shared_ports(org: &Organization, profile: &NetworkProfile) -> usize {
+    profile
+        .ops
+        .iter()
+        .filter_map(|op| cover_op(org, op).map(|c| c.shared_types()))
+        .max()
+        .unwrap_or(0)
+}
+
+/// Per-op accesses routed to one component under a coverage (for energy):
+/// accesses split proportionally to the covered fraction of each class.
+pub fn component_accesses(op: &OpProfile, cov: &Coverage, c: Component) -> f64 {
+    let frac = |ded: usize, total: usize| {
+        if total == 0 {
+            0.0
+        } else {
+            ded as f64 / total as f64
+        }
+    };
+    let d_acc = (op.rd_d + op.wr_d) as f64;
+    let w_acc = (op.rd_w + op.wr_w) as f64;
+    let a_acc = (op.rd_a + op.wr_a) as f64;
+    match c {
+        Component::Data => d_acc * frac(cov.ded_d, op.usage_d.max(1)),
+        Component::Weight => w_acc * frac(cov.ded_w, op.usage_w.max(1)),
+        Component::Acc => a_acc * frac(cov.ded_a, op.usage_a.max(1)),
+        Component::Shared => {
+            d_acc * frac(cov.sh_d, op.usage_d.max(1))
+                + w_acc * frac(cov.sh_w, op.usage_w.max(1))
+                + a_acc * frac(cov.sh_a, op.usage_a.max(1))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Accelerator;
+    use crate::dataflow::profile_network;
+    use crate::model::capsnet_mnist;
+    use crate::util::units::KIB;
+
+    fn profile() -> NetworkProfile {
+        profile_network(&capsnet_mnist(), &Accelerator::default())
+    }
+
+    fn table1_sep() -> Organization {
+        Organization::sep(
+            MemSpec::new(25 * KIB, 1),
+            MemSpec::new(64 * KIB, 1),
+            MemSpec::new(32 * KIB, 1),
+        )
+    }
+
+    #[test]
+    fn table1_sep_fits_capsnet() {
+        assert!(org_fits(&table1_sep(), &profile()));
+    }
+
+    #[test]
+    fn table1_smp_fits_capsnet() {
+        let org = Organization::smp(MemSpec::new(108 * KIB, 1));
+        assert!(org_fits(&org, &profile()));
+        // ...but a 64 kiB SMP does not (max total usage is 66.8 kiB).
+        let small = Organization::smp(MemSpec::new(64 * KIB, 1));
+        assert!(!org_fits(&small, &profile()));
+    }
+
+    #[test]
+    fn table1_hy_pg_fits_capsnet() {
+        // Paper Table I HY-PG row: shared 32k/2, data 25k/2, w 25k/4, acc 32k/2.
+        let org = Organization::hy(
+            MemSpec::new(32 * KIB, 2),
+            MemSpec::new(25 * KIB, 2),
+            MemSpec::new(25 * KIB, 4),
+            MemSpec::new(32 * KIB, 2),
+            3,
+        );
+        assert!(org_fits(&org, &profile()));
+        assert!(org.power_gated());
+        assert_eq!(org.label(), "HY-PG");
+    }
+
+    #[test]
+    fn sep_without_shared_rejects_oversized_ops() {
+        let tiny = Organization::sep(
+            MemSpec::new(8 * KIB, 1),
+            MemSpec::new(64 * KIB, 1),
+            MemSpec::new(32 * KIB, 1),
+        );
+        // Prim's 22.5 kiB data window exceeds 8 kiB and there is no shared
+        // memory to spill into.
+        assert!(!org_fits(&tiny, &profile()));
+    }
+
+    #[test]
+    fn hy_spills_to_shared() {
+        let p = profile();
+        let org = Organization::hy(
+            MemSpec::new(32 * KIB, 1),
+            MemSpec::new(8 * KIB, 1),
+            MemSpec::new(32 * KIB, 1),
+            MemSpec::new(16 * KIB, 1),
+            3,
+        );
+        let prim = p.op("Prim").unwrap();
+        let cov = cover_op(&org, prim).expect("fits");
+        assert_eq!(cov.ded_d, 8 * KIB);
+        assert_eq!(cov.sh_d, prim.usage_d - 8 * KIB);
+        assert_eq!(cov.ded_w, 32 * KIB);
+        assert_eq!(cov.sh_w, prim.usage_w - 32 * KIB);
+        assert!(cov.shared_total() <= 32 * KIB);
+    }
+
+    #[test]
+    fn coverage_conserves_usage() {
+        let p = profile();
+        let org = Organization::hy(
+            MemSpec::new(32 * KIB, 2),
+            MemSpec::new(25 * KIB, 2),
+            MemSpec::new(25 * KIB, 4),
+            MemSpec::new(32 * KIB, 2),
+            3,
+        );
+        for op in &p.ops {
+            let cov = cover_op(&org, op).unwrap();
+            assert_eq!(cov.ded_d + cov.sh_d, op.usage_d, "{}", op.name);
+            assert_eq!(cov.ded_w + cov.sh_w, op.usage_w, "{}", op.name);
+            assert_eq!(cov.ded_a + cov.sh_a, op.usage_a, "{}", op.name);
+        }
+    }
+
+    #[test]
+    fn component_accesses_partition_totals() {
+        let p = profile();
+        let org = Organization::hy(
+            MemSpec::new(32 * KIB, 1),
+            MemSpec::new(8 * KIB, 1),
+            MemSpec::new(32 * KIB, 1),
+            MemSpec::new(16 * KIB, 1),
+            3,
+        );
+        for op in &p.ops {
+            let cov = cover_op(&org, op).unwrap();
+            let total: f64 = Component::ALL
+                .iter()
+                .map(|&c| component_accesses(op, &cov, c))
+                .sum();
+            let expected = op.spm_accesses() as f64;
+            assert!(
+                (total - expected).abs() / expected.max(1.0) < 1e-9,
+                "{}: {total} vs {expected}",
+                op.name
+            );
+        }
+    }
+
+    #[test]
+    fn required_ports_reflect_spill_diversity() {
+        let p = profile();
+        // Huge dedicated memories: nothing spills -> 0 ports needed.
+        let all_ded = Organization::hy(
+            MemSpec::new(128 * KIB, 1),
+            MemSpec::new(64 * KIB, 1),
+            MemSpec::new(64 * KIB, 1),
+            MemSpec::new(64 * KIB, 1),
+            3,
+        );
+        assert_eq!(required_shared_ports(&all_ded, &p), 0);
+        // No dedicated memories at all: everything spills -> 3 types.
+        let all_shared = Organization::hy(
+            MemSpec::new(108 * KIB, 1),
+            MemSpec::new(0, 1),
+            MemSpec::new(0, 1),
+            MemSpec::new(0, 1),
+            3,
+        );
+        assert_eq!(required_shared_ports(&all_shared, &p), 3);
+    }
+
+    #[test]
+    fn labels_match_paper_terms() {
+        assert_eq!(table1_sep().label(), "SEP");
+        assert_eq!(
+            Organization::smp(MemSpec::new(108 * KIB, 2)).label(),
+            "SMP-PG"
+        );
+        let mut hy1 = Organization::hy(
+            MemSpec::new(4096 * KIB, 8),
+            MemSpec::new(256 * KIB, 8),
+            MemSpec::new(128 * KIB, 16),
+            MemSpec::new(2048 * KIB, 4),
+            1,
+        );
+        assert_eq!(hy1.label(), "HY-PG (P_S=1)");
+        hy1.shared_ports = 3;
+        assert_eq!(hy1.label(), "HY-PG");
+    }
+
+    #[test]
+    fn total_size_sums_components() {
+        assert_eq!(table1_sep().total_size(), (25 + 64 + 32) * KIB);
+    }
+}

@@ -1,0 +1,169 @@
+//! Prefetch / latency-hiding analysis — verifies the paper's "no
+//! performance loss" claim (section III Q2, section VI-D).
+//!
+//! The DESCNet hierarchy hides off-chip latency by (a) streaming each
+//! operation's own weight/data tiles double-buffered *during* the
+//! operation, and (b) pre-loading the next operation's first tiles while
+//! the current one computes.  Both hold as long as each op's off-chip
+//! traffic fits in its own compute window at DRAM bandwidth; the residue is
+//! a stall.
+//!
+//! With the calibrated workload model, every CapsNet/DeepCaps op satisfies
+//! the bound (the weight-stream-limited ClassCaps included), so the stall
+//! count is zero — the claim reproduces.  The analysis still computes
+//! stalls for arbitrary configurations (used by the ablation bench that
+//! sweeps DRAM bandwidth).
+
+use super::dram::Dram;
+use crate::config::{Accelerator, Technology};
+use crate::dataflow::NetworkProfile;
+
+/// Per-op stall report.
+#[derive(Debug, Clone)]
+pub struct OpStall {
+    pub name: String,
+    pub compute_cycles: u64,
+    pub required_bytes: u64,
+    pub stall_cycles: u64,
+}
+
+/// Full latency-hiding analysis of a profile.
+#[derive(Debug, Clone)]
+pub struct PrefetchReport {
+    pub ops: Vec<OpStall>,
+    pub total_stall_cycles: u64,
+    pub baseline_cycles: u64,
+}
+
+impl PrefetchReport {
+    /// The paper's claim: the hierarchy adds no cycles over the all-on-chip
+    /// baseline.
+    pub fn no_performance_loss(&self) -> bool {
+        self.total_stall_cycles == 0
+    }
+
+    /// Slowdown factor vs the all-on-chip baseline.
+    pub fn slowdown(&self) -> f64 {
+        (self.baseline_cycles + self.total_stall_cycles) as f64 / self.baseline_cycles as f64
+    }
+}
+
+/// Analyzes latency hiding: each op must receive its own off-chip reads and
+/// emit its writes within its compute window (double-buffered tile
+/// streaming overlaps transfer and compute).
+pub fn analyze(profile: &NetworkProfile, tech: &Technology, accel: &Accelerator) -> PrefetchReport {
+    let dram = Dram::new(tech);
+    let cycle_s = accel.cycle_s();
+    let mut ops = Vec::with_capacity(profile.ops.len());
+    let mut total = 0u64;
+    for op in &profile.ops {
+        let required = op.off_rd + op.off_wr;
+        let transfer_s = dram.transfer_time_s(required);
+        let compute_s = op.cycles as f64 * cycle_s;
+        let stall_s = (transfer_s - compute_s).max(0.0);
+        let stall_cycles = (stall_s / cycle_s).ceil() as u64;
+        total += stall_cycles;
+        ops.push(OpStall {
+            name: op.name.clone(),
+            compute_cycles: op.cycles,
+            required_bytes: required,
+            stall_cycles,
+        });
+    }
+    PrefetchReport {
+        ops,
+        total_stall_cycles: total,
+        baseline_cycles: profile.total_cycles(),
+    }
+}
+
+/// Minimum DRAM bandwidth [B/s] at which the profile still runs stall-free
+/// (for the bandwidth-sensitivity ablation).
+pub fn min_bandwidth_for_no_loss(
+    profile: &NetworkProfile,
+    tech: &Technology,
+    accel: &Accelerator,
+) -> f64 {
+    let cycle_s = accel.cycle_s();
+    profile
+        .ops
+        .iter()
+        .map(|op| {
+            let window = (op.cycles as f64 * cycle_s - tech.dram_latency_s).max(1e-12);
+            (op.off_rd + op.off_wr) as f64 / window
+        })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::profile_network;
+    use crate::model::{capsnet_mnist, deepcaps_cifar10};
+
+    #[test]
+    fn capsnet_has_no_performance_loss() {
+        // Section VI-D: "there is no performance loss, compared to the
+        // CapsNet executed on the baseline CapsAcc".
+        let tech = Technology::default();
+        let accel = Accelerator::default();
+        let p = profile_network(&capsnet_mnist(), &accel);
+        let report = analyze(&p, &tech, &accel);
+        assert!(
+            report.no_performance_loss(),
+            "stalls: {:?}",
+            report
+                .ops
+                .iter()
+                .filter(|o| o.stall_cycles > 0)
+                .collect::<Vec<_>>()
+        );
+        assert!((report.slowdown() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deepcaps_has_no_performance_loss() {
+        let tech = Technology::default();
+        let accel = Accelerator::default();
+        let p = profile_network(&deepcaps_cifar10(), &accel);
+        assert!(analyze(&p, &tech, &accel).no_performance_loss());
+    }
+
+    #[test]
+    fn starved_bandwidth_stalls() {
+        let mut tech = Technology::default();
+        tech.dram_bandwidth_bps = 100e6; // 100 MB/s: far too slow
+        let accel = Accelerator::default();
+        let p = profile_network(&capsnet_mnist(), &accel);
+        let report = analyze(&p, &tech, &accel);
+        assert!(!report.no_performance_loss());
+        assert!(report.slowdown() > 1.05);
+    }
+
+    #[test]
+    fn min_bandwidth_is_the_stall_threshold() {
+        let tech = Technology::default();
+        let accel = Accelerator::default();
+        let p = profile_network(&capsnet_mnist(), &accel);
+        let min_bw = min_bandwidth_for_no_loss(&p, &tech, &accel);
+        assert!(min_bw > 0.0 && min_bw < tech.dram_bandwidth_bps);
+
+        // Just above the threshold: fine; well below: stalls.
+        let mut t_ok = Technology::default();
+        t_ok.dram_bandwidth_bps = min_bw * 1.01;
+        assert!(analyze(&p, &t_ok, &accel).no_performance_loss());
+        let mut t_bad = Technology::default();
+        t_bad.dram_bandwidth_bps = min_bw * 0.5;
+        assert!(!analyze(&p, &t_bad, &accel).no_performance_loss());
+    }
+
+    #[test]
+    fn report_covers_all_ops() {
+        let tech = Technology::default();
+        let accel = Accelerator::default();
+        let p = profile_network(&capsnet_mnist(), &accel);
+        let report = analyze(&p, &tech, &accel);
+        assert_eq!(report.ops.len(), p.ops.len());
+        assert_eq!(report.baseline_cycles, p.total_cycles());
+    }
+}

@@ -1,0 +1,139 @@
+//! Google's CapsNet [Sabour et al. 2017] for MNIST, as the 9-operation
+//! CapsAcc schedule the paper profiles (Figs 1, 9a, 10, 12, 18, 19, 23, 24,
+//! 27; Tables I, III).
+//!
+//! Geometry (pinned against python/compile/model.py::CapsNetConfig.google):
+//!   Conv1       : 28x28x1 -> 9x9x256 valid, ReLU -> 20x20x256
+//!   PrimaryCaps : 9x9 conv stride 2 -> 6x6x256 = 1152 capsules x 8D, squash
+//!   ClassCaps   : votes 1152x8 -> 10x16, then 3 routing iterations
+//!                 (Sum+Squash / Update+Softmax pairs = 6 ops)
+
+use super::{routing_ops, LayerGroup, Network, OpKind, Operation};
+
+pub const NUM_PRIMARY_CAPS: usize = 1152;
+pub const CAPS_DIM: usize = 8;
+pub const NUM_CLASSES: usize = 10;
+pub const CLASS_CAPS_DIM: usize = 16;
+pub const ROUTING_ITERS: usize = 3;
+
+pub fn capsnet_mnist() -> Network {
+    let mut ops = vec![
+        Operation {
+            name: "Conv1".into(),
+            group: LayerGroup::Conv,
+            kind: OpKind::Conv2d {
+                hin: 28,
+                win: 28,
+                cin: 1,
+                hout: 20,
+                wout: 20,
+                cout: 256,
+                kh: 9,
+                kw: 9,
+                stride: 1,
+                squash_caps: 0,
+                skip_reuse: false,
+            },
+        },
+        Operation {
+            name: "Prim".into(),
+            group: LayerGroup::PrimaryCaps,
+            kind: OpKind::Conv2d {
+                hin: 20,
+                win: 20,
+                cin: 256,
+                hout: 6,
+                wout: 6,
+                cout: 256,
+                kh: 9,
+                kw: 9,
+                stride: 2,
+                squash_caps: NUM_PRIMARY_CAPS,
+                skip_reuse: false,
+            },
+        },
+        Operation {
+            name: "Class".into(),
+            group: LayerGroup::ClassCaps,
+            kind: OpKind::Votes {
+                ni: NUM_PRIMARY_CAPS,
+                no: NUM_CLASSES,
+                di: CAPS_DIM,
+                dout: CLASS_CAPS_DIM,
+                weights_in_pe_regs: false,
+                votes_in_acc: false,
+            },
+        },
+    ];
+    ops.extend(routing_ops(
+        "Class",
+        NUM_PRIMARY_CAPS,
+        NUM_CLASSES,
+        CLASS_CAPS_DIM,
+        ROUTING_ITERS,
+        false,
+    ));
+    Network {
+        name: "capsnet".into(),
+        dataset: "mnist".into(),
+        ops,
+        paper_fps: 116.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nine_operations_as_in_paper() {
+        let net = capsnet_mnist();
+        assert_eq!(net.ops.len(), 9); // Conv1, Prim, Class + 3x2 routing
+        assert_eq!(net.ops[0].name, "Conv1");
+        assert_eq!(net.ops[1].name, "Prim");
+        assert_eq!(net.ops[2].name, "Class");
+        assert_eq!(
+            net.ops.iter().filter(|o| o.is_routing()).count(),
+            6,
+            "the paper's 'last six operations (dynamic routing)'"
+        );
+    }
+
+    #[test]
+    fn geometry_matches_python_model() {
+        // Pinned against tests/test_model.py::test_google_config_matches_paper
+        let net = capsnet_mnist();
+        match &net.ops[1].kind {
+            OpKind::Conv2d { hout, wout, cout, .. } => {
+                assert_eq!(hout * wout * cout / CAPS_DIM, 1152);
+            }
+            _ => panic!("Prim must be a conv"),
+        }
+        match &net.ops[2].kind {
+            OpKind::Votes { ni, no, di, dout, .. } => {
+                assert_eq!((*ni, *no, *di, *dout), (1152, 10, 8, 16));
+            }
+            _ => panic!("Class must be votes"),
+        }
+    }
+
+    #[test]
+    fn parameter_count_close_to_published() {
+        // Google's CapsNet (without the reconstruction decoder) has ~6.8M
+        // parameters; conv1 21k + primary 5.31M + classcaps 1.47M.
+        let net = capsnet_mnist();
+        let params = net.total_param_bytes();
+        assert!(
+            (6_500_000..7_200_000).contains(&params),
+            "params = {params}"
+        );
+    }
+
+    #[test]
+    fn macs_dominated_by_primarycaps() {
+        let net = capsnet_mnist();
+        let prim = net.op("Prim").unwrap().macs();
+        assert!(prim * 2 > net.total_macs(), "Prim is the MAC hot-spot");
+        assert_eq!(prim, 191_102_976); // 6*6*256 * 9*9*256
+    }
+}

@@ -1,0 +1,236 @@
+//! DeepCaps [Rajasegaran et al. 2019] for CIFAR10, as the 31-operation
+//! CapsAcc schedule the paper profiles (Figs 9b, 11, 20, 21, 25, 26, 28;
+//! Tables II, III).
+//!
+//! Adapted geometry (DESIGN.md section 6): 64x64x3 input, Conv1 (3x3x128),
+//! four ConvCaps2D cells of 4 layers each (3 sequential + 1 parallel skip,
+//! strides 2/2/1/1, 32 capsule types x 8D = 256 channels), a 3-D ConvCaps
+//! with dynamic routing on the final 16x16 grid (votes kept resident in the
+//! accumulator SPM — the 8 MiB working set of Table II), 4:1 capsule
+//! pooling, and a ClassCaps layer (2048 x 8D -> 10 x 32D) with routing.
+//!
+//! Op count: 1 conv + 16 ConvCaps + 1 vote op + 6 routing (3D) + 1 vote op
+//! (ClassCaps) + 6 routing = 31.
+
+use super::{routing_ops, LayerGroup, Network, OpKind, Operation};
+
+pub const CAPS_TYPES: usize = 32;
+pub const CAPS_DIM: usize = 8;
+pub const CAPS_CHANNELS: usize = CAPS_TYPES * CAPS_DIM; // 256
+pub const CELL_STRIDES: [usize; 4] = [2, 2, 1, 1];
+pub const FINAL_HW: usize = 16;
+pub const NUM_CLASSES: usize = 10;
+pub const CLASS_CAPS_DIM: usize = 32;
+pub const ROUTING_ITERS: usize = 3;
+/// 4:1 spatial pooling of capsules before ClassCaps (16x16 -> 8x8 grid).
+pub const CLASS_POOL: usize = 2;
+
+/// Number of input capsules to ClassCaps: 8*8*32 = 2048.
+pub const NUM_CLASS_IN_CAPS: usize =
+    (FINAL_HW / CLASS_POOL) * (FINAL_HW / CLASS_POOL) * CAPS_TYPES;
+
+fn convcaps(
+    name: String,
+    hin: usize,
+    cin: usize,
+    stride: usize,
+    skip_reuse: bool,
+) -> Operation {
+    let hout = hin / stride;
+    Operation {
+        name,
+        group: LayerGroup::ConvCaps2D,
+        kind: OpKind::Conv2d {
+            hin,
+            win: hin,
+            cin,
+            hout,
+            wout: hout,
+            cout: CAPS_CHANNELS,
+            kh: 3,
+            kw: 3,
+            stride,
+            squash_caps: hout * hout * CAPS_TYPES,
+            skip_reuse,
+        },
+    }
+}
+
+pub fn deepcaps_cifar10() -> Network {
+    let mut ops = vec![Operation {
+        name: "Conv1".into(),
+        group: LayerGroup::Conv,
+        kind: OpKind::Conv2d {
+            hin: 64,
+            win: 64,
+            cin: 3,
+            hout: 64,
+            wout: 64,
+            cout: 128,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            squash_caps: 0,
+            skip_reuse: false,
+        },
+    }];
+
+    let mut hw = 64;
+    let mut cin = 128;
+    for (cell, &stride) in CELL_STRIDES.iter().enumerate() {
+        let hout = hw / stride;
+        // 3 sequential ConvCaps (the first applies the cell stride) ...
+        for conv in 0..3 {
+            let (h_in, c_in, s) = if conv == 0 {
+                (hw, cin, stride)
+            } else {
+                (hout, CAPS_CHANNELS, 1)
+            };
+            // The cell input fmap is re-read by the skip branch.
+            let reused = conv == 0;
+            ops.push(convcaps(
+                format!("Cell{cell}-Conv{conv}"),
+                h_in,
+                c_in,
+                s,
+                reused,
+            ));
+        }
+        // ... plus the parallel skip ConvCaps over the cell input.
+        ops.push(convcaps(format!("Cell{cell}-Skip"), hw, cin, stride, true));
+        hw = hout;
+        cin = CAPS_CHANNELS;
+    }
+    debug_assert_eq!(hw, FINAL_HW);
+
+    // 3-D ConvCaps: spatially-shared transforms in PE registers; votes for
+    // all (position, in-type, out-type) tuples accumulate into the 8 MiB
+    // accumulator ring buffer and routing runs over them in place.
+    let ni_3d = FINAL_HW * FINAL_HW * CAPS_TYPES; // 8192
+    ops.push(Operation {
+        name: "Caps3D-Votes".into(),
+        group: LayerGroup::ConvCaps3D,
+        kind: OpKind::Votes {
+            ni: ni_3d,
+            no: CAPS_TYPES,
+            di: CAPS_DIM,
+            dout: CAPS_DIM,
+            weights_in_pe_regs: true,
+            votes_in_acc: true,
+        },
+    });
+    ops.extend(routing_ops(
+        "Caps3D",
+        ni_3d,
+        CAPS_TYPES,
+        CAPS_DIM,
+        ROUTING_ITERS,
+        true,
+    ));
+
+    // ClassCaps on the pooled capsule grid (8x8x32 = 2048 capsules).
+    ops.push(Operation {
+        name: "Class".into(),
+        group: LayerGroup::ClassCaps,
+        kind: OpKind::Votes {
+            ni: NUM_CLASS_IN_CAPS,
+            no: NUM_CLASSES,
+            di: CAPS_DIM,
+            dout: CLASS_CAPS_DIM,
+            weights_in_pe_regs: false,
+            votes_in_acc: false,
+        },
+    });
+    ops.extend(routing_ops(
+        "Class",
+        NUM_CLASS_IN_CAPS,
+        NUM_CLASSES,
+        CLASS_CAPS_DIM,
+        ROUTING_ITERS,
+        false,
+    ));
+
+    Network {
+        name: "deepcaps".into(),
+        dataset: "cifar10".into(),
+        ops,
+        paper_fps: 9.7,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::RoutingHalf;
+
+    #[test]
+    fn thirty_one_operations() {
+        let net = deepcaps_cifar10();
+        assert_eq!(net.ops.len(), 31);
+        // 15 ConvCaps2D are sequential+skip minus... the paper counts 15
+        // ConvCaps2D + 1 ConvCaps3D; our 16 2-D layers include the cell-0
+        // head that the paper's Fig 5 draws as part of the first cell.
+        let caps2d = net
+            .ops
+            .iter()
+            .filter(|o| o.group == LayerGroup::ConvCaps2D)
+            .count();
+        assert_eq!(caps2d, 16);
+        assert_eq!(net.ops.iter().filter(|o| o.is_routing()).count(), 12);
+    }
+
+    #[test]
+    fn spatial_pyramid() {
+        let net = deepcaps_cifar10();
+        // Cell outputs: 32, 16, 16, 16.
+        match &net.op("Cell0-Conv0").unwrap().kind {
+            OpKind::Conv2d { hout, .. } => assert_eq!(*hout, 32),
+            _ => unreachable!(),
+        }
+        match &net.op("Cell3-Conv2").unwrap().kind {
+            OpKind::Conv2d { hout, .. } => assert_eq!(*hout, FINAL_HW),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn vote_buffer_is_8mib_class_of_table_ii() {
+        // 16*16*32 caps x 32 types x 8D x 4B = 8 MiB: the accumulator
+        // working set that drives Table II's 8 MiB accumulator SPM.
+        let ni = FINAL_HW * FINAL_HW * CAPS_TYPES;
+        let bytes = ni * CAPS_TYPES * CAPS_DIM * 4;
+        assert_eq!(bytes, 8 * 1024 * 1024);
+    }
+
+    #[test]
+    fn classcaps_geometry() {
+        let net = deepcaps_cifar10();
+        match &net.op("Class").unwrap().kind {
+            OpKind::Votes { ni, no, di, dout, .. } => {
+                assert_eq!((*ni, *no, *di, *dout), (2048, 10, 8, 32));
+            }
+            _ => unreachable!(),
+        }
+        match &net.ops.last().unwrap().kind {
+            OpKind::Routing { iter, half, .. } => {
+                assert_eq!(*iter, 3);
+                assert_eq!(*half, RoutingHalf::UpdateSoftmax);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn convcaps_dominate_macs() {
+        // Paper: ConvCaps2D ops are 73% of DeepCaps execution time; in MACs
+        // they dominate even harder.
+        let net = deepcaps_cifar10();
+        let caps2d: u64 = net
+            .ops
+            .iter()
+            .filter(|o| o.group == LayerGroup::ConvCaps2D)
+            .map(|o| o.macs())
+            .sum();
+        assert!(caps2d as f64 > 0.9 * net.total_macs() as f64);
+    }
+}

@@ -1,0 +1,752 @@
+//! Figure/table regenerators: one function per paper artifact (the E01–E18
+//! index in DESIGN.md section 9).  Each writes a CSV (and, for tables, a
+//! markdown file) under `results/` and returns the CSV for inspection.
+//!
+//! `descnet report all` regenerates everything; the per-figure bench
+//! targets in `benches/` call the same functions.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::SystemConfig;
+use crate::dataflow::{profile_network, tpu, NetworkProfile};
+use crate::dse;
+use crate::energy::{self, system_with_org};
+use crate::memory::{cover_op, prefetch, Component, MemSpec, Organization};
+use crate::model::{capsnet_mnist, deepcaps_cifar10};
+use crate::pmu;
+use crate::util::csv::{f, s, u, Csv};
+use crate::util::table::Table;
+use crate::util::units::fmt_size;
+
+/// Everything the generators need, computed once.
+pub struct ReportCtx {
+    pub cfg: SystemConfig,
+    pub capsnet: NetworkProfile,
+    pub deepcaps: NetworkProfile,
+    pub out_dir: PathBuf,
+}
+
+impl ReportCtx {
+    pub fn new(cfg: SystemConfig, out_dir: &Path) -> ReportCtx {
+        let capsnet = profile_network(&capsnet_mnist(), &cfg.accel);
+        let deepcaps = profile_network(&deepcaps_cifar10(), &cfg.accel);
+        ReportCtx {
+            cfg,
+            capsnet,
+            deepcaps,
+            out_dir: out_dir.to_path_buf(),
+        }
+    }
+
+    fn write(&self, name: &str, csv: &Csv) {
+        let path = self.out_dir.join(name);
+        csv.write_file(&path)
+            .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    }
+
+    fn write_md(&self, name: &str, table: &Table) {
+        let path = self.out_dir.join(name);
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(&path, table.to_markdown())
+            .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    }
+
+    fn profile(&self, net: &str) -> &NetworkProfile {
+        match net {
+            "capsnet" => &self.capsnet,
+            "deepcaps" => &self.deepcaps,
+            other => panic!("unknown network {other}"),
+        }
+    }
+
+    /// The paper's selected Pareto organizations (Table I, re-derived from
+    /// our own DSE selection rule in `selected_orgs`).
+    pub fn table1_sep(&self) -> Organization {
+        let (d, w, a) = dse::sep_sizes(&self.capsnet);
+        Organization::sep(MemSpec::new(d, 1), MemSpec::new(w, 1), MemSpec::new(a, 1))
+    }
+}
+
+// ---------------------------------------------------------------- E01 Fig 1
+
+/// Fig 1: per-op on-chip memory usage, CapsAcc vs TPU mapping.
+pub fn fig1(ctx: &ReportCtx) -> Csv {
+    let mut csv = Csv::new(&[
+        "op",
+        "capsacc_data_B",
+        "capsacc_weight_B",
+        "capsacc_acc_B",
+        "capsacc_total_B",
+        "tpu_total_B",
+    ]);
+    let net = capsnet_mnist();
+    let tpu_usage = tpu::profile_tpu(&net, &ctx.cfg.accel);
+    for (op, t) in ctx.capsnet.ops.iter().zip(&tpu_usage) {
+        csv.row(vec![
+            s(&op.name),
+            u(op.usage_d),
+            u(op.usage_w),
+            u(op.usage_a),
+            u(op.usage_total()),
+            u(t.total()),
+        ]);
+    }
+    ctx.write("fig01_memory_utilization.csv", &csv);
+    csv
+}
+
+// ---------------------------------------------------------------- E02 Fig 7
+
+/// Fig 7: parameters vs execution time per layer group (the dynamic-routing
+/// disproportion).  Time here is the analytical CapsAcc time; the serving
+/// example records wall-clock PJRT stage times alongside.
+pub fn fig7(ctx: &ReportCtx) -> Csv {
+    let mut csv = Csv::new(&["layer", "params", "macs", "time_ms", "time_share"]);
+    let net = capsnet_mnist();
+    let total = ctx.capsnet.total_cycles() as f64;
+    // Group: Conv1, Prim, ClassCaps(+routing).
+    let groups: [(&str, Box<dyn Fn(&str) -> bool>); 3] = [
+        ("Conv1", Box::new(|n: &str| n == "Conv1")),
+        ("PrimaryCaps", Box::new(|n: &str| n == "Prim")),
+        ("ClassCaps+Routing", Box::new(|n: &str| n.starts_with("Class"))),
+    ];
+    for (label, pred) in groups {
+        let params: u64 = net
+            .ops
+            .iter()
+            .filter(|o| pred(&o.name))
+            .map(|o| o.param_bytes())
+            .sum();
+        let macs: u64 = ctx
+            .capsnet
+            .ops
+            .iter()
+            .filter(|o| pred(&o.name))
+            .map(|o| o.macs)
+            .sum();
+        let cycles: u64 = ctx
+            .capsnet
+            .ops
+            .iter()
+            .filter(|o| pred(&o.name))
+            .map(|o| o.cycles)
+            .sum();
+        csv.row(vec![
+            s(label),
+            u(params as usize),
+            u(macs as usize),
+            f(cycles as f64 / ctx.capsnet.clock_hz * 1e3),
+            f(cycles as f64 / total),
+        ]);
+    }
+    ctx.write("fig07_params_vs_time.csv", &csv);
+    csv
+}
+
+// ---------------------------------------------------------------- E03 Fig 9
+
+/// Fig 9a/9b: clock cycles per operation.
+pub fn fig9(ctx: &ReportCtx) -> Csv {
+    let mut csv = Csv::new(&["network", "op", "group", "cycles", "share"]);
+    for p in [&ctx.capsnet, &ctx.deepcaps] {
+        let total = p.total_cycles() as f64;
+        for op in &p.ops {
+            csv.row(vec![
+                s(&p.network),
+                s(&op.name),
+                s(op.group.label()),
+                u(op.cycles as usize),
+                f(op.cycles as f64 / total),
+            ]);
+        }
+    }
+    ctx.write("fig09_cycles.csv", &csv);
+    csv
+}
+
+// -------------------------------------------------------- E04/E05 Fig 10/11
+
+fn usage_accesses_csv(p: &NetworkProfile) -> Csv {
+    let mut csv = Csv::new(&[
+        "op", "usage_d", "usage_w", "usage_a", "rd_d", "wr_d", "rd_w", "wr_w", "rd_a", "wr_a",
+    ]);
+    for op in &p.ops {
+        csv.row(vec![
+            s(&op.name),
+            u(op.usage_d),
+            u(op.usage_w),
+            u(op.usage_a),
+            u(op.rd_d as usize),
+            u(op.wr_d as usize),
+            u(op.rd_w as usize),
+            u(op.wr_w as usize),
+            u(op.rd_a as usize),
+            u(op.wr_a as usize),
+        ]);
+    }
+    csv
+}
+
+pub fn fig10(ctx: &ReportCtx) -> Csv {
+    let csv = usage_accesses_csv(&ctx.capsnet);
+    ctx.write("fig10_capsnet_usage_accesses.csv", &csv);
+    csv
+}
+
+pub fn fig11(ctx: &ReportCtx) -> Csv {
+    let csv = usage_accesses_csv(&ctx.deepcaps);
+    ctx.write("fig11_deepcaps_usage_accesses.csv", &csv);
+    csv
+}
+
+// --------------------------------------------------------------- E06 Fig 12
+
+/// Fig 12: energy breakdown of versions (a) and (b).
+pub fn fig12(ctx: &ReportCtx) -> Csv {
+    let mut csv = Csv::new(&["version", "component", "energy_mj", "share"]);
+    let a = energy::version_a(&ctx.capsnet, &ctx.cfg.tech);
+    let b = energy::version_b(&ctx.capsnet, &ctx.cfg.tech, dse::smp_size(&ctx.capsnet));
+    for sys in [&a, &b] {
+        let total = sys.total_j();
+        let mut rows: Vec<(&str, f64)> = vec![
+            ("accelerator_dyn", sys.accel.dyn_j),
+            ("accelerator_static", sys.accel.static_j),
+            ("onchip_dyn", sys.onchip.dyn_j()),
+            ("onchip_static", sys.onchip.static_j()),
+        ];
+        if let Some(d) = sys.dram {
+            rows.push(("offchip_transfer", d.transfer_j));
+            rows.push(("offchip_background", d.background_j));
+        }
+        for (name, e) in rows {
+            csv.row(vec![s(&sys.label), s(name), f(e * 1e3), f(e / total)]);
+        }
+        csv.row(vec![s(&sys.label), s("TOTAL"), f(total * 1e3), f(1.0)]);
+    }
+    ctx.write("fig12_energy_versions.csv", &csv);
+    csv
+}
+
+// ------------------------------------------------- E07/E09 Fig 18/20 + tabs
+
+/// Runs the full DSE for one network and dumps scatter + frontier +
+/// selected configurations (Fig 18/20, Tables I/II).
+pub fn dse_scatter(ctx: &ReportCtx, net: &str, threads: usize) -> (Csv, Table) {
+    let profile = ctx.profile(net);
+    let result = dse::run(profile, &ctx.cfg.tech, threads);
+    let pareto: std::collections::BTreeSet<usize> = result.pareto.iter().copied().collect();
+    let selected: std::collections::BTreeMap<usize, String> = result
+        .selected
+        .iter()
+        .map(|(name, i)| (*i, name.clone()))
+        .collect();
+
+    let mut csv = Csv::new(&[
+        "option",
+        "label",
+        "shared_B",
+        "shared_SC",
+        "data_B",
+        "data_SC",
+        "weight_B",
+        "weight_SC",
+        "acc_B",
+        "acc_SC",
+        "area_mm2",
+        "energy_mj",
+        "pareto",
+        "selected",
+    ]);
+    for (i, p) in result.points.iter().enumerate() {
+        let spec = |c| {
+            p.org
+                .spec(c)
+                .map(|m: MemSpec| (m.size, m.sectors))
+                .unwrap_or((0, 0))
+        };
+        let (ss, scs) = spec(Component::Shared);
+        let (sd, scd) = spec(Component::Data);
+        let (sw, scw) = spec(Component::Weight);
+        let (sa, sca) = spec(Component::Acc);
+        csv.row(vec![
+            s(&p.option()),
+            s(&p.org.label()),
+            u(ss),
+            u(scs),
+            u(sd),
+            u(scd),
+            u(sw),
+            u(scw),
+            u(sa),
+            u(sca),
+            f(p.area_mm2),
+            f(p.energy_j * 1e3),
+            s(if pareto.contains(&i) { "1" } else { "0" }),
+            s(selected.get(&i).map(String::as_str).unwrap_or("")),
+        ]);
+    }
+
+    // Table I/II analogue: the selected configurations.
+    let mut table = Table::new(&[
+        "Mem", "Shared SZ", "SC", "Data SZ", "SC", "Weight SZ", "SC", "Acc SZ", "SC",
+        "Area [mm2]", "Energy [mJ]",
+    ]);
+    for (name, i) in &result.selected {
+        let p = &result.points[*i];
+        let cell = |c| {
+            p.org
+                .spec(c)
+                .map(|m: MemSpec| (fmt_size(m.size), m.sectors.to_string()))
+                .unwrap_or(("-".into(), "-".into()))
+        };
+        let (ss, scs) = cell(Component::Shared);
+        let (sd, scd) = cell(Component::Data);
+        let (sw, scw) = cell(Component::Weight);
+        let (sa, sca) = cell(Component::Acc);
+        table.row(vec![
+            name.clone(),
+            ss,
+            scs,
+            sd,
+            scd,
+            sw,
+            scw,
+            sa,
+            sca,
+            format!("{:.3}", p.area_mm2),
+            format!("{:.3}", p.energy_j * 1e3),
+        ]);
+    }
+
+    let (fig, tab) = match net {
+        "capsnet" => ("fig18_dse_capsnet.csv", "table1_selected_capsnet.md"),
+        _ => ("fig20_dse_deepcaps.csv", "table2_selected_deepcaps.md"),
+    };
+    ctx.write(fig, &csv);
+    ctx.write_md(tab, &table);
+    (csv, table)
+}
+
+// ----------------------------------------------- E08/E10 Fig 19/21 breakdown
+
+/// Figs 19/21 (a)-(d): per-component area/energy breakdowns and per-op
+/// energy for the per-option selected configurations.
+pub fn breakdowns(ctx: &ReportCtx, net: &str, threads: usize) -> Csv {
+    let profile = ctx.profile(net);
+    let result = dse::run(profile, &ctx.cfg.tech, threads);
+    let mut csv = Csv::new(&[
+        "option",
+        "component",
+        "size_B",
+        "sectors",
+        "area_mm2",
+        "dyn_mj",
+        "static_mj",
+        "wakeup_nj",
+    ]);
+    let mut per_op = Csv::new(&["option", "op", "energy_mj"]);
+    for (name, i) in &result.selected {
+        let org = &result.points[*i].org;
+        let e = energy::evaluate_org(org, profile, &ctx.cfg.tech);
+        for m in &e.memories {
+            csv.row(vec![
+                s(name),
+                s(m.component.label()),
+                u(m.spec.size),
+                u(m.spec.sectors),
+                f(m.area_mm2),
+                f(m.dyn_j * 1e3),
+                f(m.static_j * 1e3),
+                f(m.wakeup_j * 1e9),
+            ]);
+        }
+        for (op, ej) in energy::per_op_energy(org, profile, &ctx.cfg.tech) {
+            per_op.row(vec![s(name), s(&op), f(ej * 1e3)]);
+        }
+    }
+    let (a, b) = match net {
+        "capsnet" => ("fig19_capsnet_breakdown.csv", "fig19d_capsnet_per_op.csv"),
+        _ => ("fig21_deepcaps_breakdown.csv", "fig21d_deepcaps_per_op.csv"),
+    };
+    ctx.write(a, &csv);
+    ctx.write(b, &per_op);
+    csv
+}
+
+// --------------------------------------------------------------- E11 Fig 22
+
+/// Fig 22: HY-PG DSE with constrained shared-memory ports.
+pub fn fig22(ctx: &ReportCtx, threads: usize) -> Csv {
+    let profile = &ctx.deepcaps;
+    let mut csv = Csv::new(&["ports", "label", "area_mm2", "energy_mj", "pareto"]);
+    for ports in [1usize, 2, 3] {
+        let orgs = dse::enumerate_hy_ports(profile, ports);
+        let points = dse::evaluate_all(&orgs, profile, &ctx.cfg.tech, threads);
+        let front: std::collections::BTreeSet<usize> =
+            dse::pareto_indices(&points).into_iter().collect();
+        for (i, p) in points.iter().enumerate() {
+            csv.row(vec![
+                u(ports),
+                s(&p.org.label()),
+                f(p.area_mm2),
+                f(p.energy_j * 1e3),
+                s(if front.contains(&i) { "1" } else { "0" }),
+            ]);
+        }
+    }
+    ctx.write("fig22_hy_pg_ports.csv", &csv);
+    csv
+}
+
+// ---------------------------------------------- E12/E13 Fig 23-26 + E18
+
+/// Figs 23–26: whole-accelerator energy/area for the chosen organizations,
+/// plus the headline savings vs version (a) (E18).
+pub fn whole_accelerator(ctx: &ReportCtx, net: &str, threads: usize) -> Csv {
+    let profile = ctx.profile(net);
+    let result = dse::run(profile, &ctx.cfg.tech, threads);
+    let selected: std::collections::BTreeMap<String, usize> =
+        result.selected.iter().cloned().collect();
+
+    let a = energy::version_a(profile, &ctx.cfg.tech);
+    let mut csv = Csv::new(&[
+        "system",
+        "total_energy_mj",
+        "total_area_mm2",
+        "accel_mj",
+        "onchip_dyn_mj",
+        "onchip_static_mj",
+        "offchip_mj",
+        "energy_saving_vs_a",
+        "area_saving_vs_a",
+        "no_perf_loss",
+    ]);
+    csv.row(vec![
+        s(&a.label),
+        f(a.total_j() * 1e3),
+        f(a.area_mm2),
+        f(a.accel.total_j() * 1e3),
+        f(a.onchip.dyn_j() * 1e3),
+        f(a.onchip.static_j() * 1e3),
+        f(0.0),
+        f(0.0),
+        f(0.0),
+        s("1"),
+    ]);
+
+    let report = prefetch::analyze(profile, &ctx.cfg.tech, &ctx.cfg.accel);
+    for option in ["SEP", "SEP-PG", "HY-PG"] {
+        let Some(&i) = selected.get(option) else { continue };
+        let sys = system_with_org(profile, &ctx.cfg.tech, &result.points[i].org, "DESCNet");
+        csv.row(vec![
+            s(&sys.label),
+            f(sys.total_j() * 1e3),
+            f(sys.area_mm2),
+            f(sys.accel.total_j() * 1e3),
+            f(sys.onchip.dyn_j() * 1e3),
+            f(sys.onchip.static_j() * 1e3),
+            f(sys.dram.map_or(0.0, |d| d.total_j()) * 1e3),
+            f(1.0 - sys.total_j() / a.total_j()),
+            f(1.0 - sys.area_mm2 / a.area_mm2),
+            s(if report.no_performance_loss() { "1" } else { "0" }),
+        ]);
+    }
+    let name = match net {
+        "capsnet" => "fig23_24_capsnet_whole_accelerator.csv",
+        _ => "fig25_26_deepcaps_whole_accelerator.csv",
+    };
+    ctx.write(name, &csv);
+    csv
+}
+
+// ------------------------------------------------------------- E14 Table III
+
+/// Table III: per-memory area/dynamic/static/wakeup for the selected
+/// configurations of both networks.
+pub fn table3(ctx: &ReportCtx, threads: usize) -> Table {
+    let mut table = Table::new(&[
+        "NN", "Mem", "Component", "Size", "SC", "Area [mm2]", "Dyn [mJ]", "Static [mJ]",
+        "Wakeup [nJ]",
+    ]);
+    for net in ["capsnet", "deepcaps"] {
+        let profile = ctx.profile(net);
+        let result = dse::run(profile, &ctx.cfg.tech, threads);
+        for (name, i) in &result.selected {
+            let org = &result.points[*i].org;
+            let e = energy::evaluate_org(org, profile, &ctx.cfg.tech);
+            for m in &e.memories {
+                table.row(vec![
+                    net.to_string(),
+                    name.clone(),
+                    m.component.label().to_string(),
+                    fmt_size(m.spec.size),
+                    m.spec.sectors.to_string(),
+                    format!("{:.3}", m.area_mm2),
+                    format!("{:.3}", m.dyn_j * 1e3),
+                    format!("{:.3}", m.static_j * 1e3),
+                    format!("{:.3}", m.wakeup_j * 1e9),
+                ]);
+            }
+        }
+    }
+    ctx.write_md("table3_area_energy.md", &table);
+    table
+}
+
+// ----------------------------------------------------------- E15 Fig 27/28
+
+pub fn fig27_28(ctx: &ReportCtx) -> Csv {
+    let mut csv = Csv::new(&["network", "op", "off_rd_B", "off_wr_B"]);
+    for p in [&ctx.capsnet, &ctx.deepcaps] {
+        for op in &p.ops {
+            csv.row(vec![
+                s(&p.network),
+                s(&op.name),
+                u(op.off_rd as usize),
+                u(op.off_wr as usize),
+            ]);
+        }
+    }
+    ctx.write("fig27_28_offchip_accesses.csv", &csv);
+    csv
+}
+
+// -------------------------------------------------------- E16 Fig 29/31/32
+
+/// Figs 29/31: operation-wise memory breakdown (which physical memory holds
+/// which value class) for the selected design options.
+pub fn memory_breakdown(ctx: &ReportCtx, net: &str, threads: usize) -> Csv {
+    let profile = ctx.profile(net);
+    let result = dse::run(profile, &ctx.cfg.tech, threads);
+    let mut csv = Csv::new(&[
+        "option", "op", "ded_d", "ded_w", "ded_a", "sh_d", "sh_w", "sh_a", "shared_types",
+    ]);
+    for (name, i) in &result.selected {
+        let org = &result.points[*i].org;
+        for op in &profile.ops {
+            let cov = cover_op(org, op).expect("fits");
+            csv.row(vec![
+                s(name),
+                s(&op.name),
+                u(cov.ded_d),
+                u(cov.ded_w),
+                u(cov.ded_a),
+                u(cov.sh_d),
+                u(cov.sh_w),
+                u(cov.sh_a),
+                u(cov.shared_types()),
+            ]);
+        }
+    }
+    let name = match net {
+        "capsnet" => "fig29_capsnet_memory_breakdown.csv",
+        _ => "fig31_deepcaps_memory_breakdown.csv",
+    };
+    ctx.write(name, &csv);
+    csv
+}
+
+// --------------------------------------------------------------- E17 Fig 30
+
+/// Fig 30: the HY-PG sector ON/OFF schedule across operations.
+pub fn fig30(ctx: &ReportCtx, threads: usize) -> Csv {
+    let profile = &ctx.capsnet;
+    let result = dse::run(profile, &ctx.cfg.tech, threads);
+    let selected: std::collections::BTreeMap<String, usize> =
+        result.selected.iter().cloned().collect();
+    let org = &result.points[selected["HY-PG"]].org;
+    let report = pmu::evaluate(org, profile, &ctx.cfg.tech);
+    let mut csv = Csv::new(&["component", "sectors", "op", "sectors_on"]);
+    for sched in &report.schedules {
+        for (i, op) in profile.ops.iter().enumerate() {
+            csv.row(vec![
+                s(sched.component.label()),
+                u(sched.sectors),
+                s(&op.name),
+                u(sched.on[i]),
+            ]);
+        }
+    }
+    ctx.write("fig30_hy_pg_schedule.csv", &csv);
+    csv
+}
+
+// ------------------------------------------------------------- E18 headline
+
+/// The headline claims, as one summary CSV (and returned for the CLI).
+pub fn headline(ctx: &ReportCtx, threads: usize) -> Csv {
+    let mut csv = Csv::new(&["metric", "paper", "ours"]);
+    let p = &ctx.capsnet;
+    let tech = &ctx.cfg.tech;
+    let a = energy::version_a(p, tech);
+    let b = energy::version_b(p, tech, dse::smp_size(p));
+    let result = dse::run(p, tech, threads);
+    let selected: std::collections::BTreeMap<String, usize> =
+        result.selected.iter().cloned().collect();
+    let sep_sys = system_with_org(p, tech, &result.points[selected["SEP"]].org, "DESCNet");
+    let hy_sys = system_with_org(p, tech, &result.points[selected["HY-PG"]].org, "DESCNet");
+    let report = prefetch::analyze(p, tech, &ctx.cfg.accel);
+
+    csv.row(vec![s("capsnet_fps"), s("116"), f(p.fps())]);
+    csv.row(vec![s("deepcaps_fps"), s("9.7"), f(ctx.deepcaps.fps())]);
+    csv.row(vec![
+        s("routing_cycle_share"),
+        s(">0.50"),
+        f(p.routing_cycle_share()),
+    ]);
+    csv.row(vec![
+        s("convcaps2d_cycle_share"),
+        s("0.73"),
+        f(ctx.deepcaps
+            .group_cycle_share(crate::model::LayerGroup::ConvCaps2D)),
+    ]);
+    csv.row(vec![
+        s("version_b_saving_vs_a"),
+        s("0.73"),
+        f(1.0 - b.total_j() / a.total_j()),
+    ]);
+    csv.row(vec![
+        s("sep_total_energy_saving_vs_a"),
+        s("0.78"),
+        f(1.0 - sep_sys.total_j() / a.total_j()),
+    ]);
+    csv.row(vec![
+        s("hy_pg_total_energy_saving_vs_a"),
+        s("0.79"),
+        f(1.0 - hy_sys.total_j() / a.total_j()),
+    ]);
+    csv.row(vec![
+        s("sep_area_saving_vs_a"),
+        s("0.47"),
+        f(1.0 - sep_sys.area_mm2 / a.area_mm2),
+    ]);
+    csv.row(vec![
+        s("hy_pg_area_saving_vs_a"),
+        s("0.40"),
+        f(1.0 - hy_sys.area_mm2 / a.area_mm2),
+    ]);
+    csv.row(vec![
+        s("performance_loss_cycles"),
+        s("0"),
+        u(report.total_stall_cycles as usize),
+    ]);
+    csv.row(vec![
+        s("memory_share_of_total_energy"),
+        s("0.96"),
+        f(b.memory_share()),
+    ]);
+    ctx.write("headline.csv", &csv);
+    csv
+}
+
+/// Regenerate everything (the `descnet report all` entry point).
+pub fn all(ctx: &ReportCtx, threads: usize) -> Vec<String> {
+    let mut done = Vec::new();
+    let mut mark = |name: &str| done.push(name.to_string());
+    fig1(ctx);
+    mark("fig1");
+    fig7(ctx);
+    mark("fig7");
+    fig9(ctx);
+    mark("fig9");
+    fig10(ctx);
+    mark("fig10");
+    fig11(ctx);
+    mark("fig11");
+    fig12(ctx);
+    mark("fig12");
+    dse_scatter(ctx, "capsnet", threads);
+    mark("fig18+table1");
+    breakdowns(ctx, "capsnet", threads);
+    mark("fig19");
+    dse_scatter(ctx, "deepcaps", threads);
+    mark("fig20+table2");
+    breakdowns(ctx, "deepcaps", threads);
+    mark("fig21");
+    fig22(ctx, threads);
+    mark("fig22");
+    whole_accelerator(ctx, "capsnet", threads);
+    mark("fig23-24");
+    whole_accelerator(ctx, "deepcaps", threads);
+    mark("fig25-26");
+    table3(ctx, threads);
+    mark("table3");
+    fig27_28(ctx);
+    mark("fig27-28");
+    memory_breakdown(ctx, "capsnet", threads);
+    mark("fig29");
+    memory_breakdown(ctx, "deepcaps", threads);
+    mark("fig31");
+    fig30(ctx, threads);
+    mark("fig30");
+    headline(ctx, threads);
+    mark("headline");
+    done
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> ReportCtx {
+        let dir = std::env::temp_dir().join("descnet_report_tests");
+        ReportCtx::new(SystemConfig::default(), &dir)
+    }
+
+    #[test]
+    fn fig1_has_nine_rows_and_tpu_dominates() {
+        let c = ctx();
+        let csv = fig1(&c);
+        assert_eq!(csv.len(), 9);
+        let text = csv.to_string();
+        assert!(text.contains("Conv1") && text.contains("Class-Update+Softmax3"));
+    }
+
+    #[test]
+    fn fig9_covers_both_networks() {
+        let c = ctx();
+        let csv = fig9(&c);
+        assert_eq!(csv.len(), 9 + 31);
+    }
+
+    #[test]
+    fn fig12_contains_both_versions_with_totals() {
+        let c = ctx();
+        let text = fig12(&c).to_string();
+        assert!(text.contains("version (a)"));
+        assert!(text.contains("version (b)"));
+        assert!(text.contains("offchip_transfer"));
+        assert_eq!(text.matches("TOTAL").count(), 2);
+    }
+
+    #[test]
+    fn headline_metrics_present() {
+        let c = ctx();
+        let text = headline(&c, 4).to_string();
+        for metric in [
+            "capsnet_fps",
+            "hy_pg_total_energy_saving_vs_a",
+            "performance_loss_cycles",
+        ] {
+            assert!(text.contains(metric), "{metric}");
+        }
+    }
+
+    #[test]
+    fn fig27_28_off_chip_rows() {
+        let c = ctx();
+        let csv = fig27_28(&c);
+        assert_eq!(csv.len(), 40);
+    }
+
+    #[test]
+    fn fig30_schedule_rows_cover_components_times_ops() {
+        let c = ctx();
+        let csv = fig30(&c, 4);
+        // HY-PG has 4 memories x 9 ops.
+        assert_eq!(csv.len() % 9, 0);
+        assert!(csv.len() >= 18);
+    }
+}

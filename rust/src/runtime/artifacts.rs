@@ -1,0 +1,215 @@
+//! Artifact manifest loader — the rust half of the AOT contract with
+//! `python/compile/aot.py` (`artifacts/manifest.json`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One HLO-text artifact (a lowered model stage at a fixed batch size).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub net: String,
+    pub stage: String,
+    pub batch: usize,
+    /// Weight-argument names, in PJRT argument order (before the input).
+    pub params: Vec<String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightRef {
+    pub net: String,
+    pub file: String,
+    pub params: Vec<String>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub weights: Vec<WeightRef>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .context("expected array of tensor specs")?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                shape: t
+                    .get("shape")
+                    .usize_vec()
+                    .context("tensor spec missing shape")?,
+            })
+        })
+        .collect()
+}
+
+fn strings(j: &Json) -> Result<Vec<String>> {
+    j.as_arr()
+        .context("expected array of strings")?
+        .iter()
+        .map(|v| Ok(v.as_str().context("expected string")?.to_string()))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let j = Json::parse_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        if j.get("format").as_str() != Some("descnet-artifacts-v1") {
+            bail!("unexpected manifest format {:?}", j.get("format"));
+        }
+        if j.get("interchange").as_str() != Some("hlo-text") {
+            bail!("manifest interchange must be hlo-text");
+        }
+        let artifacts = j
+            .get("artifacts")
+            .as_arr()
+            .context("manifest missing artifacts")?
+            .iter()
+            .map(|e| {
+                Ok(ArtifactEntry {
+                    name: e.get("name").as_str().context("name")?.to_string(),
+                    file: e.get("file").as_str().context("file")?.to_string(),
+                    net: e.get("net").as_str().context("net")?.to_string(),
+                    stage: e.get("stage").as_str().context("stage")?.to_string(),
+                    batch: e.get("batch").as_usize().context("batch")?,
+                    params: strings(e.get("params"))?,
+                    inputs: tensor_specs(e.get("inputs"))?,
+                    outputs: tensor_specs(e.get("outputs"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let weights = j
+            .get("weights")
+            .as_arr()
+            .context("manifest missing weights")?
+            .iter()
+            .map(|w| {
+                Ok(WeightRef {
+                    net: w.get("net").as_str().context("net")?.to_string(),
+                    file: w.get("file").as_str().context("file")?.to_string(),
+                    params: strings(w.get("params"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            weights,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Stage artifact for a network at a batch size.
+    pub fn stage(&self, net: &str, stage: &str, batch: usize) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.net == net && a.stage == stage && a.batch == batch)
+    }
+
+    /// Available batch sizes for a (net, stage), ascending.
+    pub fn batches(&self, net: &str, stage: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.net == net && a.stage == stage)
+            .map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn weights_for(&self, net: &str) -> Option<&WeightRef> {
+        self.weights.iter().find(|w| w.net == net)
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(!m.artifacts.is_empty());
+        let full = m.stage("capsnet", "full", 1).expect("capsnet_full_b1");
+        assert_eq!(full.inputs[0].shape, vec![1, 28, 28, 1]);
+        assert_eq!(full.outputs[0].shape, vec![1, 10]);
+        assert_eq!(full.params.len(), 5);
+        assert!(m.hlo_path(full).exists());
+        assert!(m.weights_for("capsnet").is_some());
+    }
+
+    #[test]
+    fn stage_chain_shapes_are_consistent() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        for &b in &m.batches("capsnet", "full") {
+            let conv1 = m.stage("capsnet", "conv1", b).unwrap();
+            let prim = m.stage("capsnet", "primarycaps", b).unwrap();
+            let class = m.stage("capsnet", "classcaps", b).unwrap();
+            assert_eq!(conv1.outputs[0].shape, prim.inputs[0].shape);
+            assert_eq!(prim.outputs[0].shape, class.inputs[0].shape);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let dir = std::env::temp_dir().join("descnet_bad_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": "other", "interchange": "hlo-text", "artifacts": [], "weights": []}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec {
+            shape: vec![4, 28, 28, 1],
+        };
+        assert_eq!(t.elements(), 4 * 28 * 28);
+    }
+}

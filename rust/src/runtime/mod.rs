@@ -1,0 +1,206 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them on the CPU PJRT client, and
+//! executes them with weight literals fed in manifest order.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* interchange
+//! (`HloModuleProto::from_text_file` reassigns the 64-bit instruction ids
+//! jax >= 0.5 emits, which xla_extension 0.5.1 would otherwise reject) and
+//! `return_tuple=True` lowering (outputs unwrapped with `to_tuple`).
+//!
+//! Python never runs here: after `make artifacts`, the binary is
+//! self-contained.
+
+pub mod artifacts;
+pub mod weights;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use artifacts::{ArtifactEntry, Manifest};
+use weights::WeightBundle;
+
+/// A compiled stage: executable + pre-built weight literals.
+pub struct CompiledStage {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+    weight_literals: Vec<xla::Literal>,
+}
+
+impl CompiledStage {
+    /// Executes with a single f32 input tensor (shape per the manifest);
+    /// returns the flattened f32 outputs in manifest order.
+    pub fn execute(&self, input: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let spec = &self.entry.inputs[0];
+        if input.len() != spec.elements() {
+            bail!(
+                "{}: input has {} elements, expected {:?} = {}",
+                self.entry.name,
+                input.len(),
+                spec.shape,
+                spec.elements()
+            );
+        }
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims)?;
+        let mut args: Vec<&xla::Literal> = self.weight_literals.iter().collect();
+        args.push(&lit);
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != self.entry.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.entry.name,
+                outs.len(),
+                self.entry.outputs.len()
+            );
+        }
+        outs.into_iter()
+            .map(|o| o.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+/// The runtime: one PJRT CPU client + compiled-stage cache + weight bundles.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    bundles: HashMap<String, WeightBundle>,
+    compiled: HashMap<String, CompiledStage>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            bundles: HashMap::new(),
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn bundle(&mut self, net: &str) -> Result<&WeightBundle> {
+        if !self.bundles.contains_key(net) {
+            let wref = self
+                .manifest
+                .weights_for(net)
+                .with_context(|| format!("no weight bundle for net {net}"))?;
+            let bundle = weights::load(&self.manifest.dir.join(&wref.file))?;
+            self.bundles.insert(net.to_string(), bundle);
+        }
+        Ok(&self.bundles[net])
+    }
+
+    fn weight_literals(&mut self, entry: &ArtifactEntry) -> Result<Vec<xla::Literal>> {
+        let params = entry.params.clone();
+        let net = entry.net.clone();
+        let bundle = self.bundle(&net)?;
+        params
+            .iter()
+            .map(|name| {
+                let t = bundle
+                    .get(name)
+                    .with_context(|| format!("weight {name} missing from bundle {net}"))?;
+                let values = t.as_f32()?;
+                let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                if dims.is_empty() {
+                    return Ok(xla::Literal::vec1(&values));
+                }
+                xla::Literal::vec1(&values)
+                    .reshape(&dims)
+                    .map_err(Into::into)
+            })
+            .collect()
+    }
+
+    /// Loads + compiles a stage (cached by artifact name).
+    pub fn load(&mut self, name: &str) -> Result<&CompiledStage> {
+        if !self.compiled.contains_key(name) {
+            let entry = self
+                .manifest
+                .entry(name)
+                .with_context(|| format!("artifact {name} not in manifest"))?
+                .clone();
+            let path = self.manifest.hlo_path(&entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            let weight_literals = self.weight_literals(&entry)?;
+            self.compiled.insert(
+                name.to_string(),
+                CompiledStage {
+                    entry,
+                    exe,
+                    weight_literals,
+                },
+            );
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Loads a (net, stage, batch) triple.
+    pub fn load_stage(&mut self, net: &str, stage: &str, batch: usize) -> Result<&CompiledStage> {
+        let name = self
+            .manifest
+            .stage(net, stage, batch)
+            .with_context(|| format!("no artifact for {net}/{stage} batch {batch}"))?
+            .name
+            .clone();
+        self.load(&name)
+    }
+
+    /// One-shot convenience: full-net inference, returns (lengths, poses).
+    pub fn infer_full(
+        &mut self,
+        net: &str,
+        batch: usize,
+        input: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let stage = self.load_stage(net, "full", batch)?;
+        let mut outs = stage.execute(input)?;
+        if outs.len() < 2 {
+            bail!("full-net artifact must emit (lengths, poses)");
+        }
+        let poses = outs.pop().unwrap();
+        let lengths = outs.pop().unwrap();
+        Ok((lengths, poses))
+    }
+}
+
+/// argmax helper for classification outputs.
+pub fn argmax_per_row(lengths: &[f32], classes: usize) -> Vec<usize> {
+    lengths
+        .chunks(classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_rows() {
+        let lengths = [0.1, 0.9, 0.2, 0.8, 0.05, 0.1];
+        assert_eq!(argmax_per_row(&lengths, 3), vec![1, 0]);
+    }
+}

@@ -1,0 +1,225 @@
+//! DSCW v1 weight-bundle reader — mirror of `python/compile/aot.py`'s
+//! `write_weights` (see the format comment there):
+//!
+//!   magic "DSCW" | u32 version | u32 count
+//!   per tensor:  u16 name_len | name utf8 | u8 dtype | u8 ndim
+//!                | u32 dims[ndim] | u64 byte_len | raw LE bytes
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn from_code(code: u8) -> Result<DType> {
+        match code {
+            0 => Ok(DType::F32),
+            1 => Ok(DType::I32),
+            other => bail!("unknown dtype code {other}"),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+/// One tensor from a weight bundle (raw little-endian bytes).
+#[derive(Debug, Clone)]
+pub struct WeightTensor {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl WeightTensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("{} is not f32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// An ordered weight bundle (order == PJRT argument order).
+#[derive(Debug, Clone, Default)]
+pub struct WeightBundle {
+    pub tensors: Vec<WeightTensor>,
+}
+
+impl WeightBundle {
+    pub fn get(&self, name: &str) -> Option<&WeightTensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.iter().map(|t| t.name.as_str()).collect()
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated DSCW file at offset {}", self.pos);
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+pub fn parse(bytes: &[u8]) -> Result<WeightBundle> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    if r.take(4)? != b"DSCW" {
+        bail!("bad magic (not a DSCW weight bundle)");
+    }
+    let version = r.u32()?;
+    if version != 1 {
+        bail!("unsupported DSCW version {version}");
+    }
+    let count = r.u32()? as usize;
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = r.u16()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec()).context("tensor name utf8")?;
+        let dtype = DType::from_code(r.u8()?)?;
+        let ndim = r.u8()? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(r.u32()? as usize);
+        }
+        let byte_len = r.u64()? as usize;
+        let expected = dims.iter().product::<usize>().max(1) * dtype.bytes();
+        if byte_len != expected {
+            bail!("{name}: byte length {byte_len} != dims product {expected}");
+        }
+        let data = r.take(byte_len)?.to_vec();
+        tensors.push(WeightTensor {
+            name,
+            dtype,
+            dims,
+            data,
+        });
+    }
+    if r.pos != bytes.len() {
+        bail!("{} trailing bytes in DSCW file", bytes.len() - r.pos);
+    }
+    Ok(WeightBundle { tensors })
+}
+
+pub fn load(path: &std::path::Path) -> Result<WeightBundle> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Builds a DSCW byte stream in-test (independent writer).
+    fn encode(tensors: &[(&str, Vec<usize>, Vec<f32>)]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"DSCW");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for (name, dims, data) in tensors {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(0); // f32
+            out.push(dims.len() as u8);
+            for &d in dims {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            out.extend_from_slice(&((data.len() * 4) as u64).to_le_bytes());
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip() {
+        let bytes = encode(&[
+            ("conv1_w", vec![2, 2, 1, 3], (0..12).map(|i| i as f32).collect()),
+            ("conv1_b", vec![3], vec![0.5, -1.0, 2.0]),
+        ]);
+        let bundle = parse(&bytes).unwrap();
+        assert_eq!(bundle.names(), vec!["conv1_w", "conv1_b"]);
+        let w = bundle.get("conv1_w").unwrap();
+        assert_eq!(w.dims, vec![2, 2, 1, 3]);
+        assert_eq!(w.element_count(), 12);
+        assert_eq!(w.as_f32().unwrap()[3], 3.0);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(parse(b"NOPE").is_err());
+        let bytes = encode(&[("x", vec![2], vec![1.0, 2.0])]);
+        assert!(parse(&bytes[..bytes.len() - 1]).is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(parse(&extra).is_err());
+    }
+
+    #[test]
+    fn rejects_length_mismatch() {
+        let mut bytes = encode(&[("x", vec![3], vec![1.0, 2.0, 3.0])]);
+        // Corrupt the dims: claim 4 elements while 12 bytes follow.
+        // dims u32 sits after magic(4)+ver(4)+count(4)+nlen(2)+name(1)+dtype(1)+ndim(1) = 17.
+        bytes[17] = 4;
+        assert!(parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifact_bundle_if_present() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/capsnet_weights.bin");
+        if !path.exists() {
+            return; // artifacts not built in this checkout
+        }
+        let bundle = load(&path).unwrap();
+        assert_eq!(
+            bundle.names(),
+            vec!["conv1_w", "conv1_b", "primary_w", "primary_b", "class_w"]
+        );
+        let class_w = bundle.get("class_w").unwrap();
+        assert_eq!(class_w.dims, vec![1152, 10, 8, 16]);
+    }
+}

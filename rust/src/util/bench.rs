@@ -1,0 +1,95 @@
+//! Minimal benchmark harness (no `criterion` vendored): warmup + timed
+//! iterations with mean/min/max reporting, used by every `benches/*.rs`
+//! target (`cargo bench` with `harness = false`).
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:44} {:>12}/iter  (min {:>12}, max {:>12}, {} iters)",
+            self.name,
+            super::units::fmt_time(self.mean_s),
+            super::units::fmt_time(self.min_s),
+            super::units::fmt_time(self.max_s),
+            self.iters
+        )
+    }
+}
+
+/// Times `f` over `iters` iterations (plus one untimed warmup) and prints
+/// the result.  Returns it for optional throughput math by the caller.
+pub fn time<F: FnMut()>(name: &str, iters: u32, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    f(); // warmup
+    let mut min_s = f64::INFINITY;
+    let mut max_s: f64 = 0.0;
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        total += dt;
+        min_s = min_s.min(dt);
+        max_s = max_s.max(dt);
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: total / iters as f64,
+        min_s,
+        max_s,
+    };
+    println!("{}", result.report());
+    result
+}
+
+/// Convenience: items/second formatting for throughput benches.
+pub fn throughput(result: &BenchResult, items: usize) -> String {
+    let per_s = items as f64 / result.mean_s;
+    if per_s > 1e6 {
+        format!("{:.2} M items/s", per_s / 1e6)
+    } else if per_s > 1e3 {
+        format!("{:.2} k items/s", per_s / 1e3)
+    } else {
+        format!("{per_s:.1} items/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_positive_and_ordered() {
+        let r = time("spin", 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s);
+        assert!(r.min_s >= 0.0);
+    }
+
+    #[test]
+    fn throughput_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_s: 1.0,
+            min_s: 1.0,
+            max_s: 1.0,
+        };
+        assert_eq!(throughput(&r, 2_000_000), "2.00 M items/s");
+        assert_eq!(throughput(&r, 5_000), "5.00 k items/s");
+        assert_eq!(throughput(&r, 10), "10.0 items/s");
+    }
+}

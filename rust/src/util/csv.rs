@@ -1,0 +1,130 @@
+//! CSV writer for the `results/` dumps (one file per paper figure/table).
+//!
+//! Deliberately minimal: comma separator, RFC-4180-style quoting only when
+//! needed, numeric formatting stable across runs so figures can be diffed.
+
+use std::io::Write;
+use std::path::Path;
+
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Csv {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&join(&self.header));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&join(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_file(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+}
+
+fn join(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| quote(c))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn quote(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+/// Cell formatting helpers with stable precision.
+pub fn f(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1e6 || v.abs() < 1e-4 {
+        format!("{v:.6e}")
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+pub fn u(v: usize) -> String {
+    v.to_string()
+}
+
+pub fn s(v: &str) -> String {
+    v.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_layout() {
+        let mut c = Csv::new(&["op", "cycles"]);
+        c.row(vec![s("Conv1"), u(32400)]);
+        c.row(vec![s("Prim"), u(746000)]);
+        assert_eq!(c.to_string(), "op,cycles\nConv1,32400\nPrim,746000\n");
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn quoting() {
+        let mut c = Csv::new(&["a"]);
+        c.row(vec![s("x,y")]);
+        c.row(vec![s("say \"hi\"")]);
+        assert_eq!(c.to_string(), "a\n\"x,y\"\n\"say \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(vec![s("only-one")]);
+    }
+
+    #[test]
+    fn float_formatting_stable() {
+        assert_eq!(f(0.0), "0");
+        assert_eq!(f(0.501), "0.501000");
+        assert_eq!(f(1.5e-9), "1.500000e-9");
+    }
+}

@@ -1,0 +1,16 @@
+//! Dependency-free infrastructure: JSON, PRNG, CSV, tables, Pareto,
+//! statistics, and a mini property-test framework.
+//!
+//! The build environment vendors only the `xla` crate's dependency closure
+//! (no serde / rand / proptest / criterion), so these small, well-tested
+//! replacements live here.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod pareto;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod table;
+pub mod units;

@@ -1,0 +1,139 @@
+//! Pareto-frontier extraction for the DSE (area vs energy minimization).
+//!
+//! The paper selects "non-dominated solutions" from the exhaustive sweep
+//! (Figs 18/20/22); a point dominates another if it is <= on both axes and
+//! < on at least one.
+
+/// A point in (x, y) objective space with an opaque payload index.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    pub x: f64,
+    pub y: f64,
+    pub id: usize,
+}
+
+impl Point {
+    pub fn new(x: f64, y: f64, id: usize) -> Point {
+        Point { x, y, id }
+    }
+
+    /// True if `self` dominates `other` (minimization on both axes).
+    pub fn dominates(&self, other: &Point) -> bool {
+        self.x <= other.x && self.y <= other.y && (self.x < other.x || self.y < other.y)
+    }
+}
+
+/// Returns the indices (into `points`) of the Pareto frontier, sorted by
+/// ascending x.  O(n log n): sort by (x, y), then a single min-y sweep.
+pub fn frontier(points: &[Point]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    order.sort_by(|&a, &b| {
+        points[a]
+            .x
+            .partial_cmp(&points[b].x)
+            .unwrap()
+            .then(points[a].y.partial_cmp(&points[b].y).unwrap())
+    });
+    let mut out = Vec::new();
+    let mut best_y = f64::INFINITY;
+    for &i in &order {
+        if points[i].y < best_y {
+            // Equal-x ties: the sort put the lower-y first, which strictly
+            // improves best_y, so the worse tie is skipped — correct.
+            out.push(i);
+            best_y = points[i].y;
+        }
+    }
+    out
+}
+
+/// True if `p` is not dominated by any point in `points`.
+pub fn is_non_dominated(p: &Point, points: &[Point]) -> bool {
+    !points.iter().any(|q| q.dominates(p))
+}
+
+/// The frontier point with minimal y (e.g. lowest-energy Pareto solution,
+/// the paper's per-design-option selection rule in section VI-A).
+pub fn min_y(points: &[Point]) -> Option<usize> {
+    points
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.y.partial_cmp(&b.y).unwrap().then(a.x.partial_cmp(&b.x).unwrap()))
+        .map(|(i, _)| i)
+}
+
+/// The frontier point with minimal x (lowest-area solution).
+pub fn min_x(points: &[Point]) -> Option<usize> {
+    points
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.x.partial_cmp(&b.x).unwrap().then(a.y.partial_cmp(&b.y).unwrap()))
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts(v: &[(f64, f64)]) -> Vec<Point> {
+        v.iter()
+            .enumerate()
+            .map(|(i, &(x, y))| Point::new(x, y, i))
+            .collect()
+    }
+
+    #[test]
+    fn simple_frontier() {
+        let p = pts(&[(1.0, 5.0), (2.0, 3.0), (3.0, 4.0), (4.0, 1.0), (2.5, 2.5)]);
+        let f = frontier(&p);
+        // (3,4) dominated by (2.5,2.5); others form the staircase.
+        assert_eq!(f, vec![0, 1, 4, 3]);
+    }
+
+    #[test]
+    fn dominated_point_excluded() {
+        let p = pts(&[(1.0, 1.0), (2.0, 2.0)]);
+        assert_eq!(frontier(&p), vec![0]);
+        assert!(p[0].dominates(&p[1]));
+        assert!(!p[1].dominates(&p[0]));
+    }
+
+    #[test]
+    fn equal_points_keep_one() {
+        let p = pts(&[(1.0, 1.0), (1.0, 1.0)]);
+        assert_eq!(frontier(&p).len(), 1);
+    }
+
+    #[test]
+    fn frontier_members_are_mutually_non_dominating() {
+        let p = pts(&[
+            (5.0, 1.0),
+            (1.0, 5.0),
+            (3.0, 3.0),
+            (2.0, 4.5),
+            (4.0, 2.0),
+            (3.0, 3.5),
+        ]);
+        let f = frontier(&p);
+        for &a in &f {
+            for &b in &f {
+                if a != b {
+                    assert!(!p[a].dominates(&p[b]), "{a} dominates {b}");
+                }
+            }
+        }
+        // And every non-member is dominated by some member.
+        for i in 0..p.len() {
+            if !f.contains(&i) {
+                assert!(f.iter().any(|&m| p[m].dominates(&p[i])), "point {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn min_selectors() {
+        let p = pts(&[(5.0, 1.0), (1.0, 5.0), (3.0, 3.0)]);
+        assert_eq!(min_y(&p), Some(0));
+        assert_eq!(min_x(&p), Some(1));
+    }
+}

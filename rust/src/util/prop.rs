@@ -1,0 +1,96 @@
+//! Mini property-testing framework (the image vendors no `proptest`).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` seeds derived
+//! deterministically from the property name, so failures are reproducible
+//! without storing seeds.  On failure it reports the failing case index and
+//! seed.  Used by the coordinator/DSE/memory invariant suites in
+//! `rust/tests/`.
+
+use super::prng::Prng;
+
+/// Derives a stable 64-bit seed from the property name (FNV-1a).
+pub fn name_seed(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Runs `body` over `cases` deterministic PRNG streams.  The body returns
+/// `Err(msg)` to fail the property; panics propagate as usual.
+pub fn check<F>(name: &str, cases: u32, mut body: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    let base = name_seed(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Prng::new(seed);
+        if let Err(msg) = body(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-like helper returning `Result` for use inside `check` bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_stable_and_distinct() {
+        assert_eq!(name_seed("x"), name_seed("x"));
+        assert_ne!(name_seed("x"), name_seed("y"));
+    }
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut runs = 0;
+        check("always-true", 10, |_rng| {
+            runs += 1;
+            Ok(())
+        });
+        assert_eq!(runs, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'sometimes-false' failed")]
+    fn failing_property_panics_with_context() {
+        check("sometimes-false", 50, |rng| {
+            let v = rng.below(10);
+            prop_assert!(v < 9, "drew {v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_across_invocations() {
+        let mut first = Vec::new();
+        check("det", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("det", 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,149 @@
+//! ASCII table rendering for CLI reports (`descnet report ...`).
+//!
+//! Right-aligns numeric-looking cells, left-aligns text, and supports a
+//! markdown mode used when regenerating the paper's tables into
+//! `results/*.md`.
+
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    fn numeric(cell: &str) -> bool {
+        let t = cell.trim();
+        !t.is_empty()
+            && t.chars().next().map_or(false, |c| {
+                c.is_ascii_digit() || c == '-' || c == '+' || c == '.'
+            })
+            && t.chars()
+                .all(|c| c.is_ascii_digit() || ".,-+e%x".contains(c.to_ascii_lowercase()))
+    }
+
+    fn pad(cell: &str, width: usize) -> String {
+        let len = cell.chars().count();
+        let pad = " ".repeat(width - len);
+        if Self::numeric(cell) {
+            format!("{pad}{cell}")
+        } else {
+            format!("{cell}{pad}")
+        }
+    }
+
+    /// Render as a boxed ASCII table for terminal output.
+    pub fn to_ascii(&self) -> String {
+        let w = self.widths();
+        let sep = format!(
+            "+{}+",
+            w.iter().map(|x| "-".repeat(x + 2)).collect::<Vec<_>>().join("+")
+        );
+        let mut out = String::new();
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&format!(
+            "|{}|",
+            self.header
+                .iter()
+                .zip(&w)
+                .map(|(h, &x)| format!(" {} ", Self::pad(h, x)))
+                .collect::<Vec<_>>()
+                .join("|")
+        ));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&format!(
+                "|{}|",
+                r.iter()
+                    .zip(&w)
+                    .map(|(c, &x)| format!(" {} ", Self::pad(c, x)))
+                    .collect::<Vec<_>>()
+                    .join("|")
+            ));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// Render as GitHub-flavoured markdown (for `results/*.md`).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_ascii() {
+        let mut t = Table::new(&["op", "cycles"]);
+        t.row(vec!["Conv1".into(), "32400".into()]);
+        t.row(vec!["PrimaryCaps".into(), "746496".into()]);
+        let s = t.to_ascii();
+        assert!(s.contains("| Conv1       |"));
+        assert!(s.contains("|  32400 |")); // right-aligned numeric
+        assert!(s.starts_with('+'));
+    }
+
+    #[test]
+    fn renders_markdown() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "x".into()]);
+        assert_eq!(t.to_markdown(), "| a | b |\n|---|---|\n| 1 | x |\n");
+    }
+
+    #[test]
+    fn numeric_detection() {
+        assert!(Table::numeric("123"));
+        assert!(Table::numeric("-4.5"));
+        assert!(Table::numeric("1,024"));
+        assert!(!Table::numeric("Conv1"));
+        assert!(!Table::numeric(""));
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,154 @@
+//! Size/energy/time unit helpers and human-readable formatting.
+//!
+//! The paper mixes kiB/MiB (memory sizes), mJ/nJ (energies), mm² (areas) and
+//! clock cycles; keeping conversions in one place avoids the classic
+//! 1000-vs-1024 and mJ-vs-nJ slips in the DSE tables.
+
+pub const KIB: usize = 1024;
+pub const MIB: usize = 1024 * 1024;
+
+/// Bytes -> "25 kiB" / "8 MiB" / "123 B", matching the paper's table style.
+pub fn fmt_size(bytes: usize) -> String {
+    if bytes >= MIB && bytes % MIB == 0 {
+        format!("{} MiB", bytes / MIB)
+    } else if bytes >= KIB && bytes % KIB == 0 {
+        format!("{} kiB", bytes / KIB)
+    } else if bytes >= MIB {
+        format!("{:.2} MiB", bytes as f64 / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.1} kiB", bytes as f64 / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// "25 kiB" / "8MiB" / "512" -> bytes (accepts the forms used in configs).
+pub fn parse_size(text: &str) -> Option<usize> {
+    let t = text.trim();
+    let lower = t.to_ascii_lowercase();
+    let (num, mult) = if let Some(stripped) = lower.strip_suffix("mib") {
+        (stripped, MIB)
+    } else if let Some(stripped) = lower.strip_suffix("kib") {
+        (stripped, KIB)
+    } else if let Some(stripped) = lower.strip_suffix('b') {
+        (stripped, 1)
+    } else {
+        (lower.as_str(), 1)
+    };
+    let num = num.trim();
+    if let Ok(v) = num.parse::<usize>() {
+        return Some(v * mult);
+    }
+    num.parse::<f64>().ok().map(|v| (v * mult as f64).round() as usize)
+}
+
+/// Joules -> adaptive "1.234 mJ" / "56.7 µJ" / "8.9 nJ".
+pub fn fmt_energy(joules: f64) -> String {
+    let a = joules.abs();
+    if a >= 1e-3 {
+        format!("{:.3} mJ", joules * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.2} µJ", joules * 1e6)
+    } else if a >= 1e-9 {
+        format!("{:.2} nJ", joules * 1e9)
+    } else {
+        format!("{:.2} pJ", joules * 1e12)
+    }
+}
+
+/// Watts -> "123 mW" / "4.5 µW".
+pub fn fmt_power(watts: f64) -> String {
+    let a = watts.abs();
+    if a >= 1.0 {
+        format!("{watts:.2} W")
+    } else if a >= 1e-3 {
+        format!("{:.1} mW", watts * 1e3)
+    } else {
+        format!("{:.2} µW", watts * 1e6)
+    }
+}
+
+/// Seconds -> "8.62 ms" / "1.2 µs" / "3.4 s".
+pub fn fmt_time(seconds: f64) -> String {
+    let a = seconds.abs();
+    if a >= 1.0 {
+        format!("{seconds:.2} s")
+    } else if a >= 1e-3 {
+        format!("{:.2} ms", seconds * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.2} µs", seconds * 1e6)
+    } else {
+        format!("{:.1} ns", seconds * 1e9)
+    }
+}
+
+/// Integer with thousands separators: 15233 -> "15,233".
+pub fn fmt_count(n: u64) -> String {
+    let digits = n.to_string();
+    let mut out = String::new();
+    for (i, c) in digits.chars().enumerate() {
+        if i > 0 && (digits.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Next power of two >= n (sizes in Algorithm 1 pools).
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+pub fn is_pow2(n: usize) -> bool {
+    n != 0 && n & (n - 1) == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_formatting_matches_paper_style() {
+        assert_eq!(fmt_size(25 * KIB), "25 kiB");
+        assert_eq!(fmt_size(8 * MIB), "8 MiB");
+        assert_eq!(fmt_size(108 * KIB), "108 kiB");
+        assert_eq!(fmt_size(100), "100 B");
+        assert_eq!(fmt_size(23040), "22.5 kiB");
+    }
+
+    #[test]
+    fn size_parsing_roundtrip() {
+        for &b in &[25 * KIB, 64 * KIB, 8 * MIB, 512] {
+            assert_eq!(parse_size(&fmt_size(b)), Some(b));
+        }
+        assert_eq!(parse_size("2 MiB"), Some(2 * MIB));
+        assert_eq!(parse_size("108kib"), Some(108 * KIB));
+        assert_eq!(parse_size("1024"), Some(1024));
+        assert_eq!(parse_size("x"), None);
+    }
+
+    #[test]
+    fn energy_power_time_formatting() {
+        assert_eq!(fmt_energy(1.859e-3), "1.859 mJ");
+        assert_eq!(fmt_energy(0.501e-3), "501.00 µJ");
+        assert_eq!(fmt_energy(1.6e-9), "1.60 nJ");
+        assert_eq!(fmt_power(0.0581), "58.1 mW");
+        assert_eq!(fmt_time(8.62e-3), "8.62 ms");
+        assert_eq!(fmt_time(0.072e-9), "0.1 ns");
+    }
+
+    #[test]
+    fn count_separators() {
+        assert_eq!(fmt_count(15233), "15,233");
+        assert_eq!(fmt_count(215693), "215,693");
+        assert_eq!(fmt_count(7), "7");
+    }
+
+    #[test]
+    fn pow2_helpers() {
+        assert_eq!(next_pow2(23040), 32768);
+        assert!(is_pow2(64 * KIB));
+        assert!(!is_pow2(108 * KIB));
+    }
+}

@@ -1,0 +1,149 @@
+//! Integration: the rust PJRT execution path is pinned numerically against
+//! the python session that lowered the artifacts (golden_capsnet.json), and
+//! the per-stage artifacts compose to the fused full net.
+//!
+//! These tests are skipped (not failed) when `make artifacts` has not run.
+
+use std::path::PathBuf;
+
+use descnet::runtime::{argmax_per_row, Runtime};
+use descnet::util::json::Json;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping");
+        return None;
+    }
+    Some(Runtime::new(&artifacts_dir()).expect("runtime"))
+}
+
+fn golden() -> Option<(Vec<f32>, Vec<f32>, f64, f64)> {
+    let path = artifacts_dir().join("golden_capsnet.json");
+    if !path.exists() {
+        return None;
+    }
+    let j = Json::parse_file(&path).expect("golden json");
+    let floats = |key: &str| -> Vec<f32> {
+        j.get(key)
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect()
+    };
+    Some((
+        floats("input"),
+        floats("lengths"),
+        j.get("poses_l2").as_f64().unwrap(),
+        j.get("tolerance").as_f64().unwrap(),
+    ))
+}
+
+#[test]
+fn full_net_matches_python_golden() {
+    let (Some(mut rt), Some((input, want_lengths, want_l2, tol))) = (runtime(), golden()) else {
+        return;
+    };
+    let (lengths, poses) = rt.infer_full("capsnet", 1, &input).expect("infer");
+    assert_eq!(lengths.len(), 10);
+    for (i, (&got, &want)) in lengths.iter().zip(&want_lengths).enumerate() {
+        assert!(
+            (got - want).abs() < tol as f32,
+            "class {i}: got {got}, python says {want}"
+        );
+    }
+    let l2: f64 = poses.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+    assert!(
+        (l2 - want_l2).abs() / want_l2 < 1e-3,
+        "pose L2 {l2} vs {want_l2}"
+    );
+}
+
+#[test]
+fn stage_composition_equals_full_net() {
+    let Some(mut rt) = runtime() else { return };
+    let Some((input, _, _, _)) = golden() else { return };
+
+    let h = rt
+        .load_stage("capsnet", "conv1", 1)
+        .unwrap()
+        .execute(&input)
+        .unwrap()
+        .remove(0);
+    let u = rt
+        .load_stage("capsnet", "primarycaps", 1)
+        .unwrap()
+        .execute(&h)
+        .unwrap()
+        .remove(0);
+    assert_eq!(u.len(), 1152 * 8);
+    let staged = rt
+        .load_stage("capsnet", "classcaps", 1)
+        .unwrap()
+        .execute(&u)
+        .unwrap()
+        .remove(0);
+    let (full, _) = rt.infer_full("capsnet", 1, &input).unwrap();
+    for (i, (a, b)) in staged.iter().zip(&full).enumerate() {
+        assert!((a - b).abs() < 5e-4, "class {i}: staged {a} vs full {b}");
+    }
+}
+
+#[test]
+fn batched_execution_is_row_consistent() {
+    let Some(mut rt) = runtime() else { return };
+    let Some((input, _, _, _)) = golden() else { return };
+    let batches = rt.manifest.batches("capsnet", "full");
+    let Some(&b) = batches.iter().find(|&&b| b > 1) else {
+        return;
+    };
+    // Same image replicated across the batch -> identical rows.
+    let mut batched = Vec::new();
+    for _ in 0..b {
+        batched.extend_from_slice(&input);
+    }
+    let (lengths, _) = rt.infer_full("capsnet", b, &batched).unwrap();
+    assert_eq!(lengths.len(), b * 10);
+    let first = &lengths[..10];
+    for row in 1..b {
+        for k in 0..10 {
+            assert!(
+                (lengths[row * 10 + k] - first[k]).abs() < 1e-5,
+                "row {row} class {k}"
+            );
+        }
+    }
+    let classes = argmax_per_row(&lengths, 10);
+    assert!(classes.windows(2).all(|w| w[0] == w[1]));
+}
+
+#[test]
+fn deepcaps_lite_artifact_executes() {
+    let Some(mut rt) = runtime() else { return };
+    if rt.manifest.stage("deepcaps_lite", "full", 1).is_none() {
+        return;
+    }
+    let entry = rt
+        .manifest
+        .stage("deepcaps_lite", "full", 1)
+        .unwrap()
+        .clone();
+    let n = entry.inputs[0].elements();
+    let input: Vec<f32> = (0..n).map(|i| (i % 255) as f32 / 255.0).collect();
+    let (lengths, poses) = rt.infer_full("deepcaps_lite", 1, &input).unwrap();
+    assert_eq!(lengths.len(), 10);
+    assert!(lengths.iter().all(|v| v.is_finite() && *v >= 0.0));
+    assert!(poses.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn executing_with_wrong_input_shape_fails_cleanly() {
+    let Some(mut rt) = runtime() else { return };
+    let stage = rt.load_stage("capsnet", "full", 1).unwrap();
+    let err = stage.execute(&[0.0f32; 17]).unwrap_err();
+    assert!(err.to_string().contains("expected"), "{err}");
+}

@@ -1,0 +1,99 @@
+//! Integration: the serving stack end to end (requires artifacts; skipped
+//! otherwise) plus threading-free coordinator logic under stress.
+
+use std::path::PathBuf;
+
+use descnet::coordinator::server::{ServeOptions, Server};
+use descnet::coordinator::BatchPolicy;
+use descnet::prop_assert;
+use descnet::util::prop::check;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn serve_small_batch_run() {
+    if !have_artifacts() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let opts = ServeOptions {
+        artifacts_dir: artifacts_dir(),
+        requests: 10,
+        batch_max: 4,
+        stage_pipeline: false,
+        seed: 11,
+    };
+    let mut stats = Server::run_synthetic(&opts).expect("serve");
+    assert_eq!(stats.requests, 10);
+    assert!(stats.batches >= 3); // 10 requests with max batch 4
+    assert!(stats.latency.p50() > 0.0);
+    assert!(stats.energy_j > 0.0);
+    assert_eq!(stats.class_histogram.iter().sum::<u64>(), 10);
+    let text = stats.summary();
+    assert!(text.contains("served 10 requests"));
+}
+
+#[test]
+fn serve_stage_pipeline_matches_request_count() {
+    if !have_artifacts() {
+        return;
+    }
+    let opts = ServeOptions {
+        artifacts_dir: artifacts_dir(),
+        requests: 6,
+        batch_max: 4,
+        stage_pipeline: true,
+        seed: 12,
+    };
+    let stats = Server::run_synthetic(&opts).expect("serve staged");
+    assert_eq!(stats.requests, 6);
+    assert_eq!(
+        stats.class_histogram.iter().sum::<u64>(),
+        6,
+        "every request classified"
+    );
+}
+
+#[test]
+fn serve_is_deterministic_in_classes_for_fixed_seed() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = |seed| {
+        let opts = ServeOptions {
+            artifacts_dir: artifacts_dir(),
+            requests: 8,
+            batch_max: 4,
+            stage_pipeline: false,
+            seed,
+        };
+        Server::run_synthetic(&opts).unwrap().class_histogram
+    };
+    assert_eq!(run(5), run(5));
+}
+
+#[test]
+fn prop_batch_plans_never_starve() {
+    // Any pending queue is fully drained within ceil(pending/min_size)
+    // flush rounds.
+    check("no-starvation", 100, |rng| {
+        let sizes = vec![1 + rng.below(3) as usize, 4 + rng.below(5) as usize];
+        let policy = BatchPolicy::new(sizes, 1e-3);
+        let mut pending = rng.below(200) as usize;
+        let mut rounds = 0;
+        while pending > 0 {
+            let served = policy.planned_requests(pending, true);
+            prop_assert!(served > 0, "starved with {pending} pending");
+            pending -= served;
+            rounds += 1;
+            prop_assert!(rounds < 300, "too many rounds");
+        }
+        Ok(())
+    });
+}

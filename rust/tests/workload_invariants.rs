@@ -1,0 +1,258 @@
+//! Property-based invariants across the workload, memory, PMU and DSE
+//! substrates, driven by the mini property-test framework
+//! (`descnet::util::prop`) over randomized accelerator/technology
+//! configurations and randomized organizations.
+
+use descnet::cacti::{Sram, SramConfig};
+use descnet::config::{Accelerator, Technology};
+use descnet::dataflow::profile_network;
+use descnet::dse;
+use descnet::energy;
+use descnet::memory::{cover_op, org_fits, Component, MemSpec, Organization};
+use descnet::model::{capsnet_mnist, deepcaps_cifar10};
+use descnet::pmu;
+use descnet::prop_assert;
+use descnet::util::prng::Prng;
+use descnet::util::prop::check;
+
+fn random_accel(rng: &mut Prng) -> Accelerator {
+    let mut a = Accelerator::default();
+    a.clock_hz = rng.f64_range(100e6, 500e6);
+    a.window_tci = *rng.choose(&[32usize, 64, 128]);
+    a.classcaps_w_tile_caps = *rng.choose(&[16usize, 32, 42, 64]);
+    a.routing_act_serial_cycles = rng.range(4, 24) as usize;
+    a.op_overhead_cycles = rng.range(0, 256) as usize;
+    a
+}
+
+fn random_org(rng: &mut Prng, profile: &descnet::dataflow::NetworkProfile) -> Organization {
+    // Random HY organization guaranteed to fit: dedicated sizes are random
+    // fractions of the SEP sizes, shared takes the worst-case residual.
+    let (d, w, a) = dse::sep_sizes(profile);
+    let pick = |rng: &mut Prng, max: usize| -> usize {
+        let pool = dse::pools::size_pool(max);
+        *rng.choose(&pool)
+    };
+    let (dd, ww, aa) = (pick(rng, d), pick(rng, w), pick(rng, a));
+    let shared = dse::hy_shared_size(profile, dd, ww, aa).max(8 * 1024);
+    let sc = |rng: &mut Prng, size: usize| -> usize {
+        let pool = dse::pools::sector_pool_with_off(size);
+        if pool.is_empty() {
+            1
+        } else {
+            *rng.choose(&pool)
+        }
+    };
+    Organization::hy(
+        MemSpec::new(shared, sc(rng, shared)),
+        MemSpec::new(dd, sc(rng, dd)),
+        MemSpec::new(ww, sc(rng, ww)),
+        MemSpec::new(aa, sc(rng, aa)),
+        3,
+    )
+}
+
+#[test]
+fn prop_profiles_are_wellformed_for_any_accelerator() {
+    check("profiles-wellformed", 40, |rng| {
+        let accel = random_accel(rng);
+        for net in [capsnet_mnist(), deepcaps_cifar10()] {
+            let p = profile_network(&net, &accel);
+            prop_assert!(p.total_cycles() > 0);
+            prop_assert!(p.fps() > 0.0 && p.fps().is_finite());
+            for op in &p.ops {
+                prop_assert!(op.cycles > 0, "{} zero cycles", op.name);
+                // Accumulating ops (convs, votes, vote sums) must show at
+                // least one accumulator transaction per 16-MAC row; the
+                // Update+Softmax half works on the b/c state instead.
+                if !op.name.contains("Update+Softmax") {
+                    prop_assert!(
+                        op.rd_a + op.wr_a >= op.macs / 16,
+                        "{}: accumulator traffic below MAC floor",
+                        op.name
+                    );
+                }
+            }
+            // Eq.1 >= max of Eq.2 components; <= their sum.
+            prop_assert!(p.max_total() >= p.max_d().max(p.max_w()).max(p.max_a()));
+            prop_assert!(p.max_total() <= p.max_d() + p.max_w() + p.max_a());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_hy_orgs_fit_and_conserve_coverage() {
+    let accel = Accelerator::default();
+    let profile = profile_network(&capsnet_mnist(), &accel);
+    check("hy-orgs-fit", 60, |rng| {
+        let org = random_org(rng, &profile);
+        prop_assert!(org_fits(&org, &profile), "org {:?}", org.label());
+        for op in &profile.ops {
+            let cov = cover_op(&org, op).unwrap();
+            prop_assert!(cov.ded_d + cov.sh_d == op.usage_d, "{}", op.name);
+            prop_assert!(cov.ded_w + cov.sh_w == op.usage_w, "{}", op.name);
+            prop_assert!(cov.ded_a + cov.sh_a == op.usage_a, "{}", op.name);
+            prop_assert!(cov.shared_total() <= org.shared.unwrap().size);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pmu_static_energy_bounded_by_no_pg() {
+    let accel = Accelerator::default();
+    let profile = profile_network(&capsnet_mnist(), &accel);
+    let tech = Technology::default();
+    check("pmu-bounds", 60, |rng| {
+        let org = random_org(rng, &profile);
+        let report = pmu::evaluate(&org, &profile, &tech);
+        let with_pg = report.static_energy_j();
+        let without = report.static_no_pg_j();
+        prop_assert!(with_pg > 0.0);
+        prop_assert!(
+            with_pg <= without * (1.0 + 1e-9),
+            "PG increased static energy: {with_pg} > {without}"
+        );
+        // Lower bound: everything off at the off-leak fraction.
+        prop_assert!(with_pg >= without * tech.powergate_off_leak_frac * 0.99);
+        prop_assert!(report.wakeup_masked());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_energy_monotone_in_leakage_constant() {
+    let accel = Accelerator::default();
+    let profile = profile_network(&capsnet_mnist(), &accel);
+    check("energy-monotone-leak", 30, |rng| {
+        let org = random_org(rng, &profile);
+        let mut lo = Technology::default();
+        let mut hi = Technology::default();
+        let scale = rng.f64_range(1.1, 4.0);
+        hi.sram_leak_w_per_byte = lo.sram_leak_w_per_byte * scale;
+        lo.sram_leak_w_per_byte *= 0.9;
+        let e_lo = energy::evaluate_org(&org, &profile, &lo).static_j();
+        let e_hi = energy::evaluate_org(&org, &profile, &hi).static_j();
+        prop_assert!(e_hi > e_lo, "{e_hi} <= {e_lo}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sram_model_monotone_everywhere() {
+    let tech = Technology::default();
+    let sram = Sram::new(&tech);
+    check("sram-monotone", 100, |rng| {
+        let size = 1usize << rng.range(13, 22); // 8 kiB .. 4 MiB
+        let ports = rng.range(1, 3) as usize;
+        let a = sram.evaluate(&SramConfig::new(size, ports, 1));
+        let bigger = sram.evaluate(&SramConfig::new(size * 2, ports, 1));
+        prop_assert!(bigger.area_mm2 > a.area_mm2);
+        prop_assert!(bigger.leak_on_w > a.leak_on_w);
+        prop_assert!(bigger.access_energy_j > a.access_energy_j);
+        let more_ports = sram.evaluate(&SramConfig::new(size, ports + 1, 1));
+        prop_assert!(more_ports.area_mm2 > a.area_mm2);
+        prop_assert!(more_ports.access_energy_j > a.access_energy_j);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dse_selection_is_lowest_energy_per_option() {
+    let accel = Accelerator::default();
+    let profile = profile_network(&capsnet_mnist(), &accel);
+    let tech = Technology::default();
+    let orgs = dse::enumerate(&profile);
+    check("dse-selection", 3, |rng| {
+        // Random subsample of the enumeration, selection must be minimal.
+        let mut subset = Vec::new();
+        for org in &orgs {
+            if rng.f64() < 0.05 {
+                subset.push(org.clone());
+            }
+        }
+        if subset.is_empty() {
+            return Ok(());
+        }
+        let points = dse::evaluate_all(&subset, &profile, &tech, 4);
+        for (option, idx) in dse::select_per_option(&points) {
+            for p in &points {
+                if p.option() == option {
+                    prop_assert!(
+                        points[idx].energy_j <= p.energy_j + 1e-18,
+                        "{option}: selected not minimal"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pareto_frontier_sound_and_complete() {
+    let accel = Accelerator::default();
+    let profile = profile_network(&capsnet_mnist(), &accel);
+    let tech = Technology::default();
+    let orgs: Vec<_> = dse::enumerate(&profile).into_iter().take(600).collect();
+    let points = dse::evaluate_all(&orgs, &profile, &tech, 4);
+    let front: std::collections::BTreeSet<usize> =
+        dse::pareto_indices(&points).into_iter().collect();
+    // Soundness: no frontier member dominated. Completeness: every
+    // non-member dominated by someone.
+    for i in 0..points.len() {
+        let dominated = points.iter().enumerate().any(|(j, q)| {
+            j != i
+                && q.area_mm2 <= points[i].area_mm2
+                && q.energy_j <= points[i].energy_j
+                && (q.area_mm2 < points[i].area_mm2 || q.energy_j < points[i].energy_j)
+        });
+        if front.contains(&i) {
+            assert!(!dominated, "frontier point {i} is dominated");
+        } else {
+            assert!(dominated, "non-frontier point {i} not dominated");
+        }
+    }
+}
+
+#[test]
+fn prop_required_ports_never_exceed_three() {
+    let accel = Accelerator::default();
+    let profile = profile_network(&deepcaps_cifar10(), &accel);
+    check("ports-bound", 30, |rng| {
+        let org = random_org(rng, &profile);
+        if !org_fits(&org, &profile) {
+            return Ok(());
+        }
+        let ports = descnet::memory::required_shared_ports(&org, &profile);
+        prop_assert!(ports <= 3, "{ports}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_component_access_split_is_conservative() {
+    let accel = Accelerator::default();
+    let profile = profile_network(&deepcaps_cifar10(), &accel);
+    check("access-split", 30, |rng| {
+        let org = random_org(rng, &profile);
+        if !org_fits(&org, &profile) {
+            return Ok(());
+        }
+        for op in profile.ops.iter().take(12) {
+            let cov = cover_op(&org, op).unwrap();
+            let total: f64 = Component::ALL
+                .iter()
+                .map(|&c| descnet::memory::component_accesses(op, &cov, c))
+                .sum();
+            let want = op.spm_accesses() as f64;
+            prop_assert!(
+                (total - want).abs() <= want.max(1.0) * 1e-9,
+                "{}: {total} vs {want}",
+                op.name
+            );
+        }
+        Ok(())
+    });
+}
