@@ -1,17 +1,24 @@
-//! Hot-path benchmark: DSE enumeration + evaluation throughput (the L3
-//! optimization target of EXPERIMENTS.md section Perf).  Reports configs/s
-//! and thread scaling for both networks.
+//! Hot-path benchmark: DSE enumeration + evaluation throughput through the
+//! shared execution engine (the L3 optimization target of EXPERIMENTS.md
+//! section Perf).  Reports configs/s, thread scaling vs the single-thread
+//! baseline, and the CACTI cost-cache hit rate, then writes the machine-
+//! readable baseline to `BENCH_dse.json` so future PRs have a perf
+//! trajectory to compare against.
 
+use descnet::cacti::cache;
 use descnet::config::{Accelerator, Technology};
 use descnet::dataflow::profile_network;
 use descnet::dse;
-use descnet::model::{capsnet_mnist, deepcaps_cifar10};
 use descnet::dse::heuristic::{anneal, AnnealOptions};
+use descnet::model::{capsnet_mnist, deepcaps_cifar10};
 use descnet::util::bench::{throughput, time};
+use descnet::util::exec::Engine;
+use descnet::util::json::Json;
 
 fn main() {
     let accel = Accelerator::default();
     let tech = Technology::default();
+    let mut nets_json: Vec<Json> = Vec::new();
 
     for net in [capsnet_mnist(), deepcaps_cifar10()] {
         let profile = profile_network(&net, &accel);
@@ -21,20 +28,52 @@ fn main() {
         let r = time(&format!("{} enumerate", net.name), 3, || {
             orgs = dse::enumerate(&profile);
         });
-        println!("    -> {} configurations, {}", orgs.len(), throughput(&r, orgs.len()));
+        println!(
+            "    -> {} configurations, {}",
+            orgs.len(),
+            throughput(&r, orgs.len())
+        );
 
-        for threads in [1usize, 2, 4, 8] {
+        // Serial baseline through the same engine code path (threads=1),
+        // then the engine-parallel sweep at increasing worker counts.
+        let serial = time(&format!("{} evaluate (serial baseline)", net.name), 2, || {
+            std::hint::black_box(dse::evaluate_all_on(
+                &Engine::new(1),
+                &orgs,
+                &profile,
+                &tech,
+            ));
+        });
+        println!("    -> {}", throughput(&serial, orgs.len()));
+        let mut parallel_means: Vec<(usize, f64)> = Vec::new();
+        for threads in [2usize, 4, 8] {
             let r = time(
-                &format!("{} evaluate ({} threads)", net.name, threads),
+                &format!("{} evaluate (engine, {} threads)", net.name, threads),
                 2,
                 || {
-                    std::hint::black_box(dse::evaluate_all(&orgs, &profile, &tech, threads));
+                    std::hint::black_box(dse::evaluate_all_on(
+                        &Engine::new(threads),
+                        &orgs,
+                        &profile,
+                        &tech,
+                    ));
                 },
             );
             println!("    -> {}", throughput(&r, orgs.len()));
+            parallel_means.push((threads, r.mean_s));
+        }
+        let speedup_4t: Option<f64> = parallel_means
+            .iter()
+            .find(|(t, _)| *t == 4)
+            .map(|(_, mean)| serial.mean_s / mean);
+        match speedup_4t {
+            Some(s) => println!(
+                "    -> 4-thread speedup vs serial baseline: {s:.2}x (ISSUE 1 target: >= 2x on >= 4 cores)"
+            ),
+            None => println!("    -> no 4-thread measurement in this run"),
         }
 
-        let points = dse::evaluate_all(&orgs, &profile, &tech, 8);
+        let points = dse::evaluate_all_on(&Engine::new(8), &orgs, &profile, &tech);
         time(&format!("{} pareto extraction", net.name), 5, || {
             std::hint::black_box(dse::pareto_indices(&points));
         });
@@ -49,8 +88,10 @@ fn main() {
             .map(|p| p.energy_j)
             .fold(f64::INFINITY, f64::min);
         // Iterations scaled to the space (DeepCaps' HY space is ~11x larger).
-        let mut opts = AnnealOptions::default();
-        opts.iterations = if net.name == "capsnet" { 2_000 } else { 30_000 };
+        let opts = AnnealOptions {
+            iterations: if net.name == "capsnet" { 2_000 } else { 30_000 },
+            ..AnnealOptions::default()
+        };
         let iters_label = opts.iterations / 1000;
         let mut result = None;
         let r = time(
@@ -69,5 +110,50 @@ fn main() {
             res.evaluations,
             descnet::util::units::fmt_time(r.mean_s),
         );
+
+        let parallel_json = Json::from_pairs(
+            parallel_means
+                .iter()
+                .map(|(t, s)| (threads_key(*t), Json::from(*s)))
+                .collect(),
+        );
+        nets_json.push(Json::from_pairs(vec![
+            ("network", net.name.as_str().into()),
+            ("configs", orgs.len().into()),
+            ("serial_mean_s", serial.mean_s.into()),
+            ("parallel_mean_s_by_threads", parallel_json),
+            (
+                "speedup_4t_vs_serial",
+                speedup_4t.map(Json::from).unwrap_or(Json::Null),
+            ),
+            ("anneal_best_mj", (res.best.energy_j * 1e3).into()),
+            ("anneal_evaluations", res.evaluations.into()),
+        ]));
+    }
+
+    let out = Json::from_pairs(vec![
+        ("schema", "descnet-bench-dse-v1".into()),
+        ("status", "recorded".into()),
+        (
+            "cacti_cache",
+            Json::from_pairs(vec![
+                ("geometries", cache::global().len().into()),
+                ("hits", cache::global().hits().into()),
+                ("misses", cache::global().misses().into()),
+            ]),
+        ),
+        ("networks", Json::Arr(nets_json)),
+    ]);
+    let path = std::path::Path::new("BENCH_dse.json");
+    out.write_file(path).expect("writing BENCH_dse.json");
+    println!("wrote {}", path.display());
+}
+
+fn threads_key(threads: usize) -> &'static str {
+    match threads {
+        2 => "2",
+        4 => "4",
+        8 => "8",
+        _ => "other",
     }
 }

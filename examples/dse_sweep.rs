@@ -10,16 +10,18 @@
 //! exponent, rerunning the full CapsNet DSE each time; writes
 //! results/dse_sweep.csv.
 
+use descnet::cacti::cache;
 use descnet::config::{SystemConfig, Technology};
 use descnet::dataflow::profile_network;
 use descnet::dse;
 use descnet::model::capsnet_mnist;
 use descnet::util::csv::{f, s, Csv};
+use descnet::util::exec::Engine;
 
-fn run_one(label: &str, tech: &Technology, csv: &mut Csv) {
+fn run_one(label: &str, tech: &Technology, engine: &Engine, csv: &mut Csv) {
     let cfg = SystemConfig::default();
     let profile = profile_network(&capsnet_mnist(), &cfg.accel);
-    let result = dse::run(&profile, tech, 8);
+    let result = dse::run_on(engine, &profile, tech);
     let sel: std::collections::BTreeMap<_, _> = result.selected.iter().cloned().collect();
     let frontier_opts: std::collections::BTreeSet<String> =
         result.pareto.iter().map(|&i| result.points[i].option()).collect();
@@ -73,25 +75,34 @@ fn main() {
         "smp_on_frontier",
     ]);
 
-    run_one("baseline-32nm", &Technology::default(), &mut csv);
+    let engine = Engine::auto();
+    run_one("baseline-32nm", &Technology::default(), &engine, &mut csv);
 
     for scale in [0.25, 0.5, 2.0, 4.0] {
         let mut t = Technology::default();
         t.sram_leak_w_per_byte *= scale;
-        run_one(&format!("leakage x{scale}"), &t, &mut csv);
+        run_one(&format!("leakage x{scale}"), &t, &engine, &mut csv);
     }
     for scale in [0.25, 0.5, 2.0, 4.0] {
         let mut t = Technology::default();
         t.dram_j_per_byte *= scale;
-        run_one(&format!("dram-energy x{scale}"), &t, &mut csv);
+        run_one(&format!("dram-energy x{scale}"), &t, &engine, &mut csv);
     }
     for exp in [1.2, 1.7, 2.0] {
         let mut t = Technology::default();
         t.sram_dyn_port_exp = exp;
-        run_one(&format!("port-exp {exp}"), &t, &mut csv);
+        run_one(&format!("port-exp {exp}"), &t, &engine, &mut csv);
     }
 
     let out = std::path::PathBuf::from("results/dse_sweep.csv");
     csv.write_file(&out).expect("writing results");
     println!("wrote {}", out.display());
+    // Each perturbed technology gets its own cache namespace; the entry
+    // count stays small because the sweep reuses the same geometry pools.
+    println!(
+        "cacti cache: {} geometries, {} hits / {} misses",
+        cache::global().len(),
+        cache::global().hits(),
+        cache::global().misses(),
+    );
 }

@@ -7,7 +7,7 @@
 //! the exact trade-off Algorithm 2 explores — and prints the PMU schedule
 //! that masks the 0.072 ns wakeup latency.
 
-use descnet::cacti::{powergate, Sram, SramConfig};
+use descnet::cacti::{cache, powergate, SramConfig};
 use descnet::config::SystemConfig;
 use descnet::dataflow::profile_network;
 use descnet::dse;
@@ -35,8 +35,7 @@ fn main() {
         "wakeups",
         "wakeup_nj",
     ]);
-    let sram = Sram::new(&cfg.tech);
-    let base_area = sram.area_mm2(&SramConfig::new(w_sz, 1, 1));
+    let base_area = cache::costs(&cfg.tech, &SramConfig::new(w_sz, 1, 1)).area_mm2;
     let mut base_static = 0.0;
     for sc in [1usize, 2, 4, 8, 16] {
         let org = Organization::sep(
@@ -53,7 +52,7 @@ fn main() {
         if sc == 1 {
             base_static = w.static_energy_j;
         }
-        let area = sram.area_mm2(&SramConfig::new(w_sz, 1, sc));
+        let area = cache::costs(&cfg.tech, &SramConfig::new(w_sz, 1, sc)).area_mm2;
         println!(
             "  SC={sc:2}  static {}  (saves {:5.1}%)  area {:.3} mm² (+{:4.1}%)  wakeups {} ({})",
             fmt_energy(w.static_energy_j),
@@ -75,7 +74,7 @@ fn main() {
     }
 
     // --- break-even: how long must a sector sleep to amortize its wakeup?
-    let costs = sram.evaluate(&SramConfig::new(w_sz, 1, 8));
+    let costs = cache::costs(&cfg.tech, &SramConfig::new(w_sz, 1, 8));
     println!(
         "\nbreak-even sleep time: {} (average op duration: {})",
         fmt_time(powergate::break_even_s(&costs)),

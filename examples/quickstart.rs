@@ -11,6 +11,7 @@ use descnet::dataflow::profile_network;
 use descnet::dse;
 use descnet::energy;
 use descnet::model::capsnet_mnist;
+use descnet::util::exec::Engine;
 use descnet::util::units::{fmt_energy, fmt_size};
 
 fn main() {
@@ -35,8 +36,9 @@ fn main() {
         fmt_size(dse::smp_size(&profile))
     );
 
-    // 3. Exhaustive DSE (Algorithms 1-2) + Pareto selection (Fig 18).
-    let result = dse::run(&profile, &cfg.tech, 8);
+    // 3. Exhaustive DSE (Algorithms 1-2) on the shared engine + Pareto
+    //    selection (Fig 18).
+    let result = dse::run_on(&Engine::auto(), &profile, &cfg.tech);
     println!(
         "DSE: {} configurations, {} on the Pareto frontier",
         result.points.len(),

@@ -1,0 +1,250 @@
+//! Concurrent memoized CACTI cost cache (DESIGN.md section 5).
+//!
+//! The exhaustive DSE evaluates hundreds of thousands of organizations, but
+//! they are assembled from a *small* set of SRAM array shapes: the
+//! Algorithm-1/2 pools admit only a few dozen sizes, sector counts and port
+//! counts, so the same `(Technology, SramConfig)` geometry is costed
+//! millions of times.  This cache computes each geometry once through
+//! [`Sram::evaluate`] and serves every later request — from the DSE fast
+//! path, the `energy`/`pmu` reporting rollups, and the serving layer's
+//! per-inference co-simulation — out of a read-mostly store.
+//!
+//! Design:
+//! * keyed by [`Technology::cache_key`] (bit-exact fingerprint of every
+//!   constant) + [`SramConfig`], so perturbed-technology sweeps
+//!   (`examples/dse_sweep.rs`) never alias the calibrated baseline;
+//! * sharded `RwLock<HashMap>`: after warmup every access is a shared read
+//!   lock, so worker threads of `util::exec::Engine` don't serialize;
+//! * misses compute **outside** any lock — the model is pure, so a racing
+//!   duplicate computation is benign (both writers insert the same value);
+//! * hit/miss counters (relaxed atomics) so tests and benches can assert
+//!   the cache is actually exercised across layers.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{OnceLock, RwLock};
+
+use super::{Sram, SramConfig, SramCosts};
+use crate::config::Technology;
+
+const SHARDS: usize = 16;
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct Key {
+    tech: u64,
+    cfg: SramConfig,
+}
+
+fn shard_of(key: &Key) -> usize {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() as usize) % SHARDS
+}
+
+/// A sharded, counted memo of [`Sram::evaluate`] results.
+pub struct CostCache {
+    shards: [RwLock<HashMap<Key, SramCosts>>; SHARDS],
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CostCache {
+    pub fn new() -> CostCache {
+        CostCache {
+            shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Memoized [`Sram::evaluate`].  For repeated lookups under one
+    /// technology (the DSE fast path costs 4 geometries per organization),
+    /// prefer [`CostCache::tech`], which fingerprints the 22 technology
+    /// constants once instead of per call.
+    pub fn costs(&self, tech: &Technology, cfg: &SramConfig) -> SramCosts {
+        self.costs_keyed(tech.cache_key(), tech, cfg)
+    }
+
+    /// A per-technology view with the fingerprint precomputed.
+    pub fn tech<'a>(&'a self, tech: &'a Technology) -> TechCosts<'a> {
+        TechCosts {
+            cache: self,
+            tech,
+            key: tech.cache_key(),
+        }
+    }
+
+    fn costs_keyed(&self, tech_key: u64, tech: &Technology, cfg: &SramConfig) -> SramCosts {
+        let key = Key {
+            tech: tech_key,
+            cfg: *cfg,
+        };
+        let shard = &self.shards[shard_of(&key)];
+        if let Some(costs) = shard.read().expect("cache lock poisoned").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *costs;
+        }
+        let costs = Sram::new(tech).evaluate(cfg);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        shard
+            .write()
+            .expect("cache lock poisoned")
+            .insert(key, costs);
+        costs
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct geometries cached so far.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.read().expect("cache lock poisoned").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drops every entry (counters are kept: they are lifetime totals).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.write().expect("cache lock poisoned").clear();
+        }
+    }
+}
+
+impl Default for CostCache {
+    fn default() -> CostCache {
+        CostCache::new()
+    }
+}
+
+/// A borrowed view of a [`CostCache`] for one technology: the 22-constant
+/// fingerprint is hashed once at construction, so hot loops pay only the
+/// small per-geometry key hash per lookup (the function-local-memo
+/// experiment recorded in EXPERIMENTS.md Perf/L3 showed per-lookup hashing
+/// overhead is what makes or breaks memoization here).
+pub struct TechCosts<'a> {
+    cache: &'a CostCache,
+    tech: &'a Technology,
+    key: u64,
+}
+
+impl TechCosts<'_> {
+    pub fn costs(&self, cfg: &SramConfig) -> SramCosts {
+        self.cache.costs_keyed(self.key, self.tech, cfg)
+    }
+}
+
+/// The process-global cache every evaluation layer shares.
+pub fn global() -> &'static CostCache {
+    static GLOBAL: OnceLock<CostCache> = OnceLock::new();
+    GLOBAL.get_or_init(CostCache::new)
+}
+
+/// Convenience: memoized costs through the global cache.
+pub fn costs(tech: &Technology, cfg: &SramConfig) -> SramCosts {
+    global().costs(tech, cfg)
+}
+
+/// Convenience: a per-technology view of the global cache for hot loops.
+pub fn for_tech(tech: &Technology) -> TechCosts<'_> {
+    global().tech(tech)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::exec::Engine;
+    use crate::util::units::KIB;
+
+    #[test]
+    fn cached_costs_equal_direct_evaluation() {
+        let tech = Technology::default();
+        let cache = CostCache::new();
+        for (size, ports, sectors) in [(25 * KIB, 1, 1), (64 * KIB, 1, 8), (108 * KIB, 3, 2)] {
+            let cfg = SramConfig::new(size, ports, sectors);
+            let direct = Sram::new(&tech).evaluate(&cfg);
+            let first = cache.costs(&tech, &cfg);
+            let second = cache.costs(&tech, &cfg);
+            assert_eq!(first, direct);
+            assert_eq!(second, direct);
+        }
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.hits(), 3);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn distinct_technologies_do_not_alias() {
+        let base = Technology::default();
+        let mut leaky = Technology::default();
+        leaky.sram_leak_w_per_byte *= 4.0;
+        let cfg = SramConfig::new(64 * KIB, 1, 1);
+        let cache = CostCache::new();
+        let a = cache.costs(&base, &cfg);
+        let b = cache.costs(&leaky, &cfg);
+        assert!(b.leak_on_w > a.leak_on_w * 3.0, "{} vs {}", b.leak_on_w, a.leak_on_w);
+        assert_eq!(cache.len(), 2);
+        // Both served again -> pure hits.
+        let before = cache.hits();
+        cache.costs(&base, &cfg);
+        cache.costs(&leaky, &cfg);
+        assert_eq!(cache.hits(), before + 2);
+    }
+
+    #[test]
+    fn concurrent_lookups_are_consistent() {
+        let tech = Technology::default();
+        let cache = CostCache::new();
+        let sizes: Vec<usize> = (0..256).map(|i| (8 + (i % 16) * 8) * KIB).collect();
+        let direct: Vec<SramCosts> = sizes
+            .iter()
+            .map(|&s| Sram::new(&tech).evaluate(&SramConfig::new(s, 1, 1)))
+            .collect();
+        // Hammer the same 16 geometries from 8 workers; results must be
+        // identical to the uncached model and the store must stay small.
+        let got = Engine::new(8).map(&sizes, |&s| cache.costs(&tech, &SramConfig::new(s, 1, 1)));
+        for (g, d) in got.iter().zip(&direct) {
+            assert_eq!(g, d);
+        }
+        assert_eq!(cache.len(), 16);
+        assert_eq!(cache.hits() + cache.misses(), 256);
+        assert!(cache.hits() >= 256 - 16 * 8, "hits {}", cache.hits());
+    }
+
+    #[test]
+    fn tech_handle_matches_plain_lookups_and_counts_hits() {
+        let tech = Technology::default();
+        let cache = CostCache::new();
+        let handle = cache.tech(&tech);
+        let cfg = SramConfig::new(64 * KIB, 1, 8);
+        let via_handle = handle.costs(&cfg);
+        let via_plain = cache.costs(&tech, &cfg);
+        assert_eq!(via_handle, via_plain);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+        // Same key namespace: the handle hits entries warmed without it.
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn clear_empties_but_keeps_counters() {
+        let tech = Technology::default();
+        let cache = CostCache::new();
+        cache.costs(&tech, &SramConfig::new(32 * KIB, 1, 1));
+        assert!(!cache.is_empty());
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.misses(), 1);
+    }
+}

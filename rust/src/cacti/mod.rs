@@ -11,7 +11,13 @@
 //! All DSE energy/area numbers flow through [`Sram::evaluate`], so the
 //! fit tolerance bounds the absolute error of every reproduced figure; the
 //! *orderings* (what the DSE actually decides on) are far less sensitive.
+//!
+//! Callers on hot paths should go through [`cache`] (the concurrent
+//! memoized front-end) rather than instantiating [`Sram`] per evaluation:
+//! the enumerated organizations reuse a small pool of array geometries, so
+//! nearly every lookup is a shared-read cache hit.
 
+pub mod cache;
 pub mod powergate;
 
 use crate::config::Technology;

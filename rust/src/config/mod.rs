@@ -91,6 +91,68 @@ impl Default for Technology {
 }
 
 impl Technology {
+    /// Stable fingerprint of every constant, used to key the global CACTI
+    /// cost cache (`cacti::cache`): configurations with identical constants
+    /// share cached costs, while any perturbation (e.g. the `dse_sweep`
+    /// ablations) gets its own namespace.  The exhaustive destructuring
+    /// (no `..`) makes a newly added field a compile error here, so the
+    /// fingerprint can never silently alias distinct technologies.
+    pub fn cache_key(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let &Technology {
+            sram_leak_w_per_byte,
+            sram_leak_port_factor,
+            sram_dyn_e0_j,
+            sram_dyn_size_exp,
+            sram_dyn_port_exp,
+            sram_area_64k_mm2,
+            sram_area_exp_small,
+            sram_area_exp_large,
+            sram_area_port_factor,
+            sram_area_sector_factor,
+            powergate_area_overhead,
+            powergate_off_leak_frac,
+            wakeup_j_per_kib,
+            wakeup_latency_s,
+            dram_j_per_byte,
+            dram_background_w,
+            dram_latency_s,
+            dram_bandwidth_bps,
+            mac_energy_j,
+            act_energy_j,
+            accel_leak_w,
+            accel_area_mm2,
+        } = self;
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        for v in [
+            sram_leak_w_per_byte,
+            sram_leak_port_factor,
+            sram_dyn_e0_j,
+            sram_dyn_size_exp,
+            sram_dyn_port_exp,
+            sram_area_64k_mm2,
+            sram_area_exp_small,
+            sram_area_exp_large,
+            sram_area_port_factor,
+            sram_area_sector_factor,
+            powergate_area_overhead,
+            powergate_off_leak_frac,
+            wakeup_j_per_kib,
+            wakeup_latency_s,
+            dram_j_per_byte,
+            dram_background_w,
+            dram_latency_s,
+            dram_bandwidth_bps,
+            mac_energy_j,
+            act_energy_j,
+            accel_leak_w,
+            accel_area_mm2,
+        ] {
+            v.to_bits().hash(&mut h);
+        }
+        h.finish()
+    }
+
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("sram_leak_w_per_byte", self.sram_leak_w_per_byte.into()),
@@ -320,6 +382,19 @@ mod tests {
         assert!((cfg.accel.clock_hz - 250e6).abs() < 1.0);
         assert_eq!(cfg.accel.array_rows, 16); // default preserved
         assert_eq!(cfg.tech, Technology::default());
+    }
+
+    #[test]
+    fn cache_key_distinguishes_technologies() {
+        let base = Technology::default();
+        assert_eq!(base.cache_key(), Technology::default().cache_key());
+        let mut leaky = Technology::default();
+        leaky.sram_leak_w_per_byte *= 2.0;
+        assert_ne!(base.cache_key(), leaky.cache_key());
+        let mut ported = Technology::default();
+        ported.sram_dyn_port_exp = 2.0;
+        assert_ne!(base.cache_key(), ported.cache_key());
+        assert_ne!(leaky.cache_key(), ported.cache_key());
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::energy::system_with_org;
 use crate::memory::{MemSpec, Organization};
 use crate::model::capsnet_mnist;
 use crate::runtime::{argmax_per_row, Runtime};
+use crate::util::exec;
 use crate::util::prng::Prng;
 
 #[derive(Debug, Clone)]
@@ -111,12 +112,13 @@ impl Server {
         }
         let policy = BatchPolicy::new(batches, 2e-3);
 
-        // Generator thread: Poisson-ish arrivals.
+        // Generator task: Poisson-ish arrivals on the shared engine's
+        // background facility (one named producer thread).
         let (tx, rx) = mpsc::channel::<Request>();
         let n = opts.requests;
         let seed = opts.seed;
         let hw = 28;
-        let gen = std::thread::spawn(move || {
+        let gen = exec::background("request-gen", move || {
             let mut rng = Prng::new(seed);
             for id in 0..n as u64 {
                 let img = synthetic_image(&mut rng, hw);
@@ -197,7 +199,7 @@ impl Server {
         }
         stats.requests = served as u64;
         stats.wall_s = t0.elapsed().as_secs_f64();
-        gen.join().ok();
+        gen.join();
         Ok(stats)
     }
 

@@ -5,8 +5,9 @@
 //! cycles (Fig 9).
 //!
 //! The tiling/schedule policies and their calibration are documented in
-//! DESIGN.md section 6; `tests/workload.rs` pins the emergent maxima against
-//! the paper's Table I/II sizes and the throughput/share claims (116 fps,
+//! DESIGN.md section 6; `rust/tests/paper_claims.rs` and
+//! `rust/tests/workload_invariants.rs` pin the emergent maxima against the
+//! paper's Table I/II sizes and the throughput/share claims (116 fps,
 //! routing > 50%; 9.7 fps, ConvCaps2D ~= 73%).
 //!
 //! Scheduling summary:

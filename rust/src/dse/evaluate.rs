@@ -9,14 +9,20 @@
 //! the reference implementation (see EXPERIMENTS.md section Perf/L3 for the
 //! before/after).
 
-use crate::cacti::Sram;
+use crate::cacti::cache;
 use crate::config::Technology;
 use crate::dataflow::NetworkProfile;
 use crate::memory::{Component, Organization};
 
-// NOTE (EXPERIMENTS.md section Perf/L3): memoizing the per-geometry SRAM costs in
-// a HashMap was tried and reverted — on this single-core testbed the hash
-// lookup costs as much as the powf calls it saves (-6%).
+// NOTE (EXPERIMENTS.md section Perf/L3): a function-local HashMap memo was
+// once tried here and reverted — single-core, the hash lookup cost as much
+// as the powf calls it saved (-6%).  The shared `cacti::cache` supersedes
+// that experiment with a different design point: a process-global,
+// read-mostly store keyed by (Technology, SramConfig).  The enumerated
+// organizations reuse a few hundred geometries, so after warmup every
+// lookup is a shared-read hit with no lock contention across engine
+// workers, and — unlike the local memo — the same entries also feed the
+// energy/pmu reporting layers and the serving co-simulation.
 
 /// Per-component constants hoisted out of the op loop.
 #[derive(Clone, Copy, Default)]
@@ -35,11 +41,12 @@ struct CompCosts {
 
 /// Fast (area_mm2, energy_j) evaluation of one organization.
 pub fn area_energy(org: &Organization, profile: &NetworkProfile, tech: &Technology) -> (f64, f64) {
-    let sram = Sram::new(tech);
+    // One technology fingerprint for all four component lookups.
+    let costs_of = cache::for_tech(tech);
     let mut comps = [CompCosts::default(); 4]; // shared, data, weight, acc
     for (idx, c) in Component::ALL.iter().enumerate() {
         if let Some(cfg) = org.sram_config(*c) {
-            let costs = sram.evaluate(&cfg);
+            let costs = costs_of.costs(&cfg);
             comps[idx] = CompCosts {
                 present: true,
                 size: cfg.size_bytes,

@@ -16,6 +16,7 @@ use super::{evaluate, hy_shared_size, pools, DsePoint};
 use crate::config::Technology;
 use crate::dataflow::NetworkProfile;
 use crate::memory::{MemSpec, Organization};
+use crate::util::exec::Engine;
 use crate::util::prng::Prng;
 
 /// Annealing options.
@@ -208,6 +209,47 @@ pub fn anneal(
     }
 }
 
+/// Engine-parallel multi-start annealing: `restarts` independent chains
+/// (seeds `opts.seed`, `opts.seed + 1`, ...) run concurrently on the shared
+/// execution engine; the chain with the best scalarized objective wins.
+/// Ties resolve to the lowest seed, so the result is deterministic for any
+/// thread count.  `evaluations` reports the total across all chains.
+pub fn anneal_restarts(
+    engine: &Engine,
+    profile: &NetworkProfile,
+    tech: &Technology,
+    opts: &AnnealOptions,
+    restarts: usize,
+) -> AnnealResult {
+    let seeds: Vec<u64> = (0..restarts.max(1) as u64)
+        .map(|i| opts.seed.wrapping_add(i))
+        .collect();
+    // map_coarse: a chain is seconds of work, so parallelize even a
+    // handful of restarts (Engine::map's serial cutoff is tuned for
+    // microsecond DSE items and would serialize any restarts < 32).
+    let runs = engine.map_coarse(&seeds, |&seed| {
+        let mut chain_opts = opts.clone();
+        chain_opts.seed = seed;
+        anneal(profile, tech, &chain_opts)
+    });
+    let evaluations: usize = runs.iter().map(|r| r.evaluations).sum();
+    let objective =
+        |r: &AnnealResult| -> f64 { r.best.energy_j + opts.area_weight * r.best.area_mm2 };
+    let mut best: Option<AnnealResult> = None;
+    for run in runs {
+        let better = match &best {
+            None => true,
+            Some(b) => objective(&run) < objective(b),
+        };
+        if better {
+            best = Some(run);
+        }
+    }
+    let mut out = best.expect("at least one restart");
+    out.evaluations = evaluations;
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -268,6 +310,24 @@ mod tests {
         let c = anneal(&profile, &tech, &opts);
         // Different seed may land elsewhere but must still be valid HY.
         assert!(c.best.org.shared.is_some());
+    }
+
+    #[test]
+    fn multi_start_never_worse_than_single_and_is_deterministic() {
+        let accel = Accelerator::default();
+        let tech = Technology::default();
+        let profile = profile_network(&capsnet_mnist(), &accel);
+        let opts = AnnealOptions::default();
+        let single = anneal(&profile, &tech, &opts);
+        // The restart fan includes the single run's seed, so the winner can
+        // only match or beat it, whatever the worker count.
+        let multi_a = anneal_restarts(&Engine::new(1), &profile, &tech, &opts, 3);
+        let multi_b = anneal_restarts(&Engine::new(4), &profile, &tech, &opts, 3);
+        assert!(multi_a.best.energy_j <= single.best.energy_j + 1e-18);
+        assert_eq!(multi_a.best.energy_j, multi_b.best.energy_j);
+        assert_eq!(multi_a.best.area_mm2, multi_b.best.area_mm2);
+        assert_eq!(multi_a.evaluations, multi_b.evaluations);
+        assert!(multi_a.evaluations > single.evaluations);
     }
 
     #[test]

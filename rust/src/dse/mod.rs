@@ -3,6 +3,12 @@
 //! shared-port constraints), parallel evaluation through the CACTI/PMU
 //! energy models, Pareto-frontier extraction, and the per-design-option
 //! lowest-energy selection that produces Tables I and II.
+//!
+//! The sweep runs as a composable pipeline on the shared execution engine
+//! (`util::exec::Engine`): enumerate → evaluate (engine-parallel, costs
+//! memoized by `cacti::cache`) → Pareto/select.  The evaluation stage is
+//! deterministic under any thread count — `rust/tests/engine_cache.rs`
+//! pins bit-identical `DsePoint` sets for threads=1 vs threads=N.
 
 pub mod evaluate;
 pub mod heuristic;
@@ -12,6 +18,7 @@ use crate::config::Technology;
 use crate::dataflow::NetworkProfile;
 
 use crate::memory::{cover_op, org_fits, required_shared_ports, MemSpec, OrgKind, Organization};
+use crate::util::exec::Engine;
 use crate::util::pareto::{frontier, Point};
 
 /// One evaluated configuration: the DSE objective space of Figs 18/20/22.
@@ -152,6 +159,17 @@ pub fn enumerate_hy_ports(profile: &NetworkProfile, ports: usize) -> Vec<Organiz
     out
 }
 
+/// Evaluates organizations on the shared execution engine.  Results come
+/// back in input order, bit-identical for any worker count.
+pub fn evaluate_all_on(
+    engine: &Engine,
+    orgs: &[Organization],
+    profile: &NetworkProfile,
+    tech: &Technology,
+) -> Vec<DsePoint> {
+    engine.map(orgs, |o| eval_one(o, profile, tech))
+}
+
 /// Evaluates organizations in parallel over `threads` workers.
 pub fn evaluate_all(
     orgs: &[Organization],
@@ -159,29 +177,7 @@ pub fn evaluate_all(
     tech: &Technology,
     threads: usize,
 ) -> Vec<DsePoint> {
-    let threads = threads.max(1);
-    if threads == 1 || orgs.len() < 64 {
-        return orgs.iter().map(|o| eval_one(o, profile, tech)).collect();
-    }
-    let chunk = (orgs.len() + threads - 1) / threads;
-    let mut results: Vec<Vec<DsePoint>> = Vec::new();
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = orgs
-            .chunks(chunk)
-            .map(|slice| {
-                scope.spawn(move || {
-                    slice
-                        .iter()
-                        .map(|o| eval_one(o, profile, tech))
-                        .collect::<Vec<_>>()
-                })
-            })
-            .collect();
-        for h in handles {
-            results.push(h.join().expect("DSE worker panicked"));
-        }
-    });
-    results.into_iter().flatten().collect()
+    evaluate_all_on(&Engine::new(threads), orgs, profile, tech)
 }
 
 fn eval_one(org: &Organization, profile: &NetworkProfile, tech: &Technology) -> DsePoint {
@@ -231,8 +227,14 @@ pub struct DseResult {
 }
 
 pub fn run(profile: &NetworkProfile, tech: &Technology, threads: usize) -> DseResult {
+    run_on(&Engine::new(threads), profile, tech)
+}
+
+/// The full pipeline on an existing engine: enumerate → evaluate → Pareto
+/// → per-option selection.
+pub fn run_on(engine: &Engine, profile: &NetworkProfile, tech: &Technology) -> DseResult {
     let orgs = enumerate(profile);
-    let points = evaluate_all(&orgs, profile, tech, threads);
+    let points = evaluate_all_on(engine, &orgs, profile, tech);
     let pareto = pareto_indices(&points);
     let selected = select_per_option(&points);
     DseResult {
@@ -357,6 +359,54 @@ mod tests {
                 || pareto_opts.contains("HY-PG"),
             "frontier options: {pareto_opts:?}"
         );
+    }
+
+    #[test]
+    fn select_per_option_breaks_energy_ties_toward_first_index() {
+        let org = Organization::smp(MemSpec::new(108 * KIB, 1));
+        let mk = |area: f64, energy: f64| DsePoint {
+            org: org.clone(),
+            area_mm2: area,
+            energy_j: energy,
+        };
+        // Equal energies: the earliest index must win, deterministically.
+        let tied = vec![mk(2.0, 1.0), mk(1.0, 1.0)];
+        assert_eq!(select_per_option(&tied), vec![("SMP".to_string(), 0)]);
+        // A strictly lower energy later in the list still wins.
+        let better_late = vec![mk(2.0, 1.0), mk(1.0, 1.0), mk(3.0, 0.5)];
+        assert_eq!(
+            select_per_option(&better_late),
+            vec![("SMP".to_string(), 2)]
+        );
+    }
+
+    #[test]
+    fn empty_point_sets_are_handled() {
+        assert!(select_per_option(&[]).is_empty());
+        assert!(pareto_indices(&[]).is_empty());
+        let p = profile();
+        let tech = Technology::default();
+        assert!(evaluate_all(&[], &p, &tech, 4).is_empty());
+    }
+
+    #[test]
+    fn engine_and_serial_selection_agree() {
+        // The engine-parallel pipeline must reproduce the serial pipeline
+        // exactly — points, frontier and selection (satellite of ISSUE 1;
+        // the full-enumeration bit-equality pin lives in
+        // rust/tests/engine_cache.rs).
+        let p = profile();
+        let tech = Technology::default();
+        let orgs: Vec<_> = enumerate(&p).into_iter().take(800).collect();
+        let serial = evaluate_all_on(&Engine::new(1), &orgs, &p, &tech);
+        let parallel = evaluate_all_on(&Engine::new(4), &orgs, &p, &tech);
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.org, b.org);
+            assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        }
+        assert_eq!(select_per_option(&serial), select_per_option(&parallel));
+        assert_eq!(pareto_indices(&serial), pareto_indices(&parallel));
     }
 
     #[test]

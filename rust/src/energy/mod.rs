@@ -3,11 +3,13 @@
 //! breakdowns of Figs 23–26, and the per-operation energy split of
 //! Figs 19d/21d.
 //!
-//! Composition: `dataflow` supplies per-op accesses/cycles, `cacti` the
-//! per-array costs, `pmu` the power-gated static energy, `memory::dram`
-//! the off-chip side, and this module rolls them up.
+//! Composition: `dataflow` supplies per-op accesses/cycles, `cacti::cache`
+//! the (memoized) per-array costs, `pmu` the power-gated static energy,
+//! `memory::dram` the off-chip side, and this module rolls them up.  All
+//! SRAM costs come through the shared cost cache, so reporting reuses the
+//! entries the DSE sweep warmed.
 
-use crate::cacti::Sram;
+use crate::cacti::cache;
 use crate::config::Technology;
 use crate::dataflow::NetworkProfile;
 use crate::memory::{component_accesses, cover_op, dram::Dram, Component, MemSpec, Organization};
@@ -66,12 +68,12 @@ impl OrgEnergy {
 
 /// Evaluates one organization's on-chip memories over one inference.
 pub fn evaluate_org(org: &Organization, profile: &NetworkProfile, tech: &Technology) -> OrgEnergy {
-    let sram = Sram::new(tech);
     let pmu_report = pmu::evaluate(org, profile, tech);
+    let costs_of = cache::for_tech(tech);
     let mut memories = Vec::new();
     for (component, spec) in org.components() {
         let cfg = org.sram_config(component).unwrap();
-        let costs = sram.evaluate(&cfg);
+        let costs = costs_of.costs(&cfg);
         let mut dyn_j = 0.0;
         for op in &profile.ops {
             let cov = cover_op(org, op).expect("org must fit profile");
@@ -104,13 +106,13 @@ pub fn per_op_energy(
     profile: &NetworkProfile,
     tech: &Technology,
 ) -> Vec<(String, f64)> {
-    let sram = Sram::new(tech);
     let pmu_report = pmu::evaluate(org, profile, tech);
+    let costs_of = cache::for_tech(tech);
     let comps: Vec<_> = org
         .components()
         .iter()
         .map(|&(c, spec)| {
-            let costs = sram.evaluate(&org.sram_config(c).unwrap());
+            let costs = costs_of.costs(&org.sram_config(c).unwrap());
             (c, spec, costs)
         })
         .collect();
@@ -220,8 +222,7 @@ pub fn version_a(profile: &NetworkProfile, tech: &Technology) -> SystemEnergy {
     // monolithic buffer + small staging FIFOs.
     let mut big = Organization::smp(MemSpec::new(8 * MIB, 1));
     big.shared_ports = 1;
-    let sram = Sram::new(tech);
-    let costs = sram.evaluate(&big.sram_config(Component::Shared).unwrap());
+    let costs = cache::costs(tech, &big.sram_config(Component::Shared).unwrap());
     let accesses: f64 = profile
         .ops
         .iter()

@@ -1,8 +1,10 @@
 //! DESCNet: scratchpad-memory design-space exploration for Capsule-Network
 //! accelerators — reproduction of Marchisio et al., IEEE TCAD 2020.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! See `rust/DESIGN.md` for the system inventory (section 5 covers the
+//! shared execution engine `util::exec` and the memoized CACTI cost cache
+//! `cacti::cache` every evaluation layer goes through) and
+//! `rust/EXPERIMENTS.md` for the paper-vs-measured record.
 
 pub mod accel;
 pub mod cacti;

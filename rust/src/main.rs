@@ -15,6 +15,7 @@ use descnet::coordinator::server::{ServeOptions, Server};
 use descnet::dataflow::profile_network;
 use descnet::model::{capsnet_mnist, deepcaps_cifar10};
 use descnet::report::{self, ReportCtx};
+use descnet::util::exec;
 use descnet::util::table::Table;
 use descnet::util::units::{fmt_count, fmt_size};
 
@@ -116,12 +117,6 @@ fn load_config(flags: &Flags) -> SystemConfig {
     }
 }
 
-fn default_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-}
-
 fn cmd_analyze(args: &[String]) -> i32 {
     let flags = parse_flags(args);
     let cfg = load_config(&flags);
@@ -191,7 +186,7 @@ fn cmd_dse(args: &[String]) -> i32 {
     let flags = parse_flags(args);
     let cfg = load_config(&flags);
     let out = PathBuf::from(flags.get("out", "results"));
-    let threads = flags.usize("threads", default_threads());
+    let threads = flags.usize("threads", exec::default_threads());
     let net = flags.get("net", "capsnet");
     let ctx = ReportCtx::new(cfg, &out);
 
@@ -217,7 +212,7 @@ fn cmd_report(args: &[String]) -> i32 {
     let flags = parse_flags(args);
     let cfg = load_config(&flags);
     let out = PathBuf::from(flags.get("out", "results"));
-    let threads = flags.usize("threads", default_threads());
+    let threads = flags.usize("threads", exec::default_threads());
     let what = flags
         .positional
         .first()
@@ -260,7 +255,7 @@ fn cmd_report(args: &[String]) -> i32 {
 fn cmd_headline(args: &[String]) -> i32 {
     let flags = parse_flags(args);
     let cfg = load_config(&flags);
-    let threads = flags.usize("threads", default_threads());
+    let threads = flags.usize("threads", exec::default_threads());
     let dir = std::env::temp_dir().join("descnet_headline");
     let ctx = ReportCtx::new(cfg, &dir);
     println!("{}", report::headline(&ctx, threads).to_string());

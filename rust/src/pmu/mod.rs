@@ -9,7 +9,7 @@
 //! The report carries the -PG static-energy accounting (ON + residual OFF
 //! leakage + wakeup transitions) and the Fig 30-style ON/OFF schedule.
 
-use crate::cacti::{Sram, SramCosts};
+use crate::cacti::{cache, SramCosts};
 use crate::config::Technology;
 use crate::dataflow::NetworkProfile;
 use crate::memory::{cover_op, Component, Organization};
@@ -106,7 +106,6 @@ fn component_needs(org: &Organization, profile: &NetworkProfile, c: Component) -
 
 /// Evaluates the PMU over one inference of `profile` on `org`.
 pub fn evaluate(org: &Organization, profile: &NetworkProfile, tech: &Technology) -> PmuReport {
-    let sram = Sram::new(tech);
     let durations: Vec<f64> = profile
         .ops
         .iter()
@@ -118,9 +117,10 @@ pub fn evaluate(org: &Organization, profile: &NetworkProfile, tech: &Technology)
     let mut components = Vec::new();
     let mut max_wakeup = 0.0f64;
 
+    let costs_of = cache::for_tech(tech);
     for (component, spec) in org.components() {
         let cfg = org.sram_config(component).unwrap();
-        let costs: SramCosts = sram.evaluate(&cfg);
+        let costs: SramCosts = costs_of.costs(&cfg);
         let needs = component_needs(org, profile, component);
         let sector_bytes = cfg.sector_bytes().max(1);
 

@@ -9,9 +9,29 @@
 //!
 //! Python never runs here: after `make artifacts`, the binary is
 //! self-contained.
+//!
+//! The `xla` crate itself is only linked when the `pjrt` cargo feature is
+//! enabled (it must be vendored by the build environment); the default
+//! build substitutes `xla_stub`, which keeps this module compiling and
+//! returns a clear "PJRT backend unavailable" error from `Runtime::new`.
 
 pub mod artifacts;
 pub mod weights;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "xla_stub.rs"]
+mod xla;
+
+// The feature is a reserved switch, not yet wired: flipping it must point
+// at the vendoring instructions instead of failing with E0433 on every
+// `xla::` path below.  To wire it, vendor the `xla` crate, add it as an
+// optional path dependency (`pjrt = ["dep:xla"]`), and delete this guard.
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature requires vendoring the real `xla` crate as a path \
+     dependency (see rust/DESIGN.md section 3 and Cargo.toml); the default \
+     build uses the compiled-in stub"
+);
 
 use std::collections::HashMap;
 use std::path::Path;

@@ -1,0 +1,277 @@
+//! Shared parallel execution engine — the one place in the codebase that
+//! spawns worker threads (DESIGN.md section 5).
+//!
+//! Before this module existed, three layers each hand-rolled their own
+//! parallelism: `dse::evaluate_all` split the organization list into static
+//! chunks (pathological when per-item cost varies, as it does between SMP
+//! and HY configurations), the coordinator spawned ad-hoc generator
+//! threads, and `main.rs` duplicated the `available_parallelism` dance.
+//!
+//! The engine provides:
+//!
+//! * [`Engine::map`] / [`Engine::map_indexed`] — data-parallel map with
+//!   **work stealing via an atomic work index**: workers claim small index
+//!   strides with a single `fetch_add`, so a thread that lands on cheap
+//!   items simply claims more strides instead of idling at a chunk barrier.
+//! * **Ordered, deterministic collection**: every result is keyed by its
+//!   input index and reassembled in input order, so the output is
+//!   bit-identical for any thread count (pinned by `tests` here and by
+//!   `rust/tests/engine_cache.rs` across the whole DSE pipeline).
+//! * [`background`] — a named, joinable producer thread for the serving
+//!   path's request generator (the coordinator's only non-map parallelism).
+//!
+//! No work queue survives between calls; scoped threads mean no `'static`
+//! bounds and no channels on the hot path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Inputs shorter than this are mapped serially: thread spawn/join overhead
+/// dwarfs the work (the DSE fast path evaluates an organization in ~µs).
+const SERIAL_CUTOFF: usize = 32;
+
+/// Default worker count: one per available hardware thread.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// A reusable parallel-map executor with a fixed worker count.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    threads: usize,
+}
+
+impl Engine {
+    /// An engine with `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> Engine {
+        Engine {
+            threads: threads.max(1),
+        }
+    }
+
+    /// An engine sized to the machine.
+    pub fn auto() -> Engine {
+        Engine::new(default_threads())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Parallel map preserving input order.  Deterministic: the output is
+    /// identical (bit-for-bit, for pure `f`) under any thread count.
+    pub fn map<T, U, F>(&self, items: &[T], f: F) -> Vec<U>
+    where
+        T: Sync,
+        U: Send,
+        F: Fn(&T) -> U + Sync,
+    {
+        self.map_indexed(items, |_, item| f(item))
+    }
+
+    /// [`Engine::map`] with the input index passed to `f`.
+    pub fn map_indexed<T, U, F>(&self, items: &[T], f: F) -> Vec<U>
+    where
+        T: Sync,
+        U: Send,
+        F: Fn(usize, &T) -> U + Sync,
+    {
+        self.map_impl(items, SERIAL_CUTOFF, f)
+    }
+
+    /// [`Engine::map`] for coarse-grained items (milliseconds-plus each,
+    /// e.g. whole annealing chains): parallelizes for any input length
+    /// instead of applying the serial cutoff, which is tuned for the DSE's
+    /// microsecond-scale items.
+    pub fn map_coarse<T, U, F>(&self, items: &[T], f: F) -> Vec<U>
+    where
+        T: Sync,
+        U: Send,
+        F: Fn(&T) -> U + Sync,
+    {
+        self.map_impl(items, 2, |_, item| f(item))
+    }
+
+    fn map_impl<T, U, F>(&self, items: &[T], serial_cutoff: usize, f: F) -> Vec<U>
+    where
+        T: Sync,
+        U: Send,
+        F: Fn(usize, &T) -> U + Sync,
+    {
+        let n = items.len();
+        let threads = self.threads.min(n.max(1));
+        if threads <= 1 || n < serial_cutoff {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+
+        // Work stealing: each worker claims `stride` consecutive indices
+        // per fetch_add.  Strides are small enough (~1/8 of a fair share)
+        // that uneven per-item cost rebalances, large enough that the
+        // atomic is off the critical path.
+        let stride = (n / (threads * 8)).max(1);
+        let next = AtomicUsize::new(0);
+        let mut shards: Vec<Vec<(usize, U)>> = Vec::with_capacity(threads);
+        std::thread::scope(|scope| {
+            let f = &f;
+            let next = &next;
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut local: Vec<(usize, U)> = Vec::new();
+                        loop {
+                            let start = next.fetch_add(stride, Ordering::Relaxed);
+                            if start >= n {
+                                break;
+                            }
+                            let end = (start + stride).min(n);
+                            for (i, item) in items.iter().enumerate().take(end).skip(start) {
+                                local.push((i, f(i, item)));
+                            }
+                        }
+                        local
+                    })
+                })
+                .collect();
+            for h in handles {
+                shards.push(h.join().expect("engine worker panicked"));
+            }
+        });
+
+        // Ordered collection: place every (index, result) pair into its
+        // slot, independent of which worker produced it.
+        let mut slots: Vec<Option<U>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        for (i, value) in shards.into_iter().flatten() {
+            debug_assert!(slots[i].is_none(), "index {i} produced twice");
+            slots[i] = Some(value);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("every index produces exactly one result"))
+            .collect()
+    }
+}
+
+impl Default for Engine {
+    fn default() -> Engine {
+        Engine::auto()
+    }
+}
+
+/// A joinable background task (named thread).  Used by the coordinator for
+/// its request-generator thread; prefer [`Engine::map`] for data-parallel
+/// work.
+pub struct Background<T> {
+    handle: std::thread::JoinHandle<T>,
+}
+
+impl<T> Background<T> {
+    /// Waits for the task and returns its value.  Panics if the task
+    /// panicked (the panic is not swallowed).
+    pub fn join(self) -> T {
+        self.handle.join().expect("background task panicked")
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.handle.is_finished()
+    }
+}
+
+/// Spawns `f` on a named (`descnet-<name>`) background thread.
+pub fn background<T, F>(name: &str, f: F) -> Background<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let handle = std::thread::Builder::new()
+        .name(format!("descnet-{name}"))
+        .spawn(f)
+        .expect("spawning background task");
+    Background { handle }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_matches_serial_for_any_thread_count() {
+        let items: Vec<u64> = (0..1000).collect();
+        let serial: Vec<u64> = items.iter().map(|&x| x * x + 1).collect();
+        for threads in [1usize, 2, 3, 7, 16] {
+            let got = Engine::new(threads).map(&items, |&x| x * x + 1);
+            assert_eq!(got, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_indexed_passes_input_indices() {
+        let items: Vec<&str> = vec!["a"; 500];
+        let got = Engine::new(4).map_indexed(&items, |i, _| i);
+        let want: Vec<usize> = (0..items.len()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_and_small_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(Engine::new(8).map(&empty, |&x| x).is_empty());
+        // Below the serial cutoff with more threads than items.
+        let small: Vec<u32> = (0..5).collect();
+        assert_eq!(Engine::new(8).map(&small, |&x| x * 2), vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        assert_eq!(Engine::new(0).threads(), 1);
+        let items: Vec<u32> = (0..100).collect();
+        assert_eq!(Engine::new(0).map(&items, |&x| x).len(), 100);
+    }
+
+    #[test]
+    fn uneven_work_still_collects_in_order() {
+        // Early items are ~100x more expensive than late ones; static
+        // chunking would leave the first worker far behind, stealing keeps
+        // everyone busy — either way the output order must be the input
+        // order.
+        let items: Vec<usize> = (0..600).collect();
+        let f = |&i: &usize| -> usize {
+            let spins = if i < 60 { 10_000 } else { 100 };
+            let mut acc = i;
+            for k in 0..spins {
+                acc = acc.wrapping_mul(31).wrapping_add(k);
+            }
+            std::hint::black_box(acc);
+            i
+        };
+        let got = Engine::new(4).map(&items, f);
+        assert_eq!(got, items);
+    }
+
+    #[test]
+    fn map_coarse_parallelizes_small_inputs_and_preserves_order() {
+        // 4 items is far below SERIAL_CUTOFF, yet map_coarse must take the
+        // parallel path (observable via distinct worker thread names) and
+        // still return results in input order.
+        let items: Vec<u32> = (0..4).collect();
+        let names = Engine::new(4).map_coarse(&items, |&x| {
+            let name = std::thread::current().name().map(String::from);
+            (x, name)
+        });
+        let values: Vec<u32> = names.iter().map(|(x, _)| *x).collect();
+        assert_eq!(values, items);
+        // Workers run inside thread::scope spawns, not the test thread.
+        let test_thread = std::thread::current().name().map(String::from);
+        assert!(
+            names.iter().any(|(_, n)| *n != test_thread),
+            "map_coarse stayed on the calling thread: {names:?}"
+        );
+    }
+
+    #[test]
+    fn background_task_joins_with_value() {
+        let task = background("unit-test", || 41 + 1);
+        assert_eq!(task.join(), 42);
+    }
+}

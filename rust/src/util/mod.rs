@@ -1,12 +1,14 @@
-//! Dependency-free infrastructure: JSON, PRNG, CSV, tables, Pareto,
-//! statistics, and a mini property-test framework.
+//! Dependency-free infrastructure: the parallel execution engine, JSON,
+//! PRNG, CSV, tables, Pareto, statistics, and a mini property-test
+//! framework.
 //!
-//! The build environment vendors only the `xla` crate's dependency closure
-//! (no serde / rand / proptest / criterion), so these small, well-tested
-//! replacements live here.
+//! The build environment vendors only `anyhow` (no serde / rand / rayon /
+//! proptest / criterion), so these small, well-tested replacements live
+//! here.
 
 pub mod bench;
 pub mod csv;
+pub mod exec;
 pub mod json;
 pub mod pareto;
 pub mod prng;

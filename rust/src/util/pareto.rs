@@ -105,6 +105,42 @@ mod tests {
     }
 
     #[test]
+    fn empty_input_has_empty_frontier() {
+        assert!(frontier(&[]).is_empty());
+        assert_eq!(min_x(&[]), None);
+        assert_eq!(min_y(&[]), None);
+    }
+
+    #[test]
+    fn single_point_is_its_own_frontier() {
+        let p = pts(&[(3.0, 7.0)]);
+        assert_eq!(frontier(&p), vec![0]);
+        assert_eq!(min_x(&p), Some(0));
+        assert_eq!(min_y(&p), Some(0));
+    }
+
+    #[test]
+    fn many_duplicates_keep_exactly_one() {
+        // The stable sort keeps the first of the equal points; a dominated
+        // straggler never joins.
+        let p = pts(&[(2.0, 2.0), (2.0, 2.0), (2.0, 2.0), (3.0, 3.0)]);
+        assert_eq!(frontier(&p), vec![0]);
+    }
+
+    #[test]
+    fn collinear_ties_keep_only_the_dominating_end() {
+        // Same y: only the smallest x is non-dominated.
+        let same_y = pts(&[(3.0, 2.0), (1.0, 2.0), (2.0, 2.0)]);
+        assert_eq!(frontier(&same_y), vec![1]);
+        // Same x: only the smallest y is non-dominated.
+        let same_x = pts(&[(1.0, 5.0), (1.0, 3.0), (1.0, 4.0)]);
+        assert_eq!(frontier(&same_x), vec![1]);
+        // An L-shape with a redundant corner point on each arm.
+        let l_shape = pts(&[(1.0, 4.0), (1.0, 2.0), (2.0, 2.0), (2.0, 1.0), (3.0, 1.0)]);
+        assert_eq!(frontier(&l_shape), vec![1, 3]);
+    }
+
+    #[test]
     fn frontier_members_are_mutually_non_dominating() {
         let p = pts(&[
             (5.0, 1.0),

@@ -1,0 +1,98 @@
+//! Integration: the shared execution engine and the memoized CACTI cost
+//! cache across layers (ISSUE 1 acceptance criteria).
+//!
+//! * `dse::run` output is identical — orgs and bit-exact (area, energy) —
+//!   for threads=1 and threads=N through the engine;
+//! * the cost cache is exercised by both the DSE fast path and the
+//!   energy/pmu reporting path (hit counters observed to advance).
+
+use descnet::cacti::cache;
+use descnet::config::{Accelerator, Technology};
+use descnet::dataflow::{profile_network, NetworkProfile};
+use descnet::dse;
+use descnet::energy;
+use descnet::memory::{MemSpec, Organization};
+use descnet::model::capsnet_mnist;
+use descnet::pmu;
+use descnet::util::exec::Engine;
+use descnet::util::units::KIB;
+
+fn profile() -> NetworkProfile {
+    profile_network(&capsnet_mnist(), &Accelerator::default())
+}
+
+#[test]
+fn dse_points_bit_identical_across_thread_counts() {
+    let tech = Technology::default();
+    let p = profile();
+    let orgs = dse::enumerate(&p);
+    let serial = dse::evaluate_all_on(&Engine::new(1), &orgs, &p, &tech);
+    for threads in [2usize, 5] {
+        let parallel = dse::evaluate_all_on(&Engine::new(threads), &orgs, &p, &tech);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.org, b.org, "threads={threads}");
+            assert_eq!(
+                a.area_mm2.to_bits(),
+                b.area_mm2.to_bits(),
+                "area differs for {} at threads={threads}",
+                a.org.label()
+            );
+            assert_eq!(
+                a.energy_j.to_bits(),
+                b.energy_j.to_bits(),
+                "energy differs for {} at threads={threads}",
+                a.org.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn full_dse_pipeline_identical_across_engines() {
+    let tech = Technology::default();
+    let p = profile();
+    let res1 = dse::run(&p, &tech, 1);
+    let res8 = dse::run_on(&Engine::new(8), &p, &tech);
+    assert_eq!(res1.points.len(), res8.points.len());
+    assert_eq!(res1.pareto, res8.pareto);
+    assert_eq!(res1.selected, res8.selected);
+    for (a, b) in res1.points.iter().zip(&res8.points) {
+        assert_eq!(a.org, b.org);
+        assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+    }
+}
+
+#[test]
+fn cost_cache_is_shared_by_dse_and_energy_pmu_layers() {
+    let tech = Technology::default();
+    let p = profile();
+    // Table I SEP-PG geometries, warmed through the DSE fast path first.
+    let org = Organization::sep(
+        MemSpec::new(25 * KIB, 2),
+        MemSpec::new(64 * KIB, 8),
+        MemSpec::new(32 * KIB, 2),
+    );
+    let orgs = vec![org.clone()];
+    let touched_before = cache::global().hits() + cache::global().misses();
+    let points = dse::evaluate_all_on(&Engine::new(1), &orgs, &p, &tech);
+    let touched_after = cache::global().hits() + cache::global().misses();
+    assert!(
+        touched_after > touched_before,
+        "DSE evaluation did not go through the cost cache"
+    );
+    assert!(!cache::global().is_empty());
+
+    // The reporting layers must now *hit* the same entries (same geometry
+    // keys), and their numbers must agree with the fast path's.
+    let hits_before = cache::global().hits();
+    let rollup = energy::evaluate_org(&org, &p, &tech);
+    let pmu_report = pmu::evaluate(&org, &p, &tech);
+    assert!(
+        cache::global().hits() > hits_before,
+        "energy/pmu reporting did not hit the shared cache"
+    );
+    assert!((rollup.energy_j() - points[0].energy_j).abs() <= points[0].energy_j * 1e-12);
+    assert!(pmu_report.static_energy_j() > 0.0);
+}
