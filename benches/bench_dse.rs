@@ -10,7 +10,8 @@ use descnet::config::{Accelerator, Technology};
 use descnet::dataflow::profile_network;
 use descnet::dse;
 use descnet::dse::heuristic::{anneal, AnnealOptions};
-use descnet::model::{capsnet_mnist, deepcaps_cifar10};
+use descnet::dse::multi::{self, WorkloadSet};
+use descnet::model::{capsnet_mnist, deepcaps_cifar10, random_networks};
 use descnet::util::bench::{throughput, time};
 use descnet::util::exec::Engine;
 use descnet::util::json::Json;
@@ -26,7 +27,7 @@ fn main() {
 
         let mut orgs = Vec::new();
         let r = time(&format!("{} enumerate", net.name), 3, || {
-            orgs = dse::enumerate(&profile);
+            orgs = dse::enumerate(&profile).expect("enumeration");
         });
         println!(
             "    -> {} configurations, {}",
@@ -131,8 +132,45 @@ fn main() {
         ]));
     }
 
+    // Multi-network co-design sweep: the paper pair + 3 random networks
+    // through `dse::multi` — records scenario throughput (nets x points/s).
+    let multi_nets = {
+        let mut nets = vec![capsnet_mnist(), deepcaps_cifar10()];
+        nets.extend(random_networks(3, 7));
+        nets
+    };
+    let profiles: Vec<_> = multi_nets
+        .iter()
+        .map(|n| profile_network(n, &accel))
+        .collect();
+    let n_nets = profiles.len();
+    let set = WorkloadSet::new(profiles).expect("workload set");
+    let mut multi_points = 0usize;
+    let r = time(&format!("multi co-design sweep ({n_nets} nets)"), 2, || {
+        let res = multi::run_on(&Engine::new(8), &set, &tech).expect("multi DSE");
+        multi_points = res.points.len();
+        std::hint::black_box(res);
+    });
+    let net_points = n_nets * multi_points;
+    println!(
+        "    -> {} orgs x {} nets = {} net-evaluations, {}",
+        multi_points,
+        n_nets,
+        net_points,
+        throughput(&r, net_points)
+    );
+    let multi_json = Json::from_pairs(vec![
+        ("networks", n_nets.into()),
+        ("configs", multi_points.into()),
+        ("mean_s", r.mean_s.into()),
+        (
+            "net_points_per_s",
+            (net_points as f64 / r.mean_s.max(1e-12)).into(),
+        ),
+    ]);
+
     let out = Json::from_pairs(vec![
-        ("schema", "descnet-bench-dse-v1".into()),
+        ("schema", "descnet-bench-dse-v2".into()),
         ("status", "recorded".into()),
         (
             "cacti_cache",
@@ -143,6 +181,7 @@ fn main() {
             ]),
         ),
         ("networks", Json::Arr(nets_json)),
+        ("multi_network", multi_json),
     ]);
     let path = std::path::Path::new("BENCH_dse.json");
     out.write_file(path).expect("writing BENCH_dse.json");

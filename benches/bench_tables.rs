@@ -31,43 +31,47 @@ fn main() {
         report::fig11(&ctx);
     });
     time("E06 fig12 version (a)/(b) energy", 20, || {
-        report::fig12(&ctx);
+        report::fig12(&ctx).expect("report generator");
     });
     time("E07 fig18+table1 capsnet DSE", 3, || {
-        report::dse_scatter(&ctx, "capsnet", threads);
+        report::dse_scatter(&ctx, "capsnet", threads).expect("report generator");
     });
     time("E08 fig19 capsnet breakdowns", 3, || {
-        report::breakdowns(&ctx, "capsnet", threads);
+        report::breakdowns(&ctx, "capsnet", threads).expect("report generator");
     });
     time("E09 fig20+table2 deepcaps DSE", 2, || {
-        report::dse_scatter(&ctx, "deepcaps", threads);
+        report::dse_scatter(&ctx, "deepcaps", threads).expect("report generator");
     });
     time("E10 fig21 deepcaps breakdowns", 2, || {
-        report::breakdowns(&ctx, "deepcaps", threads);
+        report::breakdowns(&ctx, "deepcaps", threads).expect("report generator");
     });
     time("E11 fig22 port-constrained HY-PG DSE", 2, || {
-        report::fig22(&ctx, threads);
+        report::fig22(&ctx, threads).expect("report generator");
     });
     time("E12 fig23/24 capsnet whole accelerator", 3, || {
-        report::whole_accelerator(&ctx, "capsnet", threads);
+        report::whole_accelerator(&ctx, "capsnet", threads).expect("report generator");
     });
     time("E13 fig25/26 deepcaps whole accelerator", 2, || {
-        report::whole_accelerator(&ctx, "deepcaps", threads);
+        report::whole_accelerator(&ctx, "deepcaps", threads).expect("report generator");
     });
     time("E14 table3 full area/energy table", 2, || {
-        report::table3(&ctx, threads);
+        report::table3(&ctx, threads).expect("report generator");
     });
     time("E15 fig27/28 off-chip accesses", 20, || {
         report::fig27_28(&ctx);
     });
     time("E16 fig29/31 memory breakdowns", 3, || {
-        report::memory_breakdown(&ctx, "capsnet", threads);
-        report::memory_breakdown(&ctx, "deepcaps", threads);
+        report::memory_breakdown(&ctx, "capsnet", threads).expect("report generator");
+        report::memory_breakdown(&ctx, "deepcaps", threads).expect("report generator");
     });
     time("E17 fig30 HY-PG sector schedule", 3, || {
-        report::fig30(&ctx, threads);
+        report::fig30(&ctx, threads).expect("report generator");
     });
     time("E18 headline summary", 3, || {
-        report::headline(&ctx, threads);
+        report::headline(&ctx, threads).expect("report generator");
+    });
+    time("E19 multi-network co-design DSE", 2, || {
+        let (set, names) = report::default_serving_mix(&ctx).expect("serving mix");
+        report::multi_dse(&ctx, &set, &names, threads).expect("report generator");
     });
 }

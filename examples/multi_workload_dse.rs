@@ -1,0 +1,76 @@
+//! Multi-network co-design walkthrough: one scratchpad organization sized
+//! and selected across a workload *set* — the two paper benchmarks, a
+//! batched CapsNet scenario, and a seeded random NASCaps-style network.
+//!
+//!   cargo run --release --example multi_workload_dse
+//!
+//! Equivalent CLI: `descnet dse --net capsnet,deepcaps --random 1 --seed 42`
+//! (add `--batch 4` to profile every member at batch 4, or
+//! `--workload configs/workloads/edge_serving_mix.json` for a spec-file
+//! mix with explicit serving weights).
+
+use descnet::config::SystemConfig;
+use descnet::dataflow::{profile_network, profile_network_batched};
+use descnet::dse::multi::{self, WorkloadSet};
+use descnet::model::{capsnet_mnist, deepcaps_cifar10, random_network};
+use descnet::util::exec::Engine;
+use descnet::util::units::{fmt_energy, fmt_size};
+
+fn main() {
+    let cfg = SystemConfig::default();
+
+    // 1. The workload set: four scenarios sharing one accelerator.
+    let rand_net = random_network(42);
+    let profiles = vec![
+        profile_network(&capsnet_mnist(), &cfg.accel),
+        profile_network(&deepcaps_cifar10(), &cfg.accel),
+        profile_network_batched(&capsnet_mnist(), &cfg.accel, 4),
+        profile_network(&rand_net, &cfg.accel),
+    ];
+    let names = ["capsnet", "deepcaps", "capsnet@b4", "rand-42"];
+    for (n, p) in names.iter().zip(&profiles) {
+        println!(
+            "{n:12} {:2} ops  D {:>9}  W {:>9}  A {:>9}  {:7.1} fps",
+            p.ops.len(),
+            fmt_size(p.max_d()),
+            fmt_size(p.max_w()),
+            fmt_size(p.max_a()),
+            p.fps(),
+        );
+    }
+
+    // 2. Serving mix: capsnet dominates the traffic.
+    let set = WorkloadSet::with_weights(profiles, vec![0.5, 0.1, 0.3, 0.1])
+        .expect("valid workload set");
+
+    // 3. Co-design: union sizing, mix-weighted energy objective, the usual
+    //    Pareto / per-option selection.
+    let result = multi::run_on(&Engine::auto(), &set, &cfg.tech).expect("co-design DSE");
+    println!(
+        "\nco-design space: {} organizations, {} on the Pareto frontier",
+        result.points.len(),
+        result.pareto.len()
+    );
+    for (option, idx) in &result.selected {
+        let p = &result.points[*idx];
+        let per_net: Vec<String> = result.per_net_j[*idx]
+            .iter()
+            .zip(names)
+            .map(|(e, n)| format!("{n} {}", fmt_energy(*e)))
+            .collect();
+        println!(
+            "  {option:7}  area {:6.3} mm²  E-mix {}  [{}]",
+            p.area_mm2,
+            fmt_energy(p.energy_j),
+            per_net.join(", ")
+        );
+    }
+
+    // 4. The organization a serving deployment would instantiate.
+    let best = result.codesigned().expect("non-empty selection");
+    println!(
+        "\nco-designed organization: {} ({} total on-chip SPM)",
+        result.points[best].org.label(),
+        fmt_size(result.points[best].org.total_size()),
+    );
+}

@@ -43,7 +43,7 @@ fn main() {
             MemSpec::new(w_sz, sc),
             MemSpec::new(a_sz, 1),
         );
-        let report = pmu::evaluate(&org, &profile, &cfg.tech);
+        let report = pmu::evaluate(&org, &profile, &cfg.tech).expect("PMU evaluation");
         let w = report
             .components
             .iter()
@@ -90,7 +90,7 @@ fn main() {
         MemSpec::new(32 * KIB, 2),
         3,
     );
-    let report = pmu::evaluate(&hy_pg, &profile, &cfg.tech);
+    let report = pmu::evaluate(&hy_pg, &profile, &cfg.tech).expect("PMU evaluation");
     let mut table = Table::new(&["op", "shared", "data", "weight", "acc"]);
     for (i, op) in profile.ops.iter().enumerate() {
         let cell = |c: Component| {
@@ -112,7 +112,7 @@ fn main() {
         fmt_energy(report.static_no_pg_j()),
         report.wakeup_masked(),
     );
-    let e = energy::evaluate_org(&hy_pg, &profile, &cfg.tech);
+    let e = energy::evaluate_org(&hy_pg, &profile, &cfg.tech).expect("energy rollup");
     println!(
         "HY-PG on-chip total: {} ({} dynamic, {} static, {} wakeup)",
         fmt_energy(e.energy_j()),

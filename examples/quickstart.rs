@@ -38,7 +38,7 @@ fn main() {
 
     // 3. Exhaustive DSE (Algorithms 1-2) on the shared engine + Pareto
     //    selection (Fig 18).
-    let result = dse::run_on(&Engine::auto(), &profile, &cfg.tech);
+    let result = dse::run_on(&Engine::auto(), &profile, &cfg.tech).expect("DSE over the paper profile");
     println!(
         "DSE: {} configurations, {} on the Pareto frontier",
         result.points.len(),
@@ -55,10 +55,11 @@ fn main() {
     }
 
     // 4. Headline: complete accelerator vs the baseline of [1] (Fig 23/24).
-    let baseline = energy::version_a(&profile, &cfg.tech);
+    let baseline = energy::version_a(&profile, &cfg.tech).expect("baseline rollup");
     let selected: std::collections::BTreeMap<_, _> = result.selected.iter().cloned().collect();
     let hy_pg = &result.points[selected["HY-PG"]];
-    let system = energy::system_with_org(&profile, &cfg.tech, &hy_pg.org, "DESCNet");
+    let system = energy::system_with_org(&profile, &cfg.tech, &hy_pg.org, "DESCNet")
+        .expect("system rollup");
     println!(
         "HY-PG complete accelerator: {} vs baseline {} -> {:.0}% energy saved (paper: 79%)",
         fmt_energy(system.total_j()),

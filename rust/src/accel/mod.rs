@@ -69,8 +69,8 @@ pub fn sim_op(op: &Operation, accel: &Accelerator) -> OpSim {
             // Tile loop: output-channel tiles of 16 x input-channel tiles of
             // 16; each tile's weights (kh*kw*16*16 bytes) stream at 16 B/cyc
             // double-buffered against the tile's MAC work.
-            let co_tiles = (cout + accel.array_cols - 1) / accel.array_cols;
-            let ci_tiles = (cin + accel.array_rows - 1) / accel.array_rows;
+            let co_tiles = cout.div_ceil(accel.array_cols);
+            let ci_tiles = cin.div_ceil(accel.array_rows);
             let mut compute = 0u64;
             let mut weight_stream = 0u64;
             let mut pending_load = 0u64; // first tile load is exposed

@@ -17,10 +17,10 @@ use super::batcher::BatchPolicy;
 use super::request::{Request, Response};
 use super::stats::ServeStats;
 use crate::config::SystemConfig;
-use crate::dataflow::profile_network;
-use crate::dse;
+use crate::dataflow::{profile_network_batched, NetworkProfile};
+use crate::dse::multi::{self, WorkloadSet};
 use crate::energy::system_with_org;
-use crate::memory::{MemSpec, Organization};
+use crate::memory::Organization;
 use crate::model::capsnet_mnist;
 use crate::runtime::{argmax_per_row, Runtime};
 use crate::util::exec;
@@ -73,13 +73,34 @@ pub fn synthetic_image(rng: &mut Prng, hw: usize) -> Vec<f32> {
     img
 }
 
-/// Per-inference co-simulated energy: the complete DESCNet system (SEP
-/// organization, Table I) around one CapsNet inference.
-fn per_inference_energy_j(cfg: &SystemConfig) -> f64 {
-    let profile = profile_network(&capsnet_mnist(), &cfg.accel);
-    let (d, w, a) = dse::sep_sizes(&profile);
-    let org = Organization::sep(MemSpec::new(d, 1), MemSpec::new(w, 1), MemSpec::new(a, 1));
-    system_with_org(&profile, &cfg.tech, &org, "serving").total_j()
+/// Batch-aware co-simulated energy: one organization co-designed (via
+/// `dse::multi`) across the CapsNet profiles of every batch size the
+/// batcher may execute, then evaluated per batch — so each served
+/// inference is accounted with the energy of the batch it actually rode
+/// in (weight traffic and static energy amortize as batches fill).
+pub(crate) fn codesigned_energy(
+    cfg: &SystemConfig,
+    batches: &[usize],
+) -> Result<(Organization, std::collections::BTreeMap<usize, f64>)> {
+    anyhow::ensure!(!batches.is_empty(), "no batch sizes to co-design for");
+    let net = capsnet_mnist();
+    let profiles: Vec<NetworkProfile> = batches
+        .iter()
+        .map(|&b| profile_network_batched(&net, &cfg.accel, b))
+        .collect();
+    let set = WorkloadSet::new(profiles)?;
+    let result = multi::run(&set, &cfg.tech, exec::default_threads())
+        .context("co-designing the serving organization")?;
+    let best = result
+        .codesigned()
+        .ok_or_else(|| anyhow::anyhow!("co-design DSE selected no organization"))?;
+    let org = result.points[best].org.clone();
+    let mut by_batch = std::collections::BTreeMap::new();
+    for (b, p) in batches.iter().zip(set.profiles()) {
+        let sys = system_with_org(p, &cfg.tech, &org, "serving")?;
+        by_batch.insert(*b, sys.total_j());
+    }
+    Ok((org, by_batch))
 }
 
 impl Server {
@@ -89,7 +110,6 @@ impl Server {
         let mut runtime = Runtime::new(&opts.artifacts_dir)
             .context("loading artifacts (run `make artifacts` first)")?;
         let platform = runtime.platform();
-        let energy_per_inf = per_inference_energy_j(&cfg);
 
         // Discover batch sizes and pre-compile executables (outside the
         // serving loop — compilation is a startup cost).
@@ -100,6 +120,11 @@ impl Server {
             .filter(|&b| b <= opts.batch_max)
             .collect();
         anyhow::ensure!(!batches.is_empty(), "no capsnet batch <= {}", opts.batch_max);
+
+        // Co-design one SPM organization across every batch size the
+        // batcher may execute; each served inference is then accounted
+        // with the per-inference energy of its actual batch.
+        let (_serving_org, energy_by_batch) = codesigned_energy(&cfg, &batches)?;
         let stages: &[&str] = if opts.stage_pipeline {
             &["conv1", "primarycaps", "classcaps"]
         } else {
@@ -178,6 +203,10 @@ impl Server {
                 let take = batch.min(pending.len());
                 let reqs: Vec<Request> = pending.drain(..take).collect();
                 let pad = batch - take;
+                let energy_per_inf = energy_by_batch
+                    .get(&batch)
+                    .copied()
+                    .ok_or_else(|| anyhow::anyhow!("no co-designed energy for batch {batch}"))?;
                 let t_exec = Instant::now();
                 let responses = if opts.stage_pipeline {
                     Self::execute_staged(&mut runtime, batch, &reqs, pad, energy_per_inf)?
@@ -287,9 +316,21 @@ mod tests {
     }
 
     #[test]
-    fn per_inference_energy_is_millijoule_scale() {
-        let e = per_inference_energy_j(&SystemConfig::default());
-        assert!(e > 1e-4 && e < 0.1, "{e}");
+    fn codesigned_energy_is_millijoule_scale_and_amortizes() {
+        let cfg = SystemConfig::default();
+        let (org, by_batch) = codesigned_energy(&cfg, &[1, 2, 4]).unwrap();
+        assert!(org.total_size() > 0);
+        for (&b, &e) in &by_batch {
+            assert!(e > 1e-4 && e < 0.1, "batch {b}: {e}");
+        }
+        // Bigger batches amortize weight traffic + static energy.
+        assert!(by_batch[&4] < by_batch[&1]);
+        assert!(by_batch[&2] < by_batch[&1]);
+    }
+
+    #[test]
+    fn codesigned_energy_rejects_empty_batch_list() {
+        assert!(codesigned_energy(&SystemConfig::default(), &[]).is_err());
     }
 
     #[test]

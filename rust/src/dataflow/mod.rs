@@ -41,8 +41,18 @@ use crate::model::{LayerGroup, Network, OpKind, Operation, RoutingHalf};
 /// the Table II accumulator size.
 pub const VOTE_RING_OVERLAY: usize = 96 * 1024;
 
-/// Everything the paper measures about one operation, per inference.
-#[derive(Debug, Clone)]
+/// Everything the paper measures about one operation, per **batch**
+/// execution (batch 1 == per inference, the paper's setting).
+///
+/// Batch semantics: each op processes the whole batch before the next op
+/// runs, with weights resident across the batch — so weight *parameter*
+/// traffic (conv/vote transform streams through the weight SPM, and the
+/// weight off-chip fetch) is paid once per batch while activation,
+/// accumulator, squash and per-sample routing-state work (the b/c
+/// coupling state is also billed to the weight SPM) scale with the batch
+/// size.  Working sets are per-sample (activations stream through sample
+/// by sample), so coverage and SPM sizing are batch-invariant.
+#[derive(Debug, Clone, PartialEq)]
 pub struct OpProfile {
     pub name: String,
     pub group: LayerGroup,
@@ -79,11 +89,13 @@ impl OpProfile {
 }
 
 /// Profile of a full network on the accelerator.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct NetworkProfile {
     pub network: String,
     pub ops: Vec<OpProfile>,
     pub clock_hz: f64,
+    /// Inferences per batch execution (op quantities are per batch).
+    pub batch: usize,
 }
 
 impl NetworkProfile {
@@ -91,12 +103,19 @@ impl NetworkProfile {
         self.ops.iter().map(|o| o.cycles).sum()
     }
 
-    /// Inference latency [s] (compute-bound; the prefetcher check in
-    /// `memory::prefetch` verifies off-chip latency is hidden).
-    pub fn inference_s(&self) -> f64 {
+    /// One batch execution [s].
+    pub fn batch_s(&self) -> f64 {
         self.total_cycles() as f64 / self.clock_hz
     }
 
+    /// Per-inference latency [s]: the batch time amortized over the batch
+    /// (compute-bound; the prefetcher check in `memory::prefetch` verifies
+    /// off-chip latency is hidden).
+    pub fn inference_s(&self) -> f64 {
+        self.batch_s() / self.batch.max(1) as f64
+    }
+
+    /// Per-inference throughput (amortized over the batch).
     pub fn fps(&self) -> f64 {
         1.0 / self.inference_s()
     }
@@ -156,17 +175,36 @@ impl NetworkProfile {
     }
 }
 
-/// Profiles a whole network on the given accelerator.
+/// Profiles a whole network at batch 1 (the paper's setting).
 pub fn profile_network(net: &Network, accel: &Accelerator) -> NetworkProfile {
+    profile_network_batched(net, accel, 1)
+}
+
+/// Profiles a whole network for `batch` inferences per execution.  Batch 1
+/// is bit-identical to [`profile_network`]; larger batches amortize weight
+/// traffic (and, downstream, static/wakeup energy) per inference.
+pub fn profile_network_batched(net: &Network, accel: &Accelerator, batch: usize) -> NetworkProfile {
+    let batch = batch.max(1);
     NetworkProfile {
         network: net.name.clone(),
-        ops: net.ops.iter().map(|op| profile_op(op, accel)).collect(),
+        ops: net
+            .ops
+            .iter()
+            .map(|op| profile_op_batched(op, accel, batch))
+            .collect(),
         clock_hz: accel.clock_hz,
+        batch,
     }
 }
 
-/// Profiles one operation (the core analytical model).
+/// Profiles one operation at batch 1 (the core analytical model).
 pub fn profile_op(op: &Operation, accel: &Accelerator) -> OpProfile {
+    profile_op_batched(op, accel, 1)
+}
+
+/// Profiles one operation over a batch (see [`OpProfile`] for semantics).
+pub fn profile_op_batched(op: &Operation, accel: &Accelerator, batch: usize) -> OpProfile {
+    let b = batch.max(1) as u64;
     match &op.kind {
         OpKind::Conv2d {
             hin,
@@ -183,6 +221,7 @@ pub fn profile_op(op: &Operation, accel: &Accelerator) -> OpProfile {
         } => conv_profile(
             op,
             accel,
+            b,
             (*hin, *win, *cin),
             (*hout, *wout, *cout),
             (*kh, *kw),
@@ -196,7 +235,17 @@ pub fn profile_op(op: &Operation, accel: &Accelerator) -> OpProfile {
             dout,
             weights_in_pe_regs,
             votes_in_acc,
-        } => votes_profile(op, accel, *ni, *no, *di, *dout, *weights_in_pe_regs, *votes_in_acc),
+        } => votes_profile(
+            op,
+            accel,
+            b,
+            *ni,
+            *no,
+            *di,
+            *dout,
+            *weights_in_pe_regs,
+            *votes_in_acc,
+        ),
         OpKind::Routing {
             ni,
             no,
@@ -205,13 +254,26 @@ pub fn profile_op(op: &Operation, accel: &Accelerator) -> OpProfile {
             total_iters,
             half,
             votes_in_acc,
-        } => routing_profile(op, accel, *ni, *no, *dout, *iter, *total_iters, *half, *votes_in_acc),
+        } => routing_profile(
+            op,
+            accel,
+            b,
+            *ni,
+            *no,
+            *dout,
+            *iter,
+            *total_iters,
+            *half,
+            *votes_in_acc,
+        ),
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn conv_profile(
     op: &Operation,
     accel: &Accelerator,
+    b: u64,
     (hin, win, cin): (usize, usize, usize),
     (hout, wout, cout): (usize, usize, usize),
     (kh, kw): (usize, usize),
@@ -220,15 +282,17 @@ fn conv_profile(
 ) -> OpProfile {
     let db = accel.data_bytes;
     let pes = accel.pes() as u64;
-    let macs = (hout * wout * cout * kh * kw * cin) as u64;
-    let fmap_in = hin * win * cin * db;
-    let out_bytes = (hout * wout * cout * db) as u64;
+    let macs = b * (hout * wout * cout * kh * kw * cin) as u64;
+    let fmap_in = hin * win * cin * db; // per-sample (working-set) bytes
+    let out_bytes = b * (hout * wout * cout * db) as u64;
     let params = op.param_bytes();
 
     // --- cycles: MAC-bound streaming + squash drain through the 16-lane
-    // activation unit + pipeline fill/drain.
+    // activation unit + pipeline fill/drain.  Weights are resident across
+    // the batch, so the weight stream is paid once while MAC/squash work
+    // scales with b.
     let squash_cycles =
-        (squash_caps * accel.squash_cycles_per_elem / accel.array_cols.max(1)) as u64;
+        b * (squash_caps * accel.squash_cycles_per_elem / accel.array_cols.max(1)) as u64;
     // Weight-port bound: the weight SPM delivers one `array_cols`-byte row
     // per cycle, so layers whose weight volume outruns their MAC count (the
     // FC ClassCaps, notably) are weight-stream bound — as in CapsAcc.
@@ -246,9 +310,9 @@ fn conv_profile(
     let usage_a = hout * wout * cout.min(accel.array_cols) * accel.acc_bytes
         + accel.array_rows * accel.array_cols * accel.acc_bytes;
 
-    // --- accesses.
-    let wr_d = fmap_in as u64; // filled from DRAM once
-    let rd_d = 2 * fmap_in as u64; // window-overlap re-reads (row-reuse regs)
+    // --- accesses (per batch: activation traffic x b, weight traffic x 1).
+    let wr_d = b * fmap_in as u64; // filled from DRAM once per sample
+    let rd_d = 2 * b * fmap_in as u64; // window-overlap re-reads (row-reuse regs)
     let rd_w = params;
     let wr_w = params;
     // One psum update per column per cycle -> macs/rows accumulator
@@ -273,7 +337,7 @@ fn conv_profile(
         off_rd: wr_d + wr_w, // appendix Eq. 3
         off_wr: out_bytes,   // appendix Eq. 4
         macs,
-        act_ops: (squash_caps + hout * wout * cout) as u64, // squash + relu
+        act_ops: b * (squash_caps + hout * wout * cout) as u64, // squash + relu
     }
 }
 
@@ -281,6 +345,7 @@ fn conv_profile(
 fn votes_profile(
     op: &Operation,
     accel: &Accelerator,
+    b: u64,
     ni: usize,
     no: usize,
     di: usize,
@@ -290,25 +355,27 @@ fn votes_profile(
 ) -> OpProfile {
     let db = accel.data_bytes;
     let pes = accel.pes() as u64;
-    let macs = (ni * no * di * dout) as u64;
+    let macs = b * (ni * no * di * dout) as u64;
     let params = op.param_bytes();
-    let uhat_bytes = (ni * no * dout * db) as u64;
+    let uhat_bytes = b * (ni * no * dout * db) as u64;
 
     // Weight-stream bound (see conv_profile): the 1.47 MB ClassCaps
     // transform stream at 16 B/cycle dominates its 5.8 k MAC cycles.
     let w_stream = if weights_in_pe_regs { 0 } else { params / accel.array_cols as u64 };
     let cycles = (macs / pes).max(w_stream) + accel.op_overhead_cycles as u64;
 
-    let usage_d = ni * di * db; // input capsule poses resident
+    let usage_d = ni * di * db; // input capsule poses resident (per sample)
     let usage_w = if weights_in_pe_regs {
         0 // spatially-shared transforms pinned in PE register files
     } else {
         accel.classcaps_w_tile_caps * no * di * dout * db // streamed tile
     };
     let usage_a = if votes_in_acc {
-        // 3-D ConvCaps vote ring buffer: full vote tensor minus one drained
-        // position slot (overlaid by routing state) — stays <= 8 MiB.
-        ni * no * dout * accel.acc_bytes - VOTE_RING_OVERLAY
+        // 3-D ConvCaps vote ring buffer: one sample's full vote tensor
+        // minus one drained position slot (overlaid by routing state) —
+        // stays <= 8 MiB.  Saturating: a generated network whose vote
+        // tensor is smaller than the overlay simply has no residual ring.
+        (ni * no * dout * accel.acc_bytes).saturating_sub(VOTE_RING_OVERLAY)
     } else {
         // psum staging for one output capsule across the 16 row-groups
         accel.array_rows * dout * accel.acc_bytes
@@ -328,15 +395,16 @@ fn votes_profile(
         usage_d,
         usage_w,
         usage_a,
-        rd_d: (ni * di * no) as u64, // u re-read per output capsule
-        wr_d: (ni * di) as u64,
+        rd_d: b * (ni * di * no) as u64, // u re-read per output capsule
+        wr_d: b * (ni * di) as u64,
         // PE-register-pinned transforms never touch the weight SPM (they
-        // are loaded once from DRAM straight into the register files).
+        // are loaded once from DRAM straight into the register files);
+        // streamed transforms refill the SPM once per batch.
         rd_w: if weights_in_pe_regs { 0 } else { params },
         wr_w: if weights_in_pe_regs { 0 } else { params },
         rd_a: acc_updates,
         wr_a: acc_updates + wr_a_extra,
-        off_rd: (ni * di) as u64 * db as u64 + params,
+        off_rd: b * (ni * di) as u64 * db as u64 + params,
         off_wr,
         macs,
         act_ops: 0,
@@ -347,6 +415,7 @@ fn votes_profile(
 fn routing_profile(
     op: &Operation,
     accel: &Accelerator,
+    b: u64,
     ni: usize,
     no: usize,
     dout: usize,
@@ -356,28 +425,29 @@ fn routing_profile(
     votes_in_acc: bool,
 ) -> OpProfile {
     let db = accel.data_bytes;
-    let pairs = (ni * no) as u64;
+    let pairs = b * (ni * no) as u64;
     let macs = pairs * dout as u64;
-    let uhat_bytes = (ni * no * dout * db) as u64;
+    let uhat_bytes = b * (ni * no * dout * db) as u64;
     let state_bytes = (ni * no * 2 * accel.routing_state_bytes) as u64;
 
     // --- cycles: one 16-long dot product per cycle on the PE row (so
     // pairs*dout/16), plus the per-output-capsule serialized normalization
     // tail, capped by the double-buffered normalization unit (DESIGN.md
-    // section 6 calibration).
+    // section 6 calibration).  Routing state is per-sample, so the whole
+    // body scales with b.
     let j_overhead = (ni * accel.routing_act_serial_cycles).min(accel.routing_j_overhead_cap);
-    let cycles =
-        pairs * dout as u64 / accel.array_rows as u64 + (no * j_overhead) as u64
-            + accel.op_overhead_cycles as u64;
+    let cycles = pairs * dout as u64 / accel.array_rows as u64
+        + b * (no * j_overhead) as u64
+        + accel.op_overhead_cycles as u64;
 
-    // --- working sets.
+    // --- working sets (per sample).
     let (usage_d, usage_w, usage_a);
     if votes_in_acc {
         // 3-D ConvCaps routing runs in place over the vote ring buffer;
         // state overlays the drained slot.
         usage_d = 0;
         usage_w = 0;
-        usage_a = ni * no * dout * accel.acc_bytes - VOTE_RING_OVERLAY;
+        usage_a = (ni * no * dout * accel.acc_bytes).saturating_sub(VOTE_RING_OVERLAY);
     } else {
         usage_d = ni * dout * db; // per-j vote tile
         usage_w = if state_bytes as usize <= 65_536 {
@@ -411,7 +481,7 @@ fn routing_profile(
             }
             wr_a += macs / accel.array_rows as u64; // psum updates
             rd_a += macs / accel.array_rows as u64;
-            act_ops += (no * dout) as u64; // squash
+            act_ops += b * (no * dout) as u64; // squash
             if iter == 1 && !votes_in_acc {
                 // per-j vote tiles fetched from DRAM exactly once for the
                 // whole routing phase — the paper's pointer (4).
@@ -429,16 +499,16 @@ fn routing_profile(
                 rd_w += pairs; // b
                 wr_w += 2 * pairs; // b update + c write
             }
-            rd_a += (no * dout) as u64; // v_j
+            rd_a += b * (no * dout) as u64; // v_j
             act_ops += pairs; // exp per coupling coefficient
             if iter == total_iters {
                 // final poses written back (last routing op writes off-chip,
                 // staged through whichever SPM holds the routing state)
-                off_wr = (no * dout * accel.acc_bytes) as u64;
+                off_wr = b * (no * dout * accel.acc_bytes) as u64;
                 if votes_in_acc {
-                    wr_a += (no * dout) as u64;
+                    wr_a += b * (no * dout) as u64;
                 } else {
-                    wr_d += (no * dout) as u64;
+                    wr_d += b * (no * dout) as u64;
                 }
             }
         }
@@ -707,5 +777,102 @@ mod tests {
         let base = capsnet_profile();
         assert_eq!(p.total_cycles(), base.total_cycles());
         assert!((p.fps() - 2.0 * base.fps()).abs() < 0.5);
+    }
+
+    // ------------------------------------------------ batch parameterization
+
+    #[test]
+    fn batch_one_is_bit_identical_to_default_profile() {
+        for net in [capsnet_mnist(), deepcaps_cifar10()] {
+            let a = profile_network(&net, &Accelerator::default());
+            let b = profile_network_batched(&net, &Accelerator::default(), 1);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn batch_amortizes_weight_traffic_and_cycles() {
+        let accel = Accelerator::default();
+        let net = capsnet_mnist();
+        let b1 = profile_network(&net, &accel);
+        let b8 = profile_network_batched(&net, &accel, 8);
+        assert_eq!(b8.batch, 8);
+
+        // Weight *parameter* traffic (conv/vote transform streams) is paid
+        // once per batch, not per inference; the routing ops' coupling
+        // state is per-sample and scales with the batch instead.
+        let w_param_traffic = |p: &NetworkProfile| -> u64 {
+            p.ops
+                .iter()
+                .filter(|o| o.group != LayerGroup::DynRouting)
+                .map(|o| o.rd_w + o.wr_w)
+                .sum()
+        };
+        assert_eq!(w_param_traffic(&b1), w_param_traffic(&b8));
+        let routing_state_traffic = |p: &NetworkProfile| -> u64 {
+            p.ops
+                .iter()
+                .filter(|o| o.group == LayerGroup::DynRouting)
+                .map(|o| o.rd_w + o.wr_w)
+                .sum()
+        };
+        assert_eq!(8 * routing_state_traffic(&b1), routing_state_traffic(&b8));
+
+        // The weight-stream-bound ClassCaps becomes MAC-bound: its batch-8
+        // cycles are well below 8x its batch-1 cycles.
+        let class1 = b1.op("Class").unwrap().cycles;
+        let class8 = b8.op("Class").unwrap().cycles;
+        assert!(class8 < 8 * class1, "{class8} vs 8x{class1}");
+
+        // Per-inference throughput therefore improves with batching.
+        assert!(b8.fps() > b1.fps(), "{} <= {}", b8.fps(), b1.fps());
+        // ...and per-inference latency shrinks while batch latency grows.
+        assert!(b8.inference_s() < b1.inference_s());
+        assert!(b8.batch_s() > b1.batch_s());
+    }
+
+    #[test]
+    fn batch_keeps_working_sets_and_scales_activation_traffic() {
+        let accel = Accelerator::default();
+        let net = deepcaps_cifar10();
+        let b1 = profile_network(&net, &accel);
+        let b4 = profile_network_batched(&net, &accel, 4);
+        for (o1, o4) in b1.ops.iter().zip(&b4.ops) {
+            // SPM sizing (coverage) is batch-invariant.
+            assert_eq!(o1.usage_d, o4.usage_d, "{}", o1.name);
+            assert_eq!(o1.usage_w, o4.usage_w, "{}", o1.name);
+            assert_eq!(o1.usage_a, o4.usage_a, "{}", o1.name);
+            // Activation-side traffic scales with the batch.
+            assert_eq!(4 * o1.rd_d, o4.rd_d, "{}", o1.name);
+            assert_eq!(4 * o1.wr_d, o4.wr_d, "{}", o1.name);
+            // Compute scales exactly.
+            assert_eq!(4 * o1.macs, o4.macs, "{}", o1.name);
+        }
+        // Eq. 3 (off_rd = wr_d + wr_w) survives batching for the convs.
+        for name in ["Conv1", "Cell0-Conv0"] {
+            let op = b4.op(name).unwrap();
+            assert_eq!(op.off_rd, op.wr_d + op.wr_w, "{name}");
+        }
+    }
+
+    #[test]
+    fn tiny_vote_tensor_saturates_ring_overlay() {
+        // A generated network whose 3-D vote tensor is below the ring
+        // overlay must profile with an empty residual ring, not panic.
+        let op = Operation {
+            name: "TinyVotes".into(),
+            group: LayerGroup::ConvCaps3D,
+            kind: OpKind::Votes {
+                ni: 64,
+                no: 8,
+                di: 4,
+                dout: 4,
+                weights_in_pe_regs: true,
+                votes_in_acc: true,
+            },
+        };
+        let p = profile_op(&op, &Accelerator::default());
+        assert_eq!(p.usage_a, 0);
+        assert!(p.cycles > 0);
     }
 }

@@ -39,7 +39,9 @@ struct CompCosts {
     area: f64,
 }
 
-/// Fast (area_mm2, energy_j) evaluation of one organization.
+/// Fast (area_mm2, energy_j) evaluation of one organization; the energy is
+/// per inference (the profile's per-batch totals amortized over
+/// `NetworkProfile::batch`, matching `energy::evaluate_org`).
 pub fn area_energy(org: &Organization, profile: &NetworkProfile, tech: &Technology) -> (f64, f64) {
     // One technology fingerprint for all four component lookups.
     let costs_of = cache::for_tech(tech);
@@ -111,7 +113,7 @@ pub fn area_energy(org: &Organization, profile: &NetworkProfile, tech: &Technolo
             if c.sectors <= 1 {
                 energy += c.leak_on * dur;
             } else {
-                let on = (needs[i] + c.sector_bytes - 1) / c.sector_bytes;
+                let on = needs[i].div_ceil(c.sector_bytes);
                 let off = c.sectors - on;
                 energy += dur * (on as f64 * c.leak_sector_on + off as f64 * c.leak_sector_off);
                 energy += on.saturating_sub(prev_on[i]) as f64 * c.wakeup_e;
@@ -121,7 +123,7 @@ pub fn area_energy(org: &Organization, profile: &NetworkProfile, tech: &Technolo
     }
 
     let area = comps.iter().filter(|c| c.present).map(|c| c.area).sum();
-    (area, energy)
+    (area, energy / profile.batch.max(1) as f64)
 }
 
 #[cfg(test)]
@@ -141,13 +143,13 @@ mod tests {
         let tech = Technology::default();
         for net in [capsnet_mnist(), deepcaps_cifar10()] {
             let p = profile_network(&net, &accel);
-            let orgs = dse::enumerate(&p);
+            let orgs = dse::enumerate(&p).unwrap();
             for (k, org) in orgs.iter().enumerate() {
                 if k % 97 != 0 {
                     continue; // sample ~1%
                 }
                 let (fast_area, fast_e) = area_energy(org, &p, &tech);
-                let slow = evaluate_org(org, &p, &tech);
+                let slow = evaluate_org(org, &p, &tech).unwrap();
                 let slow_e = slow.energy_j();
                 assert!(
                     (fast_area - slow.area_mm2()).abs() < 1e-12,
@@ -161,6 +163,28 @@ mod tests {
                     org.label()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn fast_matches_reference_at_batch_8() {
+        // The per-inference amortization must agree between the fast path
+        // and the readable evaluator for batched profiles too.
+        use crate::dataflow::profile_network_batched;
+        let accel = Accelerator::default();
+        let tech = Technology::default();
+        let p = profile_network_batched(&capsnet_mnist(), &accel, 8);
+        for (k, org) in dse::enumerate(&p).unwrap().iter().enumerate() {
+            if k % 211 != 0 {
+                continue;
+            }
+            let (_, fast_e) = area_energy(org, &p, &tech);
+            let slow_e = evaluate_org(org, &p, &tech).unwrap().energy_j();
+            assert!(
+                (fast_e - slow_e).abs() <= slow_e * 1e-12 + 1e-18,
+                "{}: energy {fast_e} vs {slow_e}",
+                org.label()
+            );
         }
     }
 }

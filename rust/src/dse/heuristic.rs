@@ -67,7 +67,9 @@ struct Space {
 impl Space {
     fn materialize(&self, st: &State, profile: &NetworkProfile) -> Option<Organization> {
         let (d, w, a) = (self.d_pool[st.d], self.w_pool[st.w], self.a_pool[st.a]);
-        let s = hy_shared_size(profile, d, w, a);
+        // An erroring shared-size derivation (malformed workload) simply
+        // yields no candidate; the annealer moves on.
+        let s = hy_shared_size(profile, d, w, a).ok()?;
         if s == 0 {
             return None; // degenerate SEP; annealer stays in HY space
         }
@@ -259,7 +261,7 @@ mod tests {
     use crate::model::capsnet_mnist;
 
     fn exhaustive_hy_optimum(profile: &NetworkProfile, tech: &Technology) -> f64 {
-        let orgs = dse::enumerate(profile);
+        let orgs = dse::enumerate(profile).unwrap();
         let points = dse::evaluate_all(&orgs, profile, tech, 4);
         points
             .iter()

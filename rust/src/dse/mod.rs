@@ -12,7 +12,10 @@
 
 pub mod evaluate;
 pub mod heuristic;
+pub mod multi;
 pub mod pools;
+
+use anyhow::{anyhow, Context, Result};
 
 use crate::config::Technology;
 use crate::dataflow::NetworkProfile;
@@ -53,8 +56,10 @@ pub fn smp_size(profile: &NetworkProfile) -> usize {
 }
 
 /// The shared-memory size Algorithm 1 computes for a dedicated-size triple:
-/// the operation-wise worst-case residual, pool-rounded.
-pub fn hy_shared_size(profile: &NetworkProfile, d: usize, w: usize, a: usize) -> usize {
+/// the operation-wise worst-case residual, pool-rounded.  Errors (instead
+/// of panicking) on a workload whose residuals overflow even the unbounded
+/// probe — the failure mode of a malformed workload spec.
+pub fn hy_shared_size(profile: &NetworkProfile, d: usize, w: usize, a: usize) -> Result<usize> {
     let probe = Organization::hy(
         MemSpec::new(usize::MAX / 4, 1),
         MemSpec::new(d, 1),
@@ -62,19 +67,24 @@ pub fn hy_shared_size(profile: &NetworkProfile, d: usize, w: usize, a: usize) ->
         MemSpec::new(a, 1),
         3,
     );
-    let max_residual = profile
-        .ops
-        .iter()
-        .map(|op| cover_op(&probe, op).expect("unbounded shared").shared_total())
-        .max()
-        .unwrap_or(0);
-    pools::roundup(max_residual)
+    let mut max_residual = 0;
+    for op in &profile.ops {
+        let cov = cover_op(&probe, op).ok_or_else(|| {
+            anyhow!(
+                "operation '{}' of '{}' overflows the unbounded shared-memory probe",
+                op.name,
+                profile.network
+            )
+        })?;
+        max_residual = max_residual.max(cov.shared_total());
+    }
+    Ok(pools::roundup(max_residual))
 }
 
 /// Full enumeration: SMP + SEP + HY, each with every valid sector
 /// combination (Algorithm 2).  SEP and SMP boundary cases of HY are
 /// emitted once, as their own design options.
-pub fn enumerate(profile: &NetworkProfile) -> Vec<Organization> {
+pub fn enumerate(profile: &NetworkProfile) -> Result<Vec<Organization>> {
     let mut out = Vec::new();
     let (sd, sw, sa) = sep_sizes(profile);
 
@@ -100,7 +110,8 @@ pub fn enumerate(profile: &NetworkProfile) -> Vec<Organization> {
     for &d in &pools::size_pool(profile.max_d()) {
         for &w in &pools::size_pool(profile.max_w()) {
             for &a in &pools::size_pool(profile.max_a()) {
-                let s = hy_shared_size(profile, d, w, a);
+                let s = hy_shared_size(profile, d, w, a)
+                    .context("Algorithm 1 shared-size derivation")?;
                 if s == 0 {
                     continue; // degenerates to SEP (emitted above)
                 }
@@ -130,7 +141,7 @@ pub fn enumerate(profile: &NetworkProfile) -> Vec<Organization> {
         }
     }
     debug_assert!(out.iter().all(|o| org_fits(o, profile)));
-    out
+    Ok(out)
 }
 
 fn or_one(pool: Vec<usize>) -> Vec<usize> {
@@ -144,9 +155,9 @@ fn or_one(pool: Vec<usize>) -> Vec<usize> {
 /// The Fig 22 study: HY organizations with the shared memory constrained to
 /// `ports` ports (only configurations whose spill pattern actually needs no
 /// more than that many value types simultaneously are valid).
-pub fn enumerate_hy_ports(profile: &NetworkProfile, ports: usize) -> Vec<Organization> {
+pub fn enumerate_hy_ports(profile: &NetworkProfile, ports: usize) -> Result<Vec<Organization>> {
     let mut out = Vec::new();
-    for org in enumerate(profile) {
+    for org in enumerate(profile)? {
         if org.kind != OrgKind::Hy {
             continue;
         }
@@ -156,7 +167,7 @@ pub fn enumerate_hy_ports(profile: &NetworkProfile, ports: usize) -> Vec<Organiz
             out.push(constrained);
         }
     }
-    out
+    Ok(out)
 }
 
 /// Evaluates organizations on the shared execution engine.  Results come
@@ -226,22 +237,22 @@ pub struct DseResult {
     pub selected: Vec<(String, usize)>,
 }
 
-pub fn run(profile: &NetworkProfile, tech: &Technology, threads: usize) -> DseResult {
+pub fn run(profile: &NetworkProfile, tech: &Technology, threads: usize) -> Result<DseResult> {
     run_on(&Engine::new(threads), profile, tech)
 }
 
 /// The full pipeline on an existing engine: enumerate → evaluate → Pareto
 /// → per-option selection.
-pub fn run_on(engine: &Engine, profile: &NetworkProfile, tech: &Technology) -> DseResult {
-    let orgs = enumerate(profile);
+pub fn run_on(engine: &Engine, profile: &NetworkProfile, tech: &Technology) -> Result<DseResult> {
+    let orgs = enumerate(profile)?;
     let points = evaluate_all_on(engine, &orgs, profile, tech);
     let pareto = pareto_indices(&points);
     let selected = select_per_option(&points);
-    DseResult {
+    Ok(DseResult {
         points,
         pareto,
         selected,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -268,18 +279,18 @@ mod tests {
         let p = profile();
         // Dedicated memories at SEP sizes -> nothing spills -> shared = 0.
         let (d, w, a) = sep_sizes(&p);
-        assert_eq!(hy_shared_size(&p, d, w, a), 0);
+        assert_eq!(hy_shared_size(&p, d, w, a).unwrap(), 0);
         // No dedicated memories -> shared covers the SMP worst case.
-        assert_eq!(hy_shared_size(&p, 0, 0, 0), 108 * KIB);
+        assert_eq!(hy_shared_size(&p, 0, 0, 0).unwrap(), 108 * KIB);
         // Partial coverage -> something in between.
-        let s = hy_shared_size(&p, 8 * KIB, 32 * KIB, 16 * KIB);
+        let s = hy_shared_size(&p, 8 * KIB, 32 * KIB, 16 * KIB).unwrap();
         assert!(s > 0 && s < 108 * KIB, "{s}");
     }
 
     #[test]
     fn enumeration_covers_all_design_options() {
         let p = profile();
-        let orgs = enumerate(&p);
+        let orgs = enumerate(&p).unwrap();
         let opts: std::collections::BTreeSet<String> = orgs
             .iter()
             .map(|o| {
@@ -304,7 +315,7 @@ mod tests {
     #[test]
     fn every_enumerated_org_fits_the_profile() {
         let p = profile();
-        for org in enumerate(&p) {
+        for org in enumerate(&p).unwrap() {
             assert!(crate::memory::org_fits(&org, &p), "{:?}", org.label());
         }
     }
@@ -313,7 +324,7 @@ mod tests {
     fn evaluation_is_deterministic_and_parallel_consistent() {
         let p = profile();
         let tech = Technology::default();
-        let orgs: Vec<_> = enumerate(&p).into_iter().take(300).collect();
+        let orgs: Vec<_> = enumerate(&p).unwrap().into_iter().take(300).collect();
         let seq = evaluate_all(&orgs, &p, &tech, 1);
         let par = evaluate_all(&orgs, &p, &tech, 4);
         assert_eq!(seq.len(), par.len());
@@ -328,7 +339,7 @@ mod tests {
     fn selected_sep_matches_table_i_and_frontier_shape() {
         let p = profile();
         let tech = Technology::default();
-        let res = run(&p, &tech, 4);
+        let res = run(&p, &tech, 4).unwrap();
         let sel: std::collections::BTreeMap<_, _> = res.selected.iter().cloned().collect();
 
         // SEP selection == Table I sizes by construction.
@@ -397,7 +408,7 @@ mod tests {
         // rust/tests/engine_cache.rs).
         let p = profile();
         let tech = Technology::default();
-        let orgs: Vec<_> = enumerate(&p).into_iter().take(800).collect();
+        let orgs: Vec<_> = enumerate(&p).unwrap().into_iter().take(800).collect();
         let serial = evaluate_all_on(&Engine::new(1), &orgs, &p, &tech);
         let parallel = evaluate_all_on(&Engine::new(4), &orgs, &p, &tech);
         for (a, b) in serial.iter().zip(&parallel) {
@@ -439,14 +450,14 @@ mod tests {
     #[test]
     fn port_constrained_enumeration_is_nonempty_and_valid() {
         let p = profile();
-        let one_port = enumerate_hy_ports(&p, 1);
+        let one_port = enumerate_hy_ports(&p, 1).unwrap();
         assert!(!one_port.is_empty());
         for org in &one_port {
             assert_eq!(org.shared_ports, 1);
             assert!(required_shared_ports(org, &p) <= 1);
         }
         // More ports admit at least as many configurations.
-        let two_port = enumerate_hy_ports(&p, 2);
+        let two_port = enumerate_hy_ports(&p, 2).unwrap();
         assert!(two_port.len() >= one_port.len());
     }
 
@@ -454,7 +465,7 @@ mod tests {
     fn pareto_members_not_dominated() {
         let p = profile();
         let tech = Technology::default();
-        let orgs: Vec<_> = enumerate(&p).into_iter().take(2_000).collect();
+        let orgs: Vec<_> = enumerate(&p).unwrap().into_iter().take(2_000).collect();
         let points = evaluate_all(&orgs, &p, &tech, 4);
         let front = pareto_indices(&points);
         assert!(!front.is_empty());

@@ -1,0 +1,335 @@
+//! Multi-network co-design DSE: one memory organization sized and selected
+//! across a *set* of workloads (CapStore, arXiv:1902.01151, motivates
+//! sizing one on-chip memory for multiple workloads; NASCaps,
+//! arXiv:2008.08476, supplies the families).
+//!
+//! Method:
+//! * **sizing** — the workload set is merged into one pseudo-profile (ops
+//!   concatenated, names prefixed `net/`), so Algorithm 1/2 enumeration
+//!   over it uses the component-wise *union* of working sets: every
+//!   emitted organization fits every operation of every network;
+//! * **objective** — each organization is scored by the mix-weighted sum
+//!   of its per-network, per-inference energies (the serving mix: weight
+//!   w_i = fraction of inferences served for network i), evaluated through
+//!   the same fast path (`dse::evaluate`) and memoized CACTI cost cache as
+//!   the single-network sweep;
+//! * **selection** — the existing Pareto / per-design-option machinery
+//!   runs unchanged over the weighted points, so Tables I/II-style
+//!   selections fall out per design option, now co-designed.
+
+use anyhow::{ensure, Context, Result};
+
+use super::{evaluate, pareto_indices, select_per_option, DsePoint};
+use crate::config::Technology;
+use crate::dataflow::NetworkProfile;
+use crate::memory::Organization;
+use crate::util::exec::Engine;
+
+/// A set of network profiles plus the serving-mix weights (normalized to
+/// sum 1) used for the weighted-energy objective.
+#[derive(Debug, Clone)]
+pub struct WorkloadSet {
+    profiles: Vec<NetworkProfile>,
+    weights: Vec<f64>,
+}
+
+impl WorkloadSet {
+    /// Equal-mix workload set.
+    pub fn new(profiles: Vec<NetworkProfile>) -> Result<WorkloadSet> {
+        let n = profiles.len();
+        ensure!(n > 0, "empty workload set");
+        WorkloadSet::with_weights(profiles, vec![1.0; n])
+    }
+
+    /// Workload set with explicit mix weights (normalized internally).
+    pub fn with_weights(profiles: Vec<NetworkProfile>, weights: Vec<f64>) -> Result<WorkloadSet> {
+        ensure!(!profiles.is_empty(), "empty workload set");
+        ensure!(
+            profiles.len() == weights.len(),
+            "{} weights for {} profiles",
+            weights.len(),
+            profiles.len()
+        );
+        for (p, &w) in profiles.iter().zip(&weights) {
+            ensure!(
+                w.is_finite() && w > 0.0,
+                "non-positive mix weight {w} for network '{}'",
+                p.network
+            );
+        }
+        let total: f64 = weights.iter().sum();
+        Ok(WorkloadSet {
+            profiles,
+            weights: weights.into_iter().map(|w| w / total).collect(),
+        })
+    }
+
+    /// Traffic-weighted mix: weights proportional to each network's
+    /// per-inference off-chip traffic, so the networks that move the most
+    /// data dominate the co-designed organization's energy objective.
+    pub fn traffic_weighted(profiles: Vec<NetworkProfile>) -> Result<WorkloadSet> {
+        let weights: Vec<f64> = profiles
+            .iter()
+            .map(|p| (p.total_off_chip() as f64 / p.batch.max(1) as f64).max(1.0))
+            .collect();
+        WorkloadSet::with_weights(profiles, weights)
+    }
+
+    pub fn profiles(&self) -> &[NetworkProfile] {
+        &self.profiles
+    }
+
+    /// Normalized mix weights (sum 1), same order as [`Self::profiles`].
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    /// The sizing pseudo-profile: all ops of all networks concatenated
+    /// (names prefixed `net/`), so `dse::enumerate` derives component-wise
+    /// working-set *unions* and Algorithm 1 residuals over the whole set.
+    pub fn merged_profile(&self) -> NetworkProfile {
+        let ops = self
+            .profiles
+            .iter()
+            .flat_map(|p| {
+                p.ops.iter().map(move |op| {
+                    let mut op = op.clone();
+                    op.name = format!("{}/{}", p.network, op.name);
+                    op
+                })
+            })
+            .collect();
+        NetworkProfile {
+            network: "workload-set".into(),
+            ops,
+            clock_hz: self.profiles[0].clock_hz,
+            batch: 1,
+        }
+    }
+}
+
+/// Result of a co-design sweep: `points[i].energy_j` is the mix-weighted
+/// per-inference energy; `per_net_j[i][k]` the unweighted per-inference
+/// energy of network `k` on organization `i`.
+pub struct MultiDseResult {
+    pub points: Vec<DsePoint>,
+    pub per_net_j: Vec<Vec<f64>>,
+    pub pareto: Vec<usize>,
+    pub selected: Vec<(String, usize)>,
+}
+
+impl MultiDseResult {
+    /// Index of the lowest-weighted-energy selected organization — the
+    /// co-designed organization a serving deployment would instantiate.
+    pub fn codesigned(&self) -> Option<usize> {
+        self.selected
+            .iter()
+            .map(|&(_, i)| i)
+            .min_by(|&a, &b| {
+                self.points[a]
+                    .energy_j
+                    .partial_cmp(&self.points[b].energy_j)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+    }
+}
+
+/// Enumerates co-design candidates: every organization valid for every
+/// network of the set (union sizing).
+pub fn enumerate(set: &WorkloadSet) -> Result<Vec<Organization>> {
+    super::enumerate(&set.merged_profile()).context("enumerating over the merged workload set")
+}
+
+/// Engine-parallel weighted evaluation; deterministic in input order for
+/// any worker count (same engine contract as the single-network sweep).
+pub fn evaluate_all_on(
+    engine: &Engine,
+    orgs: &[Organization],
+    set: &WorkloadSet,
+    tech: &Technology,
+) -> (Vec<DsePoint>, Vec<Vec<f64>>) {
+    let evals: Vec<(DsePoint, Vec<f64>)> = engine.map(orgs, |org| {
+        let mut per_net = Vec::with_capacity(set.profiles.len());
+        let mut area = 0.0;
+        let mut energy = 0.0;
+        for (p, wgt) in set.profiles.iter().zip(&set.weights) {
+            let (a, e) = evaluate::area_energy(org, p, tech);
+            area = a; // identical for every network: one physical org
+            energy += wgt * e;
+            per_net.push(e);
+        }
+        (
+            DsePoint {
+                org: org.clone(),
+                area_mm2: area,
+                energy_j: energy,
+            },
+            per_net,
+        )
+    });
+    evals.into_iter().unzip()
+}
+
+/// The full co-design pipeline on an existing engine.
+pub fn run_on(engine: &Engine, set: &WorkloadSet, tech: &Technology) -> Result<MultiDseResult> {
+    let orgs = enumerate(set)?;
+    let (points, per_net_j) = evaluate_all_on(engine, &orgs, set, tech);
+    let pareto = pareto_indices(&points);
+    let selected = select_per_option(&points);
+    Ok(MultiDseResult {
+        points,
+        per_net_j,
+        pareto,
+        selected,
+    })
+}
+
+/// Convenience over a fresh engine.
+pub fn run(set: &WorkloadSet, tech: &Technology, threads: usize) -> Result<MultiDseResult> {
+    run_on(&Engine::new(threads), set, tech)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Accelerator;
+    use crate::dataflow::{profile_network, profile_network_batched};
+    use crate::dse;
+    use crate::memory::org_fits;
+    use crate::model::{capsnet_mnist, deepcaps_cifar10, random_network};
+
+    fn set2() -> WorkloadSet {
+        let accel = Accelerator::default();
+        WorkloadSet::new(vec![
+            profile_network(&capsnet_mnist(), &accel),
+            profile_network(&deepcaps_cifar10(), &accel),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn merged_profile_takes_component_unions() {
+        let set = set2();
+        let merged = set.merged_profile();
+        let caps = &set.profiles()[0];
+        let deep = &set.profiles()[1];
+        assert_eq!(merged.ops.len(), caps.ops.len() + deep.ops.len());
+        assert_eq!(merged.max_d(), caps.max_d().max(deep.max_d()));
+        assert_eq!(merged.max_w(), caps.max_w().max(deep.max_w()));
+        assert_eq!(merged.max_a(), caps.max_a().max(deep.max_a()));
+        assert_eq!(merged.max_total(), caps.max_total().max(deep.max_total()));
+        assert!(merged.op("capsnet/Prim").is_some());
+        assert!(merged.op("deepcaps/Caps3D-Votes").is_some());
+    }
+
+    #[test]
+    fn every_codesign_candidate_fits_every_network() {
+        let set = set2();
+        let orgs = enumerate(&set).unwrap();
+        assert!(!orgs.is_empty());
+        for org in orgs.iter().step_by(97) {
+            for p in set.profiles() {
+                assert!(org_fits(org, p), "{} unfit for {}", org.label(), p.network);
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_energy_is_the_mix_of_per_net_energies() {
+        let accel = Accelerator::default();
+        let tech = Technology::default();
+        let profiles = vec![
+            profile_network(&capsnet_mnist(), &accel),
+            profile_network(&deepcaps_cifar10(), &accel),
+        ];
+        let set = WorkloadSet::with_weights(profiles, vec![3.0, 1.0]).unwrap();
+        assert!((set.weights()[0] - 0.75).abs() < 1e-12);
+        let orgs: Vec<_> = enumerate(&set).unwrap().into_iter().take(50).collect();
+        let (points, per_net) = evaluate_all_on(&Engine::new(2), &orgs, &set, &tech);
+        for (pt, nets) in points.iter().zip(&per_net) {
+            let expect = 0.75 * nets[0] + 0.25 * nets[1];
+            assert!(
+                (pt.energy_j - expect).abs() <= expect * 1e-12,
+                "{} vs {expect}",
+                pt.energy_j
+            );
+        }
+    }
+
+    #[test]
+    fn single_network_set_reproduces_single_network_dse() {
+        // Equal machinery: a 1-element set must select exactly what the
+        // single-network sweep selects (modulo the name prefix).
+        let accel = Accelerator::default();
+        let tech = Technology::default();
+        let p = profile_network(&capsnet_mnist(), &accel);
+        let single = dse::run(&p, &tech, 2).unwrap();
+        let set = WorkloadSet::new(vec![p]).unwrap();
+        let multi = run(&set, &tech, 2).unwrap();
+        assert_eq!(single.points.len(), multi.points.len());
+        assert_eq!(single.selected, multi.selected);
+        for (a, b) in single.points.iter().zip(&multi.points) {
+            assert_eq!(a.org, b.org);
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn codesign_over_three_networks_selects_one_org() {
+        let accel = Accelerator::default();
+        let tech = Technology::default();
+        let set = WorkloadSet::new(vec![
+            profile_network(&capsnet_mnist(), &accel),
+            profile_network_batched(&capsnet_mnist(), &accel, 4),
+            profile_network(&random_network(3), &accel),
+        ])
+        .unwrap();
+        let res = run(&set, &tech, 4).unwrap();
+        assert!(!res.points.is_empty());
+        assert!(!res.selected.is_empty());
+        let best = res.codesigned().unwrap();
+        // The co-designed org fits every member and has 3 per-net energies.
+        assert_eq!(res.per_net_j[best].len(), 3);
+        for (p, &e) in set.profiles().iter().zip(&res.per_net_j[best]) {
+            assert!(org_fits(&res.points[best].org, p));
+            assert!(e > 0.0 && e.is_finite());
+        }
+        // Batched capsnet must be cheaper per inference than batch-1.
+        assert!(res.per_net_j[best][1] < res.per_net_j[best][0]);
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let set = set2();
+        let tech = Technology::default();
+        let orgs: Vec<_> = enumerate(&set).unwrap().into_iter().take(400).collect();
+        let (p1, n1) = evaluate_all_on(&Engine::new(1), &orgs, &set, &tech);
+        let (p4, n4) = evaluate_all_on(&Engine::new(4), &orgs, &set, &tech);
+        for ((a, b), (na, nb)) in p1.iter().zip(&p4).zip(n1.iter().zip(&n4)) {
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+            assert_eq!(na.len(), nb.len());
+            for (x, y) in na.iter().zip(nb) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_sets_report_errors() {
+        let accel = Accelerator::default();
+        assert!(WorkloadSet::new(vec![]).is_err());
+        let p = profile_network(&capsnet_mnist(), &accel);
+        assert!(WorkloadSet::with_weights(vec![p.clone()], vec![1.0, 2.0]).is_err());
+        assert!(WorkloadSet::with_weights(vec![p.clone()], vec![0.0]).is_err());
+        assert!(WorkloadSet::with_weights(vec![p], vec![f64::NAN]).is_err());
+    }
+}

@@ -8,6 +8,17 @@
 //! `memory::dram` the off-chip side, and this module rolls them up.  All
 //! SRAM costs come through the shared cost cache, so reporting reuses the
 //! entries the DSE sweep warmed.
+//!
+//! Conventions:
+//! * every energy this module reports is **per inference**: the profile's
+//!   per-batch quantities are amortized over `NetworkProfile::batch`
+//!   (batch 1, the paper's setting, divides by 1 and is bit-identical to
+//!   the pre-batching rollups);
+//! * evaluators return `anyhow::Result` instead of panicking — an
+//!   organization that does not fit the profile (e.g. from a malformed
+//!   workload spec) reports an error instead of aborting the sweep.
+
+use anyhow::{anyhow, Context, Result};
 
 use crate::cacti::cache;
 use crate::config::Technology;
@@ -66,56 +77,70 @@ impl OrgEnergy {
     }
 }
 
-/// Evaluates one organization's on-chip memories over one inference.
-pub fn evaluate_org(org: &Organization, profile: &NetworkProfile, tech: &Technology) -> OrgEnergy {
-    let pmu_report = pmu::evaluate(org, profile, tech);
+/// Evaluates one organization's on-chip memories, per inference.
+pub fn evaluate_org(
+    org: &Organization,
+    profile: &NetworkProfile,
+    tech: &Technology,
+) -> Result<OrgEnergy> {
+    let per_inf = 1.0 / profile.batch.max(1) as f64;
+    let pmu_report = pmu::evaluate(org, profile, tech)?;
     let costs_of = cache::for_tech(tech);
     let mut memories = Vec::new();
     for (component, spec) in org.components() {
-        let cfg = org.sram_config(component).unwrap();
+        let cfg = org
+            .sram_config(component)
+            .ok_or_else(|| anyhow!("instantiated component {} has no spec", component.label()))?;
         let costs = costs_of.costs(&cfg);
         let mut dyn_j = 0.0;
         for op in &profile.ops {
-            let cov = cover_op(org, op).expect("org must fit profile");
+            let cov = cover_op(org, op).ok_or_else(|| {
+                anyhow!(
+                    "operation '{}' of '{}' does not fit organization {}",
+                    op.name,
+                    profile.network,
+                    org.label()
+                )
+            })?;
             dyn_j += component_accesses(op, &cov, component) * costs.access_energy_j;
         }
         let stat = pmu_report
             .components
             .iter()
             .find(|c| c.component == component)
-            .unwrap();
+            .ok_or_else(|| anyhow!("PMU report misses component {}", component.label()))?;
         memories.push(MemEnergy {
             component,
             spec,
             area_mm2: costs.area_mm2,
-            dyn_j,
-            static_j: stat.static_energy_j,
-            wakeup_j: stat.wakeup_energy_j,
+            dyn_j: dyn_j * per_inf,
+            static_j: stat.static_energy_j * per_inf,
+            wakeup_j: stat.wakeup_energy_j * per_inf,
         });
     }
-    OrgEnergy {
+    Ok(OrgEnergy {
         label: org.label(),
         memories,
-    }
+    })
 }
 
 /// Per-operation on-chip memory energy (Figs 19d / 21d): dynamic accesses
-/// of that op plus the (PG-aware) leakage spent during it.
+/// of that op plus the (PG-aware) leakage spent during it, per inference.
 pub fn per_op_energy(
     org: &Organization,
     profile: &NetworkProfile,
     tech: &Technology,
-) -> Vec<(String, f64)> {
-    let pmu_report = pmu::evaluate(org, profile, tech);
+) -> Result<Vec<(String, f64)>> {
+    let per_inf = 1.0 / profile.batch.max(1) as f64;
+    let pmu_report = pmu::evaluate(org, profile, tech)?;
     let costs_of = cache::for_tech(tech);
-    let comps: Vec<_> = org
-        .components()
-        .iter()
-        .map(|&(c, spec)| {
-            let costs = costs_of.costs(&org.sram_config(c).unwrap());
-            (c, spec, costs)
-        })
-        .collect();
+    let mut comps = Vec::new();
+    for (c, spec) in org.components() {
+        let cfg = org
+            .sram_config(c)
+            .ok_or_else(|| anyhow!("instantiated component {} has no spec", c.label()))?;
+        comps.push((c, spec, costs_of.costs(&cfg)));
+    }
 
     profile
         .ops
@@ -123,21 +148,26 @@ pub fn per_op_energy(
         .enumerate()
         .map(|(i, op)| {
             let dur = op.cycles as f64 / profile.clock_hz;
-            let cov = cover_op(org, op).expect("fits");
+            let cov = cover_op(org, op).ok_or_else(|| {
+                anyhow!("operation '{}' does not fit organization {}", op.name, org.label())
+            })?;
             let mut e = 0.0;
             for (c, spec, costs) in &comps {
                 e += component_accesses(op, &cov, *c) * costs.access_energy_j;
                 if spec.sectors <= 1 {
                     e += costs.leak_on_w * dur;
                 } else {
-                    let on = pmu_report.schedule(*c).unwrap().on[i];
+                    let on = pmu_report
+                        .schedule(*c)
+                        .ok_or_else(|| anyhow!("no PMU schedule for {}", c.label()))?
+                        .on[i];
                     let off = spec.sectors - on;
                     e += dur
                         * (on as f64 * costs.leak_sector_on_w
                             + off as f64 * costs.leak_sector_off_w);
                 }
             }
-            (op.name.clone(), e)
+            Ok((op.name.clone(), e * per_inf))
         })
         .collect()
 }
@@ -156,9 +186,11 @@ impl AccelEnergy {
 }
 
 pub fn accel_energy(profile: &NetworkProfile, tech: &Technology) -> AccelEnergy {
+    let per_inf = 1.0 / profile.batch.max(1) as f64;
     AccelEnergy {
-        dyn_j: profile.total_macs() as f64 * tech.mac_energy_j
-            + profile.total_act_ops() as f64 * tech.act_energy_j,
+        dyn_j: (profile.total_macs() as f64 * tech.mac_energy_j
+            + profile.total_act_ops() as f64 * tech.act_energy_j)
+            * per_inf,
         static_j: tech.accel_leak_w * profile.inference_s(),
     }
 }
@@ -177,9 +209,10 @@ impl DramEnergy {
 }
 
 pub fn dram_energy(profile: &NetworkProfile, tech: &Technology) -> DramEnergy {
+    let per_inf = 1.0 / profile.batch.max(1) as f64;
     let dram = Dram::new(tech);
     DramEnergy {
-        transfer_j: dram.transfer_energy_j(profile.total_off_chip()),
+        transfer_j: dram.transfer_energy_j(profile.total_off_chip()) * per_inf,
         background_j: dram.background_energy_j(profile.inference_s()),
     }
 }
@@ -215,26 +248,32 @@ impl SystemEnergy {
 
 /// Version (a): the state-of-the-art baseline of [1] — everything in one
 /// 8 MiB on-chip SPM, no DRAM traffic during inference.
-pub fn version_a(profile: &NetworkProfile, tech: &Technology) -> SystemEnergy {
+pub fn version_a(profile: &NetworkProfile, tech: &Technology) -> Result<SystemEnergy> {
+    let per_inf = 1.0 / profile.batch.max(1) as f64;
     let org = Organization::smp(MemSpec::new(8 * MIB, 1));
     // All accesses (including what the hierarchy would fetch off-chip) hit
     // the big SPM; its single port is modelled 1-port since [1] reports a
     // monolithic buffer + small staging FIFOs.
     let mut big = Organization::smp(MemSpec::new(8 * MIB, 1));
     big.shared_ports = 1;
-    let costs = cache::costs(tech, &big.sram_config(Component::Shared).unwrap());
+    let cfg = big
+        .sram_config(Component::Shared)
+        .ok_or_else(|| anyhow!("SMP organization lost its shared memory"))?;
+    let costs = cache::costs(tech, &cfg);
     let accesses: f64 = profile
         .ops
         .iter()
         .map(|op| op.spm_accesses() as f64 + (op.off_rd + op.off_wr) as f64)
         .sum();
-    let dyn_j = accesses * costs.access_energy_j;
+    let dyn_j = accesses * costs.access_energy_j * per_inf;
     let static_j = costs.leak_on_w * profile.inference_s();
     let onchip = OrgEnergy {
         label: "all-on-chip 8 MiB".into(),
         memories: vec![MemEnergy {
             component: Component::Shared,
-            spec: org.shared.unwrap(),
+            spec: org
+                .shared
+                .ok_or_else(|| anyhow!("SMP organization lost its shared memory"))?,
             area_mm2: costs.area_mm2,
             dyn_j,
             static_j,
@@ -243,13 +282,13 @@ pub fn version_a(profile: &NetworkProfile, tech: &Technology) -> SystemEnergy {
     };
     let accel = accel_energy(profile, tech);
     let area = costs.area_mm2 + tech.accel_area_mm2;
-    SystemEnergy {
+    Ok(SystemEnergy {
         label: "version (a): all on-chip [1]".into(),
         accel,
         onchip,
         dram: None,
         area_mm2: area,
-    }
+    })
 }
 
 /// Version (b): the modified architecture of Fig 8b before DESCNet
@@ -258,7 +297,7 @@ pub fn version_b(
     profile: &NetworkProfile,
     tech: &Technology,
     smp_size: usize,
-) -> SystemEnergy {
+) -> Result<SystemEnergy> {
     let org = Organization::smp(MemSpec::new(smp_size, 1));
     system_with_org(profile, tech, &org, "version (b): on-chip + off-chip")
 }
@@ -269,15 +308,16 @@ pub fn system_with_org(
     tech: &Technology,
     org: &Organization,
     label: &str,
-) -> SystemEnergy {
-    let onchip = evaluate_org(org, profile, tech);
-    SystemEnergy {
+) -> Result<SystemEnergy> {
+    let onchip = evaluate_org(org, profile, tech)
+        .with_context(|| format!("evaluating {label} [{}]", org.label()))?;
+    Ok(SystemEnergy {
         label: format!("{label} [{}]", org.label()),
         accel: accel_energy(profile, tech),
         dram: Some(dram_energy(profile, tech)),
         area_mm2: onchip.area_mm2() + tech.accel_area_mm2,
         onchip,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -314,7 +354,7 @@ mod tests {
     fn sep_static_energies_match_table_iii() {
         // Paper: W 0.501 mJ, D 0.188 mJ, A 0.238 mJ static.
         let tech = Technology::default();
-        let e = evaluate_org(&sep(), &profile(), &tech);
+        let e = evaluate_org(&sep(), &profile(), &tech).unwrap();
         let w = e.memory(Component::Weight).unwrap().static_j;
         let d = e.memory(Component::Data).unwrap().static_j;
         let a = e.memory(Component::Acc).unwrap().static_j;
@@ -327,7 +367,7 @@ mod tests {
     fn sep_accumulator_dynamic_matches_table_iii() {
         // Paper: accumulator dynamic 0.196 mJ (the largest dynamic term).
         let tech = Technology::default();
-        let e = evaluate_org(&sep(), &profile(), &tech);
+        let e = evaluate_org(&sep(), &profile(), &tech).unwrap();
         let a = e.memory(Component::Acc).unwrap().dyn_j;
         assert!((a - 0.196e-3).abs() / 0.196e-3 < 0.35, "A dyn {a}");
         // And it dominates the data-memory dynamic energy.
@@ -338,7 +378,7 @@ mod tests {
     fn sep_weight_dynamic_order_matches_table_iii() {
         // Paper: 0.051 mJ.
         let tech = Technology::default();
-        let e = evaluate_org(&sep(), &profile(), &tech);
+        let e = evaluate_org(&sep(), &profile(), &tech).unwrap();
         let w = e.memory(Component::Weight).unwrap().dyn_j;
         assert!((0.02e-3..0.15e-3).contains(&w), "W dyn {w}");
     }
@@ -347,8 +387,8 @@ mod tests {
     fn pg_reduces_static_keeps_dynamic() {
         // Fig 19c observation (3): dynamic unchanged between non-PG and PG.
         let tech = Technology::default();
-        let base = evaluate_org(&sep(), &profile(), &tech);
-        let pg = evaluate_org(&sep_pg(), &profile(), &tech);
+        let base = evaluate_org(&sep(), &profile(), &tech).unwrap();
+        let pg = evaluate_org(&sep_pg(), &profile(), &tech).unwrap();
         assert!((pg.dyn_j() - base.dyn_j()).abs() / base.dyn_j() < 1e-9);
         assert!(pg.static_j() < 0.75 * base.static_j());
         assert!(pg.wakeup_j() > 0.0 && pg.wakeup_j() < 1e-6);
@@ -363,8 +403,8 @@ mod tests {
         // substitute.
         let tech = Technology::default();
         let p = profile();
-        let a = version_a(&p, &tech);
-        let b = version_b(&p, &tech, 108 * KIB);
+        let a = version_a(&p, &tech).unwrap();
+        let b = version_b(&p, &tech, 108 * KIB).unwrap();
         let saving = 1.0 - b.total_j() / a.total_j();
         assert!((0.60..0.92).contains(&saving), "saving {saving:.3}");
     }
@@ -375,9 +415,9 @@ mod tests {
         // the total energy".
         let tech = Technology::default();
         let p = profile();
-        let b = version_b(&p, &tech, 108 * KIB);
+        let b = version_b(&p, &tech, 108 * KIB).unwrap();
         assert!(b.memory_share() > 0.85, "share {:.3}", b.memory_share());
-        let a = version_a(&p, &tech);
+        let a = version_a(&p, &tech).unwrap();
         assert!(a.onchip_share() > 0.9);
     }
 
@@ -385,7 +425,7 @@ mod tests {
     fn version_b_onchip_share_is_minor_but_significant() {
         // Paper: on-chip ~31% of version (b) total; we accept 15-45%.
         let tech = Technology::default();
-        let b = version_b(&profile(), &tech, 108 * KIB);
+        let b = version_b(&profile(), &tech, 108 * KIB).unwrap();
         let share = b.onchip_share();
         assert!((0.15..0.45).contains(&share), "{share:.3}");
     }
@@ -398,8 +438,8 @@ mod tests {
         // complete accelerator" (HY-PG); SEP: 78%.
         let tech = Technology::default();
         let p = profile();
-        let a = version_a(&p, &tech);
-        let sep_sys = system_with_org(&p, &tech, &sep(), "DESCNet");
+        let a = version_a(&p, &tech).unwrap();
+        let sep_sys = system_with_org(&p, &tech, &sep(), "DESCNet").unwrap();
         let hy_pg = Organization::hy(
             MemSpec::new(32 * KIB, 2),
             MemSpec::new(25 * KIB, 2),
@@ -407,7 +447,7 @@ mod tests {
             MemSpec::new(32 * KIB, 2),
             3,
         );
-        let hy_sys = system_with_org(&p, &tech, &hy_pg, "DESCNet");
+        let hy_sys = system_with_org(&p, &tech, &hy_pg, "DESCNet").unwrap();
         let sep_saving = 1.0 - sep_sys.total_j() / a.total_j();
         let hy_saving = 1.0 - hy_sys.total_j() / a.total_j();
         assert!((0.65..0.95).contains(&sep_saving), "SEP {sep_saving:.3}");
@@ -425,9 +465,9 @@ mod tests {
         let tech = Technology::default();
         let p = profile();
         let org = sep_pg();
-        let per_op: f64 = per_op_energy(&org, &p, &tech).iter().map(|(_, e)| e).sum();
+        let per_op: f64 = per_op_energy(&org, &p, &tech).unwrap().iter().map(|(_, e)| e).sum();
         let total = {
-            let e = evaluate_org(&org, &p, &tech);
+            let e = evaluate_org(&org, &p, &tech).unwrap();
             e.dyn_j() + e.static_j() // wakeups are transition events, not per-op
         };
         assert!((per_op - total).abs() / total < 1e-6, "{per_op} vs {total}");
@@ -438,7 +478,7 @@ mod tests {
         // Fig 19d: "the highest portion of energy comes from the Prim
         // layer" (high utilization + frequent access + long duration).
         let tech = Technology::default();
-        let per_op = per_op_energy(&sep(), &profile(), &tech);
+        let per_op = per_op_energy(&sep(), &profile(), &tech).unwrap();
         let prim = per_op.iter().find(|(n, _)| n == "Prim").unwrap().1;
         let max = per_op.iter().map(|(_, e)| *e).fold(0.0, f64::max);
         assert!((prim - max).abs() < 1e-12, "Prim {prim} max {max}");
@@ -449,8 +489,8 @@ mod tests {
         // Fig 19d pointer (6): routing-op energy drops most under -PG.
         let tech = Technology::default();
         let p = profile();
-        let base = per_op_energy(&sep(), &p, &tech);
-        let pg = per_op_energy(&sep_pg(), &p, &tech);
+        let base = per_op_energy(&sep(), &p, &tech).unwrap();
+        let pg = per_op_energy(&sep_pg(), &p, &tech).unwrap();
         let ratio = |name: &str| {
             let b = base.iter().find(|(n, _)| n == name).unwrap().1;
             let g = pg.iter().find(|(n, _)| n == name).unwrap().1;
@@ -465,8 +505,67 @@ mod tests {
         // Fig 12: the computational array is a few percent of the total.
         let tech = Technology::default();
         let p = profile();
-        let b = version_b(&p, &tech, 108 * KIB);
+        let b = version_b(&p, &tech, 108 * KIB).unwrap();
         let share = b.accel.total_j() / b.total_j();
         assert!(share < 0.12, "accel share {share:.3}");
+    }
+
+    // ------------------------------------------------- batch amortization
+
+    #[test]
+    fn batching_amortizes_per_inference_energy() {
+        // Weight traffic and static/wakeup energy amortize as batch grows:
+        // the per-inference on-chip + system energy must fall monotonically
+        // over 1 -> 4 -> 16.
+        use crate::dataflow::profile_network_batched;
+        let tech = Technology::default();
+        let net = crate::model::capsnet_mnist();
+        let accel = Accelerator::default();
+        let mut prev_onchip = f64::INFINITY;
+        let mut prev_total = f64::INFINITY;
+        for batch in [1usize, 4, 16] {
+            let p = profile_network_batched(&net, &accel, batch);
+            let onchip = evaluate_org(&sep_pg(), &p, &tech).unwrap().energy_j();
+            let total = system_with_org(&p, &tech, &sep_pg(), "b").unwrap().total_j();
+            assert!(onchip < prev_onchip, "batch {batch}: {onchip} >= {prev_onchip}");
+            assert!(total < prev_total, "batch {batch}: {total} >= {prev_total}");
+            prev_onchip = onchip;
+            prev_total = total;
+        }
+    }
+
+    #[test]
+    fn batch_one_energy_matches_unbatched_exactly() {
+        use crate::dataflow::profile_network_batched;
+        let tech = Technology::default();
+        let net = crate::model::capsnet_mnist();
+        let accel = Accelerator::default();
+        let a = evaluate_org(&sep_pg(), &profile(), &tech).unwrap();
+        let b = evaluate_org(
+            &sep_pg(),
+            &profile_network_batched(&net, &accel, 1),
+            &tech,
+        )
+        .unwrap();
+        assert_eq!(a.energy_j().to_bits(), b.energy_j().to_bits());
+        assert_eq!(a.area_mm2().to_bits(), b.area_mm2().to_bits());
+    }
+
+    // ------------------------------------------------------ error reporting
+
+    #[test]
+    fn unfitting_org_reports_error_instead_of_panicking() {
+        let tech = Technology::default();
+        let p = profile();
+        // 8 kiB everything: Prim's working set cannot fit anywhere.
+        let tiny = Organization::sep(
+            MemSpec::new(8 * KIB, 1),
+            MemSpec::new(8 * KIB, 1),
+            MemSpec::new(8 * KIB, 1),
+        );
+        let err = evaluate_org(&tiny, &p, &tech).unwrap_err();
+        assert!(format!("{err:#}").contains("does not fit"), "{err:#}");
+        assert!(per_op_energy(&tiny, &p, &tech).is_err());
+        assert!(system_with_org(&p, &tech, &tiny, "x").is_err());
     }
 }

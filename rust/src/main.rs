@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   analyze   print the per-operation workload profile (Figs 1/9/10/11)
-//!   dse       run the design-space exploration (Figs 18/20/22, Tables I/II)
+//!   dse       run the design-space exploration (Figs 18/20/22, Tables I/II);
+//!             with a multi-network workload set (--workload / --random /
+//!             comma-separated --net) it runs the co-design stage (dse::multi)
 //!   report    regenerate paper figures/tables into results/ (see DESIGN.md E-index)
 //!   serve     serve CapsNet inference via the PJRT runtime + coordinator
 //!   headline  print the paper-vs-ours headline metrics
@@ -12,8 +14,9 @@ use std::path::PathBuf;
 use descnet::accel;
 use descnet::config::SystemConfig;
 use descnet::coordinator::server::{ServeOptions, Server};
-use descnet::dataflow::profile_network;
-use descnet::model::{capsnet_mnist, deepcaps_cifar10};
+use descnet::dataflow::{profile_network_batched, NetworkProfile};
+use descnet::dse::multi::WorkloadSet;
+use descnet::model::{self, Network};
 use descnet::report::{self, ReportCtx};
 use descnet::util::exec;
 use descnet::util::table::Table;
@@ -48,15 +51,25 @@ fn print_help() {
         "descnet — DESCNet scratchpad-memory DSE for CapsNet accelerators\n\n\
          USAGE: descnet <command> [options]\n\n\
          COMMANDS:\n\
-           analyze  [--net capsnet|deepcaps] [--sim]        per-op workload profile\n\
-           dse      [--net capsnet|deepcaps] [--ports]      design-space exploration\n\
+           analyze  [--net capsnet|deepcaps] [--workload FILE] [--batch B] [--sim]\n\
+                    per-op workload profile\n\
+           dse      [--net NAME[,NAME...]] [--workload FILE] [--random N] [--seed S]\n\
+                    [--batch B] [--mix W1,W2,...] [--traffic-weighted] [--ports]\n\
                     [--threads N] [--out DIR]\n\
+                    single-network DSE, or (with a multi-network workload set)\n\
+                    the dse::multi co-design stage: one organization across\n\
+                    every network, per-network energy reported\n\
            report   [all|fig1|fig7|fig9|fig10|fig11|fig12|fig18|fig19|fig20|fig21|\n\
-                     fig22|fig23|fig25|fig27|fig29|fig30|fig31|table3|headline]\n\
+                     fig22|fig23|fig25|fig27|fig29|fig30|fig31|multi|table3|headline]\n\
                     [--out DIR] [--threads N] [--config FILE]\n\
            serve    [--artifacts DIR] [--requests N] [--batch-max B] [--stage-pipeline]\n\
            headline [--threads N]                           paper-vs-ours summary\n\
-           config   [--save FILE] [--config FILE]           print/snapshot the technology config"
+           config   [--save FILE] [--config FILE]           print/snapshot the technology config\n\n\
+         WORKLOAD FILES (configs/workloads/*.json): a single network spec\n\
+         ({{name, input, layers}}) or a set ({{networks: [...], weights: [...]}});\n\
+         layer types: conv, primary_caps, conv_caps2d, caps_cell, conv_caps3d,\n\
+         pool_caps, class_caps, routing.  --random N appends N seeded random\n\
+         NASCaps-style networks; --batch B profiles every network at batch B."
     );
 }
 
@@ -117,67 +130,105 @@ fn load_config(flags: &Flags) -> SystemConfig {
     }
 }
 
+/// Collects the workload set a command names: `--net a,b,...` builtins,
+/// `--workload FILE` specs, `--random N` generated networks.  Also returns
+/// the spec file's mix weights, if any.
+fn collect_networks(flags: &Flags) -> anyhow::Result<(Vec<Network>, Option<Vec<f64>>)> {
+    let mut nets = Vec::new();
+    let mut weights: Option<Vec<f64>> = None;
+    if let Some(list) = flags.kv.get("net") {
+        for name in list.split(',').filter(|s| !s.is_empty()) {
+            nets.push(model::spec::builtin(name)?);
+        }
+    }
+    if let Some(path) = flags.kv.get("workload") {
+        let spec = model::spec::load(std::path::Path::new(path))?;
+        if nets.is_empty() {
+            weights = spec.weights;
+        } else if spec.weights.is_some() {
+            anyhow::bail!("--workload weights cannot be combined with --net networks");
+        }
+        nets.extend(spec.networks);
+    }
+    if let Some(n) = flags.kv.get("random") {
+        let n: usize = n
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--random expects a count, got '{n}'"))?;
+        let seed = flags.usize("seed", 1) as u64;
+        if weights.is_some() {
+            anyhow::bail!("--random cannot be combined with explicit workload weights");
+        }
+        nets.extend(model::random_networks(n, seed));
+    }
+    if nets.is_empty() {
+        nets.push(model::capsnet_mnist());
+    }
+    Ok((nets, weights))
+}
+
 fn cmd_analyze(args: &[String]) -> i32 {
     let flags = parse_flags(args);
     let cfg = load_config(&flags);
-    let net = flags.get("net", "capsnet");
-    let network = match net.as_str() {
-        "capsnet" => capsnet_mnist(),
-        "deepcaps" => deepcaps_cifar10(),
-        other => {
-            eprintln!("unknown network {other}");
+    let batch = flags.usize("batch", 1);
+    let (nets, _) = match collect_networks(&flags) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("analyze failed: {e:#}");
             return 2;
         }
     };
-    let p = profile_network(&network, &cfg.accel);
-    let mut table = Table::new(&[
-        "op", "group", "cycles", "D usage", "W usage", "A usage", "off rd", "off wr",
-    ]);
-    for op in &p.ops {
-        table.row(vec![
-            op.name.clone(),
-            op.group.label().to_string(),
-            fmt_count(op.cycles),
-            fmt_size(op.usage_d),
-            fmt_size(op.usage_w),
-            fmt_size(op.usage_a),
-            fmt_size(op.off_rd as usize),
-            fmt_size(op.off_wr as usize),
+    for network in &nets {
+        let p = profile_network_batched(network, &cfg.accel, batch);
+        let mut table = Table::new(&[
+            "op", "group", "cycles", "D usage", "W usage", "A usage", "off rd", "off wr",
         ]);
-    }
-    println!("{}", table.to_ascii());
-    println!(
-        "total: {} cycles  ->  {:.1} fps @ {:.0} MHz (paper: {} fps)",
-        fmt_count(p.total_cycles()),
-        p.fps(),
-        cfg.accel.clock_hz / 1e6,
-        network.paper_fps,
-    );
-    println!(
-        "maxima: D {}  W {}  A {}  SMP {}",
-        fmt_size(p.max_d()),
-        fmt_size(p.max_w()),
-        fmt_size(p.max_a()),
-        fmt_size(p.max_total()),
-    );
-    if flags.has("sim") {
-        // Event-level simulation: phase breakdown + closed-form validation.
-        let mut t = Table::new(&["op", "compute", "w-stream", "drain", "normalize", "util"]);
-        for sim in accel::sim_network(&network, &cfg.accel) {
-            t.row(vec![
-                sim.name.clone(),
-                fmt_count(sim.compute),
-                fmt_count(sim.weight_stream),
-                fmt_count(sim.drain),
-                fmt_count(sim.normalization),
-                format!("{:.1}%", 100.0 * sim.utilization()),
+        for op in &p.ops {
+            table.row(vec![
+                op.name.clone(),
+                op.group.label().to_string(),
+                fmt_count(op.cycles),
+                fmt_size(op.usage_d),
+                fmt_size(op.usage_w),
+                fmt_size(op.usage_a),
+                fmt_size(op.off_rd as usize),
+                fmt_size(op.off_wr as usize),
             ]);
         }
-        println!("{}", t.to_ascii());
+        println!("== {} (batch {batch}) ==", network.name);
+        println!("{}", table.to_ascii());
         println!(
-            "event-sim vs closed form: max disagreement {:.2}%",
-            100.0 * accel::validate_network(&network, &cfg.accel)
+            "total: {} cycles/batch  ->  {:.1} fps @ {:.0} MHz (paper: {} fps at batch 1)",
+            fmt_count(p.total_cycles()),
+            p.fps(),
+            cfg.accel.clock_hz / 1e6,
+            network.paper_fps,
         );
+        println!(
+            "maxima: D {}  W {}  A {}  SMP {}",
+            fmt_size(p.max_d()),
+            fmt_size(p.max_w()),
+            fmt_size(p.max_a()),
+            fmt_size(p.max_total()),
+        );
+        if flags.has("sim") {
+            // Event-level simulation: phase breakdown + closed-form validation.
+            let mut t = Table::new(&["op", "compute", "w-stream", "drain", "normalize", "util"]);
+            for sim in accel::sim_network(network, &cfg.accel) {
+                t.row(vec![
+                    sim.name.clone(),
+                    fmt_count(sim.compute),
+                    fmt_count(sim.weight_stream),
+                    fmt_count(sim.drain),
+                    fmt_count(sim.normalization),
+                    format!("{:.1}%", 100.0 * sim.utilization()),
+                ]);
+            }
+            println!("{}", t.to_ascii());
+            println!(
+                "event-sim vs closed form: max disagreement {:.2}%",
+                100.0 * accel::validate_network(network, &cfg.accel)
+            );
+        }
     }
     0
 }
@@ -187,25 +238,144 @@ fn cmd_dse(args: &[String]) -> i32 {
     let cfg = load_config(&flags);
     let out = PathBuf::from(flags.get("out", "results"));
     let threads = flags.usize("threads", exec::default_threads());
-    let net = flags.get("net", "capsnet");
+    let batch = flags.usize("batch", 1);
     let ctx = ReportCtx::new(cfg, &out);
 
     if flags.has("ports") {
-        let csv = report::fig22(&ctx, threads);
-        println!(
-            "port-constrained HY-PG DSE: {} configurations (paper: 113,337)",
-            fmt_count(csv.len() as u64)
-        );
-        return 0;
+        // The Fig 22 artifact is defined for builtin DeepCaps at batch 1;
+        // refuse workload-set flags instead of silently ignoring them.
+        let incompatible = flags.has("workload")
+            || flags.has("random")
+            || flags.has("mix")
+            || flags.has("traffic-weighted")
+            || batch != 1
+            || flags.get("net", "deepcaps") != "deepcaps";
+        if incompatible {
+            eprintln!(
+                "dse --ports is the Fig 22 builtin-DeepCaps study; it cannot be \
+                 combined with --workload/--random/--mix/--traffic-weighted/--batch \
+                 or a --net other than deepcaps"
+            );
+            return 2;
+        }
+        return match report::fig22(&ctx, threads) {
+            Ok(csv) => {
+                println!(
+                    "port-constrained HY-PG DSE: {} configurations (paper: 113,337)",
+                    fmt_count(csv.len() as u64)
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("dse --ports failed: {e:#}");
+                1
+            }
+        };
     }
-    let (csv, table) = report::dse_scatter(&ctx, &net, threads);
+
+    let (nets, weights) = match collect_networks(&flags) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("dse failed: {e:#}");
+            return 2;
+        }
+    };
+
+    // Single builtin named via --net at batch 1: the classic Fig 18/20
+    // artifact path.  Workload-file/random networks always take the
+    // co-design path, even when their `name` field says "capsnet" — a
+    // spec's geometry must never be silently swapped for the builtin's.
+    let builtin_only = !flags.has("workload") && !flags.has("random");
+    if builtin_only
+        && nets.len() == 1
+        && batch == 1
+        && matches!(nets[0].name.as_str(), "capsnet" | "deepcaps")
+    {
+        let net = nets[0].name.clone();
+        return match report::dse_scatter(&ctx, &net, threads) {
+            Ok((csv, table)) => {
+                println!(
+                    "{net} DSE: {} configurations evaluated (paper: {})",
+                    fmt_count(csv.len() as u64),
+                    if net == "capsnet" { "15,233" } else { "215,693" },
+                );
+                println!("{}", table.to_ascii());
+                0
+            }
+            Err(e) => {
+                eprintln!("dse failed: {e:#}");
+                1
+            }
+        };
+    }
+
+    // Workload-set path: co-design one organization across every network.
+    match run_multi_dse(&ctx, &nets, weights, batch, threads, &flags) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("dse failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn run_multi_dse(
+    ctx: &ReportCtx,
+    nets: &[Network],
+    weights: Option<Vec<f64>>,
+    batch: usize,
+    threads: usize,
+    flags: &Flags,
+) -> anyhow::Result<()> {
+    let profiles: Vec<NetworkProfile> = nets
+        .iter()
+        .map(|n| profile_network_batched(n, &ctx.cfg.accel, batch))
+        .collect();
+    let names: Vec<String> = nets
+        .iter()
+        .map(|n| {
+            if batch > 1 {
+                format!("{}@b{batch}", n.name)
+            } else {
+                n.name.clone()
+            }
+        })
+        .collect();
+    let mix = if let Some(list) = flags.kv.get("mix") {
+        let ws: Vec<f64> = list
+            .split(',')
+            .map(|w| {
+                w.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("--mix expects numbers, got '{w}'"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        WorkloadSet::with_weights(profiles, ws)?
+    } else if let Some(ws) = weights {
+        WorkloadSet::with_weights(profiles, ws)?
+    } else if flags.has("traffic-weighted") {
+        WorkloadSet::traffic_weighted(profiles)?
+    } else {
+        WorkloadSet::new(profiles)?
+    };
+
+    let (csv, table) = report::multi_dse(ctx, &mix, &names, threads)?;
     println!(
-        "{net} DSE: {} configurations evaluated (paper: {})",
+        "co-design DSE over {} networks ({}): {} configurations evaluated",
+        names.len(),
+        names.join(", "),
         fmt_count(csv.len() as u64),
-        if net == "capsnet" { "15,233" } else { "215,693" },
     );
     println!("{}", table.to_ascii());
-    0
+    println!(
+        "mix weights: {}",
+        mix.weights()
+            .iter()
+            .zip(&names)
+            .map(|(w, n)| format!("{n}={w:.3}"))
+            .collect::<Vec<_>>()
+            .join("  ")
+    );
+    Ok(())
 }
 
 fn cmd_report(args: &[String]) -> i32 {
@@ -219,37 +389,50 @@ fn cmd_report(args: &[String]) -> i32 {
         .cloned()
         .unwrap_or_else(|| "all".to_string());
     let ctx = ReportCtx::new(cfg, &out);
-    match what.as_str() {
-        "all" => {
-            let done = report::all(&ctx, threads);
-            println!("regenerated: {}", done.join(", "));
+    let res: anyhow::Result<()> = (|| {
+        match what.as_str() {
+            "all" => {
+                let done = report::all(&ctx, threads)?;
+                println!("regenerated: {}", done.join(", "));
+            }
+            "fig1" => drop(report::fig1(&ctx)),
+            "fig7" => drop(report::fig7(&ctx)),
+            "fig9" => drop(report::fig9(&ctx)),
+            "fig10" => drop(report::fig10(&ctx)),
+            "fig11" => drop(report::fig11(&ctx)),
+            "fig12" => drop(report::fig12(&ctx)?),
+            "fig18" => drop(report::dse_scatter(&ctx, "capsnet", threads)?),
+            "fig19" => drop(report::breakdowns(&ctx, "capsnet", threads)?),
+            "fig20" => drop(report::dse_scatter(&ctx, "deepcaps", threads)?),
+            "fig21" => drop(report::breakdowns(&ctx, "deepcaps", threads)?),
+            "fig22" => drop(report::fig22(&ctx, threads)?),
+            "fig23" | "fig24" => drop(report::whole_accelerator(&ctx, "capsnet", threads)?),
+            "fig25" | "fig26" => drop(report::whole_accelerator(&ctx, "deepcaps", threads)?),
+            "fig27" | "fig28" => drop(report::fig27_28(&ctx)),
+            "fig29" => drop(report::memory_breakdown(&ctx, "capsnet", threads)?),
+            "fig30" => drop(report::fig30(&ctx, threads)?),
+            "fig31" | "fig32" => drop(report::memory_breakdown(&ctx, "deepcaps", threads)?),
+            "multi" => {
+                let (set, names) = report::default_serving_mix(&ctx)?;
+                let (_, table) = report::multi_dse(&ctx, &set, &names, threads)?;
+                println!("{}", table.to_ascii());
+            }
+            "table3" => println!("{}", report::table3(&ctx, threads)?.to_ascii()),
+            "headline" => println!("{}", report::headline(&ctx, threads)?),
+            other => anyhow::bail!("unknown report target '{other}'"),
         }
-        "fig1" => drop(report::fig1(&ctx)),
-        "fig7" => drop(report::fig7(&ctx)),
-        "fig9" => drop(report::fig9(&ctx)),
-        "fig10" => drop(report::fig10(&ctx)),
-        "fig11" => drop(report::fig11(&ctx)),
-        "fig12" => drop(report::fig12(&ctx)),
-        "fig18" => drop(report::dse_scatter(&ctx, "capsnet", threads)),
-        "fig19" => drop(report::breakdowns(&ctx, "capsnet", threads)),
-        "fig20" => drop(report::dse_scatter(&ctx, "deepcaps", threads)),
-        "fig21" => drop(report::breakdowns(&ctx, "deepcaps", threads)),
-        "fig22" => drop(report::fig22(&ctx, threads)),
-        "fig23" | "fig24" => drop(report::whole_accelerator(&ctx, "capsnet", threads)),
-        "fig25" | "fig26" => drop(report::whole_accelerator(&ctx, "deepcaps", threads)),
-        "fig27" | "fig28" => drop(report::fig27_28(&ctx)),
-        "fig29" => drop(report::memory_breakdown(&ctx, "capsnet", threads)),
-        "fig30" => drop(report::fig30(&ctx, threads)),
-        "fig31" | "fig32" => drop(report::memory_breakdown(&ctx, "deepcaps", threads)),
-        "table3" => println!("{}", report::table3(&ctx, threads).to_ascii()),
-        "headline" => println!("{}", report::headline(&ctx, threads).to_string()),
-        other => {
-            eprintln!("unknown report target '{other}'");
-            return 2;
+        Ok(())
+    })();
+    match res {
+        Ok(()) => {
+            println!("results under {}", out.display());
+            0
+        }
+        Err(e) => {
+            eprintln!("report failed: {e:#}");
+            1
         }
     }
-    println!("results under {}", out.display());
-    0
 }
 
 fn cmd_headline(args: &[String]) -> i32 {
@@ -258,8 +441,16 @@ fn cmd_headline(args: &[String]) -> i32 {
     let threads = flags.usize("threads", exec::default_threads());
     let dir = std::env::temp_dir().join("descnet_headline");
     let ctx = ReportCtx::new(cfg, &dir);
-    println!("{}", report::headline(&ctx, threads).to_string());
-    0
+    match report::headline(&ctx, threads) {
+        Ok(csv) => {
+            println!("{csv}");
+            0
+        }
+        Err(e) => {
+            eprintln!("headline failed: {e:#}");
+            1
+        }
+    }
 }
 
 /// `descnet config --save configs/default.json`: snapshot the calibrated

@@ -1,0 +1,618 @@
+//! Declarative capsule-network builder IR.
+//!
+//! [`NetBuilder`] replaces the hand-inlined operation lists of the seed
+//! definitions with chained layer constructors — conv / primary-caps /
+//! convcaps-2d / caps-cell / convcaps-3d / pool / class-caps / dynamic
+//! routing — that *derive* geometry instead of restating it per op: output
+//! extents chain from input extents through the padding rule, capsule
+//! counts fall out of the spatial grid times the type count, and routing
+//! pairs come from the preceding vote op.
+//!
+//! Bit-compatibility contract: `capsnet_mnist()` and `deepcaps_cifar10()`
+//! are expressed on this builder and must produce `Operation` sequences
+//! identical (`PartialEq`) to the frozen `model::seed` lists —
+//! `rust/tests/builder_golden.rs` pins both the ops and the resulting
+//! `OpProfile`s.
+//!
+//! Error handling: constructors are infallible so chains stay ergonomic; a
+//! geometry violation (kernel larger than the input under valid padding,
+//! a capsule layer before any capsules exist, ...) is recorded and
+//! surfaced by [`NetBuilder::build`] as an `anyhow::Error` — the workload
+//! spec loader (`model::spec`) and the random generator
+//! (`model::generator`) both build through this path, so a malformed spec
+//! reports an error instead of aborting the sweep.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::{routing_ops, LayerGroup, Network, OpKind, Operation};
+
+/// Convolution padding rule used to derive output extents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    /// No padding: `out = (in - k) / stride + 1`.
+    Valid,
+    /// Zero padding preserving extent at stride 1: `out = ceil(in / stride)`.
+    Same,
+}
+
+impl Padding {
+    pub fn parse(s: &str) -> Result<Padding> {
+        match s {
+            "valid" => Ok(Padding::Valid),
+            "same" => Ok(Padding::Same),
+            other => bail!("unknown padding '{other}' (expected 'valid' or 'same')"),
+        }
+    }
+
+    fn out(self, input: usize, k: usize, stride: usize) -> Result<usize> {
+        ensure!(stride >= 1, "stride must be >= 1");
+        ensure!(k >= 1, "kernel must be >= 1");
+        match self {
+            Padding::Valid => {
+                ensure!(
+                    input >= k,
+                    "valid-padded kernel {k} exceeds input extent {input}"
+                );
+                Ok((input - k) / stride + 1)
+            }
+            Padding::Same => {
+                ensure!(input >= 1, "empty input extent");
+                Ok(input.div_ceil(stride))
+            }
+        }
+    }
+}
+
+/// Current activation grid.
+#[derive(Debug, Clone, Copy)]
+struct Shape {
+    h: usize,
+    w: usize,
+    c: usize,
+}
+
+/// Capsule-grid state once a capsule layer has run: the grid holds
+/// `h * w * types` capsules of `dim` dimensions each.
+#[derive(Debug, Clone, Copy)]
+struct CapsState {
+    types: usize,
+    dim: usize,
+}
+
+/// Geometry of the most recent vote op, for explicit `.routing()` tails.
+#[derive(Debug, Clone, Copy)]
+struct VotesGeom {
+    ni: usize,
+    no: usize,
+    dout: usize,
+    votes_in_acc: bool,
+}
+
+/// Chainable builder; see the module docs.
+#[derive(Debug)]
+pub struct NetBuilder {
+    name: String,
+    dataset: String,
+    paper_fps: f64,
+    ops: Vec<Operation>,
+    shape: Option<Shape>,
+    caps: Option<CapsState>,
+    last_votes: Option<VotesGeom>,
+    err: Option<anyhow::Error>,
+}
+
+impl NetBuilder {
+    pub fn new(name: impl Into<String>, dataset: impl Into<String>) -> NetBuilder {
+        NetBuilder {
+            name: name.into(),
+            dataset: dataset.into(),
+            paper_fps: 0.0,
+            ops: Vec::new(),
+            shape: None,
+            caps: None,
+            last_votes: None,
+            err: None,
+        }
+    }
+
+    /// Declares the input feature map; must precede every layer.
+    pub fn input(self, h: usize, w: usize, c: usize) -> NetBuilder {
+        self.step(|b| {
+            ensure!(h > 0 && w > 0 && c > 0, "degenerate input {h}x{w}x{c}");
+            ensure!(b.shape.is_none(), "input() declared twice");
+            b.shape = Some(Shape { h, w, c });
+            Ok(())
+        })
+    }
+
+    /// Plain (ReLU) convolution.
+    pub fn conv(
+        self,
+        name: impl Into<String>,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        pad: Padding,
+    ) -> NetBuilder {
+        let name = name.into();
+        self.step(|b| {
+            b.push_conv(name, LayerGroup::Conv, cout, k, stride, pad, 0, false)?;
+            b.caps = None;
+            Ok(())
+        })
+    }
+
+    /// PrimaryCaps: a convolution producing `types` capsule types of `dim`
+    /// dimensions per position (`cout = types * dim`), squashing every
+    /// output capsule.
+    pub fn primary_caps(
+        self,
+        name: impl Into<String>,
+        types: usize,
+        dim: usize,
+        k: usize,
+        stride: usize,
+        pad: Padding,
+    ) -> NetBuilder {
+        let name = name.into();
+        self.step(|b| {
+            ensure!(types > 0 && dim > 0, "degenerate capsule geometry");
+            let (hout, wout) = b.conv_out(k, stride, pad)?;
+            let squash = hout * wout * types;
+            b.push_conv(
+                name,
+                LayerGroup::PrimaryCaps,
+                types * dim,
+                k,
+                stride,
+                pad,
+                squash,
+                false,
+            )?;
+            b.caps = Some(CapsState { types, dim });
+            Ok(())
+        })
+    }
+
+    /// A 2-D ConvCaps layer (capsule-typed convolution + squash).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_caps2d(
+        self,
+        name: impl Into<String>,
+        types: usize,
+        dim: usize,
+        k: usize,
+        stride: usize,
+        pad: Padding,
+        skip_reuse: bool,
+    ) -> NetBuilder {
+        let name = name.into();
+        self.step(|b| {
+            ensure!(types > 0 && dim > 0, "degenerate capsule geometry");
+            let (hout, wout) = b.conv_out(k, stride, pad)?;
+            let squash = hout * wout * types;
+            b.push_conv(
+                name,
+                LayerGroup::ConvCaps2D,
+                types * dim,
+                k,
+                stride,
+                pad,
+                squash,
+                skip_reuse,
+            )?;
+            b.caps = Some(CapsState { types, dim });
+            Ok(())
+        })
+    }
+
+    /// A DeepCaps cell: three sequential 3x3 ConvCaps (the first applies
+    /// the cell stride) plus a parallel skip ConvCaps over the cell input.
+    /// The cell input is re-read by the skip branch, so both the first conv
+    /// and the skip conv mark `skip_reuse`.
+    pub fn caps_cell(
+        self,
+        prefix: impl Into<String>,
+        types: usize,
+        dim: usize,
+        stride: usize,
+    ) -> NetBuilder {
+        let prefix = prefix.into();
+        self.step(|b| {
+            ensure!(types > 0 && dim > 0, "degenerate capsule geometry");
+            let cell_in = b.shape.ok_or_else(|| anyhow!("caps_cell before input()"))?;
+            // Three sequential ConvCaps; the first strides and re-reads the
+            // cell input (the parallel skip branch streams it again).
+            b.push_conv(
+                format!("{prefix}-Conv0"),
+                LayerGroup::ConvCaps2D,
+                types * dim,
+                3,
+                stride,
+                Padding::Same,
+                0, // squash derived below
+                true,
+            )?;
+            b.fix_last_squash(types);
+            for conv in 1..3 {
+                b.push_conv(
+                    format!("{prefix}-Conv{conv}"),
+                    LayerGroup::ConvCaps2D,
+                    types * dim,
+                    3,
+                    1,
+                    Padding::Same,
+                    0,
+                    false,
+                )?;
+                b.fix_last_squash(types);
+            }
+            // Parallel skip ConvCaps over the saved cell input.
+            let after = b.shape;
+            b.shape = Some(cell_in);
+            b.push_conv(
+                format!("{prefix}-Skip"),
+                LayerGroup::ConvCaps2D,
+                types * dim,
+                3,
+                stride,
+                Padding::Same,
+                0,
+                true,
+            )?;
+            b.fix_last_squash(types);
+            b.shape = after;
+            b.caps = Some(CapsState { types, dim });
+            Ok(())
+        })
+    }
+
+    /// 3-D ConvCaps: spatially-shared transforms pinned in PE registers
+    /// vote every grid capsule into `out_types` output types of the same
+    /// dimensionality; the vote tensor stays resident in the accumulator
+    /// ring and `iters` routing iterations run over it in place.
+    pub fn conv_caps3d(
+        self,
+        name: impl Into<String>,
+        out_types: usize,
+        iters: usize,
+    ) -> NetBuilder {
+        let name = name.into();
+        self.step(|b| {
+            ensure!(out_types > 0, "degenerate capsule geometry");
+            let shape = b.shape.ok_or_else(|| anyhow!("conv_caps3d before input()"))?;
+            let caps = b
+                .caps
+                .ok_or_else(|| anyhow!("conv_caps3d requires a preceding capsule layer"))?;
+            let ni = shape.h * shape.w * caps.types;
+            b.ops.push(Operation {
+                name: format!("{name}-Votes"),
+                group: LayerGroup::ConvCaps3D,
+                kind: OpKind::Votes {
+                    ni,
+                    no: out_types,
+                    di: caps.dim,
+                    dout: caps.dim,
+                    weights_in_pe_regs: true,
+                    votes_in_acc: true,
+                },
+            });
+            b.last_votes = Some(VotesGeom {
+                ni,
+                no: out_types,
+                dout: caps.dim,
+                votes_in_acc: true,
+            });
+            if iters > 0 {
+                b.ops
+                    .extend(routing_ops(&name, ni, out_types, caps.dim, iters, true));
+            }
+            b.shape = Some(Shape {
+                h: shape.h,
+                w: shape.w,
+                c: out_types * caps.dim,
+            });
+            b.caps = Some(CapsState {
+                types: out_types,
+                dim: caps.dim,
+            });
+            Ok(())
+        })
+    }
+
+    /// Spatial `factor:1` pooling of the capsule grid.
+    pub fn pool_caps(self, factor: usize) -> NetBuilder {
+        self.step(|b| {
+            ensure!(factor >= 1, "pool factor must be >= 1");
+            let shape = b.shape.ok_or_else(|| anyhow!("pool_caps before input()"))?;
+            ensure!(
+                b.caps.is_some(),
+                "pool_caps requires a preceding capsule layer"
+            );
+            ensure!(
+                shape.h >= factor && shape.w >= factor,
+                "pool factor {factor} exceeds grid {}x{}",
+                shape.h,
+                shape.w
+            );
+            b.shape = Some(Shape {
+                h: shape.h / factor,
+                w: shape.w / factor,
+                c: shape.c,
+            });
+            Ok(())
+        })
+    }
+
+    /// ClassCaps: every grid capsule votes into `classes` output capsules
+    /// of `dout` dimensions, followed by `iters` dynamic-routing
+    /// iterations (`iters == 0` emits the vote op only; attach routing
+    /// later with [`NetBuilder::routing`]).
+    pub fn class_caps(
+        self,
+        name: impl Into<String>,
+        classes: usize,
+        dout: usize,
+        iters: usize,
+    ) -> NetBuilder {
+        let name = name.into();
+        self.step(|b| {
+            ensure!(classes > 0 && dout > 0, "degenerate capsule geometry");
+            let shape = b.shape.ok_or_else(|| anyhow!("class_caps before input()"))?;
+            let caps = b
+                .caps
+                .ok_or_else(|| anyhow!("class_caps requires a preceding capsule layer"))?;
+            let ni = shape.h * shape.w * caps.types;
+            b.ops.push(Operation {
+                name: name.clone(),
+                group: LayerGroup::ClassCaps,
+                kind: OpKind::Votes {
+                    ni,
+                    no: classes,
+                    di: caps.dim,
+                    dout,
+                    weights_in_pe_regs: false,
+                    votes_in_acc: false,
+                },
+            });
+            b.last_votes = Some(VotesGeom {
+                ni,
+                no: classes,
+                dout,
+                votes_in_acc: false,
+            });
+            if iters > 0 {
+                b.ops
+                    .extend(routing_ops(&name, ni, classes, dout, iters, false));
+            }
+            b.shape = Some(Shape {
+                h: 1,
+                w: 1,
+                c: classes * dout,
+            });
+            b.caps = Some(CapsState {
+                types: classes,
+                dim: dout,
+            });
+            Ok(())
+        })
+    }
+
+    /// Explicit dynamic-routing tail over the most recent vote op (for
+    /// workload specs that separate votes from routing).
+    pub fn routing(self, prefix: impl Into<String>, iters: usize) -> NetBuilder {
+        let prefix = prefix.into();
+        self.step(|b| {
+            ensure!(iters > 0, "routing with zero iterations");
+            let v = b
+                .last_votes
+                .ok_or_else(|| anyhow!("routing() requires a preceding vote op"))?;
+            b.ops
+                .extend(routing_ops(&prefix, v.ni, v.no, v.dout, iters, v.votes_in_acc));
+            Ok(())
+        })
+    }
+
+    /// Paper-reported throughput on CapsAcc, for validation.
+    pub fn paper_fps(mut self, fps: f64) -> NetBuilder {
+        self.paper_fps = fps;
+        self
+    }
+
+    /// Finalizes the network; returns the first recorded chain error.
+    pub fn build(self) -> Result<Network> {
+        if let Some(e) = self.err {
+            return Err(e.context(format!("building network '{}'", self.name)));
+        }
+        ensure!(
+            !self.ops.is_empty(),
+            "network '{}' has no operations",
+            self.name
+        );
+        Ok(Network {
+            name: self.name,
+            dataset: self.dataset,
+            ops: self.ops,
+            paper_fps: self.paper_fps,
+        })
+    }
+
+    // ------------------------------------------------------------ internals
+
+    fn step(mut self, f: impl FnOnce(&mut NetBuilder) -> Result<()>) -> NetBuilder {
+        if self.err.is_none() {
+            if let Err(e) = f(&mut self) {
+                self.err = Some(e);
+            }
+        }
+        self
+    }
+
+    fn conv_out(&self, k: usize, stride: usize, pad: Padding) -> Result<(usize, usize)> {
+        let shape = self.shape.ok_or_else(|| anyhow!("layer before input()"))?;
+        Ok((pad.out(shape.h, k, stride)?, pad.out(shape.w, k, stride)?))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn push_conv(
+        &mut self,
+        name: String,
+        group: LayerGroup,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        pad: Padding,
+        squash_caps: usize,
+        skip_reuse: bool,
+    ) -> Result<()> {
+        ensure!(cout > 0, "conv '{name}' with zero output channels");
+        let shape = self.shape.ok_or_else(|| anyhow!("conv '{name}' before input()"))?;
+        let (hout, wout) = self.conv_out(k, stride, pad)?;
+        ensure!(hout > 0 && wout > 0, "conv '{name}' collapses the grid");
+        self.ops.push(Operation {
+            name,
+            group,
+            kind: OpKind::Conv2d {
+                hin: shape.h,
+                win: shape.w,
+                cin: shape.c,
+                hout,
+                wout,
+                cout,
+                kh: k,
+                kw: k,
+                stride,
+                squash_caps,
+                skip_reuse,
+            },
+        });
+        self.shape = Some(Shape {
+            h: hout,
+            w: wout,
+            c: cout,
+        });
+        Ok(())
+    }
+
+    /// Sets the squash count of the just-pushed conv from its *own* output
+    /// grid (used by `caps_cell`, whose squash depends on the conv's
+    /// derived extent).
+    fn fix_last_squash(&mut self, types: usize) {
+        if let Some(Operation {
+            kind:
+                OpKind::Conv2d {
+                    hout,
+                    wout,
+                    squash_caps,
+                    ..
+                },
+            ..
+        }) = self.ops.last_mut()
+        {
+            *squash_caps = *hout * *wout * types;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::seed;
+
+    #[test]
+    fn builder_capsnet_matches_seed_ops() {
+        let built = crate::model::capsnet_mnist();
+        let seed = seed::capsnet_mnist_seed();
+        assert_eq!(built.name, seed.name);
+        assert_eq!(built.dataset, seed.dataset);
+        assert_eq!(built.ops, seed.ops);
+        assert_eq!(built.paper_fps, seed.paper_fps);
+    }
+
+    #[test]
+    fn builder_deepcaps_matches_seed_ops() {
+        let built = crate::model::deepcaps_cifar10();
+        let seed = seed::deepcaps_cifar10_seed();
+        assert_eq!(built.ops.len(), 31);
+        assert_eq!(built.ops, seed.ops);
+    }
+
+    #[test]
+    fn padding_derivations() {
+        assert_eq!(Padding::Valid.out(28, 9, 1).unwrap(), 20);
+        assert_eq!(Padding::Valid.out(20, 9, 2).unwrap(), 6);
+        assert_eq!(Padding::Same.out(64, 3, 1).unwrap(), 64);
+        assert_eq!(Padding::Same.out(64, 3, 2).unwrap(), 32);
+        assert!(Padding::Valid.out(5, 9, 1).is_err());
+        assert!(Padding::parse("same").is_ok());
+        assert!(Padding::parse("reflect").is_err());
+    }
+
+    #[test]
+    fn chain_errors_surface_at_build() {
+        // Capsule layer without capsules: deferred error, not a panic.
+        let err = NetBuilder::new("bad", "x")
+            .input(28, 28, 1)
+            .class_caps("Class", 10, 16, 3)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("capsule layer"), "{err:#}");
+
+        // Kernel larger than the input under valid padding.
+        let err = NetBuilder::new("bad2", "x")
+            .input(5, 5, 1)
+            .conv("C", 8, 9, 1, Padding::Valid)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds input extent"), "{err:#}");
+
+        // Missing input().
+        assert!(NetBuilder::new("bad3", "x")
+            .conv("C", 8, 3, 1, Padding::Same)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn first_error_wins_and_later_layers_are_ignored() {
+        let err = NetBuilder::new("bad", "x")
+            .conv("C", 8, 3, 1, Padding::Same) // error: no input
+            .input(28, 28, 1) // would otherwise succeed
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("input()"), "{err:#}");
+    }
+
+    #[test]
+    fn explicit_routing_extends_last_votes() {
+        let net = NetBuilder::new("r", "x")
+            .input(28, 28, 1)
+            .primary_caps("Prim", 8, 8, 9, 2, Padding::Valid)
+            .class_caps("Class", 10, 16, 0)
+            .routing("Class", 2)
+            .build()
+            .unwrap();
+        assert_eq!(net.ops.iter().filter(|o| o.is_routing()).count(), 4);
+        assert!(net.ops.last().unwrap().name.ends_with("Update+Softmax2"));
+    }
+
+    #[test]
+    fn derived_capsule_counts_chain() {
+        let net = NetBuilder::new("t", "x")
+            .input(32, 32, 3)
+            .conv("Conv1", 64, 3, 1, Padding::Same)
+            .primary_caps("Prim", 16, 8, 5, 2, Padding::Same)
+            .pool_caps(2)
+            .class_caps("Class", 10, 16, 3)
+            .build()
+            .unwrap();
+        // Prim grid: 16x16x16 types; pooled to 8x8 -> ni = 8*8*16 = 1024.
+        match &net.op("Class").unwrap().kind {
+            OpKind::Votes { ni, di, .. } => {
+                assert_eq!(*ni, 1024);
+                assert_eq!(*di, 8);
+            }
+            _ => unreachable!(),
+        }
+    }
+}

@@ -1,15 +1,20 @@
 //! Google's CapsNet [Sabour et al. 2017] for MNIST, as the 9-operation
 //! CapsAcc schedule the paper profiles (Figs 1, 9a, 10, 12, 18, 19, 23, 24,
-//! 27; Tables I, III).
+//! 27; Tables I, III) — expressed on the declarative builder IR
+//! (`model::builder`), which derives the geometry chain:
 //!
-//! Geometry (pinned against python/compile/model.py::CapsNetConfig.google):
-//!   Conv1       : 28x28x1 -> 9x9x256 valid, ReLU -> 20x20x256
-//!   PrimaryCaps : 9x9 conv stride 2 -> 6x6x256 = 1152 capsules x 8D, squash
+//!   Conv1       : 28x28x1 --9x9 valid--> 20x20x256, ReLU
+//!   PrimaryCaps : 9x9 stride 2 -> 6x6 x (32 types x 8D) = 1152 caps, squash
 //!   ClassCaps   : votes 1152x8 -> 10x16, then 3 routing iterations
 //!                 (Sum+Squash / Update+Softmax pairs = 6 ops)
+//!
+//! The frozen hand-inlined list lives in `model::seed`;
+//! `rust/tests/builder_golden.rs` pins this definition bit-identical to it.
 
-use super::{routing_ops, LayerGroup, Network, OpKind, Operation};
+use super::builder::{NetBuilder, Padding};
+use super::Network;
 
+pub const PRIMARY_TYPES: usize = 32;
 pub const NUM_PRIMARY_CAPS: usize = 1152;
 pub const CAPS_DIM: usize = 8;
 pub const NUM_CLASSES: usize = 10;
@@ -17,73 +22,20 @@ pub const CLASS_CAPS_DIM: usize = 16;
 pub const ROUTING_ITERS: usize = 3;
 
 pub fn capsnet_mnist() -> Network {
-    let mut ops = vec![
-        Operation {
-            name: "Conv1".into(),
-            group: LayerGroup::Conv,
-            kind: OpKind::Conv2d {
-                hin: 28,
-                win: 28,
-                cin: 1,
-                hout: 20,
-                wout: 20,
-                cout: 256,
-                kh: 9,
-                kw: 9,
-                stride: 1,
-                squash_caps: 0,
-                skip_reuse: false,
-            },
-        },
-        Operation {
-            name: "Prim".into(),
-            group: LayerGroup::PrimaryCaps,
-            kind: OpKind::Conv2d {
-                hin: 20,
-                win: 20,
-                cin: 256,
-                hout: 6,
-                wout: 6,
-                cout: 256,
-                kh: 9,
-                kw: 9,
-                stride: 2,
-                squash_caps: NUM_PRIMARY_CAPS,
-                skip_reuse: false,
-            },
-        },
-        Operation {
-            name: "Class".into(),
-            group: LayerGroup::ClassCaps,
-            kind: OpKind::Votes {
-                ni: NUM_PRIMARY_CAPS,
-                no: NUM_CLASSES,
-                di: CAPS_DIM,
-                dout: CLASS_CAPS_DIM,
-                weights_in_pe_regs: false,
-                votes_in_acc: false,
-            },
-        },
-    ];
-    ops.extend(routing_ops(
-        "Class",
-        NUM_PRIMARY_CAPS,
-        NUM_CLASSES,
-        CLASS_CAPS_DIM,
-        ROUTING_ITERS,
-        false,
-    ));
-    Network {
-        name: "capsnet".into(),
-        dataset: "mnist".into(),
-        ops,
-        paper_fps: 116.0,
-    }
+    NetBuilder::new("capsnet", "mnist")
+        .input(28, 28, 1)
+        .conv("Conv1", 256, 9, 1, Padding::Valid)
+        .primary_caps("Prim", PRIMARY_TYPES, CAPS_DIM, 9, 2, Padding::Valid)
+        .class_caps("Class", NUM_CLASSES, CLASS_CAPS_DIM, ROUTING_ITERS)
+        .paper_fps(116.0)
+        .build()
+        .expect("paper-pinned CapsNet chain is valid")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::OpKind;
 
     #[test]
     fn nine_operations_as_in_paper() {
@@ -105,7 +57,7 @@ mod tests {
         let net = capsnet_mnist();
         match &net.ops[1].kind {
             OpKind::Conv2d { hout, wout, cout, .. } => {
-                assert_eq!(hout * wout * cout / CAPS_DIM, 1152);
+                assert_eq!(hout * wout * cout / CAPS_DIM, NUM_PRIMARY_CAPS);
             }
             _ => panic!("Prim must be a conv"),
         }

@@ -1,6 +1,6 @@
 //! DeepCaps [Rajasegaran et al. 2019] for CIFAR10, as the 31-operation
 //! CapsAcc schedule the paper profiles (Figs 9b, 11, 20, 21, 25, 26, 28;
-//! Tables II, III).
+//! Tables II, III) — expressed on the declarative builder IR.
 //!
 //! Adapted geometry (DESIGN.md section 6): 64x64x3 input, Conv1 (3x3x128),
 //! four ConvCaps2D cells of 4 layers each (3 sequential + 1 parallel skip,
@@ -10,9 +10,15 @@
 //! pooling, and a ClassCaps layer (2048 x 8D -> 10 x 32D) with routing.
 //!
 //! Op count: 1 conv + 16 ConvCaps + 1 vote op + 6 routing (3D) + 1 vote op
-//! (ClassCaps) + 6 routing = 31.
+//! (ClassCaps) + 6 routing = 31.  The spatial pyramid (64 -> 32 -> 16), the
+//! 8192-capsule 3-D grid and the 2048 ClassCaps inputs are all *derived* by
+//! the builder from the cell strides and pooling — nothing is restated.
+//!
+//! The frozen hand-inlined list lives in `model::seed`;
+//! `rust/tests/builder_golden.rs` pins this definition bit-identical to it.
 
-use super::{routing_ops, LayerGroup, Network, OpKind, Operation};
+use super::builder::{NetBuilder, Padding};
+use super::Network;
 
 pub const CAPS_TYPES: usize = 32;
 pub const CAPS_DIM: usize = 8;
@@ -29,139 +35,25 @@ pub const CLASS_POOL: usize = 2;
 pub const NUM_CLASS_IN_CAPS: usize =
     (FINAL_HW / CLASS_POOL) * (FINAL_HW / CLASS_POOL) * CAPS_TYPES;
 
-fn convcaps(
-    name: String,
-    hin: usize,
-    cin: usize,
-    stride: usize,
-    skip_reuse: bool,
-) -> Operation {
-    let hout = hin / stride;
-    Operation {
-        name,
-        group: LayerGroup::ConvCaps2D,
-        kind: OpKind::Conv2d {
-            hin,
-            win: hin,
-            cin,
-            hout,
-            wout: hout,
-            cout: CAPS_CHANNELS,
-            kh: 3,
-            kw: 3,
-            stride,
-            squash_caps: hout * hout * CAPS_TYPES,
-            skip_reuse,
-        },
-    }
-}
-
 pub fn deepcaps_cifar10() -> Network {
-    let mut ops = vec![Operation {
-        name: "Conv1".into(),
-        group: LayerGroup::Conv,
-        kind: OpKind::Conv2d {
-            hin: 64,
-            win: 64,
-            cin: 3,
-            hout: 64,
-            wout: 64,
-            cout: 128,
-            kh: 3,
-            kw: 3,
-            stride: 1,
-            squash_caps: 0,
-            skip_reuse: false,
-        },
-    }];
-
-    let mut hw = 64;
-    let mut cin = 128;
+    let mut b = NetBuilder::new("deepcaps", "cifar10")
+        .input(64, 64, 3)
+        .conv("Conv1", 128, 3, 1, Padding::Same);
     for (cell, &stride) in CELL_STRIDES.iter().enumerate() {
-        let hout = hw / stride;
-        // 3 sequential ConvCaps (the first applies the cell stride) ...
-        for conv in 0..3 {
-            let (h_in, c_in, s) = if conv == 0 {
-                (hw, cin, stride)
-            } else {
-                (hout, CAPS_CHANNELS, 1)
-            };
-            // The cell input fmap is re-read by the skip branch.
-            let reused = conv == 0;
-            ops.push(convcaps(
-                format!("Cell{cell}-Conv{conv}"),
-                h_in,
-                c_in,
-                s,
-                reused,
-            ));
-        }
-        // ... plus the parallel skip ConvCaps over the cell input.
-        ops.push(convcaps(format!("Cell{cell}-Skip"), hw, cin, stride, true));
-        hw = hout;
-        cin = CAPS_CHANNELS;
+        b = b.caps_cell(format!("Cell{cell}"), CAPS_TYPES, CAPS_DIM, stride);
     }
-    debug_assert_eq!(hw, FINAL_HW);
-
-    // 3-D ConvCaps: spatially-shared transforms in PE registers; votes for
-    // all (position, in-type, out-type) tuples accumulate into the 8 MiB
-    // accumulator ring buffer and routing runs over them in place.
-    let ni_3d = FINAL_HW * FINAL_HW * CAPS_TYPES; // 8192
-    ops.push(Operation {
-        name: "Caps3D-Votes".into(),
-        group: LayerGroup::ConvCaps3D,
-        kind: OpKind::Votes {
-            ni: ni_3d,
-            no: CAPS_TYPES,
-            di: CAPS_DIM,
-            dout: CAPS_DIM,
-            weights_in_pe_regs: true,
-            votes_in_acc: true,
-        },
-    });
-    ops.extend(routing_ops(
-        "Caps3D",
-        ni_3d,
-        CAPS_TYPES,
-        CAPS_DIM,
-        ROUTING_ITERS,
-        true,
-    ));
-
-    // ClassCaps on the pooled capsule grid (8x8x32 = 2048 capsules).
-    ops.push(Operation {
-        name: "Class".into(),
-        group: LayerGroup::ClassCaps,
-        kind: OpKind::Votes {
-            ni: NUM_CLASS_IN_CAPS,
-            no: NUM_CLASSES,
-            di: CAPS_DIM,
-            dout: CLASS_CAPS_DIM,
-            weights_in_pe_regs: false,
-            votes_in_acc: false,
-        },
-    });
-    ops.extend(routing_ops(
-        "Class",
-        NUM_CLASS_IN_CAPS,
-        NUM_CLASSES,
-        CLASS_CAPS_DIM,
-        ROUTING_ITERS,
-        false,
-    ));
-
-    Network {
-        name: "deepcaps".into(),
-        dataset: "cifar10".into(),
-        ops,
-        paper_fps: 9.7,
-    }
+    b.conv_caps3d("Caps3D", CAPS_TYPES, ROUTING_ITERS)
+        .pool_caps(CLASS_POOL)
+        .class_caps("Class", NUM_CLASSES, CLASS_CAPS_DIM, ROUTING_ITERS)
+        .paper_fps(9.7)
+        .build()
+        .expect("paper-pinned DeepCaps chain is valid")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::RoutingHalf;
+    use crate::model::{LayerGroup, OpKind, RoutingHalf};
 
     #[test]
     fn thirty_one_operations() {
@@ -200,6 +92,15 @@ mod tests {
         let ni = FINAL_HW * FINAL_HW * CAPS_TYPES;
         let bytes = ni * CAPS_TYPES * CAPS_DIM * 4;
         assert_eq!(bytes, 8 * 1024 * 1024);
+        // And the builder derived exactly that vote geometry.
+        let net = deepcaps_cifar10();
+        match &net.op("Caps3D-Votes").unwrap().kind {
+            OpKind::Votes { ni: n, no, dout, votes_in_acc, .. } => {
+                assert_eq!((*n, *no, *dout), (ni, CAPS_TYPES, CAPS_DIM));
+                assert!(votes_in_acc);
+            }
+            _ => unreachable!(),
+        }
     }
 
     #[test]

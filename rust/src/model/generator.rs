@@ -1,0 +1,134 @@
+//! Seeded NASCaps-style random capsule-network generator
+//! (arXiv:2008.08476 motivates sweeping *families* of CapsNets through the
+//! hardware model; this module supplies the family).
+//!
+//! Every generated network is built through the declarative IR, so the
+//! geometry invariants the builder enforces (extent chaining, capsule
+//! counts, routing pairs) hold by construction;
+//! `rust/tests/builder_golden.rs` additionally property-checks the derived
+//! profiles (working sets fit the SMP bound, off-chip traffic consistent
+//! with op geometry) for a fan of seeds.  The choice pools keep the
+//! networks inside an edge-accelerator envelope: the biggest random net
+//! stays within the DeepCaps working-set class, so DSE sweeps over random
+//! families terminate in the same time class as the paper pair.
+
+use super::builder::{NetBuilder, Padding};
+use super::Network;
+use crate::util::prng::Prng;
+
+/// Minimum bytes of a 3-D ConvCaps vote tensor for the generator to emit
+/// one: below this the accumulator-ring schedule (which overlays
+/// `dataflow::VOTE_RING_OVERLAY`) is not worth modelling.
+const MIN_3D_VOTE_BYTES: usize = 512 * 1024;
+
+/// Deterministically generates one random capsule network for `seed`.
+pub fn random_network(seed: u64) -> Network {
+    let mut rng = Prng::new(seed ^ 0xD5C0_CA95);
+    let (mut hw, cin) = *rng.choose(&[(28usize, 1usize), (32, 3), (64, 3)]);
+    let types = *rng.choose(&[8usize, 16, 32]);
+    let dim = *rng.choose(&[4usize, 8]);
+
+    let mut b = NetBuilder::new(format!("rand-{seed}"), "synthetic")
+        .input(hw, hw, cin)
+        .conv(
+            "Conv1",
+            *rng.choose(&[64usize, 128, 256]),
+            *rng.choose(&[3usize, 5]),
+            1,
+            Padding::Same,
+        );
+
+    // PrimaryCaps; large inputs stride down so the capsule grid stays in
+    // the paper networks' range.
+    let prim_stride = if hw >= 32 { 2 } else { *rng.choose(&[1usize, 2]) };
+    b = b.primary_caps(
+        "Prim",
+        types,
+        dim,
+        *rng.choose(&[3usize, 5, 9]),
+        prim_stride,
+        Padding::Same,
+    );
+    hw = hw.div_ceil(prim_stride);
+
+    // 0..=2 DeepCaps-style cells while the grid can afford them.
+    let cells = rng.below(3) as usize;
+    for cell in 0..cells {
+        if hw < 8 {
+            break;
+        }
+        let stride = if hw >= 16 { *rng.choose(&[1usize, 2]) } else { 1 };
+        b = b.caps_cell(format!("Cell{cell}"), types, dim, stride);
+        hw = hw.div_ceil(stride);
+    }
+
+    // Optional 3-D ConvCaps with in-ring routing when the vote tensor is
+    // big enough to exercise the accumulator-ring schedule.
+    let vote_bytes = hw * hw * types * types * dim * 4;
+    if vote_bytes >= MIN_3D_VOTE_BYTES && rng.bool() {
+        b = b.conv_caps3d("Caps3D", types, 3);
+    }
+
+    // Optional capsule pooling ahead of ClassCaps.
+    if hw >= 8 && rng.bool() {
+        b = b.pool_caps(2);
+    }
+
+    b.class_caps(
+        "Class",
+        *rng.choose(&[10usize, 20]),
+        *rng.choose(&[8usize, 16, 32]),
+        1 + rng.below(3) as usize,
+    )
+    .paper_fps(0.0)
+    .build()
+    .unwrap_or_else(|e| panic!("generator invariant violated for seed {seed}: {e:#}"))
+}
+
+/// `n` networks from consecutive sub-seeds of `seed`.
+pub fn random_networks(n: usize, seed: u64) -> Vec<Network> {
+    (0..n as u64)
+        .map(|i| random_network(seed.wrapping_add(i)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LayerGroup;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = random_network(7);
+        let b = random_network(7);
+        assert_eq!(a.ops, b.ops);
+        let c = random_network(8);
+        assert!(a.ops != c.ops || a.name != c.name);
+    }
+
+    #[test]
+    fn every_seed_builds_a_classifier() {
+        for seed in 0..64 {
+            let net = random_network(seed);
+            assert!(net.ops.len() >= 4, "seed {seed}: {} ops", net.ops.len());
+            assert!(
+                net.ops.iter().any(|o| o.group == LayerGroup::ClassCaps),
+                "seed {seed} lacks ClassCaps"
+            );
+            assert!(
+                net.ops.iter().any(|o| o.is_routing()),
+                "seed {seed} lacks routing"
+            );
+            assert!(net.total_macs() > 0);
+            assert!(net.total_param_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn random_networks_are_distinct_sub_seeds() {
+        let nets = random_networks(3, 100);
+        assert_eq!(nets.len(), 3);
+        assert_eq!(nets[0].name, "rand-100");
+        assert_eq!(nets[2].name, "rand-102");
+    }
+}

@@ -1,19 +1,35 @@
-//! Network descriptions: the operation sequences of the two paper
-//! benchmarks — Google's CapsNet (MNIST) and DeepCaps (CIFAR10) — as
-//! scheduled on the CapsAcc accelerator.
+//! Network descriptions: the generalized workload layer.
 //!
-//! An [`Operation`] is the unit the paper profiles (Figs 1, 9, 10, 11): the
-//! three CapsNet stages plus the 3x2 dynamic-routing operations, and the
-//! 31-op DeepCaps sequence.  The geometry here is the single source of
-//! truth for the dataflow model (`crate::dataflow`), the energy rollups,
-//! and the python L2 models (python/compile/model.py mirrors it; the
+//! An [`Operation`] is the unit the paper profiles (Figs 1, 9, 10, 11).
+//! Networks are no longer hand-inlined operation lists: the declarative
+//! [`builder::NetBuilder`] IR derives geometry (extent chaining, capsule
+//! counts, routing pairs) from chained layer constructors, and three
+//! front-ends feed it:
+//!
+//! * [`capsnet_mnist`] / [`deepcaps_cifar10`] — the two paper benchmarks,
+//!   re-expressed on the builder (pinned bit-identical to the frozen
+//!   [`seed`] lists by `rust/tests/builder_golden.rs`);
+//! * [`spec`] — a JSON workload-spec loader (NASCaps-style families via
+//!   `descnet dse --workload FILE`);
+//! * [`generator`] — a seeded random capsule-network generator
+//!   (`descnet dse --random N`).
+//!
+//! The geometry here is the single source of truth for the dataflow model
+//! (`crate::dataflow`), the energy rollups, and the python L2 models
+//! (python/compile/model.py mirrors the paper pair; the
 //! `tests/test_model.py` geometry assertions pin both sides).
 
+pub mod builder;
 pub mod capsnet;
 pub mod deepcaps;
+pub mod generator;
+pub mod seed;
+pub mod spec;
 
+pub use builder::{NetBuilder, Padding};
 pub use capsnet::capsnet_mnist;
 pub use deepcaps::deepcaps_cifar10;
+pub use generator::{random_network, random_networks};
 
 /// Which half of a dynamic-routing iteration an op implements.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

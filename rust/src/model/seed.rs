@@ -1,0 +1,220 @@
+//! Frozen seed definitions of the two paper benchmarks, exactly as the
+//! original hand-inlined operation lists shipped them (every geometry
+//! constant restated per op).
+//!
+//! These are **golden references only**: the live `capsnet_mnist()` /
+//! `deepcaps_cifar10()` constructors are now expressed on the declarative
+//! [`crate::model::builder::NetBuilder`] IR, and
+//! `rust/tests/builder_golden.rs` pins the builder output bit-identical
+//! (operation-by-operation `PartialEq`, and `OpProfile`-by-`OpProfile`
+//! through the dataflow model) against this module.  Do not edit the
+//! numbers here; a builder change that diverges from them is a regression.
+
+use super::{routing_ops, LayerGroup, Network, OpKind, Operation};
+
+/// Seed CapsNet (MNIST): the 9-operation CapsAcc schedule, hand-inlined.
+pub fn capsnet_mnist_seed() -> Network {
+    const NUM_PRIMARY_CAPS: usize = 1152;
+    const CAPS_DIM: usize = 8;
+    const NUM_CLASSES: usize = 10;
+    const CLASS_CAPS_DIM: usize = 16;
+    const ROUTING_ITERS: usize = 3;
+
+    let mut ops = vec![
+        Operation {
+            name: "Conv1".into(),
+            group: LayerGroup::Conv,
+            kind: OpKind::Conv2d {
+                hin: 28,
+                win: 28,
+                cin: 1,
+                hout: 20,
+                wout: 20,
+                cout: 256,
+                kh: 9,
+                kw: 9,
+                stride: 1,
+                squash_caps: 0,
+                skip_reuse: false,
+            },
+        },
+        Operation {
+            name: "Prim".into(),
+            group: LayerGroup::PrimaryCaps,
+            kind: OpKind::Conv2d {
+                hin: 20,
+                win: 20,
+                cin: 256,
+                hout: 6,
+                wout: 6,
+                cout: 256,
+                kh: 9,
+                kw: 9,
+                stride: 2,
+                squash_caps: NUM_PRIMARY_CAPS,
+                skip_reuse: false,
+            },
+        },
+        Operation {
+            name: "Class".into(),
+            group: LayerGroup::ClassCaps,
+            kind: OpKind::Votes {
+                ni: NUM_PRIMARY_CAPS,
+                no: NUM_CLASSES,
+                di: CAPS_DIM,
+                dout: CLASS_CAPS_DIM,
+                weights_in_pe_regs: false,
+                votes_in_acc: false,
+            },
+        },
+    ];
+    ops.extend(routing_ops(
+        "Class",
+        NUM_PRIMARY_CAPS,
+        NUM_CLASSES,
+        CLASS_CAPS_DIM,
+        ROUTING_ITERS,
+        false,
+    ));
+    Network {
+        name: "capsnet".into(),
+        dataset: "mnist".into(),
+        ops,
+        paper_fps: 116.0,
+    }
+}
+
+/// Seed DeepCaps (CIFAR10): the 31-operation schedule, hand-inlined.
+pub fn deepcaps_cifar10_seed() -> Network {
+    const CAPS_TYPES: usize = 32;
+    const CAPS_DIM: usize = 8;
+    const CAPS_CHANNELS: usize = CAPS_TYPES * CAPS_DIM; // 256
+    const CELL_STRIDES: [usize; 4] = [2, 2, 1, 1];
+    const FINAL_HW: usize = 16;
+    const NUM_CLASSES: usize = 10;
+    const CLASS_CAPS_DIM: usize = 32;
+    const ROUTING_ITERS: usize = 3;
+    const CLASS_POOL: usize = 2;
+    const NUM_CLASS_IN_CAPS: usize =
+        (FINAL_HW / CLASS_POOL) * (FINAL_HW / CLASS_POOL) * CAPS_TYPES;
+
+    fn convcaps(
+        name: String,
+        hin: usize,
+        cin: usize,
+        stride: usize,
+        skip_reuse: bool,
+    ) -> Operation {
+        let hout = hin / stride;
+        Operation {
+            name,
+            group: LayerGroup::ConvCaps2D,
+            kind: OpKind::Conv2d {
+                hin,
+                win: hin,
+                cin,
+                hout,
+                wout: hout,
+                cout: CAPS_CHANNELS,
+                kh: 3,
+                kw: 3,
+                stride,
+                squash_caps: hout * hout * CAPS_TYPES,
+                skip_reuse,
+            },
+        }
+    }
+
+    let mut ops = vec![Operation {
+        name: "Conv1".into(),
+        group: LayerGroup::Conv,
+        kind: OpKind::Conv2d {
+            hin: 64,
+            win: 64,
+            cin: 3,
+            hout: 64,
+            wout: 64,
+            cout: 128,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            squash_caps: 0,
+            skip_reuse: false,
+        },
+    }];
+
+    let mut hw = 64;
+    let mut cin = 128;
+    for (cell, &stride) in CELL_STRIDES.iter().enumerate() {
+        let hout = hw / stride;
+        for conv in 0..3 {
+            let (h_in, c_in, s) = if conv == 0 {
+                (hw, cin, stride)
+            } else {
+                (hout, CAPS_CHANNELS, 1)
+            };
+            let reused = conv == 0;
+            ops.push(convcaps(
+                format!("Cell{cell}-Conv{conv}"),
+                h_in,
+                c_in,
+                s,
+                reused,
+            ));
+        }
+        ops.push(convcaps(format!("Cell{cell}-Skip"), hw, cin, stride, true));
+        hw = hout;
+        cin = CAPS_CHANNELS;
+    }
+    debug_assert_eq!(hw, FINAL_HW);
+
+    let ni_3d = FINAL_HW * FINAL_HW * CAPS_TYPES; // 8192
+    ops.push(Operation {
+        name: "Caps3D-Votes".into(),
+        group: LayerGroup::ConvCaps3D,
+        kind: OpKind::Votes {
+            ni: ni_3d,
+            no: CAPS_TYPES,
+            di: CAPS_DIM,
+            dout: CAPS_DIM,
+            weights_in_pe_regs: true,
+            votes_in_acc: true,
+        },
+    });
+    ops.extend(routing_ops(
+        "Caps3D",
+        ni_3d,
+        CAPS_TYPES,
+        CAPS_DIM,
+        ROUTING_ITERS,
+        true,
+    ));
+
+    ops.push(Operation {
+        name: "Class".into(),
+        group: LayerGroup::ClassCaps,
+        kind: OpKind::Votes {
+            ni: NUM_CLASS_IN_CAPS,
+            no: NUM_CLASSES,
+            di: CAPS_DIM,
+            dout: CLASS_CAPS_DIM,
+            weights_in_pe_regs: false,
+            votes_in_acc: false,
+        },
+    });
+    ops.extend(routing_ops(
+        "Class",
+        NUM_CLASS_IN_CAPS,
+        NUM_CLASSES,
+        CLASS_CAPS_DIM,
+        ROUTING_ITERS,
+        false,
+    ));
+
+    Network {
+        name: "deepcaps".into(),
+        dataset: "cifar10".into(),
+        ops,
+        paper_fps: 9.7,
+    }
+}

@@ -1,0 +1,285 @@
+//! JSON workload-spec loader: arbitrary capsule networks (and multi-network
+//! workload sets) described declaratively and built through
+//! [`crate::model::builder::NetBuilder`].  Uses `util::json` — no serde.
+//!
+//! Single-network schema (all integers; `padding` defaults to `"same"`,
+//! `stride` to 1, `iters` to 3):
+//!
+//! ```json
+//! {
+//!   "name": "smallcaps", "dataset": "synthetic", "paper_fps": 0,
+//!   "input": [32, 32, 3],
+//!   "layers": [
+//!     {"type": "conv",         "name": "Conv1", "out_channels": 128,
+//!      "kernel": 3, "stride": 1, "padding": "same"},
+//!     {"type": "primary_caps", "name": "Prim", "types": 16, "caps_dim": 8,
+//!      "kernel": 5, "stride": 2},
+//!     {"type": "caps_cell",    "prefix": "Cell0", "types": 16,
+//!      "caps_dim": 8, "stride": 2},
+//!     {"type": "conv_caps2d",  "name": "Extra", "types": 16, "caps_dim": 8,
+//!      "kernel": 3, "stride": 1, "skip_reuse": false},
+//!     {"type": "conv_caps3d",  "name": "Caps3D", "types": 16, "iters": 3},
+//!     {"type": "pool_caps",    "factor": 2},
+//!     {"type": "class_caps",   "name": "Class", "classes": 10,
+//!      "caps_dim": 16, "iters": 3},
+//!     {"type": "routing",      "prefix": "Class2", "iters": 1}
+//!   ]
+//! }
+//! ```
+//!
+//! Workload-set schema — a list of specs and/or builtins, with optional
+//! serving-mix weights (normalized by `dse::multi::WorkloadSet`):
+//!
+//! ```json
+//! {"networks": [{"builtin": "capsnet"}, {"builtin": "deepcaps"},
+//!               {"name": "...", "input": [...], "layers": [...]}],
+//!  "weights": [0.6, 0.3, 0.1]}
+//! ```
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::builder::{NetBuilder, Padding};
+use super::{capsnet_mnist, deepcaps_cifar10, Network};
+use crate::util::json::Json;
+
+/// A parsed workload file: one or more networks plus optional mix weights.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub networks: Vec<Network>,
+    pub weights: Option<Vec<f64>>,
+}
+
+/// Loads a workload file (single-network or workload-set schema).
+pub fn load(path: &Path) -> Result<WorkloadSpec> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading workload spec {}", path.display()))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow!("{e}"))
+        .with_context(|| format!("parsing workload spec {}", path.display()))?;
+    workload_from_json(&j).with_context(|| format!("in workload spec {}", path.display()))
+}
+
+/// Parses either schema from an already-parsed JSON value.
+pub fn workload_from_json(j: &Json) -> Result<WorkloadSpec> {
+    if let Some(nets) = j.get("networks").as_arr() {
+        ensure!(!nets.is_empty(), "'networks' list is empty");
+        let networks = nets
+            .iter()
+            .enumerate()
+            .map(|(i, n)| network_from_json(n).with_context(|| format!("networks[{i}]")))
+            .collect::<Result<Vec<_>>>()?;
+        let weights = match j.get("weights") {
+            Json::Null => None,
+            w => {
+                let ws: Vec<f64> = w
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("'weights' must be an array"))?
+                    .iter()
+                    .map(|v| v.as_f64().ok_or_else(|| anyhow!("non-numeric weight")))
+                    .collect::<Result<Vec<_>>>()?;
+                ensure!(
+                    ws.len() == networks.len(),
+                    "{} weights for {} networks",
+                    ws.len(),
+                    networks.len()
+                );
+                Some(ws)
+            }
+        };
+        Ok(WorkloadSpec { networks, weights })
+    } else {
+        Ok(WorkloadSpec {
+            networks: vec![network_from_json(j)?],
+            weights: None,
+        })
+    }
+}
+
+/// Resolves a builtin network by name (the CLI's `--net` values).
+pub fn builtin(name: &str) -> Result<Network> {
+    match name {
+        "capsnet" => Ok(capsnet_mnist()),
+        "deepcaps" => Ok(deepcaps_cifar10()),
+        other => bail!("unknown builtin network '{other}' (capsnet|deepcaps)"),
+    }
+}
+
+/// Builds one network from its JSON spec (or `{"builtin": name}`).
+pub fn network_from_json(j: &Json) -> Result<Network> {
+    if let Some(name) = j.get("builtin").as_str() {
+        return builtin(name);
+    }
+    let name = j
+        .get("name")
+        .as_str()
+        .ok_or_else(|| anyhow!("missing network 'name'"))?;
+    let dataset = j.get("dataset").as_str().unwrap_or("custom");
+    let input = j
+        .get("input")
+        .usize_vec()
+        .ok_or_else(|| anyhow!("'input' must be [h, w, c]"))?;
+    ensure!(input.len() == 3, "'input' must be [h, w, c]");
+    let layers = j
+        .get("layers")
+        .as_arr()
+        .ok_or_else(|| anyhow!("missing 'layers' array"))?;
+
+    let mut b = NetBuilder::new(name, dataset).input(input[0], input[1], input[2]);
+    for (i, layer) in layers.iter().enumerate() {
+        b = apply_layer(b, layer).with_context(|| format!("layers[{i}]"))?;
+    }
+    if let Some(fps) = j.get("paper_fps").as_f64() {
+        b = b.paper_fps(fps);
+    }
+    b.build()
+}
+
+fn apply_layer(b: NetBuilder, j: &Json) -> Result<NetBuilder> {
+    let kind = j
+        .get("type")
+        .as_str()
+        .ok_or_else(|| anyhow!("layer missing 'type'"))?;
+    let req = |key: &str| -> Result<usize> {
+        j.get(key)
+            .as_usize()
+            .ok_or_else(|| anyhow!("{kind}: missing or non-integer '{key}'"))
+    };
+    let opt = |key: &str, default: usize| -> Result<usize> {
+        match j.get(key) {
+            Json::Null => Ok(default),
+            v => v
+                .as_usize()
+                .ok_or_else(|| anyhow!("{kind}: non-integer '{key}'")),
+        }
+    };
+    let name = |key: &str| -> Result<String> {
+        j.get(key)
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("{kind}: missing '{key}'"))
+    };
+    let padding = match j.get("padding") {
+        Json::Null => Padding::Same,
+        v => Padding::parse(
+            v.as_str()
+                .ok_or_else(|| anyhow!("{kind}: 'padding' must be a string"))?,
+        )?,
+    };
+
+    Ok(match kind {
+        "conv" => b.conv(
+            name("name")?,
+            req("out_channels")?,
+            req("kernel")?,
+            opt("stride", 1)?,
+            padding,
+        ),
+        "primary_caps" => b.primary_caps(
+            name("name")?,
+            req("types")?,
+            req("caps_dim")?,
+            req("kernel")?,
+            opt("stride", 1)?,
+            padding,
+        ),
+        "conv_caps2d" => b.conv_caps2d(
+            name("name")?,
+            req("types")?,
+            req("caps_dim")?,
+            req("kernel")?,
+            opt("stride", 1)?,
+            padding,
+            j.get("skip_reuse").as_bool().unwrap_or(false),
+        ),
+        "caps_cell" => b.caps_cell(
+            name("prefix")?,
+            req("types")?,
+            req("caps_dim")?,
+            opt("stride", 1)?,
+        ),
+        "conv_caps3d" => b.conv_caps3d(name("name")?, req("types")?, opt("iters", 3)?),
+        "pool_caps" => b.pool_caps(req("factor")?),
+        "class_caps" => b.class_caps(
+            name("name")?,
+            req("classes")?,
+            req("caps_dim")?,
+            opt("iters", 3)?,
+        ),
+        "routing" => b.routing(name("prefix")?, opt("iters", 3)?),
+        other => bail!("unknown layer type '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CAPSNET_SPEC: &str = r#"{
+      "name": "capsnet", "dataset": "mnist", "paper_fps": 116,
+      "input": [28, 28, 1],
+      "layers": [
+        {"type": "conv", "name": "Conv1", "out_channels": 256,
+         "kernel": 9, "stride": 1, "padding": "valid"},
+        {"type": "primary_caps", "name": "Prim", "types": 32, "caps_dim": 8,
+         "kernel": 9, "stride": 2, "padding": "valid"},
+        {"type": "class_caps", "name": "Class", "classes": 10,
+         "caps_dim": 16, "iters": 3}
+      ]
+    }"#;
+
+    #[test]
+    fn capsnet_spec_reproduces_builtin() {
+        let j = Json::parse(CAPSNET_SPEC).unwrap();
+        let net = network_from_json(&j).unwrap();
+        let reference = capsnet_mnist();
+        assert_eq!(net.ops, reference.ops);
+        assert_eq!(net.paper_fps, reference.paper_fps);
+    }
+
+    #[test]
+    fn builtin_references_resolve() {
+        let j = Json::parse(r#"{"networks": [{"builtin": "capsnet"}, {"builtin": "deepcaps"}]}"#)
+            .unwrap();
+        let spec = workload_from_json(&j).unwrap();
+        assert_eq!(spec.networks.len(), 2);
+        assert_eq!(spec.networks[0].name, "capsnet");
+        assert_eq!(spec.networks[1].ops.len(), 31);
+        assert!(spec.weights.is_none());
+    }
+
+    #[test]
+    fn weights_are_validated() {
+        let j = Json::parse(
+            r#"{"networks": [{"builtin": "capsnet"}], "weights": [0.5, 0.5]}"#,
+        )
+        .unwrap();
+        let err = workload_from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("weights"), "{err:#}");
+    }
+
+    #[test]
+    fn malformed_specs_report_errors_not_panics() {
+        for bad in [
+            r#"{"name": "x", "input": [28, 28], "layers": []}"#,
+            r#"{"name": "x", "input": [28, 28, 1], "layers": [{"type": "warp"}]}"#,
+            r#"{"name": "x", "input": [28, 28, 1],
+                "layers": [{"type": "conv", "name": "C", "kernel": 3}]}"#,
+            r#"{"name": "x", "input": [28, 28, 1],
+                "layers": [{"type": "class_caps", "name": "C", "classes": 10,
+                            "caps_dim": 16}]}"#,
+            r#"{"input": [28, 28, 1], "layers": []}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(network_from_json(&j).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn single_network_file_wraps_into_spec() {
+        let j = Json::parse(CAPSNET_SPEC).unwrap();
+        let spec = workload_from_json(&j).unwrap();
+        assert_eq!(spec.networks.len(), 1);
+    }
+}

@@ -9,6 +9,8 @@
 //! The report carries the -PG static-energy accounting (ON + residual OFF
 //! leakage + wakeup transitions) and the Fig 30-style ON/OFF schedule.
 
+use anyhow::{anyhow, Result};
+
 use crate::cacti::{cache, SramCosts};
 use crate::config::Technology;
 use crate::dataflow::NetworkProfile;
@@ -88,24 +90,42 @@ impl PmuReport {
 }
 
 /// Bytes of each component needed by each op under this organization.
-fn component_needs(org: &Organization, profile: &NetworkProfile, c: Component) -> Vec<usize> {
+fn component_needs(
+    org: &Organization,
+    profile: &NetworkProfile,
+    c: Component,
+) -> Result<Vec<usize>> {
     profile
         .ops
         .iter()
         .map(|op| {
-            let cov = cover_op(org, op).expect("organization must fit the profile");
-            match c {
+            let cov = cover_op(org, op).ok_or_else(|| {
+                anyhow!(
+                    "operation '{}' of '{}' does not fit organization {}",
+                    op.name,
+                    profile.network,
+                    org.label()
+                )
+            })?;
+            Ok(match c {
                 Component::Data => cov.ded_d,
                 Component::Weight => cov.ded_w,
                 Component::Acc => cov.ded_a,
                 Component::Shared => cov.shared_total(),
-            }
+            })
         })
         .collect()
 }
 
-/// Evaluates the PMU over one inference of `profile` on `org`.
-pub fn evaluate(org: &Organization, profile: &NetworkProfile, tech: &Technology) -> PmuReport {
+/// Evaluates the PMU over one batch execution of `profile` on `org`.
+/// (Schedules and energies are per batch; the `energy` layer amortizes per
+/// inference.)  Errors instead of panicking when the organization cannot
+/// hold an operation's working set.
+pub fn evaluate(
+    org: &Organization,
+    profile: &NetworkProfile,
+    tech: &Technology,
+) -> Result<PmuReport> {
     let durations: Vec<f64> = profile
         .ops
         .iter()
@@ -119,9 +139,11 @@ pub fn evaluate(org: &Organization, profile: &NetworkProfile, tech: &Technology)
 
     let costs_of = cache::for_tech(tech);
     for (component, spec) in org.components() {
-        let cfg = org.sram_config(component).unwrap();
+        let cfg = org
+            .sram_config(component)
+            .ok_or_else(|| anyhow!("instantiated component {} has no spec", component.label()))?;
         let costs: SramCosts = costs_of.costs(&cfg);
-        let needs = component_needs(org, profile, component);
+        let needs = component_needs(org, profile, component)?;
         let sector_bytes = cfg.sector_bytes().max(1);
 
         // ON-sector count per op: contiguous allocation from sector 0.
@@ -132,7 +154,7 @@ pub fn evaluate(org: &Organization, profile: &NetworkProfile, tech: &Technology)
                     // No power gating: the array is monolithic and always on.
                     1
                 } else {
-                    (b + sector_bytes - 1) / sector_bytes
+                    b.div_ceil(sector_bytes)
                 }
             })
             .collect();
@@ -171,12 +193,12 @@ pub fn evaluate(org: &Organization, profile: &NetworkProfile, tech: &Technology)
         });
     }
 
-    PmuReport {
+    Ok(PmuReport {
         schedules,
         components,
         max_wakeup_latency_s: max_wakeup,
         min_op_duration_s: durations.iter().cloned().fold(f64::INFINITY, f64::min),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -205,7 +227,7 @@ mod tests {
     fn power_gating_reduces_static_energy() {
         let tech = Technology::default();
         let p = profile();
-        let report = evaluate(&sep_pg(), &p, &tech);
+        let report = evaluate(&sep_pg(), &p, &tech).unwrap();
         let saved = 1.0 - report.static_energy_j() / report.static_no_pg_j();
         // Paper Table I/III: SEP-PG cuts SEP's static energy by ~60-73%.
         assert!(
@@ -223,7 +245,7 @@ mod tests {
             MemSpec::new(64 * KIB, 1),
             MemSpec::new(32 * KIB, 1),
         );
-        let report = evaluate(&sep, &p, &tech);
+        let report = evaluate(&sep, &p, &tech).unwrap();
         assert!((report.static_energy_j() - report.static_no_pg_j()).abs() < 1e-15);
         assert_eq!(report.wakeup_energy_j(), 0.0);
     }
@@ -234,7 +256,7 @@ mod tests {
         // during Class (53.8k), a middle amount during routing (22.5k).
         let tech = Technology::default();
         let p = profile();
-        let report = evaluate(&sep_pg(), &p, &tech);
+        let report = evaluate(&sep_pg(), &p, &tech).unwrap();
         let w = report.schedule(Component::Weight).unwrap();
         assert_eq!(w.sectors, 8);
         let idx = |name: &str| p.ops.iter().position(|o| o.name == name).unwrap();
@@ -248,7 +270,7 @@ mod tests {
     fn wakeup_latency_is_masked() {
         let tech = Technology::default();
         let p = profile();
-        let report = evaluate(&sep_pg(), &p, &tech);
+        let report = evaluate(&sep_pg(), &p, &tech).unwrap();
         assert!(report.wakeup_masked());
         // Shortest op is still > 1000x the wakeup latency.
         assert!(report.min_op_duration_s / report.max_wakeup_latency_s > 1e3);
@@ -259,7 +281,7 @@ mod tests {
         // Paper: average wakeup energy ~1.6 nJ vs mJ-scale static energy.
         let tech = Technology::default();
         let p = profile();
-        let report = evaluate(&sep_pg(), &p, &tech);
+        let report = evaluate(&sep_pg(), &p, &tech).unwrap();
         assert!(report.wakeup_energy_j() > 0.0);
         assert!(report.wakeup_energy_j() < 1e-3 * report.static_energy_j());
     }
@@ -275,7 +297,7 @@ mod tests {
                 MemSpec::new(64 * KIB, sc),
                 MemSpec::new(32 * KIB, 2),
             );
-            let e = evaluate(&org, &p, &tech).static_energy_j();
+            let e = evaluate(&org, &p, &tech).unwrap().static_energy_j();
             assert!(e <= prev + 1e-15, "SC={sc}: {e} > {prev}");
             prev = e;
         }
@@ -285,7 +307,7 @@ mod tests {
     fn on_fraction_weighted_by_duration() {
         let tech = Technology::default();
         let p = profile();
-        let report = evaluate(&sep_pg(), &p, &tech);
+        let report = evaluate(&sep_pg(), &p, &tech).unwrap();
         let durations: Vec<f64> = p
             .ops
             .iter()
@@ -310,7 +332,7 @@ mod tests {
             MemSpec::new(16 * KIB, 1),
             3,
         );
-        let report = evaluate(&org, &p, &tech);
+        let report = evaluate(&org, &p, &tech).unwrap();
         let sh = report.schedule(Component::Shared).unwrap();
         assert!(sh.on.iter().any(|&n| n > 0));
         assert!(sh.on.iter().any(|&n| n < sh.sectors), "sometimes gated");

@@ -7,9 +7,12 @@
 
 use std::path::{Path, PathBuf};
 
+use anyhow::{anyhow, Context, Result};
+
 use crate::config::SystemConfig;
 use crate::dataflow::{profile_network, tpu, NetworkProfile};
 use crate::dse;
+use crate::dse::multi::WorkloadSet;
 use crate::energy::{self, system_with_org};
 use crate::memory::{cover_op, prefetch, Component, MemSpec, Organization};
 use crate::model::{capsnet_mnist, deepcaps_cifar10};
@@ -204,10 +207,10 @@ pub fn fig11(ctx: &ReportCtx) -> Csv {
 // --------------------------------------------------------------- E06 Fig 12
 
 /// Fig 12: energy breakdown of versions (a) and (b).
-pub fn fig12(ctx: &ReportCtx) -> Csv {
+pub fn fig12(ctx: &ReportCtx) -> Result<Csv> {
     let mut csv = Csv::new(&["version", "component", "energy_mj", "share"]);
-    let a = energy::version_a(&ctx.capsnet, &ctx.cfg.tech);
-    let b = energy::version_b(&ctx.capsnet, &ctx.cfg.tech, dse::smp_size(&ctx.capsnet));
+    let a = energy::version_a(&ctx.capsnet, &ctx.cfg.tech)?;
+    let b = energy::version_b(&ctx.capsnet, &ctx.cfg.tech, dse::smp_size(&ctx.capsnet))?;
     for sys in [&a, &b] {
         let total = sys.total_j();
         let mut rows: Vec<(&str, f64)> = vec![
@@ -226,16 +229,16 @@ pub fn fig12(ctx: &ReportCtx) -> Csv {
         csv.row(vec![s(&sys.label), s("TOTAL"), f(total * 1e3), f(1.0)]);
     }
     ctx.write("fig12_energy_versions.csv", &csv);
-    csv
+    Ok(csv)
 }
 
 // ------------------------------------------------- E07/E09 Fig 18/20 + tabs
 
 /// Runs the full DSE for one network and dumps scatter + frontier +
 /// selected configurations (Fig 18/20, Tables I/II).
-pub fn dse_scatter(ctx: &ReportCtx, net: &str, threads: usize) -> (Csv, Table) {
+pub fn dse_scatter(ctx: &ReportCtx, net: &str, threads: usize) -> Result<(Csv, Table)> {
     let profile = ctx.profile(net);
-    let result = dse::run(profile, &ctx.cfg.tech, threads);
+    let result = dse::run(profile, &ctx.cfg.tech, threads)?;
     let pareto: std::collections::BTreeSet<usize> = result.pareto.iter().copied().collect();
     let selected: std::collections::BTreeMap<usize, String> = result
         .selected
@@ -326,16 +329,16 @@ pub fn dse_scatter(ctx: &ReportCtx, net: &str, threads: usize) -> (Csv, Table) {
     };
     ctx.write(fig, &csv);
     ctx.write_md(tab, &table);
-    (csv, table)
+    Ok((csv, table))
 }
 
 // ----------------------------------------------- E08/E10 Fig 19/21 breakdown
 
 /// Figs 19/21 (a)-(d): per-component area/energy breakdowns and per-op
 /// energy for the per-option selected configurations.
-pub fn breakdowns(ctx: &ReportCtx, net: &str, threads: usize) -> Csv {
+pub fn breakdowns(ctx: &ReportCtx, net: &str, threads: usize) -> Result<Csv> {
     let profile = ctx.profile(net);
-    let result = dse::run(profile, &ctx.cfg.tech, threads);
+    let result = dse::run(profile, &ctx.cfg.tech, threads)?;
     let mut csv = Csv::new(&[
         "option",
         "component",
@@ -349,7 +352,7 @@ pub fn breakdowns(ctx: &ReportCtx, net: &str, threads: usize) -> Csv {
     let mut per_op = Csv::new(&["option", "op", "energy_mj"]);
     for (name, i) in &result.selected {
         let org = &result.points[*i].org;
-        let e = energy::evaluate_org(org, profile, &ctx.cfg.tech);
+        let e = energy::evaluate_org(org, profile, &ctx.cfg.tech)?;
         for m in &e.memories {
             csv.row(vec![
                 s(name),
@@ -362,7 +365,7 @@ pub fn breakdowns(ctx: &ReportCtx, net: &str, threads: usize) -> Csv {
                 f(m.wakeup_j * 1e9),
             ]);
         }
-        for (op, ej) in energy::per_op_energy(org, profile, &ctx.cfg.tech) {
+        for (op, ej) in energy::per_op_energy(org, profile, &ctx.cfg.tech)? {
             per_op.row(vec![s(name), s(&op), f(ej * 1e3)]);
         }
     }
@@ -372,17 +375,17 @@ pub fn breakdowns(ctx: &ReportCtx, net: &str, threads: usize) -> Csv {
     };
     ctx.write(a, &csv);
     ctx.write(b, &per_op);
-    csv
+    Ok(csv)
 }
 
 // --------------------------------------------------------------- E11 Fig 22
 
 /// Fig 22: HY-PG DSE with constrained shared-memory ports.
-pub fn fig22(ctx: &ReportCtx, threads: usize) -> Csv {
+pub fn fig22(ctx: &ReportCtx, threads: usize) -> Result<Csv> {
     let profile = &ctx.deepcaps;
     let mut csv = Csv::new(&["ports", "label", "area_mm2", "energy_mj", "pareto"]);
     for ports in [1usize, 2, 3] {
-        let orgs = dse::enumerate_hy_ports(profile, ports);
+        let orgs = dse::enumerate_hy_ports(profile, ports)?;
         let points = dse::evaluate_all(&orgs, profile, &ctx.cfg.tech, threads);
         let front: std::collections::BTreeSet<usize> =
             dse::pareto_indices(&points).into_iter().collect();
@@ -397,20 +400,20 @@ pub fn fig22(ctx: &ReportCtx, threads: usize) -> Csv {
         }
     }
     ctx.write("fig22_hy_pg_ports.csv", &csv);
-    csv
+    Ok(csv)
 }
 
 // ---------------------------------------------- E12/E13 Fig 23-26 + E18
 
 /// Figs 23–26: whole-accelerator energy/area for the chosen organizations,
 /// plus the headline savings vs version (a) (E18).
-pub fn whole_accelerator(ctx: &ReportCtx, net: &str, threads: usize) -> Csv {
+pub fn whole_accelerator(ctx: &ReportCtx, net: &str, threads: usize) -> Result<Csv> {
     let profile = ctx.profile(net);
-    let result = dse::run(profile, &ctx.cfg.tech, threads);
+    let result = dse::run(profile, &ctx.cfg.tech, threads)?;
     let selected: std::collections::BTreeMap<String, usize> =
         result.selected.iter().cloned().collect();
 
-    let a = energy::version_a(profile, &ctx.cfg.tech);
+    let a = energy::version_a(profile, &ctx.cfg.tech)?;
     let mut csv = Csv::new(&[
         "system",
         "total_energy_mj",
@@ -439,7 +442,7 @@ pub fn whole_accelerator(ctx: &ReportCtx, net: &str, threads: usize) -> Csv {
     let report = prefetch::analyze(profile, &ctx.cfg.tech, &ctx.cfg.accel);
     for option in ["SEP", "SEP-PG", "HY-PG"] {
         let Some(&i) = selected.get(option) else { continue };
-        let sys = system_with_org(profile, &ctx.cfg.tech, &result.points[i].org, "DESCNet");
+        let sys = system_with_org(profile, &ctx.cfg.tech, &result.points[i].org, "DESCNet")?;
         csv.row(vec![
             s(&sys.label),
             f(sys.total_j() * 1e3),
@@ -458,24 +461,24 @@ pub fn whole_accelerator(ctx: &ReportCtx, net: &str, threads: usize) -> Csv {
         _ => "fig25_26_deepcaps_whole_accelerator.csv",
     };
     ctx.write(name, &csv);
-    csv
+    Ok(csv)
 }
 
 // ------------------------------------------------------------- E14 Table III
 
 /// Table III: per-memory area/dynamic/static/wakeup for the selected
 /// configurations of both networks.
-pub fn table3(ctx: &ReportCtx, threads: usize) -> Table {
+pub fn table3(ctx: &ReportCtx, threads: usize) -> Result<Table> {
     let mut table = Table::new(&[
         "NN", "Mem", "Component", "Size", "SC", "Area [mm2]", "Dyn [mJ]", "Static [mJ]",
         "Wakeup [nJ]",
     ]);
     for net in ["capsnet", "deepcaps"] {
         let profile = ctx.profile(net);
-        let result = dse::run(profile, &ctx.cfg.tech, threads);
+        let result = dse::run(profile, &ctx.cfg.tech, threads)?;
         for (name, i) in &result.selected {
             let org = &result.points[*i].org;
-            let e = energy::evaluate_org(org, profile, &ctx.cfg.tech);
+            let e = energy::evaluate_org(org, profile, &ctx.cfg.tech)?;
             for m in &e.memories {
                 table.row(vec![
                     net.to_string(),
@@ -492,7 +495,7 @@ pub fn table3(ctx: &ReportCtx, threads: usize) -> Table {
         }
     }
     ctx.write_md("table3_area_energy.md", &table);
-    table
+    Ok(table)
 }
 
 // ----------------------------------------------------------- E15 Fig 27/28
@@ -517,16 +520,17 @@ pub fn fig27_28(ctx: &ReportCtx) -> Csv {
 
 /// Figs 29/31: operation-wise memory breakdown (which physical memory holds
 /// which value class) for the selected design options.
-pub fn memory_breakdown(ctx: &ReportCtx, net: &str, threads: usize) -> Csv {
+pub fn memory_breakdown(ctx: &ReportCtx, net: &str, threads: usize) -> Result<Csv> {
     let profile = ctx.profile(net);
-    let result = dse::run(profile, &ctx.cfg.tech, threads);
+    let result = dse::run(profile, &ctx.cfg.tech, threads)?;
     let mut csv = Csv::new(&[
         "option", "op", "ded_d", "ded_w", "ded_a", "sh_d", "sh_w", "sh_a", "shared_types",
     ]);
     for (name, i) in &result.selected {
         let org = &result.points[*i].org;
         for op in &profile.ops {
-            let cov = cover_op(org, op).expect("fits");
+            let cov = cover_op(org, op)
+                .ok_or_else(|| anyhow!("selected org no longer fits op '{}'", op.name))?;
             csv.row(vec![
                 s(name),
                 s(&op.name),
@@ -545,19 +549,22 @@ pub fn memory_breakdown(ctx: &ReportCtx, net: &str, threads: usize) -> Csv {
         _ => "fig31_deepcaps_memory_breakdown.csv",
     };
     ctx.write(name, &csv);
-    csv
+    Ok(csv)
 }
 
 // --------------------------------------------------------------- E17 Fig 30
 
 /// Fig 30: the HY-PG sector ON/OFF schedule across operations.
-pub fn fig30(ctx: &ReportCtx, threads: usize) -> Csv {
+pub fn fig30(ctx: &ReportCtx, threads: usize) -> Result<Csv> {
     let profile = &ctx.capsnet;
-    let result = dse::run(profile, &ctx.cfg.tech, threads);
+    let result = dse::run(profile, &ctx.cfg.tech, threads)?;
     let selected: std::collections::BTreeMap<String, usize> =
         result.selected.iter().cloned().collect();
-    let org = &result.points[selected["HY-PG"]].org;
-    let report = pmu::evaluate(org, profile, &ctx.cfg.tech);
+    let i = *selected
+        .get("HY-PG")
+        .ok_or_else(|| anyhow!("DSE selected no HY-PG configuration"))?;
+    let org = &result.points[i].org;
+    let report = pmu::evaluate(org, profile, &ctx.cfg.tech)?;
     let mut csv = Csv::new(&["component", "sectors", "op", "sectors_on"]);
     for sched in &report.schedules {
         for (i, op) in profile.ops.iter().enumerate() {
@@ -570,23 +577,29 @@ pub fn fig30(ctx: &ReportCtx, threads: usize) -> Csv {
         }
     }
     ctx.write("fig30_hy_pg_schedule.csv", &csv);
-    csv
+    Ok(csv)
 }
 
 // ------------------------------------------------------------- E18 headline
 
 /// The headline claims, as one summary CSV (and returned for the CLI).
-pub fn headline(ctx: &ReportCtx, threads: usize) -> Csv {
+pub fn headline(ctx: &ReportCtx, threads: usize) -> Result<Csv> {
     let mut csv = Csv::new(&["metric", "paper", "ours"]);
     let p = &ctx.capsnet;
     let tech = &ctx.cfg.tech;
-    let a = energy::version_a(p, tech);
-    let b = energy::version_b(p, tech, dse::smp_size(p));
-    let result = dse::run(p, tech, threads);
+    let a = energy::version_a(p, tech)?;
+    let b = energy::version_b(p, tech, dse::smp_size(p))?;
+    let result = dse::run(p, tech, threads)?;
     let selected: std::collections::BTreeMap<String, usize> =
         result.selected.iter().cloned().collect();
-    let sep_sys = system_with_org(p, tech, &result.points[selected["SEP"]].org, "DESCNet");
-    let hy_sys = system_with_org(p, tech, &result.points[selected["HY-PG"]].org, "DESCNet");
+    let pick = |name: &str| -> Result<usize> {
+        selected
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("DSE selected no {name} configuration"))
+    };
+    let sep_sys = system_with_org(p, tech, &result.points[pick("SEP")?].org, "DESCNet")?;
+    let hy_sys = system_with_org(p, tech, &result.points[pick("HY-PG")?].org, "DESCNet")?;
     let report = prefetch::analyze(p, tech, &ctx.cfg.accel);
 
     csv.row(vec![s("capsnet_fps"), s("116"), f(p.fps())]);
@@ -638,11 +651,121 @@ pub fn headline(ctx: &ReportCtx, threads: usize) -> Csv {
         f(b.memory_share()),
     ]);
     ctx.write("headline.csv", &csv);
-    csv
+    Ok(csv)
+}
+
+// ------------------------------------------------------- E19 multi-network
+
+/// The default serving-mix workload set for the co-design artifact: both
+/// paper networks at batch 1 plus CapsNet at batch 4 (the coordinator's
+/// largest batch) — three scenarios sharing one organization.
+pub fn default_serving_mix(ctx: &ReportCtx) -> Result<(WorkloadSet, Vec<String>)> {
+    let b4 = crate::dataflow::profile_network_batched(
+        &capsnet_mnist(),
+        &ctx.cfg.accel,
+        4,
+    );
+    let names = vec![
+        "capsnet".to_string(),
+        "deepcaps".to_string(),
+        "capsnet@b4".to_string(),
+    ];
+    let set = WorkloadSet::new(vec![ctx.capsnet.clone(), ctx.deepcaps.clone(), b4])?;
+    Ok((set, names))
+}
+
+/// Multi-network co-design DSE artifact: the weighted scatter
+/// (`dse_multi.csv`) and the selected co-designed organizations with
+/// per-network energy columns (`table_multi_selected.md`).
+pub fn multi_dse(
+    ctx: &ReportCtx,
+    set: &WorkloadSet,
+    names: &[String],
+    threads: usize,
+) -> Result<(Csv, Table)> {
+    let result = dse::multi::run(set, &ctx.cfg.tech, threads)
+        .context("multi-network co-design DSE")?;
+    let pareto: std::collections::BTreeSet<usize> = result.pareto.iter().copied().collect();
+    let selected: std::collections::BTreeMap<usize, String> = result
+        .selected
+        .iter()
+        .map(|(name, i)| (*i, name.clone()))
+        .collect();
+
+    let mut headers: Vec<String> = vec![
+        "option".into(),
+        "label".into(),
+        "total_B".into(),
+        "area_mm2".into(),
+        "energy_weighted_mj".into(),
+    ];
+    for name in names {
+        headers.push(format!("energy_mj_{name}"));
+    }
+    headers.push("pareto".into());
+    headers.push("selected".into());
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut csv = Csv::new(&header_refs);
+    for (i, p) in result.points.iter().enumerate() {
+        let mut row = vec![
+            s(&p.option()),
+            s(&p.org.label()),
+            u(p.org.total_size()),
+            f(p.area_mm2),
+            f(p.energy_j * 1e3),
+        ];
+        for &e in &result.per_net_j[i] {
+            row.push(f(e * 1e3));
+        }
+        row.push(s(if pareto.contains(&i) { "1" } else { "0" }));
+        row.push(s(selected.get(&i).map(String::as_str).unwrap_or("")));
+        csv.row(row);
+    }
+
+    let mut table_headers: Vec<String> = vec![
+        "Mem".into(),
+        "Shared SZ".into(),
+        "Data SZ".into(),
+        "Weight SZ".into(),
+        "Acc SZ".into(),
+        "Area [mm2]".into(),
+        "E-mix [mJ]".into(),
+    ];
+    for name in names {
+        table_headers.push(format!("E {name} [mJ]"));
+    }
+    let table_refs: Vec<&str> = table_headers.iter().map(String::as_str).collect();
+    let mut table = Table::new(&table_refs);
+    for (name, i) in &result.selected {
+        let p = &result.points[*i];
+        let cell = |c| {
+            p.org
+                .spec(c)
+                .map(|m: MemSpec| fmt_size(m.size))
+                .unwrap_or_else(|| "-".into())
+        };
+        let mut row = vec![
+            name.clone(),
+            cell(Component::Shared),
+            cell(Component::Data),
+            cell(Component::Weight),
+            cell(Component::Acc),
+            format!("{:.3}", p.area_mm2),
+            format!("{:.3}", p.energy_j * 1e3),
+        ];
+        for &e in &result.per_net_j[*i] {
+            row.push(format!("{:.3}", e * 1e3));
+        }
+        table.row(row);
+    }
+
+    ctx.write("dse_multi.csv", &csv);
+    ctx.write_md("table_multi_selected.md", &table);
+    Ok((csv, table))
 }
 
 /// Regenerate everything (the `descnet report all` entry point).
-pub fn all(ctx: &ReportCtx, threads: usize) -> Vec<String> {
+pub fn all(ctx: &ReportCtx, threads: usize) -> Result<Vec<String>> {
     let mut done = Vec::new();
     let mut mark = |name: &str| done.push(name.to_string());
     fig1(ctx);
@@ -655,35 +778,38 @@ pub fn all(ctx: &ReportCtx, threads: usize) -> Vec<String> {
     mark("fig10");
     fig11(ctx);
     mark("fig11");
-    fig12(ctx);
+    fig12(ctx)?;
     mark("fig12");
-    dse_scatter(ctx, "capsnet", threads);
+    dse_scatter(ctx, "capsnet", threads)?;
     mark("fig18+table1");
-    breakdowns(ctx, "capsnet", threads);
+    breakdowns(ctx, "capsnet", threads)?;
     mark("fig19");
-    dse_scatter(ctx, "deepcaps", threads);
+    dse_scatter(ctx, "deepcaps", threads)?;
     mark("fig20+table2");
-    breakdowns(ctx, "deepcaps", threads);
+    breakdowns(ctx, "deepcaps", threads)?;
     mark("fig21");
-    fig22(ctx, threads);
+    fig22(ctx, threads)?;
     mark("fig22");
-    whole_accelerator(ctx, "capsnet", threads);
+    whole_accelerator(ctx, "capsnet", threads)?;
     mark("fig23-24");
-    whole_accelerator(ctx, "deepcaps", threads);
+    whole_accelerator(ctx, "deepcaps", threads)?;
     mark("fig25-26");
-    table3(ctx, threads);
+    table3(ctx, threads)?;
     mark("table3");
     fig27_28(ctx);
     mark("fig27-28");
-    memory_breakdown(ctx, "capsnet", threads);
+    memory_breakdown(ctx, "capsnet", threads)?;
     mark("fig29");
-    memory_breakdown(ctx, "deepcaps", threads);
+    memory_breakdown(ctx, "deepcaps", threads)?;
     mark("fig31");
-    fig30(ctx, threads);
+    fig30(ctx, threads)?;
     mark("fig30");
-    headline(ctx, threads);
+    headline(ctx, threads)?;
     mark("headline");
-    done
+    let mix = default_serving_mix(ctx)?;
+    multi_dse(ctx, &mix.0, &mix.1, threads)?;
+    mark("dse-multi");
+    Ok(done)
 }
 
 #[cfg(test)]
@@ -714,7 +840,7 @@ mod tests {
     #[test]
     fn fig12_contains_both_versions_with_totals() {
         let c = ctx();
-        let text = fig12(&c).to_string();
+        let text = fig12(&c).unwrap().to_string();
         assert!(text.contains("version (a)"));
         assert!(text.contains("version (b)"));
         assert!(text.contains("offchip_transfer"));
@@ -724,7 +850,7 @@ mod tests {
     #[test]
     fn headline_metrics_present() {
         let c = ctx();
-        let text = headline(&c, 4).to_string();
+        let text = headline(&c, 4).unwrap().to_string();
         for metric in [
             "capsnet_fps",
             "hy_pg_total_energy_saving_vs_a",
@@ -744,9 +870,24 @@ mod tests {
     #[test]
     fn fig30_schedule_rows_cover_components_times_ops() {
         let c = ctx();
-        let csv = fig30(&c, 4);
+        let csv = fig30(&c, 4).unwrap();
         // HY-PG has 4 memories x 9 ops.
         assert_eq!(csv.len() % 9, 0);
         assert!(csv.len() >= 18);
+    }
+
+    #[test]
+    fn multi_dse_reports_per_network_energy() {
+        let c = ctx();
+        let (set, names) = default_serving_mix(&c).unwrap();
+        assert_eq!(names.len(), 3);
+        let (csv, table) = multi_dse(&c, &set, &names, 4).unwrap();
+        assert!(!csv.is_empty());
+        let text = csv.to_string();
+        assert!(text.contains("energy_mj_capsnet@b4"), "missing per-net column");
+        let md = table.to_markdown();
+        assert!(md.contains("E deepcaps [mJ]"), "{md}");
+        // One co-designed selection per design option, each with a row.
+        assert!(md.lines().count() >= 4);
     }
 }

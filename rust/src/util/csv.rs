@@ -38,23 +38,24 @@ impl Csv {
         self.rows.is_empty()
     }
 
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        out.push_str(&join(&self.header));
-        out.push('\n');
-        for r in &self.rows {
-            out.push_str(&join(r));
-            out.push('\n');
-        }
-        out
-    }
-
     pub fn write_file(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(path)?;
         f.write_all(self.to_string().as_bytes())
+    }
+}
+
+/// Rendering goes through `Display`, so `Csv::to_string()` comes from the
+/// blanket `ToString` impl (satisfies `clippy::inherent_to_string`).
+impl std::fmt::Display for Csv {
+    fn fmt(&self, out: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(out, "{}", join(&self.header))?;
+        for r in &self.rows {
+            writeln!(out, "{}", join(r))?;
+        }
+        Ok(())
     }
 }
 

@@ -1,0 +1,253 @@
+//! Golden + property tests for the generalized workload layer (ISSUE 2).
+//!
+//! * Golden: the builder-expressed `capsnet_mnist()` / `deepcaps_cifar10()`
+//!   must be bit-identical to the frozen seed definitions — both at the
+//!   `Operation` level and through the dataflow model (`OpProfile`
+//!   sequences), and the batch-1 batched profile must equal the default
+//!   profile exactly.
+//! * Property: every generated random network satisfies the
+//!   workload-invariant class — profiles are well-formed, working sets fit
+//!   the Eq. 1 SMP bound (and the Eq. 2 SEP sizing), off-chip traffic is
+//!   consistent with op geometry, and the whole DSE pipeline runs end to
+//!   end on it.
+
+use descnet::config::{Accelerator, Technology};
+use descnet::dataflow::{profile_network, profile_network_batched};
+use descnet::dse;
+use descnet::dse::multi::WorkloadSet;
+use descnet::memory::{org_fits, MemSpec, Organization};
+use descnet::model::seed::{capsnet_mnist_seed, deepcaps_cifar10_seed};
+use descnet::model::{capsnet_mnist, deepcaps_cifar10, random_network, spec, OpKind};
+use descnet::util::json::Json;
+
+// --------------------------------------------------------------- golden
+
+#[test]
+fn builder_networks_match_seed_ops_bit_identically() {
+    let pairs = [
+        (capsnet_mnist(), capsnet_mnist_seed()),
+        (deepcaps_cifar10(), deepcaps_cifar10_seed()),
+    ];
+    for (built, seed) in &pairs {
+        assert_eq!(built.name, seed.name);
+        assert_eq!(built.dataset, seed.dataset);
+        assert_eq!(built.paper_fps, seed.paper_fps);
+        assert_eq!(built.ops.len(), seed.ops.len());
+        for (b, s) in built.ops.iter().zip(&seed.ops) {
+            assert_eq!(b, s, "operation '{}' diverged from seed", s.name);
+        }
+    }
+}
+
+#[test]
+fn builder_profiles_match_seed_profiles_bit_identically() {
+    let accel = Accelerator::default();
+    for (built, seed) in [
+        (capsnet_mnist(), capsnet_mnist_seed()),
+        (deepcaps_cifar10(), deepcaps_cifar10_seed()),
+    ] {
+        let pb = profile_network(&built, &accel);
+        let ps = profile_network(&seed, &accel);
+        assert_eq!(pb.ops.len(), ps.ops.len());
+        for (a, b) in pb.ops.iter().zip(&ps.ops) {
+            assert_eq!(a, b, "OpProfile '{}' diverged from seed", b.name);
+        }
+        assert_eq!(pb.total_cycles(), ps.total_cycles());
+        assert_eq!(pb.fps().to_bits(), ps.fps().to_bits());
+    }
+}
+
+#[test]
+fn batch_one_profiles_bit_identical_to_seed_profiles() {
+    let accel = Accelerator::default();
+    for seed_net in [capsnet_mnist_seed(), deepcaps_cifar10_seed()] {
+        let reference = profile_network(&seed_net, &accel);
+        let batched = profile_network_batched(&seed_net, &accel, 1);
+        assert_eq!(reference, batched, "{}", seed_net.name);
+    }
+}
+
+#[test]
+fn workload_spec_file_reproduces_builtin_capsnet() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("configs/workloads/capsnet_mnist.json");
+    let spec = spec::load(&path).unwrap();
+    assert_eq!(spec.networks.len(), 1);
+    assert_eq!(spec.networks[0].ops, capsnet_mnist().ops);
+}
+
+#[test]
+fn edge_serving_mix_spec_loads_three_networks_with_weights() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("configs/workloads/edge_serving_mix.json");
+    let spec = spec::load(&path).unwrap();
+    assert_eq!(spec.networks.len(), 3);
+    let weights = spec.weights.clone().unwrap();
+    assert_eq!(weights.len(), 3);
+    // The set is usable end to end: union-sized enumeration is non-empty.
+    let accel = Accelerator::default();
+    let profiles = spec
+        .networks
+        .iter()
+        .map(|n| profile_network(n, &accel))
+        .collect();
+    let set = WorkloadSet::with_weights(profiles, weights).unwrap();
+    assert!(!dse::multi::enumerate(&set).unwrap().is_empty());
+}
+
+#[test]
+fn malformed_spec_reports_error_with_path_context() {
+    let dir = std::env::temp_dir().join("descnet_builder_golden");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("broken.json");
+    std::fs::write(
+        &path,
+        r#"{"name": "broken", "input": [5, 5, 1],
+           "layers": [{"type": "conv", "name": "C", "out_channels": 8,
+                       "kernel": 9, "padding": "valid"}]}"#,
+    )
+    .unwrap();
+    let err = spec::load(&path).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("broken.json"), "{msg}");
+    assert!(msg.contains("exceeds input extent"), "{msg}");
+}
+
+// ------------------------------------------------------------- properties
+
+#[test]
+fn random_networks_satisfy_workload_invariants() {
+    let accel = Accelerator::default();
+    for seed in 0..40 {
+        let net = random_network(seed);
+        let p = profile_network(&net, &accel);
+        assert!(p.total_cycles() > 0, "seed {seed}");
+        assert!(p.fps() > 0.0 && p.fps().is_finite(), "seed {seed}");
+
+        // Eq. 1 / Eq. 2 consistency.
+        assert!(p.max_total() >= p.max_d().max(p.max_w()).max(p.max_a()));
+        assert!(p.max_total() <= p.max_d() + p.max_w() + p.max_a());
+
+        // Working sets fit the SMP bound: the Eq. 1-sized SMP organization
+        // always holds every operation.
+        let smp = Organization::smp(MemSpec::new(dse::smp_size(&p), 1));
+        assert!(org_fits(&smp, &p), "seed {seed}: SMP bound violated");
+        // ...and the Eq. 2-sized SEP organization holds every class.
+        let (d, w, a) = dse::sep_sizes(&p);
+        let sep = Organization::sep(
+            MemSpec::new(d.max(1), 1),
+            MemSpec::new(w.max(1), 1),
+            MemSpec::new(a.max(1), 1),
+        );
+        assert!(org_fits(&sep, &p), "seed {seed}: SEP sizing violated");
+
+        for (op, prof) in net.ops.iter().zip(&p.ops) {
+            assert!(prof.cycles > 0, "seed {seed}: {} zero cycles", prof.name);
+            // Off-chip traffic consistent with op geometry.
+            match &op.kind {
+                OpKind::Conv2d { .. } => {
+                    // Eq. 3: conv reads = fmap fill + weight fill.
+                    assert_eq!(
+                        prof.off_rd,
+                        prof.wr_d + prof.wr_w,
+                        "seed {seed}: {}",
+                        prof.name
+                    );
+                    assert!(prof.off_rd >= op.param_bytes(), "seed {seed}: {}", prof.name);
+                }
+                OpKind::Votes { votes_in_acc, .. } => {
+                    assert!(prof.off_rd > 0, "seed {seed}: {}", prof.name);
+                    if *votes_in_acc {
+                        assert_eq!(prof.off_wr, 0, "seed {seed}: {}", prof.name);
+                    }
+                }
+                OpKind::Routing { .. } => {
+                    // Routing touches DRAM only at phase boundaries.
+                    assert!(
+                        prof.off_rd == 0 || prof.name.contains("Sum+Squash1"),
+                        "seed {seed}: {} mid-routing DRAM read",
+                        prof.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn random_networks_run_through_the_full_dse_pipeline() {
+    let accel = Accelerator::default();
+    let tech = Technology::default();
+    for seed in [1u64, 11, 29] {
+        let net = random_network(seed);
+        let p = profile_network(&net, &accel);
+        let res = dse::run(&p, &tech, 4).unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+        assert!(!res.points.is_empty(), "seed {seed}");
+        assert!(!res.pareto.is_empty(), "seed {seed}");
+        assert!(!res.selected.is_empty(), "seed {seed}");
+        for (_, i) in &res.selected {
+            assert!(org_fits(&res.points[*i].org, &p), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn random_networks_batch_profiles_amortize() {
+    let accel = Accelerator::default();
+    for seed in [2u64, 17] {
+        let net = random_network(seed);
+        let b1 = profile_network_batched(&net, &accel, 1);
+        let b8 = profile_network_batched(&net, &accel, 8);
+        assert!(b8.fps() >= b1.fps(), "seed {seed}");
+        // Working sets stay batch-invariant, so the same orgs fit.
+        assert_eq!(dse::sep_sizes(&b1), dse::sep_sizes(&b8), "seed {seed}");
+        assert_eq!(dse::smp_size(&b1), dse::smp_size(&b8), "seed {seed}");
+    }
+}
+
+#[test]
+fn three_network_codesign_acceptance() {
+    // The ISSUE 2 acceptance shape: a >= 3-network workload set emits a
+    // single co-designed organization with per-network energy.
+    let accel = Accelerator::default();
+    let tech = Technology::default();
+    let nets = [capsnet_mnist(), deepcaps_cifar10(), random_network(5)];
+    let profiles = nets.iter().map(|n| profile_network(n, &accel)).collect();
+    let set = WorkloadSet::new(profiles).unwrap();
+    let res = dse::multi::run(&set, &tech, 4).unwrap();
+    let best = res.codesigned().expect("a co-designed organization");
+    let org = &res.points[best].org;
+    assert_eq!(res.per_net_j[best].len(), 3);
+    for (p, &e) in set.profiles().iter().zip(&res.per_net_j[best]) {
+        assert!(org_fits(org, p), "{} unfit for {}", org.label(), p.network);
+        assert!(e > 0.0 && e.is_finite());
+    }
+}
+
+#[test]
+fn inline_spec_and_builder_agree_for_a_deepcaps_style_chain() {
+    // The JSON front-end and the native builder must be the same IR.
+    let text = r#"{
+      "name": "mini-deepcaps", "dataset": "x",
+      "input": [32, 32, 3],
+      "layers": [
+        {"type": "conv", "name": "Conv1", "out_channels": 64, "kernel": 3},
+        {"type": "primary_caps", "name": "Prim", "types": 8, "caps_dim": 8,
+         "kernel": 3, "stride": 2},
+        {"type": "caps_cell", "prefix": "Cell0", "types": 8, "caps_dim": 8,
+         "stride": 2},
+        {"type": "class_caps", "name": "Class", "classes": 10,
+         "caps_dim": 16, "iters": 2}
+      ]
+    }"#;
+    let from_spec = spec::network_from_json(&Json::parse(text).unwrap()).unwrap();
+    let from_builder = descnet::model::NetBuilder::new("mini-deepcaps", "x")
+        .input(32, 32, 3)
+        .conv("Conv1", 64, 3, 1, descnet::model::Padding::Same)
+        .primary_caps("Prim", 8, 8, 3, 2, descnet::model::Padding::Same)
+        .caps_cell("Cell0", 8, 8, 2)
+        .class_caps("Class", 10, 16, 2)
+        .build()
+        .unwrap();
+    assert_eq!(from_spec.ops, from_builder.ops);
+}

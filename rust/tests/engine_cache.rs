@@ -25,7 +25,7 @@ fn profile() -> NetworkProfile {
 fn dse_points_bit_identical_across_thread_counts() {
     let tech = Technology::default();
     let p = profile();
-    let orgs = dse::enumerate(&p);
+    let orgs = dse::enumerate(&p).unwrap();
     let serial = dse::evaluate_all_on(&Engine::new(1), &orgs, &p, &tech);
     for threads in [2usize, 5] {
         let parallel = dse::evaluate_all_on(&Engine::new(threads), &orgs, &p, &tech);
@@ -52,8 +52,8 @@ fn dse_points_bit_identical_across_thread_counts() {
 fn full_dse_pipeline_identical_across_engines() {
     let tech = Technology::default();
     let p = profile();
-    let res1 = dse::run(&p, &tech, 1);
-    let res8 = dse::run_on(&Engine::new(8), &p, &tech);
+    let res1 = dse::run(&p, &tech, 1).unwrap();
+    let res8 = dse::run_on(&Engine::new(8), &p, &tech).unwrap();
     assert_eq!(res1.points.len(), res8.points.len());
     assert_eq!(res1.pareto, res8.pareto);
     assert_eq!(res1.selected, res8.selected);
@@ -87,8 +87,8 @@ fn cost_cache_is_shared_by_dse_and_energy_pmu_layers() {
     // The reporting layers must now *hit* the same entries (same geometry
     // keys), and their numbers must agree with the fast path's.
     let hits_before = cache::global().hits();
-    let rollup = energy::evaluate_org(&org, &p, &tech);
-    let pmu_report = pmu::evaluate(&org, &p, &tech);
+    let rollup = energy::evaluate_org(&org, &p, &tech).unwrap();
+    let pmu_report = pmu::evaluate(&org, &p, &tech).unwrap();
     assert!(
         cache::global().hits() > hits_before,
         "energy/pmu reporting did not hit the shared cache"

@@ -28,7 +28,7 @@ fn table_i_selected_configurations() {
     let accel = Accelerator::default();
     let tech = Technology::default();
     let p = profile_network(&capsnet_mnist(), &accel);
-    let res = dse::run(&p, &tech, 8);
+    let res = dse::run(&p, &tech, 8).unwrap();
     let sel = selected(&res);
 
     let sep = &sel["SEP"].org;
@@ -56,7 +56,7 @@ fn table_ii_selected_configurations() {
     let accel = Accelerator::default();
     let tech = Technology::default();
     let p = profile_network(&deepcaps_cifar10(), &accel);
-    let res = dse::run(&p, &tech, 8);
+    let res = dse::run(&p, &tech, 8).unwrap();
     let sel = selected(&res);
 
     let sep = &sel["SEP"].org;
@@ -74,7 +74,7 @@ fn fig18_frontier_membership() {
     let accel = Accelerator::default();
     let tech = Technology::default();
     let p = profile_network(&capsnet_mnist(), &accel);
-    let res = dse::run(&p, &tech, 8);
+    let res = dse::run(&p, &tech, 8).unwrap();
     let frontier_opts: std::collections::BTreeSet<String> =
         res.pareto.iter().map(|&i| res.points[i].option()).collect();
     assert!(!frontier_opts.contains("SMP"));
@@ -94,7 +94,7 @@ fn hy_pg_lowest_energy_sep_lowest_area() {
         let accel = Accelerator::default();
         let tech = Technology::default();
         let p = profile_network(&net, &accel);
-        let res = dse::run(&p, &tech, 8);
+        let res = dse::run(&p, &tech, 8).unwrap();
         let sel = selected(&res);
         for (name, point) in &sel {
             assert!(
@@ -119,16 +119,16 @@ fn headline_energy_and_area_savings() {
     // saves 73%.
     let cfg = SystemConfig::default();
     let p = profile_network(&capsnet_mnist(), &cfg.accel);
-    let a = energy::version_a(&p, &cfg.tech);
-    let b = energy::version_b(&p, &cfg.tech, dse::smp_size(&p));
-    let res = dse::run(&p, &cfg.tech, 8);
+    let a = energy::version_a(&p, &cfg.tech).unwrap();
+    let b = energy::version_b(&p, &cfg.tech, dse::smp_size(&p)).unwrap();
+    let res = dse::run(&p, &cfg.tech, 8).unwrap();
     let sel = selected(&res);
 
     let b_saving = 1.0 - b.total_j() / a.total_j();
     assert!((0.60..0.92).contains(&b_saving), "version-b saving {b_saving:.3}");
 
-    let sep = system_with_org(&p, &cfg.tech, &sel["SEP"].org, "DESCNet");
-    let hy = system_with_org(&p, &cfg.tech, &sel["HY-PG"].org, "DESCNet");
+    let sep = system_with_org(&p, &cfg.tech, &sel["SEP"].org, "DESCNet").unwrap();
+    let hy = system_with_org(&p, &cfg.tech, &sel["HY-PG"].org, "DESCNet").unwrap();
     let sep_saving = 1.0 - sep.total_j() / a.total_j();
     let hy_saving = 1.0 - hy.total_j() / a.total_j();
     assert!((0.65..0.95).contains(&sep_saving), "SEP saving {sep_saving:.3}");
@@ -174,7 +174,7 @@ fn deepcaps_does_not_fit_version_a_but_fits_descnet() {
         weights as usize > 8 * MIB,
         "DeepCaps params {weights} should exceed the 8 MiB of [1]"
     );
-    let res = dse::run(&p, &tech, 8);
+    let res = dse::run(&p, &tech, 8).unwrap();
     let sel = selected(&res);
     assert!(sel["SEP"].org.total_size() < 9 * MIB);
     assert!(prefetch::analyze(&p, &tech, &accel).no_performance_loss());
@@ -190,7 +190,7 @@ fn fig22_single_port_shared_improves_efficiency() {
     let p = profile_network(&deepcaps_cifar10(), &accel);
 
     let best = |ports: usize| -> (f64, f64) {
-        let orgs = dse::enumerate_hy_ports(&p, ports);
+        let orgs = dse::enumerate_hy_ports(&p, ports).unwrap();
         let pts = dse::evaluate_all(&orgs, &p, &tech, 8);
         let front = dse::pareto_indices(&pts);
         let i = front
@@ -210,10 +210,12 @@ fn report_all_regenerates_every_artifact() {
     let dir = std::env::temp_dir().join("descnet_report_integration");
     let _ = std::fs::remove_dir_all(&dir);
     let ctx = ReportCtx::new(SystemConfig::default(), &dir);
-    let done = report::all(&ctx, 8);
-    assert!(done.len() >= 18, "{done:?}");
+    let done = report::all(&ctx, 8).unwrap();
+    assert!(done.len() >= 19, "{done:?}");
     // Every generator produced its file.
     for file in [
+        "dse_multi.csv",
+        "table_multi_selected.md",
         "fig01_memory_utilization.csv",
         "fig07_params_vs_time.csv",
         "fig09_cycles.csv",

@@ -34,7 +34,9 @@ fn random_org(rng: &mut Prng, profile: &descnet::dataflow::NetworkProfile) -> Or
         *rng.choose(&pool)
     };
     let (dd, ww, aa) = (pick(rng, d), pick(rng, w), pick(rng, a));
-    let shared = dse::hy_shared_size(profile, dd, ww, aa).max(8 * 1024);
+    let shared = dse::hy_shared_size(profile, dd, ww, aa)
+        .expect("paper profiles never overflow the probe")
+        .max(8 * 1024);
     let sc = |rng: &mut Prng, size: usize| -> usize {
         let pool = dse::pools::sector_pool_with_off(size);
         if pool.is_empty() {
@@ -106,7 +108,7 @@ fn prop_pmu_static_energy_bounded_by_no_pg() {
     let tech = Technology::default();
     check("pmu-bounds", 60, |rng| {
         let org = random_org(rng, &profile);
-        let report = pmu::evaluate(&org, &profile, &tech);
+        let report = pmu::evaluate(&org, &profile, &tech).unwrap();
         let with_pg = report.static_energy_j();
         let without = report.static_no_pg_j();
         prop_assert!(with_pg > 0.0);
@@ -132,8 +134,8 @@ fn prop_energy_monotone_in_leakage_constant() {
         let scale = rng.f64_range(1.1, 4.0);
         hi.sram_leak_w_per_byte = lo.sram_leak_w_per_byte * scale;
         lo.sram_leak_w_per_byte *= 0.9;
-        let e_lo = energy::evaluate_org(&org, &profile, &lo).static_j();
-        let e_hi = energy::evaluate_org(&org, &profile, &hi).static_j();
+        let e_lo = energy::evaluate_org(&org, &profile, &lo).unwrap().static_j();
+        let e_hi = energy::evaluate_org(&org, &profile, &hi).unwrap().static_j();
         prop_assert!(e_hi > e_lo, "{e_hi} <= {e_lo}");
         Ok(())
     });
@@ -163,7 +165,7 @@ fn prop_dse_selection_is_lowest_energy_per_option() {
     let accel = Accelerator::default();
     let profile = profile_network(&capsnet_mnist(), &accel);
     let tech = Technology::default();
-    let orgs = dse::enumerate(&profile);
+    let orgs = dse::enumerate(&profile).unwrap();
     check("dse-selection", 3, |rng| {
         // Random subsample of the enumeration, selection must be minimal.
         let mut subset = Vec::new();
@@ -195,7 +197,7 @@ fn prop_pareto_frontier_sound_and_complete() {
     let accel = Accelerator::default();
     let profile = profile_network(&capsnet_mnist(), &accel);
     let tech = Technology::default();
-    let orgs: Vec<_> = dse::enumerate(&profile).into_iter().take(600).collect();
+    let orgs: Vec<_> = dse::enumerate(&profile).unwrap().into_iter().take(600).collect();
     let points = dse::evaluate_all(&orgs, &profile, &tech, 4);
     let front: std::collections::BTreeSet<usize> =
         dse::pareto_indices(&points).into_iter().collect();
