@@ -40,6 +40,7 @@ fn main() {
             batch_max: 4,
             stage_pipeline: staged,
             seed: 3,
+            slo_s: None,
         };
         let r = time(label, 2, || {
             std::hint::black_box(Server::run_synthetic(&opts).expect("serve"));

@@ -1,9 +1,10 @@
 //! Hot-path benchmark: DSE enumeration + evaluation throughput through the
 //! shared execution engine (the L3 optimization target of EXPERIMENTS.md
 //! section Perf).  Reports configs/s, thread scaling vs the single-thread
-//! baseline, and the CACTI cost-cache hit rate, then writes the machine-
-//! readable baseline to `BENCH_dse.json` so future PRs have a perf
-//! trajectory to compare against.
+//! baseline, the CACTI cost-cache hit rate, the timeline-simulator event
+//! throughput and the full 3-D (area/energy/latency) sweep wall time, then
+//! writes the machine-readable baseline to `BENCH_dse.json` (schema v3) so
+//! future PRs have a perf trajectory to compare against.
 
 use descnet::cacti::cache;
 use descnet::config::{Accelerator, Technology};
@@ -12,6 +13,7 @@ use descnet::dse;
 use descnet::dse::heuristic::{anneal, AnnealOptions};
 use descnet::dse::multi::{self, WorkloadSet};
 use descnet::model::{capsnet_mnist, deepcaps_cifar10, random_networks};
+use descnet::sim::Timeline;
 use descnet::util::bench::{throughput, time};
 use descnet::util::exec::Engine;
 use descnet::util::json::Json;
@@ -35,6 +37,21 @@ fn main() {
             throughput(&r, orgs.len())
         );
 
+        // Org-independent timeline, built once per sweep like dse::run_on.
+        let timeline = Timeline::build(&profile, &tech, &accel);
+
+        // Timeline-simulator throughput: schedule events (fill/compute/
+        // drain per op) per second over repeated builds.
+        const SIM_BUILDS: usize = 2_000;
+        let r = time(&format!("{} sim timeline x{}", net.name, SIM_BUILDS), 3, || {
+            for _ in 0..SIM_BUILDS {
+                std::hint::black_box(Timeline::build(&profile, &tech, &accel));
+            }
+        });
+        let sim_events = timeline.op_events() * SIM_BUILDS;
+        let sim_events_per_s = sim_events as f64 / r.mean_s.max(1e-12);
+        println!("    -> {} (op-events/s)", throughput(&r, sim_events));
+
         // Serial baseline through the same engine code path (threads=1),
         // then the engine-parallel sweep at increasing worker counts.
         let serial = time(&format!("{} evaluate (serial baseline)", net.name), 2, || {
@@ -43,6 +60,7 @@ fn main() {
                 &orgs,
                 &profile,
                 &tech,
+                &timeline,
             ));
         });
         println!("    -> {}", throughput(&serial, orgs.len()));
@@ -57,6 +75,7 @@ fn main() {
                         &orgs,
                         &profile,
                         &tech,
+                        &timeline,
                     ));
                 },
             );
@@ -74,9 +93,17 @@ fn main() {
             None => println!("    -> no 4-thread measurement in this run"),
         }
 
-        let points = dse::evaluate_all_on(&Engine::new(8), &orgs, &profile, &tech);
-        time(&format!("{} pareto extraction", net.name), 5, || {
+        let points = dse::evaluate_all_on(&Engine::new(8), &orgs, &profile, &tech, &timeline);
+        time(&format!("{} pareto extraction (3-D)", net.name), 5, || {
             std::hint::black_box(dse::pareto_indices(&points));
+        });
+
+        // Full 3-D sweep wall time: enumerate + evaluate + 3-D Pareto +
+        // selection, the `descnet dse` end-to-end path.
+        let sweep3d = time(&format!("{} full 3-D sweep (8 threads)", net.name), 2, || {
+            std::hint::black_box(
+                dse::run_on(&Engine::new(8), &profile, &tech, &accel).expect("3-D sweep"),
+            );
         });
         time(&format!("{} per-option selection", net.name), 5, || {
             std::hint::black_box(dse::select_per_option(&points));
@@ -99,7 +126,7 @@ fn main() {
             &format!("{} simulated annealing ({}k iters)", net.name, iters_label),
             3,
             || {
-                result = Some(anneal(&profile, &tech, &opts));
+                result = Some(anneal(&profile, &tech, &accel, &opts));
             },
         );
         let res = result.unwrap();
@@ -122,6 +149,8 @@ fn main() {
             ("network", net.name.as_str().into()),
             ("configs", orgs.len().into()),
             ("serial_mean_s", serial.mean_s.into()),
+            ("sim_events_per_s", sim_events_per_s.into()),
+            ("sweep3d_mean_s", sweep3d.mean_s.into()),
             ("parallel_mean_s_by_threads", parallel_json),
             (
                 "speedup_4t_vs_serial",
@@ -147,7 +176,7 @@ fn main() {
     let set = WorkloadSet::new(profiles).expect("workload set");
     let mut multi_points = 0usize;
     let r = time(&format!("multi co-design sweep ({n_nets} nets)"), 2, || {
-        let res = multi::run_on(&Engine::new(8), &set, &tech).expect("multi DSE");
+        let res = multi::run_on(&Engine::new(8), &set, &tech, &accel).expect("multi DSE");
         multi_points = res.points.len();
         std::hint::black_box(res);
     });
@@ -170,7 +199,7 @@ fn main() {
     ]);
 
     let out = Json::from_pairs(vec![
-        ("schema", "descnet-bench-dse-v2".into()),
+        ("schema", "descnet-bench-dse-v3".into()),
         ("status", "recorded".into()),
         (
             "cacti_cache",

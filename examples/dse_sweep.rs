@@ -21,7 +21,7 @@ use descnet::util::exec::Engine;
 fn run_one(label: &str, tech: &Technology, engine: &Engine, csv: &mut Csv) {
     let cfg = SystemConfig::default();
     let profile = profile_network(&capsnet_mnist(), &cfg.accel);
-    let result = dse::run_on(engine, &profile, tech).expect("DSE sweep");
+    let result = dse::run_on(engine, &profile, tech, &cfg.accel).expect("DSE sweep");
     let sel: std::collections::BTreeMap<_, _> = result.selected.iter().cloned().collect();
     let frontier_opts: std::collections::BTreeSet<String> =
         result.pareto.iter().map(|&i| result.points[i].option()).collect();

@@ -45,7 +45,8 @@ fn main() {
 
     // 3. Co-design: union sizing, mix-weighted energy objective, the usual
     //    Pareto / per-option selection.
-    let result = multi::run_on(&Engine::auto(), &set, &cfg.tech).expect("co-design DSE");
+    let result =
+        multi::run_on(&Engine::auto(), &set, &cfg.tech, &cfg.accel).expect("co-design DSE");
     println!(
         "\nco-design space: {} organizations, {} on the Pareto frontier",
         result.points.len(),

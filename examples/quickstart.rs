@@ -38,7 +38,8 @@ fn main() {
 
     // 3. Exhaustive DSE (Algorithms 1-2) on the shared engine + Pareto
     //    selection (Fig 18).
-    let result = dse::run_on(&Engine::auto(), &profile, &cfg.tech).expect("DSE over the paper profile");
+    let result = dse::run_on(&Engine::auto(), &profile, &cfg.tech, &cfg.accel)
+        .expect("DSE over the paper profile");
     println!(
         "DSE: {} configurations, {} on the Pareto frontier",
         result.points.len(),

@@ -50,6 +50,7 @@ fn main() {
             batch_max: 4,
             stage_pipeline: staged,
             seed: 7,
+            slo_s: None,
         };
         println!("== serving 64 synthetic MNIST requests ({mode} mode) ==");
         let mut stats = Server::run_synthetic(&opts).expect("serving failed");

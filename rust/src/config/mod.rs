@@ -45,9 +45,14 @@ pub struct Technology {
     pub dram_j_per_byte: f64,
     /// DRAM static/background power [W] attributed to this accelerator.
     pub dram_background_w: f64,
-    /// DRAM burst latency [s] and peak bandwidth [B/s] (for prefetch checks).
+    /// DRAM burst latency [s] and peak bandwidth [B/s] (for prefetch checks
+    /// and the `sim` timeline).
     pub dram_latency_s: f64,
     pub dram_bandwidth_bps: f64,
+    /// DMA burst granularity [bytes]: off-chip transfers are quantized to
+    /// whole bursts by the timeline simulator (`sim`); the train pays the
+    /// burst latency once (bursts are pipelined back to back).
+    pub dram_burst_bytes: usize,
     /// NP-array MAC energy [J] (8-bit MAC incl. local pipeline regs).
     pub mac_energy_j: f64,
     /// Activation-unit op energy [J] (exp/sqrt/div LUT pipeline).
@@ -82,6 +87,7 @@ impl Default for Technology {
             dram_background_w: 80.0e-3,
             dram_latency_s: 100e-9,
             dram_bandwidth_bps: 12.8e9,
+            dram_burst_bytes: 4096,
             mac_energy_j: 0.9e-12,
             act_energy_j: 6.0e-12,
             accel_leak_w: 18.0e-3,
@@ -118,12 +124,14 @@ impl Technology {
             dram_background_w,
             dram_latency_s,
             dram_bandwidth_bps,
+            dram_burst_bytes,
             mac_energy_j,
             act_energy_j,
             accel_leak_w,
             accel_area_mm2,
         } = self;
         let mut h = std::collections::hash_map::DefaultHasher::new();
+        (*dram_burst_bytes as u64).hash(&mut h);
         for v in [
             sram_leak_w_per_byte,
             sram_leak_port_factor,
@@ -173,6 +181,7 @@ impl Technology {
             ("dram_background_w", self.dram_background_w.into()),
             ("dram_latency_s", self.dram_latency_s.into()),
             ("dram_bandwidth_bps", self.dram_bandwidth_bps.into()),
+            ("dram_burst_bytes", self.dram_burst_bytes.into()),
             ("mac_energy_j", self.mac_energy_j.into()),
             ("act_energy_j", self.act_energy_j.into()),
             ("accel_leak_w", self.accel_leak_w.into()),
@@ -202,6 +211,10 @@ impl Technology {
             dram_background_w: f("dram_background_w", d.dram_background_w),
             dram_latency_s: f("dram_latency_s", d.dram_latency_s),
             dram_bandwidth_bps: f("dram_bandwidth_bps", d.dram_bandwidth_bps),
+            dram_burst_bytes: j
+                .get("dram_burst_bytes")
+                .as_usize()
+                .unwrap_or(d.dram_burst_bytes),
             mac_energy_j: f("mac_energy_j", d.mac_energy_j),
             act_energy_j: f("act_energy_j", d.act_energy_j),
             accel_leak_w: f("accel_leak_w", d.accel_leak_w),
@@ -225,6 +238,12 @@ pub struct Accelerator {
     pub routing_state_bytes: usize,
     /// Number of SPM banks (fixed to the array edge: B=16 in the paper).
     pub spm_banks: usize,
+    /// Fill-port width of one SPM bank [bytes/cycle]: bounds the on-chip
+    /// side of DMA fills in the `sim` timeline — effective fill bandwidth
+    /// is min(DRAM bandwidth, banks x width x clock).  The default
+    /// (16 banks x 4 B @ 200 MHz = 12.8 GB/s) matches the DRAM peak, so
+    /// the paper configuration is never bank-limited.
+    pub spm_bank_fill_bytes: usize,
     /// Squash drain cost, cycles per capsule through the 16-lane
     /// activation unit.
     pub squash_cycles_per_elem: usize,
@@ -260,6 +279,7 @@ impl Default for Accelerator {
             acc_bytes: 4,
             routing_state_bytes: 1,
             spm_banks: 16,
+            spm_bank_fill_bytes: 4,
             squash_cycles_per_elem: 16,
             routing_act_serial_cycles: 12,
             routing_j_overhead_cap: 13_848,
@@ -289,6 +309,7 @@ impl Accelerator {
             ("acc_bytes", self.acc_bytes.into()),
             ("routing_state_bytes", self.routing_state_bytes.into()),
             ("spm_banks", self.spm_banks.into()),
+            ("spm_bank_fill_bytes", self.spm_bank_fill_bytes.into()),
             ("squash_cycles_per_elem", self.squash_cycles_per_elem.into()),
             ("routing_act_serial_cycles", self.routing_act_serial_cycles.into()),
             ("routing_j_overhead_cap", self.routing_j_overhead_cap.into()),
@@ -310,6 +331,7 @@ impl Accelerator {
             acc_bytes: u("acc_bytes", d.acc_bytes),
             routing_state_bytes: u("routing_state_bytes", d.routing_state_bytes),
             spm_banks: u("spm_banks", d.spm_banks),
+            spm_bank_fill_bytes: u("spm_bank_fill_bytes", d.spm_bank_fill_bytes),
             squash_cycles_per_elem: u("squash_cycles_per_elem", d.squash_cycles_per_elem),
             routing_act_serial_cycles: u("routing_act_serial_cycles", d.routing_act_serial_cycles),
             routing_j_overhead_cap: u("routing_j_overhead_cap", d.routing_j_overhead_cap),

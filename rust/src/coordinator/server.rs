@@ -33,6 +33,11 @@ pub struct ServeOptions {
     pub batch_max: usize,
     pub stage_pipeline: bool,
     pub seed: u64,
+    /// Per-batch latency SLO [s]: batch sizes whose *simulated* batch
+    /// latency (DESCNet timeline, `sim`) exceeds this are never scheduled,
+    /// so batching can only grow until the accelerator-side latency budget
+    /// is spent.  None = energy-only batch selection (the pre-sim policy).
+    pub slo_s: Option<f64>,
 }
 
 impl Default for ServeOptions {
@@ -43,6 +48,7 @@ impl Default for ServeOptions {
             batch_max: 4,
             stage_pipeline: false,
             seed: 7,
+            slo_s: None,
         }
     }
 }
@@ -73,15 +79,24 @@ pub fn synthetic_image(rng: &mut Prng, hw: usize) -> Vec<f32> {
     img
 }
 
-/// Batch-aware co-simulated energy: one organization co-designed (via
+/// Batch-aware co-simulation plan: one organization co-designed (via
 /// `dse::multi`) across the CapsNet profiles of every batch size the
-/// batcher may execute, then evaluated per batch — so each served
-/// inference is accounted with the energy of the batch it actually rode
-/// in (weight traffic and static energy amortize as batches fill).
-pub(crate) fn codesigned_energy(
-    cfg: &SystemConfig,
-    batches: &[usize],
-) -> Result<(Organization, std::collections::BTreeMap<usize, f64>)> {
+/// batcher may execute, with per-batch energy *and* simulated latency.
+pub(crate) struct ServingCodesign {
+    pub org: Organization,
+    /// Per-inference system energy [J] of each batch size.
+    pub energy_per_inf: std::collections::BTreeMap<usize, f64>,
+    /// Simulated end-to-end *batch* latency [s] of each batch size
+    /// (timeline + wakeup exposure) — what an SLO is charged against.
+    pub batch_latency_s: std::collections::BTreeMap<usize, f64>,
+}
+
+/// Co-designs the serving organization and evaluates each batch size —
+/// each served inference is accounted with the energy of the batch it
+/// actually rode in (weight traffic and static energy amortize as batches
+/// fill), and batch-size selection can charge the simulated per-batch
+/// latency against an SLO instead of energy alone.
+pub(crate) fn codesign_serving(cfg: &SystemConfig, batches: &[usize]) -> Result<ServingCodesign> {
     anyhow::ensure!(!batches.is_empty(), "no batch sizes to co-design for");
     let net = capsnet_mnist();
     let profiles: Vec<NetworkProfile> = batches
@@ -89,18 +104,25 @@ pub(crate) fn codesigned_energy(
         .map(|&b| profile_network_batched(&net, &cfg.accel, b))
         .collect();
     let set = WorkloadSet::new(profiles)?;
-    let result = multi::run(&set, &cfg.tech, exec::default_threads())
+    let result = multi::run(&set, &cfg.tech, &cfg.accel, exec::default_threads())
         .context("co-designing the serving organization")?;
     let best = result
         .codesigned()
         .ok_or_else(|| anyhow::anyhow!("co-design DSE selected no organization"))?;
     let org = result.points[best].org.clone();
-    let mut by_batch = std::collections::BTreeMap::new();
+    let mut energy_per_inf = std::collections::BTreeMap::new();
+    let mut batch_latency_s = std::collections::BTreeMap::new();
     for (b, p) in batches.iter().zip(set.profiles()) {
         let sys = system_with_org(p, &cfg.tech, &org, "serving")?;
-        by_batch.insert(*b, sys.total_j());
+        energy_per_inf.insert(*b, sys.total_j());
+        let lp = crate::sim::simulate(p, &org, &cfg.tech, &cfg.accel)?;
+        batch_latency_s.insert(*b, lp.batch_latency_s());
     }
-    Ok((org, by_batch))
+    Ok(ServingCodesign {
+        org,
+        energy_per_inf,
+        batch_latency_s,
+    })
 }
 
 impl Server {
@@ -123,8 +145,28 @@ impl Server {
 
         // Co-design one SPM organization across every batch size the
         // batcher may execute; each served inference is then accounted
-        // with the per-inference energy of its actual batch.
-        let (_serving_org, energy_by_batch) = codesigned_energy(&cfg, &batches)?;
+        // with the per-inference energy of its actual batch, and the
+        // simulated per-batch latency gates batch sizes against the SLO.
+        let plan = codesign_serving(&cfg, &batches)?;
+        let batches = match opts.slo_s {
+            Some(slo) => {
+                let ok: Vec<usize> = batches
+                    .iter()
+                    .copied()
+                    .filter(|b| plan.batch_latency_s[b] <= slo)
+                    .collect();
+                anyhow::ensure!(
+                    !ok.is_empty(),
+                    "SLO {:.3} ms is unmeetable: the smallest batch ({}) simulates to {:.3} ms",
+                    slo * 1e3,
+                    batches[0],
+                    plan.batch_latency_s[&batches[0]] * 1e3
+                );
+                ok
+            }
+            None => batches,
+        };
+        let energy_by_batch = &plan.energy_per_inf;
         let stages: &[&str] = if opts.stage_pipeline {
             &["conv1", "primarycaps", "classcaps"]
         } else {
@@ -156,6 +198,12 @@ impl Server {
 
         let mut stats = ServeStats::default();
         stats.platform = platform;
+        stats.slo_s = opts.slo_s;
+        stats.sim_batch_latency = policy
+            .sizes
+            .iter()
+            .map(|b| (*b, plan.batch_latency_s[b]))
+            .collect();
         let t0 = Instant::now();
         let mut pending: Vec<Request> = Vec::new();
         let mut served = 0usize;
@@ -318,19 +366,43 @@ mod tests {
     #[test]
     fn codesigned_energy_is_millijoule_scale_and_amortizes() {
         let cfg = SystemConfig::default();
-        let (org, by_batch) = codesigned_energy(&cfg, &[1, 2, 4]).unwrap();
-        assert!(org.total_size() > 0);
-        for (&b, &e) in &by_batch {
+        let plan = codesign_serving(&cfg, &[1, 2, 4]).unwrap();
+        assert!(plan.org.total_size() > 0);
+        for (&b, &e) in &plan.energy_per_inf {
             assert!(e > 1e-4 && e < 0.1, "batch {b}: {e}");
         }
         // Bigger batches amortize weight traffic + static energy.
-        assert!(by_batch[&4] < by_batch[&1]);
-        assert!(by_batch[&2] < by_batch[&1]);
+        assert!(plan.energy_per_inf[&4] < plan.energy_per_inf[&1]);
+        assert!(plan.energy_per_inf[&2] < plan.energy_per_inf[&1]);
     }
 
     #[test]
     fn codesigned_energy_rejects_empty_batch_list() {
-        assert!(codesigned_energy(&SystemConfig::default(), &[]).is_err());
+        assert!(codesign_serving(&SystemConfig::default(), &[]).is_err());
+    }
+
+    #[test]
+    fn codesigned_batch_latency_grows_with_batch_but_amortizes() {
+        // Charging an SLO needs the *batch* latency: it must grow with the
+        // batch while the per-inference latency shrinks — the exact
+        // batching trade-off the coordinator navigates.
+        let cfg = SystemConfig::default();
+        let plan = codesign_serving(&cfg, &[1, 2, 4]).unwrap();
+        let l1 = plan.batch_latency_s[&1];
+        let l2 = plan.batch_latency_s[&2];
+        let l4 = plan.batch_latency_s[&4];
+        assert!(l1 > 1e-3 && l1 < 0.1, "{l1}");
+        assert!(l2 > l1 && l4 > l2, "{l1} {l2} {l4}");
+        assert!(l4 / 4.0 < l1, "per-inference latency must amortize");
+        // An SLO between batch-2 and batch-4 latency would admit {1, 2}:
+        // exactly the filter run_synthetic applies.
+        let slo = (l2 + l4) / 2.0;
+        let admitted: Vec<usize> = [1usize, 2, 4]
+            .iter()
+            .copied()
+            .filter(|b| plan.batch_latency_s[b] <= slo)
+            .collect();
+        assert_eq!(admitted, vec![1, 2]);
     }
 
     #[test]

@@ -15,6 +15,11 @@ pub struct ServeStats {
     pub energy_j: f64,
     pub platform: String,
     pub class_histogram: [u64; 10],
+    /// Per-batch latency SLO the batcher was gated with (None = energy-only).
+    pub slo_s: Option<f64>,
+    /// Simulated DESCNet batch latency of each admitted batch size
+    /// (`sim::Timeline` + wakeup exposure), the values charged to the SLO.
+    pub sim_batch_latency: Vec<(usize, f64)>,
 }
 
 impl ServeStats {
@@ -67,6 +72,21 @@ impl ServeStats {
             fmt_energy(self.energy_j),
             fmt_energy(self.energy_j / self.requests.max(1) as f64),
         ));
+        if !self.sim_batch_latency.is_empty() {
+            let per_batch = self
+                .sim_batch_latency
+                .iter()
+                .map(|(b, l)| format!("b{b}={}", fmt_time(*l)))
+                .collect::<Vec<_>>()
+                .join("  ");
+            match self.slo_s {
+                Some(slo) => out.push_str(&format!(
+                    "sim batch latency (SLO {}): {per_batch}\n",
+                    fmt_time(slo)
+                )),
+                None => out.push_str(&format!("sim batch latency: {per_batch}\n")),
+            }
+        }
         out.push_str(&format!("class histogram: {:?}", self.class_histogram));
         out
     }
@@ -103,5 +123,19 @@ mod tests {
         assert!(text.contains("served 4 requests"));
         assert!(text.contains("p95"));
         assert!(text.contains("per inference"));
+        // No sim latencies recorded: the SLO line is omitted entirely.
+        assert!(!text.contains("sim batch latency"));
+    }
+
+    #[test]
+    fn summary_reports_slo_and_sim_latencies() {
+        let mut s = ServeStats::default();
+        s.requests = 1;
+        s.slo_s = Some(20e-3);
+        s.sim_batch_latency = vec![(1, 8.6e-3), (2, 12.0e-3)];
+        let text = s.summary();
+        assert!(text.contains("sim batch latency (SLO "), "{text}");
+        assert!(text.contains("b1="), "{text}");
+        assert!(text.contains("b2="), "{text}");
     }
 }

@@ -13,6 +13,7 @@ use crate::cacti::cache;
 use crate::config::Technology;
 use crate::dataflow::NetworkProfile;
 use crate::memory::{Component, Organization};
+use crate::sim;
 
 // NOTE (EXPERIMENTS.md section Perf/L3): a function-local HashMap memo was
 // once tried here and reverted — single-core, the hash lookup cost as much
@@ -124,6 +125,24 @@ pub fn area_energy(org: &Organization, profile: &NetworkProfile, tech: &Technolo
 
     let area = comps.iter().filter(|c| c.present).map(|c| c.area).sum();
     (area, energy / profile.batch.max(1) as f64)
+}
+
+/// Fast 3-objective evaluation: (area_mm2, energy_j, latency_s), all per
+/// inference.  The latency is the org-independent timeline (built once per
+/// sweep by the caller) plus this organization's wakeup exposure — the
+/// single implementation in `sim::wakeup_exposure_s`, so the DSE objective,
+/// `sim::simulate` reporting and the coordinator's SLO accounting can never
+/// drift apart.
+pub fn area_energy_latency(
+    org: &Organization,
+    profile: &NetworkProfile,
+    tech: &Technology,
+    timeline: &sim::Timeline,
+) -> (f64, f64, f64) {
+    let (area, energy) = area_energy(org, profile, tech);
+    let batch_s =
+        timeline.batch_latency_s() + sim::wakeup_exposure_s(timeline, profile, org, tech);
+    (area, energy, batch_s / profile.batch.max(1) as f64)
 }
 
 #[cfg(test)]

@@ -13,9 +13,10 @@
 //! the `bench_dse` target reports the speed/quality trade-off.
 
 use super::{evaluate, hy_shared_size, pools, DsePoint};
-use crate::config::Technology;
+use crate::config::{Accelerator, Technology};
 use crate::dataflow::NetworkProfile;
 use crate::memory::{MemSpec, Organization};
+use crate::sim;
 use crate::util::exec::Engine;
 use crate::util::prng::Prng;
 
@@ -100,9 +101,13 @@ pub struct AnnealResult {
 }
 
 /// Runs simulated annealing; returns the best HY(-PG) configuration found.
+/// The scalarized objective is energy + `area_weight` x area (the Table
+/// I/II selection rule at weight 0); the timeline latency is carried along
+/// in every candidate point so callers can inspect it.
 pub fn anneal(
     profile: &NetworkProfile,
     tech: &Technology,
+    accel: &Accelerator,
     opts: &AnnealOptions,
 ) -> AnnealResult {
     let space = Space {
@@ -110,10 +115,12 @@ pub fn anneal(
         w_pool: pools::size_pool(profile.max_w()),
         a_pool: pools::size_pool(profile.max_a()),
     };
+    let timeline = sim::Timeline::build(profile, tech, accel);
     let mut rng = Prng::new(opts.seed);
-    let objective = |org: &Organization| -> (f64, f64, f64) {
-        let (area, energy) = evaluate::area_energy(org, profile, tech);
-        (energy + opts.area_weight * area, area, energy)
+    let objective = |org: &Organization| -> (f64, f64, f64, f64) {
+        let (area, energy, latency) =
+            evaluate::area_energy_latency(org, profile, tech, &timeline);
+        (energy + opts.area_weight * area, area, energy, latency)
     };
 
     // Start from a mid-pool state.
@@ -130,13 +137,14 @@ pub fn anneal(
     let mut current = loop {
         if let Some(org) = space.materialize(&st, profile) {
             evaluations += 1;
-            let (obj, area, energy) = objective(&org);
+            let (obj, area, energy, latency) = objective(&org);
             break (
                 obj,
                 DsePoint {
                     org,
                     area_mm2: area,
                     energy_j: energy,
+                    latency_s: latency,
                 },
             );
         }
@@ -179,7 +187,7 @@ pub fn anneal(
             continue;
         };
         evaluations += 1;
-        let (obj, area, energy) = objective(&org);
+        let (obj, area, energy, latency) = objective(&org);
         let accept = obj < current.0 || {
             let delta = obj - current.0;
             rng.f64() < (-delta / temp.max(1e-30)).exp()
@@ -192,6 +200,7 @@ pub fn anneal(
                     org,
                     area_mm2: area,
                     energy_j: energy,
+                    latency_s: latency,
                 },
             );
             if current.0 < best.0 {
@@ -220,6 +229,7 @@ pub fn anneal_restarts(
     engine: &Engine,
     profile: &NetworkProfile,
     tech: &Technology,
+    accel: &Accelerator,
     opts: &AnnealOptions,
     restarts: usize,
 ) -> AnnealResult {
@@ -232,7 +242,7 @@ pub fn anneal_restarts(
     let runs = engine.map_coarse(&seeds, |&seed| {
         let mut chain_opts = opts.clone();
         chain_opts.seed = seed;
-        anneal(profile, tech, &chain_opts)
+        anneal(profile, tech, accel, &chain_opts)
     });
     let evaluations: usize = runs.iter().map(|r| r.evaluations).sum();
     let objective =
@@ -262,7 +272,8 @@ mod tests {
 
     fn exhaustive_hy_optimum(profile: &NetworkProfile, tech: &Technology) -> f64 {
         let orgs = dse::enumerate(profile).unwrap();
-        let points = dse::evaluate_all(&orgs, profile, tech, 4);
+        let tl = sim::Timeline::build(profile, tech, &Accelerator::default());
+        let points = dse::evaluate_all(&orgs, profile, tech, &tl, 4);
         points
             .iter()
             .filter(|p| p.option() == "HY-PG" || p.option() == "HY")
@@ -278,7 +289,7 @@ mod tests {
         let tech = Technology::default();
         let profile = profile_network(&capsnet_mnist(), &accel);
         let optimum = exhaustive_hy_optimum(&profile, &tech);
-        let result = anneal(&profile, &tech, &AnnealOptions::default());
+        let result = anneal(&profile, &tech, &accel, &AnnealOptions::default());
         let gap = result.best.energy_j / optimum - 1.0;
         assert!(gap < 0.05, "gap {gap:.3} (best {} vs {optimum})", result.best.energy_j);
         assert!(
@@ -293,7 +304,7 @@ mod tests {
         let accel = Accelerator::default();
         let tech = Technology::default();
         let profile = profile_network(&capsnet_mnist(), &accel);
-        let result = anneal(&profile, &tech, &AnnealOptions::default());
+        let result = anneal(&profile, &tech, &accel, &AnnealOptions::default());
         for w in result.trace.windows(2) {
             assert!(w[1] <= w[0] + 1e-18);
         }
@@ -304,12 +315,12 @@ mod tests {
         let accel = Accelerator::default();
         let tech = Technology::default();
         let profile = profile_network(&capsnet_mnist(), &accel);
-        let a = anneal(&profile, &tech, &AnnealOptions::default());
-        let b = anneal(&profile, &tech, &AnnealOptions::default());
+        let a = anneal(&profile, &tech, &accel, &AnnealOptions::default());
+        let b = anneal(&profile, &tech, &accel, &AnnealOptions::default());
         assert_eq!(a.best.energy_j, b.best.energy_j);
         let mut opts = AnnealOptions::default();
         opts.seed = 99;
-        let c = anneal(&profile, &tech, &opts);
+        let c = anneal(&profile, &tech, &accel, &opts);
         // Different seed may land elsewhere but must still be valid HY.
         assert!(c.best.org.shared.is_some());
     }
@@ -320,11 +331,11 @@ mod tests {
         let tech = Technology::default();
         let profile = profile_network(&capsnet_mnist(), &accel);
         let opts = AnnealOptions::default();
-        let single = anneal(&profile, &tech, &opts);
+        let single = anneal(&profile, &tech, &accel, &opts);
         // The restart fan includes the single run's seed, so the winner can
         // only match or beat it, whatever the worker count.
-        let multi_a = anneal_restarts(&Engine::new(1), &profile, &tech, &opts, 3);
-        let multi_b = anneal_restarts(&Engine::new(4), &profile, &tech, &opts, 3);
+        let multi_a = anneal_restarts(&Engine::new(1), &profile, &tech, &accel, &opts, 3);
+        let multi_b = anneal_restarts(&Engine::new(4), &profile, &tech, &accel, &opts, 3);
         assert!(multi_a.best.energy_j <= single.best.energy_j + 1e-18);
         assert_eq!(multi_a.best.energy_j, multi_b.best.energy_j);
         assert_eq!(multi_a.best.area_mm2, multi_b.best.area_mm2);
@@ -337,10 +348,10 @@ mod tests {
         let accel = Accelerator::default();
         let tech = Technology::default();
         let profile = profile_network(&capsnet_mnist(), &accel);
-        let pure = anneal(&profile, &tech, &AnnealOptions::default());
+        let pure = anneal(&profile, &tech, &accel, &AnnealOptions::default());
         let mut opts = AnnealOptions::default();
         opts.area_weight = 5e-3; // 5 mJ per mm²: area matters a lot
-        let weighted = anneal(&profile, &tech, &opts);
+        let weighted = anneal(&profile, &tech, &accel, &opts);
         assert!(weighted.best.area_mm2 <= pure.best.area_mm2 * 1.001);
     }
 }

@@ -9,28 +9,43 @@
 //! memoized by `cacti::cache`) → Pareto/select.  The evaluation stage is
 //! deterministic under any thread count — `rust/tests/engine_cache.rs`
 //! pins bit-identical `DsePoint` sets for threads=1 vs threads=N.
+//!
+//! Since the timeline simulator (`crate::sim`, DESIGN.md section 11) the
+//! objective space is three-dimensional — area, energy *and* per-inference
+//! latency (compute + dma-stall + wakeup exposure).  The org-independent
+//! [`sim::Timeline`] is built once per sweep; each evaluation adds only
+//! the organization's wakeup exposure.  [`run_budgeted`] additionally
+//! enforces a latency budget as a hard constraint (the CLI's
+//! `--latency-budget`).
 
 pub mod evaluate;
 pub mod heuristic;
 pub mod multi;
 pub mod pools;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::config::Technology;
+use crate::config::{Accelerator, Technology};
 use crate::dataflow::NetworkProfile;
+use crate::sim;
 
 use crate::memory::{cover_op, org_fits, required_shared_ports, MemSpec, OrgKind, Organization};
 use crate::util::exec::Engine;
-use crate::util::pareto::{frontier, Point};
+use crate::util::pareto::{frontier3, Point3};
 
-/// One evaluated configuration: the DSE objective space of Figs 18/20/22.
+/// One evaluated configuration: the DSE objective space of Figs 18/20/22,
+/// plus the timeline latency.
 #[derive(Debug, Clone)]
 pub struct DsePoint {
     pub org: Organization,
     pub area_mm2: f64,
     /// Total on-chip SPM energy per inference (dynamic+static+wakeup) [J].
     pub energy_j: f64,
+    /// Per-inference latency [s]: the simulated timeline plus this
+    /// organization's wakeup exposure, amortized over the batch.  Identical
+    /// across organizations at the paper's constants (wakeups mask) — the
+    /// "no performance loss" claim.
+    pub latency_s: f64,
 }
 
 impl DsePoint {
@@ -171,14 +186,17 @@ pub fn enumerate_hy_ports(profile: &NetworkProfile, ports: usize) -> Result<Vec<
 }
 
 /// Evaluates organizations on the shared execution engine.  Results come
-/// back in input order, bit-identical for any worker count.
+/// back in input order, bit-identical for any worker count.  `timeline` is
+/// the org-independent simulated timeline of the same profile (build it
+/// once with [`sim::Timeline::build`]).
 pub fn evaluate_all_on(
     engine: &Engine,
     orgs: &[Organization],
     profile: &NetworkProfile,
     tech: &Technology,
+    timeline: &sim::Timeline,
 ) -> Vec<DsePoint> {
-    engine.map(orgs, |o| eval_one(o, profile, tech))
+    engine.map(orgs, |o| eval_one(o, profile, tech, timeline))
 }
 
 /// Evaluates organizations in parallel over `threads` workers.
@@ -186,31 +204,41 @@ pub fn evaluate_all(
     orgs: &[Organization],
     profile: &NetworkProfile,
     tech: &Technology,
+    timeline: &sim::Timeline,
     threads: usize,
 ) -> Vec<DsePoint> {
-    evaluate_all_on(&Engine::new(threads), orgs, profile, tech)
+    evaluate_all_on(&Engine::new(threads), orgs, profile, tech, timeline)
 }
 
-fn eval_one(org: &Organization, profile: &NetworkProfile, tech: &Technology) -> DsePoint {
+fn eval_one(
+    org: &Organization,
+    profile: &NetworkProfile,
+    tech: &Technology,
+    timeline: &sim::Timeline,
+) -> DsePoint {
     // Fast path (see dse::evaluate): identical numbers to
     // energy::evaluate_org, ~10x cheaper — pinned by
     // evaluate::tests::fast_matches_reference.
-    let (area_mm2, energy_j) = evaluate::area_energy(org, profile, tech);
+    let (area_mm2, energy_j, latency_s) =
+        evaluate::area_energy_latency(org, profile, tech, timeline);
     DsePoint {
         org: org.clone(),
         area_mm2,
         energy_j,
+        latency_s,
     }
 }
 
-/// Indices of the Pareto-optimal points (area vs energy minimization).
+/// Indices of the Pareto-optimal points (area, energy and latency
+/// minimization — 3-D since the timeline simulator; identical latencies
+/// reduce it to the paper's 2-D area/energy frontier).
 pub fn pareto_indices(points: &[DsePoint]) -> Vec<usize> {
-    let ps: Vec<Point> = points
+    let ps: Vec<Point3> = points
         .iter()
         .enumerate()
-        .map(|(i, p)| Point::new(p.area_mm2, p.energy_j, i))
+        .map(|(i, p)| Point3::new(p.area_mm2, p.energy_j, p.latency_s, i))
         .collect();
-    frontier(&ps)
+    frontier3(&ps)
 }
 
 /// Per-design-option lowest-energy selection (the Table I/II rule:
@@ -235,23 +263,76 @@ pub struct DseResult {
     pub points: Vec<DsePoint>,
     pub pareto: Vec<usize>,
     pub selected: Vec<(String, usize)>,
+    /// Configurations dropped by the latency budget (0 when unconstrained).
+    pub excluded_by_budget: usize,
 }
 
-pub fn run(profile: &NetworkProfile, tech: &Technology, threads: usize) -> Result<DseResult> {
-    run_on(&Engine::new(threads), profile, tech)
+pub fn run(
+    profile: &NetworkProfile,
+    tech: &Technology,
+    accel: &Accelerator,
+    threads: usize,
+) -> Result<DseResult> {
+    run_on(&Engine::new(threads), profile, tech, accel)
 }
 
 /// The full pipeline on an existing engine: enumerate → evaluate → Pareto
 /// → per-option selection.
-pub fn run_on(engine: &Engine, profile: &NetworkProfile, tech: &Technology) -> Result<DseResult> {
+pub fn run_on(
+    engine: &Engine,
+    profile: &NetworkProfile,
+    tech: &Technology,
+    accel: &Accelerator,
+) -> Result<DseResult> {
+    run_budgeted(engine, profile, tech, accel, None)
+}
+
+/// The full pipeline with an optional hard per-inference latency budget
+/// [s]: configurations whose simulated latency exceeds the budget are
+/// excluded before Pareto extraction and per-option selection.  Errors
+/// when the budget excludes every configuration (reporting the fastest
+/// achievable latency) or is not a positive finite number.
+pub fn run_budgeted(
+    engine: &Engine,
+    profile: &NetworkProfile,
+    tech: &Technology,
+    accel: &Accelerator,
+    latency_budget_s: Option<f64>,
+) -> Result<DseResult> {
     let orgs = enumerate(profile)?;
-    let points = evaluate_all_on(engine, &orgs, profile, tech);
+    let timeline = sim::Timeline::build(profile, tech, accel);
+    let mut points = evaluate_all_on(engine, &orgs, profile, tech, &timeline);
+    let mut excluded = 0;
+    if let Some(budget) = latency_budget_s {
+        ensure!(
+            budget.is_finite() && budget > 0.0,
+            "latency budget must be a positive duration, got {budget} s"
+        );
+        let before = points.len();
+        let fastest = points
+            .iter()
+            .map(|p| p.latency_s)
+            .fold(f64::INFINITY, f64::min);
+        points.retain(|p| p.latency_s <= budget);
+        excluded = before - points.len();
+        if points.is_empty() {
+            bail!(
+                "latency budget {:.4} ms excludes all {} configurations of '{}' \
+                 (fastest achievable: {:.4} ms)",
+                budget * 1e3,
+                before,
+                profile.network,
+                fastest * 1e3
+            );
+        }
+    }
     let pareto = pareto_indices(&points);
     let selected = select_per_option(&points);
     Ok(DseResult {
         points,
         pareto,
         selected,
+        excluded_by_budget: excluded,
     })
 }
 
@@ -265,6 +346,10 @@ mod tests {
 
     fn profile() -> NetworkProfile {
         profile_network(&capsnet_mnist(), &Accelerator::default())
+    }
+
+    fn timeline(p: &NetworkProfile) -> sim::Timeline {
+        sim::Timeline::build(p, &Technology::default(), &Accelerator::default())
     }
 
     #[test]
@@ -324,14 +409,16 @@ mod tests {
     fn evaluation_is_deterministic_and_parallel_consistent() {
         let p = profile();
         let tech = Technology::default();
+        let tl = timeline(&p);
         let orgs: Vec<_> = enumerate(&p).unwrap().into_iter().take(300).collect();
-        let seq = evaluate_all(&orgs, &p, &tech, 1);
-        let par = evaluate_all(&orgs, &p, &tech, 4);
+        let seq = evaluate_all(&orgs, &p, &tech, &tl, 1);
+        let par = evaluate_all(&orgs, &p, &tech, &tl, 4);
         assert_eq!(seq.len(), par.len());
         for (a, b) in seq.iter().zip(&par) {
             assert_eq!(a.org, b.org);
             assert!((a.energy_j - b.energy_j).abs() < 1e-15);
             assert!((a.area_mm2 - b.area_mm2).abs() < 1e-12);
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
         }
     }
 
@@ -339,7 +426,7 @@ mod tests {
     fn selected_sep_matches_table_i_and_frontier_shape() {
         let p = profile();
         let tech = Technology::default();
-        let res = run(&p, &tech, 4).unwrap();
+        let res = run(&p, &tech, &Accelerator::default(), 4).unwrap();
         let sel: std::collections::BTreeMap<_, _> = res.selected.iter().cloned().collect();
 
         // SEP selection == Table I sizes by construction.
@@ -379,6 +466,7 @@ mod tests {
             org: org.clone(),
             area_mm2: area,
             energy_j: energy,
+            latency_s: 8.6e-3,
         };
         // Equal energies: the earliest index must win, deterministically.
         let tied = vec![mk(2.0, 1.0), mk(1.0, 1.0)];
@@ -397,7 +485,8 @@ mod tests {
         assert!(pareto_indices(&[]).is_empty());
         let p = profile();
         let tech = Technology::default();
-        assert!(evaluate_all(&[], &p, &tech, 4).is_empty());
+        let tl = timeline(&p);
+        assert!(evaluate_all(&[], &p, &tech, &tl, 4).is_empty());
     }
 
     #[test]
@@ -408,13 +497,15 @@ mod tests {
         // rust/tests/engine_cache.rs).
         let p = profile();
         let tech = Technology::default();
+        let tl = timeline(&p);
         let orgs: Vec<_> = enumerate(&p).unwrap().into_iter().take(800).collect();
-        let serial = evaluate_all_on(&Engine::new(1), &orgs, &p, &tech);
-        let parallel = evaluate_all_on(&Engine::new(4), &orgs, &p, &tech);
+        let serial = evaluate_all_on(&Engine::new(1), &orgs, &p, &tech, &tl);
+        let parallel = evaluate_all_on(&Engine::new(4), &orgs, &p, &tech, &tl);
         for (a, b) in serial.iter().zip(&parallel) {
             assert_eq!(a.org, b.org);
             assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
             assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
         }
         assert_eq!(select_per_option(&serial), select_per_option(&parallel));
         assert_eq!(pareto_indices(&serial), pareto_indices(&parallel));
@@ -424,6 +515,7 @@ mod tests {
     fn pg_variant_always_saves_energy_at_same_sizes() {
         let p = profile();
         let tech = Technology::default();
+        let tl = timeline(&p);
         let (d, w, a) = sep_sizes(&p);
         let base = eval_one(
             &Organization::sep(
@@ -433,6 +525,7 @@ mod tests {
             ),
             &p,
             &tech,
+            &tl,
         );
         let pg = eval_one(
             &Organization::sep(
@@ -442,9 +535,49 @@ mod tests {
             ),
             &p,
             &tech,
+            &tl,
         );
         assert!(pg.energy_j < base.energy_j);
         assert!(pg.area_mm2 > base.area_mm2); // PG costs area
+        // ... at identical latency: the paper's "no performance loss".
+        assert_eq!(pg.latency_s.to_bits(), base.latency_s.to_bits());
+    }
+
+    #[test]
+    fn latency_is_uniform_across_orgs_at_paper_constants() {
+        // Wakeups mask at 0.072 ns, so every organization's latency equals
+        // the org-independent timeline — the 3-D frontier degenerates to
+        // the paper's 2-D one.
+        let p = profile();
+        let tech = Technology::default();
+        let tl = timeline(&p);
+        let orgs: Vec<_> = enumerate(&p).unwrap().into_iter().take(500).collect();
+        let points = evaluate_all(&orgs, &p, &tech, &tl, 4);
+        let expect = tl.inference_latency_s();
+        for pt in &points {
+            assert_eq!(pt.latency_s.to_bits(), expect.to_bits(), "{}", pt.org.label());
+        }
+    }
+
+    #[test]
+    fn budget_below_fastest_errors_and_above_keeps_everything() {
+        let p = profile();
+        let tech = Technology::default();
+        let accel = Accelerator::default();
+        let engine = Engine::new(2);
+        let err = run_budgeted(&engine, &p, &tech, &accel, Some(1e-9)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("excludes all"), "{msg}");
+        assert!(msg.contains("fastest achievable"), "{msg}");
+
+        let loose = run_budgeted(&engine, &p, &tech, &accel, Some(1.0)).unwrap();
+        let unconstrained = run_on(&engine, &p, &tech, &accel).unwrap();
+        assert_eq!(loose.points.len(), unconstrained.points.len());
+        assert_eq!(loose.excluded_by_budget, 0);
+        assert_eq!(loose.selected, unconstrained.selected);
+
+        assert!(run_budgeted(&engine, &p, &tech, &accel, Some(f64::NAN)).is_err());
+        assert!(run_budgeted(&engine, &p, &tech, &accel, Some(-1.0)).is_err());
     }
 
     #[test]
@@ -466,7 +599,7 @@ mod tests {
         let p = profile();
         let tech = Technology::default();
         let orgs: Vec<_> = enumerate(&p).unwrap().into_iter().take(2_000).collect();
-        let points = evaluate_all(&orgs, &p, &tech, 4);
+        let points = evaluate_all(&orgs, &p, &tech, &timeline(&p), 4);
         let front = pareto_indices(&points);
         assert!(!front.is_empty());
         for &i in &front {

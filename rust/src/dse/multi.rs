@@ -20,9 +20,10 @@
 use anyhow::{ensure, Context, Result};
 
 use super::{evaluate, pareto_indices, select_per_option, DsePoint};
-use crate::config::Technology;
+use crate::config::{Accelerator, Technology};
 use crate::dataflow::NetworkProfile;
 use crate::memory::Organization;
+use crate::sim;
 use crate::util::exec::Engine;
 
 /// A set of network profiles plus the serving-mix weights (normalized to
@@ -117,11 +118,14 @@ impl WorkloadSet {
 }
 
 /// Result of a co-design sweep: `points[i].energy_j` is the mix-weighted
-/// per-inference energy; `per_net_j[i][k]` the unweighted per-inference
-/// energy of network `k` on organization `i`.
+/// per-inference energy and `points[i].latency_s` the mix-weighted
+/// per-inference latency; `per_net_j[i][k]` / `per_net_latency_s[i][k]`
+/// are the unweighted per-inference values of network `k` on
+/// organization `i`.
 pub struct MultiDseResult {
     pub points: Vec<DsePoint>,
     pub per_net_j: Vec<Vec<f64>>,
+    pub per_net_latency_s: Vec<Vec<f64>>,
     pub pareto: Vec<usize>,
     pub selected: Vec<(String, usize)>,
 }
@@ -148,53 +152,92 @@ pub fn enumerate(set: &WorkloadSet) -> Result<Vec<Organization>> {
     super::enumerate(&set.merged_profile()).context("enumerating over the merged workload set")
 }
 
+/// Builds the org-independent timeline of every member profile (same
+/// index order as [`WorkloadSet::profiles`]).
+pub fn timelines(set: &WorkloadSet, tech: &Technology, accel: &Accelerator) -> Vec<sim::Timeline> {
+    set.profiles
+        .iter()
+        .map(|p| sim::Timeline::build(p, tech, accel))
+        .collect()
+}
+
 /// Engine-parallel weighted evaluation; deterministic in input order for
 /// any worker count (same engine contract as the single-network sweep).
+/// `tls` are the member timelines from [`timelines`].
 pub fn evaluate_all_on(
     engine: &Engine,
     orgs: &[Organization],
     set: &WorkloadSet,
     tech: &Technology,
-) -> (Vec<DsePoint>, Vec<Vec<f64>>) {
-    let evals: Vec<(DsePoint, Vec<f64>)> = engine.map(orgs, |org| {
+    tls: &[sim::Timeline],
+) -> (Vec<DsePoint>, Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    debug_assert_eq!(tls.len(), set.profiles.len());
+    let evals: Vec<(DsePoint, Vec<f64>, Vec<f64>)> = engine.map(orgs, |org| {
         let mut per_net = Vec::with_capacity(set.profiles.len());
+        let mut per_net_lat = Vec::with_capacity(set.profiles.len());
         let mut area = 0.0;
         let mut energy = 0.0;
-        for (p, wgt) in set.profiles.iter().zip(&set.weights) {
-            let (a, e) = evaluate::area_energy(org, p, tech);
+        let mut latency = 0.0;
+        for ((p, wgt), tl) in set.profiles.iter().zip(&set.weights).zip(tls) {
+            let (a, e, l) = evaluate::area_energy_latency(org, p, tech, tl);
             area = a; // identical for every network: one physical org
             energy += wgt * e;
+            latency += wgt * l;
             per_net.push(e);
+            per_net_lat.push(l);
         }
         (
             DsePoint {
                 org: org.clone(),
                 area_mm2: area,
                 energy_j: energy,
+                latency_s: latency,
             },
             per_net,
+            per_net_lat,
         )
     });
-    evals.into_iter().unzip()
+    let mut points = Vec::with_capacity(evals.len());
+    let mut per_net_j = Vec::with_capacity(evals.len());
+    let mut per_net_latency_s = Vec::with_capacity(evals.len());
+    for (pt, e, l) in evals {
+        points.push(pt);
+        per_net_j.push(e);
+        per_net_latency_s.push(l);
+    }
+    (points, per_net_j, per_net_latency_s)
 }
 
 /// The full co-design pipeline on an existing engine.
-pub fn run_on(engine: &Engine, set: &WorkloadSet, tech: &Technology) -> Result<MultiDseResult> {
+pub fn run_on(
+    engine: &Engine,
+    set: &WorkloadSet,
+    tech: &Technology,
+    accel: &Accelerator,
+) -> Result<MultiDseResult> {
     let orgs = enumerate(set)?;
-    let (points, per_net_j) = evaluate_all_on(engine, &orgs, set, tech);
+    let tls = timelines(set, tech, accel);
+    let (points, per_net_j, per_net_latency_s) =
+        evaluate_all_on(engine, &orgs, set, tech, &tls);
     let pareto = pareto_indices(&points);
     let selected = select_per_option(&points);
     Ok(MultiDseResult {
         points,
         per_net_j,
+        per_net_latency_s,
         pareto,
         selected,
     })
 }
 
 /// Convenience over a fresh engine.
-pub fn run(set: &WorkloadSet, tech: &Technology, threads: usize) -> Result<MultiDseResult> {
-    run_on(&Engine::new(threads), set, tech)
+pub fn run(
+    set: &WorkloadSet,
+    tech: &Technology,
+    accel: &Accelerator,
+    threads: usize,
+) -> Result<MultiDseResult> {
+    run_on(&Engine::new(threads), set, tech, accel)
 }
 
 #[cfg(test)]
@@ -253,13 +296,21 @@ mod tests {
         let set = WorkloadSet::with_weights(profiles, vec![3.0, 1.0]).unwrap();
         assert!((set.weights()[0] - 0.75).abs() < 1e-12);
         let orgs: Vec<_> = enumerate(&set).unwrap().into_iter().take(50).collect();
-        let (points, per_net) = evaluate_all_on(&Engine::new(2), &orgs, &set, &tech);
-        for (pt, nets) in points.iter().zip(&per_net) {
+        let tls = timelines(&set, &tech, &accel);
+        let (points, per_net, per_lat) =
+            evaluate_all_on(&Engine::new(2), &orgs, &set, &tech, &tls);
+        for ((pt, nets), lats) in points.iter().zip(&per_net).zip(&per_lat) {
             let expect = 0.75 * nets[0] + 0.25 * nets[1];
             assert!(
                 (pt.energy_j - expect).abs() <= expect * 1e-12,
                 "{} vs {expect}",
                 pt.energy_j
+            );
+            let expect_lat = 0.75 * lats[0] + 0.25 * lats[1];
+            assert!(
+                (pt.latency_s - expect_lat).abs() <= expect_lat * 1e-12,
+                "{} vs {expect_lat}",
+                pt.latency_s
             );
         }
     }
@@ -271,14 +322,15 @@ mod tests {
         let accel = Accelerator::default();
         let tech = Technology::default();
         let p = profile_network(&capsnet_mnist(), &accel);
-        let single = dse::run(&p, &tech, 2).unwrap();
+        let single = dse::run(&p, &tech, &accel, 2).unwrap();
         let set = WorkloadSet::new(vec![p]).unwrap();
-        let multi = run(&set, &tech, 2).unwrap();
+        let multi = run(&set, &tech, &accel, 2).unwrap();
         assert_eq!(single.points.len(), multi.points.len());
         assert_eq!(single.selected, multi.selected);
         for (a, b) in single.points.iter().zip(&multi.points) {
             assert_eq!(a.org, b.org);
             assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
         }
     }
 
@@ -292,12 +344,16 @@ mod tests {
             profile_network(&random_network(3), &accel),
         ])
         .unwrap();
-        let res = run(&set, &tech, 4).unwrap();
+        let res = run(&set, &tech, &accel, 4).unwrap();
         assert!(!res.points.is_empty());
         assert!(!res.selected.is_empty());
         let best = res.codesigned().unwrap();
-        // The co-designed org fits every member and has 3 per-net energies.
+        // The co-designed org fits every member and has 3 per-net energies
+        // (and latencies).
         assert_eq!(res.per_net_j[best].len(), 3);
+        assert_eq!(res.per_net_latency_s[best].len(), 3);
+        // Batched capsnet's per-inference latency amortizes below batch-1.
+        assert!(res.per_net_latency_s[best][1] < res.per_net_latency_s[best][0]);
         for (p, &e) in set.profiles().iter().zip(&res.per_net_j[best]) {
             assert!(org_fits(&res.points[best].org, p));
             assert!(e > 0.0 && e.is_finite());
@@ -310,16 +366,22 @@ mod tests {
     fn deterministic_across_thread_counts() {
         let set = set2();
         let tech = Technology::default();
+        let accel = Accelerator::default();
+        let tls = timelines(&set, &tech, &accel);
         let orgs: Vec<_> = enumerate(&set).unwrap().into_iter().take(400).collect();
-        let (p1, n1) = evaluate_all_on(&Engine::new(1), &orgs, &set, &tech);
-        let (p4, n4) = evaluate_all_on(&Engine::new(4), &orgs, &set, &tech);
+        let (p1, n1, l1) = evaluate_all_on(&Engine::new(1), &orgs, &set, &tech, &tls);
+        let (p4, n4, l4) = evaluate_all_on(&Engine::new(4), &orgs, &set, &tech, &tls);
         for ((a, b), (na, nb)) in p1.iter().zip(&p4).zip(n1.iter().zip(&n4)) {
             assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
             assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
             assert_eq!(na.len(), nb.len());
             for (x, y) in na.iter().zip(nb) {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
+        }
+        for (x, y) in l1.iter().zip(&l4) {
+            assert_eq!(x.len(), y.len());
         }
     }
 

@@ -18,4 +18,5 @@ pub mod model;
 pub mod pmu;
 pub mod report;
 pub mod runtime;
+pub mod sim;
 pub mod util;

@@ -18,6 +18,7 @@ use descnet::dataflow::{profile_network_batched, NetworkProfile};
 use descnet::dse::multi::WorkloadSet;
 use descnet::model::{self, Network};
 use descnet::report::{self, ReportCtx};
+use descnet::sim;
 use descnet::util::exec;
 use descnet::util::table::Table;
 use descnet::util::units::{fmt_count, fmt_size};
@@ -52,17 +53,22 @@ fn print_help() {
          USAGE: descnet <command> [options]\n\n\
          COMMANDS:\n\
            analyze  [--net capsnet|deepcaps] [--workload FILE] [--batch B] [--sim]\n\
-                    per-op workload profile\n\
+                    per-op workload profile; --sim adds the event-level phase\n\
+                    breakdown and the DMA/compute timeline (busy vs stall)\n\
            dse      [--net NAME[,NAME...]] [--workload FILE] [--random N] [--seed S]\n\
                     [--batch B] [--mix W1,W2,...] [--traffic-weighted] [--ports]\n\
-                    [--threads N] [--out DIR]\n\
+                    [--latency-budget MS] [--threads N] [--out DIR]\n\
                     single-network DSE, or (with a multi-network workload set)\n\
                     the dse::multi co-design stage: one organization across\n\
-                    every network, per-network energy reported\n\
+                    every network, per-network energy reported.  The objective\n\
+                    space is 3-D (area, energy, simulated latency);\n\
+                    --latency-budget MS drops configurations over budget\n\
            report   [all|fig1|fig7|fig9|fig10|fig11|fig12|fig18|fig19|fig20|fig21|\n\
                      fig22|fig23|fig25|fig27|fig29|fig30|fig31|multi|table3|headline]\n\
                     [--out DIR] [--threads N] [--config FILE]\n\
            serve    [--artifacts DIR] [--requests N] [--batch-max B] [--stage-pipeline]\n\
+                    [--slo-ms MS]  (batch sizes whose simulated batch latency\n\
+                    exceeds the SLO are never scheduled)\n\
            headline [--threads N]                           paper-vs-ours summary\n\
            config   [--save FILE] [--config FILE]           print/snapshot the technology config\n\n\
          WORKLOAD FILES (configs/workloads/*.json): a single network spec\n\
@@ -108,16 +114,44 @@ impl Flags {
             .unwrap_or_else(|| default.to_string())
     }
 
-    fn usize(&self, key: &str, default: usize) -> usize {
-        self.kv
-            .get(key)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
+    /// Strict integer flag: absent -> default, present-but-malformed ->
+    /// error (a typo must not silently fall back to the default).
+    fn usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.kv.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a non-negative integer, got '{v}'")),
+        }
+    }
+
+    /// Strict optional float flag (e.g. `--latency-budget MS`).
+    fn f64_opt(&self, key: &str) -> anyhow::Result<Option<f64>> {
+        match self.kv.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
     }
 
     fn has(&self, key: &str) -> bool {
         self.kv.contains_key(key)
     }
+}
+
+/// Unwraps a strict flag parse or exits with usage code 2.
+macro_rules! try_flag {
+    ($expr:expr) => {
+        match $expr {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("{e:#}");
+                return 2;
+            }
+        }
+    };
 }
 
 fn load_config(flags: &Flags) -> SystemConfig {
@@ -154,7 +188,7 @@ fn collect_networks(flags: &Flags) -> anyhow::Result<(Vec<Network>, Option<Vec<f
         let n: usize = n
             .parse()
             .map_err(|_| anyhow::anyhow!("--random expects a count, got '{n}'"))?;
-        let seed = flags.usize("seed", 1) as u64;
+        let seed = flags.usize("seed", 1)? as u64;
         if weights.is_some() {
             anyhow::bail!("--random cannot be combined with explicit workload weights");
         }
@@ -169,7 +203,7 @@ fn collect_networks(flags: &Flags) -> anyhow::Result<(Vec<Network>, Option<Vec<f
 fn cmd_analyze(args: &[String]) -> i32 {
     let flags = parse_flags(args);
     let cfg = load_config(&flags);
-    let batch = flags.usize("batch", 1);
+    let batch = try_flag!(flags.usize("batch", 1));
     let (nets, _) = match collect_networks(&flags) {
         Ok(v) => v,
         Err(e) => {
@@ -228,6 +262,35 @@ fn cmd_analyze(args: &[String]) -> i32 {
                 "event-sim vs closed form: max disagreement {:.2}%",
                 100.0 * accel::validate_network(network, &cfg.accel)
             );
+
+            // DMA/compute timeline (DESIGN.md section 11): busy vs stall.
+            let tl = sim::Timeline::build(&p, &cfg.tech, &cfg.accel);
+            let mut tt = Table::new(&["op", "start", "compute", "dma", "dma-stall", "bound"]);
+            for op in &tl.ops {
+                tt.row(vec![
+                    op.name.clone(),
+                    fmt_count(op.start_cycle),
+                    fmt_count(op.compute_cycles),
+                    fmt_count(op.dma_cycles),
+                    fmt_count(op.dma_stall_cycles),
+                    match op.bound() {
+                        sim::Bound::Compute => "compute".to_string(),
+                        sim::Bound::Dma => "dma".to_string(),
+                    },
+                ]);
+            }
+            println!("{}", tt.to_ascii());
+            println!(
+                "timeline: {} cycles/batch ({} compute + {} dma-stall)  ->  \
+                 {:.3} ms/inference at {:.1} GB/s effective fill bandwidth \
+                 (+ one-time cold-start fill: {} cycles before the first frame)",
+                fmt_count(tl.total_cycles()),
+                fmt_count(tl.compute_cycles()),
+                fmt_count(tl.dma_stall_cycles()),
+                tl.inference_latency_s() * 1e3,
+                tl.effective_fill_bps / 1e9,
+                fmt_count(tl.cold_fill_cycles),
+            );
         }
     }
     0
@@ -237,8 +300,15 @@ fn cmd_dse(args: &[String]) -> i32 {
     let flags = parse_flags(args);
     let cfg = load_config(&flags);
     let out = PathBuf::from(flags.get("out", "results"));
-    let threads = flags.usize("threads", exec::default_threads());
-    let batch = flags.usize("batch", 1);
+    let threads = try_flag!(flags.usize("threads", exec::default_threads()));
+    let batch = try_flag!(flags.usize("batch", 1));
+    let latency_budget_s = try_flag!(flags.f64_opt("latency-budget")).map(|ms| ms * 1e-3);
+    if let Some(b) = latency_budget_s {
+        if !(b.is_finite() && b > 0.0) {
+            eprintln!("--latency-budget expects a positive duration in ms, got {}", b * 1e3);
+            return 2;
+        }
+    }
     let ctx = ReportCtx::new(cfg, &out);
 
     if flags.has("ports") {
@@ -248,13 +318,14 @@ fn cmd_dse(args: &[String]) -> i32 {
             || flags.has("random")
             || flags.has("mix")
             || flags.has("traffic-weighted")
+            || flags.has("latency-budget")
             || batch != 1
             || flags.get("net", "deepcaps") != "deepcaps";
         if incompatible {
             eprintln!(
                 "dse --ports is the Fig 22 builtin-DeepCaps study; it cannot be \
-                 combined with --workload/--random/--mix/--traffic-weighted/--batch \
-                 or a --net other than deepcaps"
+                 combined with --workload/--random/--mix/--traffic-weighted/--batch/\
+                 --latency-budget or a --net other than deepcaps"
             );
             return 2;
         }
@@ -292,13 +363,23 @@ fn cmd_dse(args: &[String]) -> i32 {
         && matches!(nets[0].name.as_str(), "capsnet" | "deepcaps")
     {
         let net = nets[0].name.clone();
-        return match report::dse_scatter(&ctx, &net, threads) {
-            Ok((csv, table)) => {
+        return match report::dse_scatter(&ctx, &net, threads, latency_budget_s) {
+            Ok((csv, table, excluded)) => {
                 println!(
                     "{net} DSE: {} configurations evaluated (paper: {})",
-                    fmt_count(csv.len() as u64),
+                    fmt_count((csv.len() + excluded) as u64),
                     if net == "capsnet" { "15,233" } else { "215,693" },
                 );
+                if let Some(b) = latency_budget_s {
+                    println!(
+                        "latency budget {:.4} ms: {} of {} configurations within \
+                         budget, {} excluded (3-D Pareto: energy/area/latency)",
+                        b * 1e3,
+                        fmt_count(csv.len() as u64),
+                        fmt_count((csv.len() + excluded) as u64),
+                        fmt_count(excluded as u64),
+                    );
+                }
                 println!("{}", table.to_ascii());
                 0
             }
@@ -310,7 +391,7 @@ fn cmd_dse(args: &[String]) -> i32 {
     }
 
     // Workload-set path: co-design one organization across every network.
-    match run_multi_dse(&ctx, &nets, weights, batch, threads, &flags) {
+    match run_multi_dse(&ctx, &nets, weights, batch, threads, latency_budget_s, &flags) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("dse failed: {e:#}");
@@ -319,12 +400,14 @@ fn cmd_dse(args: &[String]) -> i32 {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_multi_dse(
     ctx: &ReportCtx,
     nets: &[Network],
     weights: Option<Vec<f64>>,
     batch: usize,
     threads: usize,
+    latency_budget_s: Option<f64>,
     flags: &Flags,
 ) -> anyhow::Result<()> {
     let profiles: Vec<NetworkProfile> = nets
@@ -358,13 +441,20 @@ fn run_multi_dse(
         WorkloadSet::new(profiles)?
     };
 
-    let (csv, table) = report::multi_dse(ctx, &mix, &names, threads)?;
+    let (csv, table, excluded) = report::multi_dse(ctx, &mix, &names, threads, latency_budget_s)?;
     println!(
         "co-design DSE over {} networks ({}): {} configurations evaluated",
         names.len(),
         names.join(", "),
-        fmt_count(csv.len() as u64),
+        fmt_count((csv.len() + excluded) as u64),
     );
+    if excluded > 0 {
+        println!(
+            "latency budget: {} configurations within budget, {} excluded",
+            fmt_count(csv.len() as u64),
+            fmt_count(excluded as u64),
+        );
+    }
     println!("{}", table.to_ascii());
     println!(
         "mix weights: {}",
@@ -382,7 +472,7 @@ fn cmd_report(args: &[String]) -> i32 {
     let flags = parse_flags(args);
     let cfg = load_config(&flags);
     let out = PathBuf::from(flags.get("out", "results"));
-    let threads = flags.usize("threads", exec::default_threads());
+    let threads = try_flag!(flags.usize("threads", exec::default_threads()));
     let what = flags
         .positional
         .first()
@@ -401,9 +491,9 @@ fn cmd_report(args: &[String]) -> i32 {
             "fig10" => drop(report::fig10(&ctx)),
             "fig11" => drop(report::fig11(&ctx)),
             "fig12" => drop(report::fig12(&ctx)?),
-            "fig18" => drop(report::dse_scatter(&ctx, "capsnet", threads)?),
+            "fig18" => drop(report::dse_scatter(&ctx, "capsnet", threads, None)?),
             "fig19" => drop(report::breakdowns(&ctx, "capsnet", threads)?),
-            "fig20" => drop(report::dse_scatter(&ctx, "deepcaps", threads)?),
+            "fig20" => drop(report::dse_scatter(&ctx, "deepcaps", threads, None)?),
             "fig21" => drop(report::breakdowns(&ctx, "deepcaps", threads)?),
             "fig22" => drop(report::fig22(&ctx, threads)?),
             "fig23" | "fig24" => drop(report::whole_accelerator(&ctx, "capsnet", threads)?),
@@ -414,7 +504,7 @@ fn cmd_report(args: &[String]) -> i32 {
             "fig31" | "fig32" => drop(report::memory_breakdown(&ctx, "deepcaps", threads)?),
             "multi" => {
                 let (set, names) = report::default_serving_mix(&ctx)?;
-                let (_, table) = report::multi_dse(&ctx, &set, &names, threads)?;
+                let (_, table, _) = report::multi_dse(&ctx, &set, &names, threads, None)?;
                 println!("{}", table.to_ascii());
             }
             "table3" => println!("{}", report::table3(&ctx, threads)?.to_ascii()),
@@ -438,7 +528,7 @@ fn cmd_report(args: &[String]) -> i32 {
 fn cmd_headline(args: &[String]) -> i32 {
     let flags = parse_flags(args);
     let cfg = load_config(&flags);
-    let threads = flags.usize("threads", exec::default_threads());
+    let threads = try_flag!(flags.usize("threads", exec::default_threads()));
     let dir = std::env::temp_dir().join("descnet_headline");
     let ctx = ReportCtx::new(cfg, &dir);
     match report::headline(&ctx, threads) {
@@ -474,12 +564,14 @@ fn cmd_config(args: &[String]) -> i32 {
 
 fn cmd_serve(args: &[String]) -> i32 {
     let flags = parse_flags(args);
+    let slo_s = try_flag!(flags.f64_opt("slo-ms")).map(|ms| ms * 1e-3);
     let opts = ServeOptions {
         artifacts_dir: PathBuf::from(flags.get("artifacts", "artifacts")),
-        requests: flags.usize("requests", 64),
-        batch_max: flags.usize("batch-max", 4),
+        requests: try_flag!(flags.usize("requests", 64)),
+        batch_max: try_flag!(flags.usize("batch-max", 4)),
         stage_pipeline: flags.has("stage-pipeline"),
-        seed: flags.usize("seed", 7) as u64,
+        seed: try_flag!(flags.usize("seed", 7)) as u64,
+        slo_s,
     };
     match Server::run_synthetic(&opts) {
         Ok(mut stats) => {

@@ -87,6 +87,32 @@ impl PmuReport {
     pub fn schedule(&self, c: Component) -> Option<&SectorSchedule> {
         self.schedules.iter().find(|s| s.component == c)
     }
+
+    /// Wakeup latency left exposed by pre-activation over the given per-op
+    /// durations [s]: for every op boundary where any component's schedule
+    /// turns additional sectors ON, the residue
+    /// `max(0, wakeup_latency - previous_op_duration)` is charged once
+    /// (components wake in parallel).  Op 0's sectors wake during the
+    /// previous frame and are never exposed.  The timeline simulator's fast
+    /// pass (`sim::wakeup_exposure_s`) computes the identical sum without
+    /// building a report — `sim::tests` pins the two bit-equal.
+    pub fn wakeup_exposure_s(&self, durations_s: &[f64], wakeup_latency_s: f64) -> f64 {
+        if wakeup_latency_s <= 0.0 {
+            return 0.0;
+        }
+        let n = durations_s.len();
+        let mut exposure = 0.0;
+        for i in 1..n {
+            let wakes = self
+                .schedules
+                .iter()
+                .any(|s| s.sectors > 1 && s.on.len() == n && s.on[i] > s.on[i - 1]);
+            if wakes {
+                exposure += (wakeup_latency_s - durations_s[i - 1]).max(0.0);
+            }
+        }
+        exposure
+    }
 }
 
 /// Bytes of each component needed by each op under this organization.

@@ -235,10 +235,26 @@ pub fn fig12(ctx: &ReportCtx) -> Result<Csv> {
 // ------------------------------------------------- E07/E09 Fig 18/20 + tabs
 
 /// Runs the full DSE for one network and dumps scatter + frontier +
-/// selected configurations (Fig 18/20, Tables I/II).
-pub fn dse_scatter(ctx: &ReportCtx, net: &str, threads: usize) -> Result<(Csv, Table)> {
+/// selected configurations (Fig 18/20, Tables I/II) — 3-D since the
+/// timeline simulator: every row carries its simulated per-inference
+/// latency, and `latency_budget_s` (the CLI's `--latency-budget`) excludes
+/// configurations that miss the budget before Pareto/selection.  The last
+/// tuple element is the number of budget-excluded configurations (0 when
+/// unconstrained), so callers can report evaluated vs surviving counts.
+pub fn dse_scatter(
+    ctx: &ReportCtx,
+    net: &str,
+    threads: usize,
+    latency_budget_s: Option<f64>,
+) -> Result<(Csv, Table, usize)> {
     let profile = ctx.profile(net);
-    let result = dse::run(profile, &ctx.cfg.tech, threads)?;
+    let result = dse::run_budgeted(
+        &crate::util::exec::Engine::new(threads),
+        profile,
+        &ctx.cfg.tech,
+        &ctx.cfg.accel,
+        latency_budget_s,
+    )?;
     let pareto: std::collections::BTreeSet<usize> = result.pareto.iter().copied().collect();
     let selected: std::collections::BTreeMap<usize, String> = result
         .selected
@@ -259,6 +275,7 @@ pub fn dse_scatter(ctx: &ReportCtx, net: &str, threads: usize) -> Result<(Csv, T
         "acc_SC",
         "area_mm2",
         "energy_mj",
+        "latency_ms",
         "pareto",
         "selected",
     ]);
@@ -286,15 +303,18 @@ pub fn dse_scatter(ctx: &ReportCtx, net: &str, threads: usize) -> Result<(Csv, T
             u(sca),
             f(p.area_mm2),
             f(p.energy_j * 1e3),
+            f(p.latency_s * 1e3),
             s(if pareto.contains(&i) { "1" } else { "0" }),
             s(selected.get(&i).map(String::as_str).unwrap_or("")),
         ]);
     }
 
-    // Table I/II analogue: the selected configurations.
+    // Table I/II analogue: the selected configurations (with the simulated
+    // per-inference latency — equal across options at the paper constants,
+    // the "no performance loss" column).
     let mut table = Table::new(&[
         "Mem", "Shared SZ", "SC", "Data SZ", "SC", "Weight SZ", "SC", "Acc SZ", "SC",
-        "Area [mm2]", "Energy [mJ]",
+        "Area [mm2]", "Energy [mJ]", "Latency [ms]",
     ]);
     for (name, i) in &result.selected {
         let p = &result.points[*i];
@@ -320,6 +340,7 @@ pub fn dse_scatter(ctx: &ReportCtx, net: &str, threads: usize) -> Result<(Csv, T
             sca,
             format!("{:.3}", p.area_mm2),
             format!("{:.3}", p.energy_j * 1e3),
+            format!("{:.4}", p.latency_s * 1e3),
         ]);
     }
 
@@ -329,7 +350,7 @@ pub fn dse_scatter(ctx: &ReportCtx, net: &str, threads: usize) -> Result<(Csv, T
     };
     ctx.write(fig, &csv);
     ctx.write_md(tab, &table);
-    Ok((csv, table))
+    Ok((csv, table, result.excluded_by_budget))
 }
 
 // ----------------------------------------------- E08/E10 Fig 19/21 breakdown
@@ -338,7 +359,7 @@ pub fn dse_scatter(ctx: &ReportCtx, net: &str, threads: usize) -> Result<(Csv, T
 /// energy for the per-option selected configurations.
 pub fn breakdowns(ctx: &ReportCtx, net: &str, threads: usize) -> Result<Csv> {
     let profile = ctx.profile(net);
-    let result = dse::run(profile, &ctx.cfg.tech, threads)?;
+    let result = dse::run(profile, &ctx.cfg.tech, &ctx.cfg.accel, threads)?;
     let mut csv = Csv::new(&[
         "option",
         "component",
@@ -383,10 +404,11 @@ pub fn breakdowns(ctx: &ReportCtx, net: &str, threads: usize) -> Result<Csv> {
 /// Fig 22: HY-PG DSE with constrained shared-memory ports.
 pub fn fig22(ctx: &ReportCtx, threads: usize) -> Result<Csv> {
     let profile = &ctx.deepcaps;
+    let timeline = crate::sim::Timeline::build(profile, &ctx.cfg.tech, &ctx.cfg.accel);
     let mut csv = Csv::new(&["ports", "label", "area_mm2", "energy_mj", "pareto"]);
     for ports in [1usize, 2, 3] {
         let orgs = dse::enumerate_hy_ports(profile, ports)?;
-        let points = dse::evaluate_all(&orgs, profile, &ctx.cfg.tech, threads);
+        let points = dse::evaluate_all(&orgs, profile, &ctx.cfg.tech, &timeline, threads);
         let front: std::collections::BTreeSet<usize> =
             dse::pareto_indices(&points).into_iter().collect();
         for (i, p) in points.iter().enumerate() {
@@ -409,7 +431,7 @@ pub fn fig22(ctx: &ReportCtx, threads: usize) -> Result<Csv> {
 /// plus the headline savings vs version (a) (E18).
 pub fn whole_accelerator(ctx: &ReportCtx, net: &str, threads: usize) -> Result<Csv> {
     let profile = ctx.profile(net);
-    let result = dse::run(profile, &ctx.cfg.tech, threads)?;
+    let result = dse::run(profile, &ctx.cfg.tech, &ctx.cfg.accel, threads)?;
     let selected: std::collections::BTreeMap<String, usize> =
         result.selected.iter().cloned().collect();
 
@@ -475,7 +497,7 @@ pub fn table3(ctx: &ReportCtx, threads: usize) -> Result<Table> {
     ]);
     for net in ["capsnet", "deepcaps"] {
         let profile = ctx.profile(net);
-        let result = dse::run(profile, &ctx.cfg.tech, threads)?;
+        let result = dse::run(profile, &ctx.cfg.tech, &ctx.cfg.accel, threads)?;
         for (name, i) in &result.selected {
             let org = &result.points[*i].org;
             let e = energy::evaluate_org(org, profile, &ctx.cfg.tech)?;
@@ -522,7 +544,7 @@ pub fn fig27_28(ctx: &ReportCtx) -> Csv {
 /// which value class) for the selected design options.
 pub fn memory_breakdown(ctx: &ReportCtx, net: &str, threads: usize) -> Result<Csv> {
     let profile = ctx.profile(net);
-    let result = dse::run(profile, &ctx.cfg.tech, threads)?;
+    let result = dse::run(profile, &ctx.cfg.tech, &ctx.cfg.accel, threads)?;
     let mut csv = Csv::new(&[
         "option", "op", "ded_d", "ded_w", "ded_a", "sh_d", "sh_w", "sh_a", "shared_types",
     ]);
@@ -557,7 +579,7 @@ pub fn memory_breakdown(ctx: &ReportCtx, net: &str, threads: usize) -> Result<Cs
 /// Fig 30: the HY-PG sector ON/OFF schedule across operations.
 pub fn fig30(ctx: &ReportCtx, threads: usize) -> Result<Csv> {
     let profile = &ctx.capsnet;
-    let result = dse::run(profile, &ctx.cfg.tech, threads)?;
+    let result = dse::run(profile, &ctx.cfg.tech, &ctx.cfg.accel, threads)?;
     let selected: std::collections::BTreeMap<String, usize> =
         result.selected.iter().cloned().collect();
     let i = *selected
@@ -589,7 +611,7 @@ pub fn headline(ctx: &ReportCtx, threads: usize) -> Result<Csv> {
     let tech = &ctx.cfg.tech;
     let a = energy::version_a(p, tech)?;
     let b = energy::version_b(p, tech, dse::smp_size(p))?;
-    let result = dse::run(p, tech, threads)?;
+    let result = dse::run(p, tech, &ctx.cfg.accel, threads)?;
     let selected: std::collections::BTreeMap<String, usize> =
         result.selected.iter().cloned().collect();
     let pick = |name: &str| -> Result<usize> {
@@ -645,6 +667,27 @@ pub fn headline(ctx: &ReportCtx, threads: usize) -> Result<Csv> {
         s("0"),
         u(report.total_stall_cycles as usize),
     ]);
+    // Timeline simulator (E21): the gated DESCNet selection must run at the
+    // ungated baseline's latency — the "no performance loss" claim as a
+    // ratio — and the absolute simulated latency must match 1/116 fps.
+    let sep_ungated = ctx.table1_sep();
+    let lp_ungated = crate::sim::simulate(p, &sep_ungated, tech, &ctx.cfg.accel)?;
+    let lp_gated = crate::sim::simulate(
+        p,
+        &result.points[pick("HY-PG")?].org,
+        tech,
+        &ctx.cfg.accel,
+    )?;
+    csv.row(vec![
+        s("sim_capsnet_latency_ms"),
+        s("8.6"),
+        f(lp_gated.batch_latency_s() * 1e3),
+    ]);
+    csv.row(vec![
+        s("gated_vs_ungated_latency_ratio"),
+        s("1.0"),
+        f(lp_gated.batch_latency_s() / lp_ungated.batch_latency_s()),
+    ]);
     csv.row(vec![
         s("memory_share_of_total_energy"),
         s("0.96"),
@@ -676,15 +719,55 @@ pub fn default_serving_mix(ctx: &ReportCtx) -> Result<(WorkloadSet, Vec<String>)
 
 /// Multi-network co-design DSE artifact: the weighted scatter
 /// (`dse_multi.csv`) and the selected co-designed organizations with
-/// per-network energy columns (`table_multi_selected.md`).
+/// per-network energy columns (`table_multi_selected.md`).  With
+/// `latency_budget_s`, organizations whose mix-weighted per-inference
+/// latency misses the budget are dropped before Pareto/selection.
 pub fn multi_dse(
     ctx: &ReportCtx,
     set: &WorkloadSet,
     names: &[String],
     threads: usize,
-) -> Result<(Csv, Table)> {
-    let result = dse::multi::run(set, &ctx.cfg.tech, threads)
+    latency_budget_s: Option<f64>,
+) -> Result<(Csv, Table, usize)> {
+    let mut result = dse::multi::run(set, &ctx.cfg.tech, &ctx.cfg.accel, threads)
         .context("multi-network co-design DSE")?;
+    let mut excluded = 0usize;
+    if let Some(budget) = latency_budget_s {
+        anyhow::ensure!(
+            budget.is_finite() && budget > 0.0,
+            "latency budget must be a positive duration, got {budget} s"
+        );
+        let before = result.points.len();
+        let fastest = result
+            .points
+            .iter()
+            .map(|p| p.latency_s)
+            .fold(f64::INFINITY, f64::min);
+        let keep: Vec<bool> = result.points.iter().map(|p| p.latency_s <= budget).collect();
+        let filter_by = |k: &mut usize| {
+            let i = *k;
+            *k += 1;
+            keep[i]
+        };
+        let mut k = 0;
+        result.points.retain(|_| filter_by(&mut k));
+        k = 0;
+        result.per_net_j.retain(|_| filter_by(&mut k));
+        k = 0;
+        result.per_net_latency_s.retain(|_| filter_by(&mut k));
+        if result.points.is_empty() {
+            anyhow::bail!(
+                "latency budget {:.4} ms excludes all {} co-design configurations \
+                 (fastest achievable mix latency: {:.4} ms)",
+                budget * 1e3,
+                before,
+                fastest * 1e3
+            );
+        }
+        excluded = before - result.points.len();
+        result.pareto = dse::pareto_indices(&result.points);
+        result.selected = dse::select_per_option(&result.points);
+    }
     let pareto: std::collections::BTreeSet<usize> = result.pareto.iter().copied().collect();
     let selected: std::collections::BTreeMap<usize, String> = result
         .selected
@@ -698,6 +781,7 @@ pub fn multi_dse(
         "total_B".into(),
         "area_mm2".into(),
         "energy_weighted_mj".into(),
+        "latency_weighted_ms".into(),
     ];
     for name in names {
         headers.push(format!("energy_mj_{name}"));
@@ -713,6 +797,7 @@ pub fn multi_dse(
             u(p.org.total_size()),
             f(p.area_mm2),
             f(p.energy_j * 1e3),
+            f(p.latency_s * 1e3),
         ];
         for &e in &result.per_net_j[i] {
             row.push(f(e * 1e3));
@@ -730,6 +815,7 @@ pub fn multi_dse(
         "Acc SZ".into(),
         "Area [mm2]".into(),
         "E-mix [mJ]".into(),
+        "Lat-mix [ms]".into(),
     ];
     for name in names {
         table_headers.push(format!("E {name} [mJ]"));
@@ -752,6 +838,7 @@ pub fn multi_dse(
             cell(Component::Acc),
             format!("{:.3}", p.area_mm2),
             format!("{:.3}", p.energy_j * 1e3),
+            format!("{:.4}", p.latency_s * 1e3),
         ];
         for &e in &result.per_net_j[*i] {
             row.push(format!("{:.3}", e * 1e3));
@@ -761,7 +848,7 @@ pub fn multi_dse(
 
     ctx.write("dse_multi.csv", &csv);
     ctx.write_md("table_multi_selected.md", &table);
-    Ok((csv, table))
+    Ok((csv, table, excluded))
 }
 
 /// Regenerate everything (the `descnet report all` entry point).
@@ -780,11 +867,11 @@ pub fn all(ctx: &ReportCtx, threads: usize) -> Result<Vec<String>> {
     mark("fig11");
     fig12(ctx)?;
     mark("fig12");
-    dse_scatter(ctx, "capsnet", threads)?;
+    dse_scatter(ctx, "capsnet", threads, None)?;
     mark("fig18+table1");
     breakdowns(ctx, "capsnet", threads)?;
     mark("fig19");
-    dse_scatter(ctx, "deepcaps", threads)?;
+    dse_scatter(ctx, "deepcaps", threads, None)?;
     mark("fig20+table2");
     breakdowns(ctx, "deepcaps", threads)?;
     mark("fig21");
@@ -881,13 +968,48 @@ mod tests {
         let c = ctx();
         let (set, names) = default_serving_mix(&c).unwrap();
         assert_eq!(names.len(), 3);
-        let (csv, table) = multi_dse(&c, &set, &names, 4).unwrap();
+        let (csv, table, excluded) = multi_dse(&c, &set, &names, 4, None).unwrap();
+        assert_eq!(excluded, 0);
         assert!(!csv.is_empty());
         let text = csv.to_string();
         assert!(text.contains("energy_mj_capsnet@b4"), "missing per-net column");
+        assert!(text.contains("latency_weighted_ms"), "missing latency column");
         let md = table.to_markdown();
         assert!(md.contains("E deepcaps [mJ]"), "{md}");
+        assert!(md.contains("Lat-mix [ms]"), "{md}");
         // One co-designed selection per design option, each with a row.
         assert!(md.lines().count() >= 4);
+    }
+
+    #[test]
+    fn dse_scatter_reports_latency_and_honors_budget() {
+        let c = ctx();
+        let (csv, table, excluded) = dse_scatter(&c, "capsnet", 4, None).unwrap();
+        assert_eq!(excluded, 0);
+        assert!(csv.to_string().contains("latency_ms"));
+        assert!(table.to_markdown().contains("Latency [ms]"));
+        // A generous budget keeps the full enumeration...
+        let (loose, _, loose_excluded) = dse_scatter(&c, "capsnet", 4, Some(1.0)).unwrap();
+        assert_eq!(loose.len(), csv.len());
+        assert_eq!(loose_excluded, 0);
+        // ...an impossible one errors with the fastest achievable latency.
+        let err = dse_scatter(&c, "capsnet", 4, Some(1e-9)).unwrap_err();
+        assert!(format!("{err:#}").contains("excludes all"));
+    }
+
+    #[test]
+    fn headline_includes_no_performance_loss_ratio() {
+        let c = ctx();
+        let text = headline(&c, 4).unwrap().to_string();
+        assert!(text.contains("sim_capsnet_latency_ms"), "{text}");
+        assert!(text.contains("gated_vs_ungated_latency_ratio"), "{text}");
+        // The ratio row must report exactly 1 (no performance loss).
+        let row = text
+            .lines()
+            .find(|l| l.starts_with("gated_vs_ungated_latency_ratio"))
+            .unwrap()
+            .to_string();
+        let ours: f64 = row.rsplit(',').next().unwrap().parse().unwrap();
+        assert_eq!(ours, 1.0, "{row}");
     }
 }

@@ -1,8 +1,12 @@
-//! Pareto-frontier extraction for the DSE (area vs energy minimization).
+//! Pareto-frontier extraction for the DSE (area vs energy minimization,
+//! and the 3-objective area/energy/latency variant the timeline simulator
+//! adds).
 //!
 //! The paper selects "non-dominated solutions" from the exhaustive sweep
 //! (Figs 18/20/22); a point dominates another if it is <= on both axes and
-//! < on at least one.
+//! < on at least one.  [`frontier3`] extends the rule to three objectives
+//! with an O(n log n) staircase sweep; when every point shares the same
+//! third coordinate it reduces exactly to [`frontier`]'s result set.
 
 /// A point in (x, y) objective space with an opaque payload index.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -43,6 +47,75 @@ pub fn frontier(points: &[Point]) -> Vec<usize> {
             out.push(i);
             best_y = points[i].y;
         }
+    }
+    out
+}
+
+/// A point in (x, y, z) objective space with an opaque payload index.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point3 {
+    pub x: f64,
+    pub y: f64,
+    pub z: f64,
+    pub id: usize,
+}
+
+impl Point3 {
+    pub fn new(x: f64, y: f64, z: f64, id: usize) -> Point3 {
+        Point3 { x, y, z, id }
+    }
+
+    /// True if `self` dominates `other` (minimization on all three axes).
+    pub fn dominates(&self, other: &Point3) -> bool {
+        self.x <= other.x
+            && self.y <= other.y
+            && self.z <= other.z
+            && (self.x < other.x || self.y < other.y || self.z < other.z)
+    }
+}
+
+/// Indices (into `points`) of the 3-objective Pareto frontier, in the
+/// (x, y, z)-lexicographic processing order.  Exact duplicates keep only
+/// their first occurrence, matching [`frontier`]'s tie convention.
+///
+/// Sweep: process points in (x, y, z)-lexicographic order; every earlier
+/// point has x <= the current one, so 3-D dominance reduces to a 2-D
+/// query over (y, z) against a staircase (y ascending, z strictly
+/// descending) of the processed points' own (y, z) frontier.
+pub fn frontier3(points: &[Point3]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    order.sort_by(|&a, &b| {
+        let (p, q) = (&points[a], &points[b]);
+        p.x.partial_cmp(&q.x)
+            .unwrap()
+            .then(p.y.partial_cmp(&q.y).unwrap())
+            .then(p.z.partial_cmp(&q.z).unwrap())
+    });
+    let mut out = Vec::new();
+    let mut stair: Vec<(f64, f64)> = Vec::new(); // (y, z), y asc, z strictly desc
+    for &i in &order {
+        let p = &points[i];
+        // Rightmost staircase entry with y <= p.y holds the minimal z over
+        // that range; the point is dominated iff that z <= p.z (an exact
+        // (y, z) duplicate counts as dominated: earlier x-ties win, like
+        // `frontier`'s stable-sort convention).
+        let pos = stair.partition_point(|&(y, _)| y <= p.y);
+        if pos > 0 && stair[pos - 1].1 <= p.z {
+            continue;
+        }
+        // Accepted: insert (p.y, p.z), dropping entries it (y, z)-covers —
+        // those at y >= p.y with z >= p.z.  They form a contiguous run
+        // starting at the first entry with y >= p.y (entries tied on y all
+        // have z > p.z here, else the dominance test would have fired) and
+        // ending where z drops below p.z.
+        let start = stair.partition_point(|&(y, _)| y < p.y);
+        let end = stair[start..]
+            .iter()
+            .position(|&(_, z)| z < p.z)
+            .map(|k| start + k)
+            .unwrap_or(stair.len());
+        stair.splice(start..end, [(p.y, p.z)]);
+        out.push(i);
     }
     out
 }
@@ -171,5 +244,99 @@ mod tests {
         let p = pts(&[(5.0, 1.0), (1.0, 5.0), (3.0, 3.0)]);
         assert_eq!(min_y(&p), Some(0));
         assert_eq!(min_x(&p), Some(1));
+    }
+
+    // ------------------------------------------------------ 3-objective
+
+    fn pts3(v: &[(f64, f64, f64)]) -> Vec<Point3> {
+        v.iter()
+            .enumerate()
+            .map(|(i, &(x, y, z))| Point3::new(x, y, z, i))
+            .collect()
+    }
+
+    #[test]
+    fn frontier3_basic_domination() {
+        let p = pts3(&[
+            (1.0, 1.0, 1.0),
+            (2.0, 2.0, 2.0), // dominated by 0
+            (0.5, 3.0, 3.0), // better x: survives
+            (3.0, 0.5, 3.0), // better y: survives
+            (3.0, 3.0, 0.5), // better z: survives
+        ]);
+        let mut f = frontier3(&p);
+        f.sort_unstable();
+        assert_eq!(f, vec![0, 2, 3, 4]);
+    }
+
+    #[test]
+    fn frontier3_reduces_to_2d_when_z_is_constant() {
+        let flat: Vec<(f64, f64)> = vec![
+            (1.0, 5.0),
+            (2.0, 3.0),
+            (3.0, 4.0),
+            (4.0, 1.0),
+            (2.5, 2.5),
+            (1.0, 5.0), // duplicate: only the first survives
+        ];
+        let p2 = pts(&flat);
+        let p3: Vec<Point3> = flat
+            .iter()
+            .enumerate()
+            .map(|(i, &(x, y))| Point3::new(x, y, 7.25, i))
+            .collect();
+        let mut f2 = frontier(&p2);
+        let mut f3 = frontier3(&p3);
+        f2.sort_unstable();
+        f3.sort_unstable();
+        assert_eq!(f2, f3);
+    }
+
+    #[test]
+    fn frontier3_duplicates_keep_exactly_one() {
+        let p = pts3(&[(1.0, 1.0, 1.0), (1.0, 1.0, 1.0), (1.0, 1.0, 1.0)]);
+        assert_eq!(frontier3(&p), vec![0]);
+    }
+
+    #[test]
+    fn frontier3_equal_xy_ties_resolve_by_z() {
+        // Same (x, y): only the smallest z survives; same (x, z): smallest y.
+        let p = pts3(&[(1.0, 2.0, 5.0), (1.0, 2.0, 3.0), (1.0, 1.0, 5.0)]);
+        let mut f = frontier3(&p);
+        f.sort_unstable();
+        assert_eq!(f, vec![1, 2]);
+    }
+
+    #[test]
+    fn frontier3_matches_quadratic_reference_on_random_cloud() {
+        // Pseudo-random cloud (LCG, deterministic): the sweep must agree
+        // with the O(n^2) definition, modulo the duplicate convention
+        // (no duplicates occur with these draws).
+        let mut state = 0x2545F4914F6CDD1Du64;
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) % 1000) as f64 / 10.0
+        };
+        let p: Vec<Point3> = (0..300)
+            .map(|i| Point3::new(next(), next(), next(), i))
+            .collect();
+        let mut fast = frontier3(&p);
+        fast.sort_unstable();
+        let mut slow: Vec<usize> = (0..p.len())
+            .filter(|&i| {
+                !p.iter().enumerate().any(|(j, q)| {
+                    q.dominates(&p[i])
+                        || (j < i && q.x == p[i].x && q.y == p[i].y && q.z == p[i].z)
+                })
+            })
+            .collect();
+        slow.sort_unstable();
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn frontier3_empty_and_single() {
+        assert!(frontier3(&[]).is_empty());
+        assert_eq!(frontier3(&pts3(&[(1.0, 2.0, 3.0)])), vec![0]);
     }
 }

@@ -181,7 +181,8 @@ fn random_networks_run_through_the_full_dse_pipeline() {
     for seed in [1u64, 11, 29] {
         let net = random_network(seed);
         let p = profile_network(&net, &accel);
-        let res = dse::run(&p, &tech, 4).unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+        let res =
+            dse::run(&p, &tech, &accel, 4).unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
         assert!(!res.points.is_empty(), "seed {seed}");
         assert!(!res.pareto.is_empty(), "seed {seed}");
         assert!(!res.selected.is_empty(), "seed {seed}");
@@ -214,7 +215,7 @@ fn three_network_codesign_acceptance() {
     let nets = [capsnet_mnist(), deepcaps_cifar10(), random_network(5)];
     let profiles = nets.iter().map(|n| profile_network(n, &accel)).collect();
     let set = WorkloadSet::new(profiles).unwrap();
-    let res = dse::multi::run(&set, &tech, 4).unwrap();
+    let res = dse::multi::run(&set, &tech, &accel, 4).unwrap();
     let best = res.codesigned().expect("a co-designed organization");
     let org = &res.points[best].org;
     assert_eq!(res.per_net_j[best].len(), 3);

@@ -1,0 +1,156 @@
+//! CLI integration tests (ISSUE 3): malformed arguments and workload specs
+//! must exit non-zero with an error message — never panic — and the
+//! latency-budget path must emit the 3-D Pareto artifacts.
+//!
+//! The image vendors no `assert_cmd`; `std::process::Command` over the
+//! `CARGO_BIN_EXE_descnet` path cargo exports to integration tests is the
+//! same harness without the dependency.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn descnet(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_descnet"))
+        .args(args)
+        .output()
+        .expect("spawning the descnet binary")
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("descnet_cli_tests").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Exit code asserted non-zero with a diagnostic, and no panic backtrace.
+fn assert_clean_failure(out: &Output, needle: &str) {
+    assert!(
+        !out.status.success(),
+        "expected failure, got success: {}",
+        stdout(out)
+    );
+    let err = stderr(out);
+    assert!(err.contains(needle), "stderr missing '{needle}': {err}");
+    assert!(!err.contains("panicked"), "CLI panicked: {err}");
+    assert!(!err.contains("RUST_BACKTRACE"), "CLI panicked: {err}");
+}
+
+#[test]
+fn malformed_latency_budget_value_exits_with_usage_error() {
+    let out = descnet(&["dse", "--net", "capsnet", "--latency-budget", "fast"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert_clean_failure(&out, "--latency-budget expects a number");
+}
+
+#[test]
+fn missing_latency_budget_value_exits_with_usage_error() {
+    // `--latency-budget` with no operand parses as a bare switch ("true").
+    let out = descnet(&["dse", "--net", "capsnet", "--latency-budget"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert_clean_failure(&out, "--latency-budget expects a number");
+}
+
+#[test]
+fn negative_latency_budget_exits_with_usage_error() {
+    let out = descnet(&["dse", "--net", "capsnet", "--latency-budget", "-5"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert_clean_failure(&out, "positive duration");
+}
+
+#[test]
+fn net_typo_reports_unknown_builtin() {
+    let out = descnet(&["dse", "--net", "capsnett", "--threads", "2"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert_clean_failure(&out, "unknown builtin network 'capsnett'");
+}
+
+#[test]
+fn malformed_batch_value_is_rejected_not_defaulted() {
+    // A typo like `--batch many` must not silently run at batch 1.
+    let out = descnet(&["analyze", "--net", "capsnet", "--batch", "many"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert_clean_failure(&out, "--batch expects a non-negative integer");
+}
+
+#[test]
+fn malformed_workload_spec_errors_with_context() {
+    let dir = tmp_dir("bad_spec");
+    let path = dir.join("broken.json");
+    std::fs::write(
+        &path,
+        r#"{"name": "broken", "input": [5, 5, 1],
+           "layers": [{"type": "conv", "name": "C", "out_channels": 8,
+                       "kernel": 9, "padding": "valid"}]}"#,
+    )
+    .unwrap();
+    let out = descnet(&["dse", "--workload", path.to_str().unwrap(), "--threads", "2"]);
+    assert!(!out.status.success());
+    assert_clean_failure(&out, "broken.json");
+    assert!(stderr(&out).contains("exceeds input extent"), "{}", stderr(&out));
+}
+
+#[test]
+fn unparseable_workload_json_errors_cleanly() {
+    let dir = tmp_dir("bad_json");
+    let path = dir.join("not_json.json");
+    std::fs::write(&path, "{ this is not json").unwrap();
+    let out = descnet(&["dse", "--workload", path.to_str().unwrap()]);
+    assert!(!out.status.success());
+    assert_clean_failure(&out, "dse failed");
+}
+
+#[test]
+fn latency_budget_dse_emits_3d_pareto_artifacts() {
+    // The acceptance-criterion command: a feasible budget runs the full
+    // capsnet sweep, reports the budget, and writes the latency-bearing
+    // CSV + selected table.
+    let dir = tmp_dir("budget_ok");
+    let out = descnet(&[
+        "dse",
+        "--net",
+        "capsnet",
+        "--latency-budget",
+        "15",
+        "--threads",
+        "2",
+        "--out",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("latency budget 15"), "{text}");
+    assert!(text.contains("3-D Pareto"), "{text}");
+    assert!(text.contains("Latency [ms]"), "{text}");
+    let csv = std::fs::read_to_string(dir.join("fig18_dse_capsnet.csv")).unwrap();
+    let header = csv.lines().next().unwrap();
+    assert!(header.contains("latency_ms"), "{header}");
+    let table = std::fs::read_to_string(dir.join("table1_selected_capsnet.md")).unwrap();
+    assert!(table.contains("Latency [ms]"), "{table}");
+}
+
+#[test]
+fn infeasible_latency_budget_fails_with_fastest_achievable() {
+    let dir = tmp_dir("budget_impossible");
+    let out = descnet(&[
+        "dse",
+        "--net",
+        "capsnet",
+        "--latency-budget",
+        "0.0001",
+        "--threads",
+        "2",
+        "--out",
+        dir.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    assert_clean_failure(&out, "excludes all");
+    assert!(stderr(&out).contains("fastest achievable"), "{}", stderr(&out));
+}

@@ -14,6 +14,7 @@ use descnet::energy;
 use descnet::memory::{MemSpec, Organization};
 use descnet::model::capsnet_mnist;
 use descnet::pmu;
+use descnet::sim;
 use descnet::util::exec::Engine;
 use descnet::util::units::KIB;
 
@@ -21,14 +22,19 @@ fn profile() -> NetworkProfile {
     profile_network(&capsnet_mnist(), &Accelerator::default())
 }
 
+fn timeline(p: &NetworkProfile) -> sim::Timeline {
+    sim::Timeline::build(p, &Technology::default(), &Accelerator::default())
+}
+
 #[test]
 fn dse_points_bit_identical_across_thread_counts() {
     let tech = Technology::default();
     let p = profile();
     let orgs = dse::enumerate(&p).unwrap();
-    let serial = dse::evaluate_all_on(&Engine::new(1), &orgs, &p, &tech);
+    let tl = timeline(&p);
+    let serial = dse::evaluate_all_on(&Engine::new(1), &orgs, &p, &tech, &tl);
     for threads in [2usize, 5] {
-        let parallel = dse::evaluate_all_on(&Engine::new(threads), &orgs, &p, &tech);
+        let parallel = dse::evaluate_all_on(&Engine::new(threads), &orgs, &p, &tech, &tl);
         assert_eq!(serial.len(), parallel.len());
         for (a, b) in serial.iter().zip(&parallel) {
             assert_eq!(a.org, b.org, "threads={threads}");
@@ -44,6 +50,12 @@ fn dse_points_bit_identical_across_thread_counts() {
                 "energy differs for {} at threads={threads}",
                 a.org.label()
             );
+            assert_eq!(
+                a.latency_s.to_bits(),
+                b.latency_s.to_bits(),
+                "latency differs for {} at threads={threads}",
+                a.org.label()
+            );
         }
     }
 }
@@ -52,8 +64,9 @@ fn dse_points_bit_identical_across_thread_counts() {
 fn full_dse_pipeline_identical_across_engines() {
     let tech = Technology::default();
     let p = profile();
-    let res1 = dse::run(&p, &tech, 1).unwrap();
-    let res8 = dse::run_on(&Engine::new(8), &p, &tech).unwrap();
+    let accel = Accelerator::default();
+    let res1 = dse::run(&p, &tech, &accel, 1).unwrap();
+    let res8 = dse::run_on(&Engine::new(8), &p, &tech, &accel).unwrap();
     assert_eq!(res1.points.len(), res8.points.len());
     assert_eq!(res1.pareto, res8.pareto);
     assert_eq!(res1.selected, res8.selected);
@@ -75,8 +88,9 @@ fn cost_cache_is_shared_by_dse_and_energy_pmu_layers() {
         MemSpec::new(32 * KIB, 2),
     );
     let orgs = vec![org.clone()];
+    let tl = timeline(&p);
     let touched_before = cache::global().hits() + cache::global().misses();
-    let points = dse::evaluate_all_on(&Engine::new(1), &orgs, &p, &tech);
+    let points = dse::evaluate_all_on(&Engine::new(1), &orgs, &p, &tech, &tl);
     let touched_after = cache::global().hits() + cache::global().misses();
     assert!(
         touched_after > touched_before,

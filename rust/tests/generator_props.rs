@@ -1,0 +1,197 @@
+//! Property-based tests over `model::generator` random networks (ISSUE 3),
+//! driven by the mini proptest framework (`util::prop` — the image vendors
+//! no `proptest` crate, see DESIGN.md Substitutions): builder geometry
+//! invariants, profile well-formedness, batch-1 bit-identity, and the
+//! timeline-simulator batch monotonicity.
+
+use descnet::config::{Accelerator, Technology};
+use descnet::dataflow::{profile_network, profile_network_batched};
+use descnet::model::{random_network, OpKind};
+use descnet::prop_assert;
+use descnet::sim::Timeline;
+use descnet::util::prop::check;
+
+fn draw_seed(rng: &mut descnet::util::prng::Prng) -> u64 {
+    rng.below(4096)
+}
+
+#[test]
+fn prop_builder_geometry_invariants() {
+    // Extent chains consistent (convolutions only ever preserve or shrink
+    // the grid, every extent stays positive) and routing pairs well-formed
+    // (each routing tail matches the geometry of the votes op that feeds
+    // it, iterations count 1..=total in alternating halves).
+    check("generator-geometry", 64, |rng| {
+        let net = random_network(draw_seed(rng));
+        prop_assert!(net.ops.len() >= 4, "{}: {} ops", net.name, net.ops.len());
+
+        let mut last_votes: Option<(usize, usize, usize)> = None;
+        let mut expected_iter = 1usize;
+        let mut expect_sum_half = true;
+        for op in &net.ops {
+            match &op.kind {
+                OpKind::Conv2d {
+                    hin,
+                    win,
+                    cin,
+                    hout,
+                    wout,
+                    cout,
+                    kh,
+                    kw,
+                    stride,
+                    ..
+                } => {
+                    prop_assert!(
+                        *hin >= 1 && *win >= 1 && *cin >= 1,
+                        "{}: empty input",
+                        op.name
+                    );
+                    prop_assert!(
+                        *hout >= 1 && *wout >= 1 && *cout >= 1,
+                        "{}: empty output",
+                        op.name
+                    );
+                    prop_assert!(*kh >= 1 && *kw >= 1 && *stride >= 1, "{}", op.name);
+                    // Same/valid padding never grows the grid.
+                    prop_assert!(
+                        *hout <= *hin && *wout <= *win,
+                        "{}: grid grew {hin}x{win} -> {hout}x{wout}",
+                        op.name
+                    );
+                    // Stride-s output is the ceil-division chain (same) or
+                    // tighter (valid).
+                    prop_assert!(
+                        *hout <= hin.div_ceil(*stride) && *wout <= win.div_ceil(*stride),
+                        "{}: extent chain broken",
+                        op.name
+                    );
+                }
+                OpKind::Votes { ni, no, di, dout, .. } => {
+                    prop_assert!(
+                        *ni >= 1 && *no >= 1 && *di >= 1 && *dout >= 1,
+                        "{}",
+                        op.name
+                    );
+                    last_votes = Some((*ni, *no, *dout));
+                    expected_iter = 1;
+                    expect_sum_half = true;
+                }
+                OpKind::Routing {
+                    ni,
+                    no,
+                    dout,
+                    iter,
+                    total_iters,
+                    half,
+                    ..
+                } => {
+                    let (vni, vno, vdout) = match last_votes {
+                        Some(v) => v,
+                        None => return Err(format!("{}: routing before votes", op.name)),
+                    };
+                    prop_assert!(
+                        (*ni, *no, *dout) == (vni, vno, vdout),
+                        "{}: routing pair ({ni},{no},{dout}) != votes ({vni},{vno},{vdout})",
+                        op.name
+                    );
+                    prop_assert!(
+                        *iter == expected_iter && *iter <= *total_iters,
+                        "{}: iter {iter}/{total_iters}, expected {expected_iter}",
+                        op.name
+                    );
+                    let is_sum = matches!(half, descnet::model::RoutingHalf::SumSquash);
+                    prop_assert!(
+                        is_sum == expect_sum_half,
+                        "{}: halves out of order",
+                        op.name
+                    );
+                    if !expect_sum_half {
+                        expected_iter += 1;
+                    }
+                    expect_sum_half = !expect_sum_half;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_op_profiles_are_wellformed() {
+    // Every OpProfile field is finite/consistent: cycles positive, working
+    // sets bounded by the op-wise total, access counts consistent with the
+    // compute floor, off-chip traffic only where the op's geometry admits
+    // it.  (Field types are unsigned, so "non-negative" is enforced by
+    // construction — what can break is zero/overflowed/inconsistent.)
+    let accel = Accelerator::default();
+    check("generator-profiles", 48, |rng| {
+        let net = random_network(draw_seed(rng));
+        let p = profile_network(&net, &accel);
+        prop_assert!(p.total_cycles() > 0);
+        prop_assert!(p.fps().is_finite() && p.fps() > 0.0);
+        for (op, prof) in net.ops.iter().zip(&p.ops) {
+            prop_assert!(prof.cycles > 0, "{}", prof.name);
+            prop_assert!(
+                prof.usage_total() == prof.usage_d + prof.usage_w + prof.usage_a,
+                "{}",
+                prof.name
+            );
+            prop_assert!(prof.macs == op.macs(), "{}: macs diverge", prof.name);
+            // MAC-carrying ops move accumulator traffic (16-MAC row floor).
+            if !prof.name.contains("Update+Softmax") {
+                prop_assert!(
+                    prof.rd_a + prof.wr_a >= prof.macs / 16,
+                    "{}: accumulator traffic below MAC floor",
+                    prof.name
+                );
+            }
+            // Off-chip reads are staged through some on-chip traffic: every
+            // byte fetched lands in (or streams through) an SPM.
+            prop_assert!(
+                prof.off_rd <= prof.wr_d + prof.wr_w + prof.rd_d + prof.rd_a + op.param_bytes(),
+                "{}: off_rd inconsistent",
+                prof.name
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_one_is_bit_identical_to_unbatched() {
+    let accel = Accelerator::default();
+    check("generator-batch1-identity", 48, |rng| {
+        let net = random_network(draw_seed(rng));
+        let unbatched = profile_network(&net, &accel);
+        let batched = profile_network_batched(&net, &accel, 1);
+        prop_assert!(unbatched == batched, "{}: batch-1 diverged", net.name);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_latency_monotone_in_batch() {
+    // The timeline invariant the ISSUE pins: a batch can never finish
+    // faster than a single inference, for any generated network.
+    let accel = Accelerator::default();
+    let tech = Technology::default();
+    check("generator-sim-batch-monotone", 32, |rng| {
+        let net = random_network(draw_seed(rng));
+        let b = 2 + rng.below(7); // batch in 2..=8
+        let t1 = Timeline::build(&profile_network_batched(&net, &accel, 1), &tech, &accel);
+        let tb = Timeline::build(
+            &profile_network_batched(&net, &accel, b as usize),
+            &tech,
+            &accel,
+        );
+        prop_assert!(
+            tb.batch_latency_s() >= t1.batch_latency_s(),
+            "{}: latency(batch={b}) {} < latency(batch=1) {}",
+            net.name,
+            tb.batch_latency_s(),
+            t1.batch_latency_s()
+        );
+        Ok(())
+    });
+}

@@ -28,7 +28,7 @@ fn table_i_selected_configurations() {
     let accel = Accelerator::default();
     let tech = Technology::default();
     let p = profile_network(&capsnet_mnist(), &accel);
-    let res = dse::run(&p, &tech, 8).unwrap();
+    let res = dse::run(&p, &tech, &accel, 8).unwrap();
     let sel = selected(&res);
 
     let sep = &sel["SEP"].org;
@@ -56,7 +56,7 @@ fn table_ii_selected_configurations() {
     let accel = Accelerator::default();
     let tech = Technology::default();
     let p = profile_network(&deepcaps_cifar10(), &accel);
-    let res = dse::run(&p, &tech, 8).unwrap();
+    let res = dse::run(&p, &tech, &accel, 8).unwrap();
     let sel = selected(&res);
 
     let sep = &sel["SEP"].org;
@@ -74,7 +74,7 @@ fn fig18_frontier_membership() {
     let accel = Accelerator::default();
     let tech = Technology::default();
     let p = profile_network(&capsnet_mnist(), &accel);
-    let res = dse::run(&p, &tech, 8).unwrap();
+    let res = dse::run(&p, &tech, &accel, 8).unwrap();
     let frontier_opts: std::collections::BTreeSet<String> =
         res.pareto.iter().map(|&i| res.points[i].option()).collect();
     assert!(!frontier_opts.contains("SMP"));
@@ -94,7 +94,7 @@ fn hy_pg_lowest_energy_sep_lowest_area() {
         let accel = Accelerator::default();
         let tech = Technology::default();
         let p = profile_network(&net, &accel);
-        let res = dse::run(&p, &tech, 8).unwrap();
+        let res = dse::run(&p, &tech, &accel, 8).unwrap();
         let sel = selected(&res);
         for (name, point) in &sel {
             assert!(
@@ -121,7 +121,7 @@ fn headline_energy_and_area_savings() {
     let p = profile_network(&capsnet_mnist(), &cfg.accel);
     let a = energy::version_a(&p, &cfg.tech).unwrap();
     let b = energy::version_b(&p, &cfg.tech, dse::smp_size(&p)).unwrap();
-    let res = dse::run(&p, &cfg.tech, 8).unwrap();
+    let res = dse::run(&p, &cfg.tech, &cfg.accel, 8).unwrap();
     let sel = selected(&res);
 
     let b_saving = 1.0 - b.total_j() / a.total_j();
@@ -174,7 +174,7 @@ fn deepcaps_does_not_fit_version_a_but_fits_descnet() {
         weights as usize > 8 * MIB,
         "DeepCaps params {weights} should exceed the 8 MiB of [1]"
     );
-    let res = dse::run(&p, &tech, 8).unwrap();
+    let res = dse::run(&p, &tech, &accel, 8).unwrap();
     let sel = selected(&res);
     assert!(sel["SEP"].org.total_size() < 9 * MIB);
     assert!(prefetch::analyze(&p, &tech, &accel).no_performance_loss());
@@ -188,10 +188,11 @@ fn fig22_single_port_shared_improves_efficiency() {
     let accel = Accelerator::default();
     let tech = Technology::default();
     let p = profile_network(&deepcaps_cifar10(), &accel);
+    let tl = descnet::sim::Timeline::build(&p, &tech, &accel);
 
     let best = |ports: usize| -> (f64, f64) {
         let orgs = dse::enumerate_hy_ports(&p, ports).unwrap();
-        let pts = dse::evaluate_all(&orgs, &p, &tech, 8);
+        let pts = dse::evaluate_all(&orgs, &p, &tech, &tl, 8);
         let front = dse::pareto_indices(&pts);
         let i = front
             .iter()

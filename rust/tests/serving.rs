@@ -28,6 +28,7 @@ fn serve_small_batch_run() {
         batch_max: 4,
         stage_pipeline: false,
         seed: 11,
+        slo_s: None,
     };
     let mut stats = Server::run_synthetic(&opts).expect("serve");
     assert_eq!(stats.requests, 10);
@@ -50,6 +51,7 @@ fn serve_stage_pipeline_matches_request_count() {
         batch_max: 4,
         stage_pipeline: true,
         seed: 12,
+        slo_s: None,
     };
     let stats = Server::run_synthetic(&opts).expect("serve staged");
     assert_eq!(stats.requests, 6);
@@ -72,6 +74,7 @@ fn serve_is_deterministic_in_classes_for_fixed_seed() {
             batch_max: 4,
             stage_pipeline: false,
             seed,
+            slo_s: None,
         };
         Server::run_synthetic(&opts).unwrap().class_histogram
     };

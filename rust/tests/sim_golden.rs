@@ -1,0 +1,222 @@
+//! Golden regression tests for the timeline performance simulator
+//! (ISSUE 3): end-to-end latency and stall breakdown pinned for the two
+//! paper networks on the paper's DESCNet configurations, the
+//! "no performance loss" acceptance (gated == ungated latency), and the
+//! structural monotonicities the model must obey (more SPM banks never
+//! increase dma-stall cycles; batching never shrinks batch latency).
+
+use descnet::config::{Accelerator, Technology};
+use descnet::dataflow::{profile_network, profile_network_batched, NetworkProfile};
+use descnet::dse;
+use descnet::memory::{MemSpec, Organization};
+use descnet::model::{capsnet_mnist, deepcaps_cifar10};
+use descnet::sim::{simulate, Bound, Timeline};
+use descnet::util::exec::Engine;
+use descnet::util::units::KIB;
+
+fn capsnet() -> NetworkProfile {
+    profile_network(&capsnet_mnist(), &Accelerator::default())
+}
+
+fn deepcaps() -> NetworkProfile {
+    profile_network(&deepcaps_cifar10(), &Accelerator::default())
+}
+
+/// Paper Table I SEP (ungated DESCNet selection for CapsNet).
+fn table1_sep() -> Organization {
+    Organization::sep(
+        MemSpec::new(25 * KIB, 1),
+        MemSpec::new(64 * KIB, 1),
+        MemSpec::new(32 * KIB, 1),
+    )
+}
+
+/// Paper Table I HY-PG row (the gated headline selection).
+fn table1_hy_pg() -> Organization {
+    Organization::hy(
+        MemSpec::new(32 * KIB, 2),
+        MemSpec::new(25 * KIB, 2),
+        MemSpec::new(25 * KIB, 4),
+        MemSpec::new(32 * KIB, 2),
+        3,
+    )
+}
+
+// ------------------------------------------------------------ golden pins
+
+#[test]
+fn golden_capsnet_latency_and_breakdown() {
+    let tech = Technology::default();
+    let accel = Accelerator::default();
+    let p = capsnet();
+    let lp = simulate(&p, &table1_hy_pg(), &tech, &accel).unwrap();
+    // End-to-end: the timeline reproduces the analytical cycle count
+    // exactly (zero stalls at the paper configuration)...
+    assert_eq!(lp.timeline.total_cycles(), p.total_cycles());
+    // ...which is the paper's ~116 fps / ~8.6 ms inference.
+    let ms = lp.batch_latency_s() * 1e3;
+    assert!((ms - 1e3 / 116.0).abs() / (1e3 / 116.0) < 0.05, "{ms} ms");
+    // Stall breakdown: all busy, nothing dma- or wakeup-bound.
+    let (compute, dma_stall, wakeup_stall) = lp.breakdown_cycles();
+    assert_eq!(compute, p.total_cycles());
+    assert_eq!(dma_stall, 0);
+    assert_eq!(wakeup_stall, 0);
+    // The DMA engine is exercised (nonzero trains) yet fully hidden.
+    assert!(lp.timeline.ops.iter().any(|o| o.dma_cycles > 0));
+    assert!(lp.timeline.ops.iter().all(|o| o.bound() == Bound::Compute));
+}
+
+#[test]
+fn golden_deepcaps_latency_and_breakdown() {
+    let tech = Technology::default();
+    let accel = Accelerator::default();
+    let p = deepcaps();
+    // Table II-class SEP sizing derived from the profile itself.
+    let (d, w, a) = dse::sep_sizes(&p);
+    let sep = Organization::sep(MemSpec::new(d, 1), MemSpec::new(w, 1), MemSpec::new(a, 1));
+    let lp = simulate(&p, &sep, &tech, &accel).unwrap();
+    assert_eq!(lp.timeline.total_cycles(), p.total_cycles());
+    let ms = lp.batch_latency_s() * 1e3;
+    assert!((ms - 1e3 / 9.7).abs() / (1e3 / 9.7) < 0.12, "{ms} ms");
+    let (_, dma_stall, wakeup_stall) = lp.breakdown_cycles();
+    assert_eq!(dma_stall, 0);
+    assert_eq!(wakeup_stall, 0);
+}
+
+#[test]
+fn golden_no_performance_loss_gated_vs_ungated() {
+    // The acceptance criterion: the DESCNet-style gated design shows its
+    // energy reduction at *equal* latency to the ungated baseline.
+    let tech = Technology::default();
+    let accel = Accelerator::default();
+    let p = capsnet();
+    let ungated = simulate(&p, &table1_sep(), &tech, &accel).unwrap();
+    let gated = simulate(&p, &table1_hy_pg(), &tech, &accel).unwrap();
+    assert_eq!(
+        gated.batch_latency_s().to_bits(),
+        ungated.batch_latency_s().to_bits(),
+        "gated {} s vs ungated {} s",
+        gated.batch_latency_s(),
+        ungated.batch_latency_s()
+    );
+    // And the gated design really does save energy at that equal latency.
+    let tl = Timeline::build(&p, &tech, &accel);
+    let points = dse::evaluate_all_on(
+        &Engine::new(2),
+        &[table1_sep(), table1_hy_pg()],
+        &p,
+        &tech,
+        &tl,
+    );
+    assert!(points[1].energy_j < points[0].energy_j);
+    assert_eq!(points[1].latency_s.to_bits(), points[0].latency_s.to_bits());
+}
+
+#[test]
+fn golden_stall_breakdown_under_starved_bandwidth() {
+    // Perturbed-configuration golden: at 1/128 of the paper bandwidth the
+    // weight-heavy fetch stages become dma-bound while the routing body
+    // (which never touches DRAM mid-phase) stays compute-bound.
+    let mut tech = Technology::default();
+    tech.dram_bandwidth_bps = 100e6;
+    let accel = Accelerator::default();
+    let p = capsnet();
+    let tl = Timeline::build(&p, &tech, &accel);
+    assert!(tl.total_cycles() > p.total_cycles());
+    for name in ["Conv1", "Prim", "Class"] {
+        assert_eq!(tl.op(name).unwrap().bound(), Bound::Dma, "{name}");
+    }
+    for name in ["Class-Sum+Squash2", "Class-Update+Softmax2"] {
+        assert_eq!(tl.op(name).unwrap().bound(), Bound::Compute, "{name}");
+    }
+    // The stall total equals the sum of the per-op exposures, and the
+    // per-op identity duration = compute + stall holds everywhere.
+    let total_stall: u64 = tl.ops.iter().map(|o| o.dma_stall_cycles).sum();
+    assert_eq!(tl.total_cycles(), p.total_cycles() + total_stall);
+}
+
+// -------------------------------------------------------- monotonicities
+
+#[test]
+fn more_spm_banks_never_increase_dma_stall() {
+    // Effective fill bandwidth is min(DRAM, banks x width x clock):
+    // adding banks can only relieve the on-chip bottleneck.
+    let tech = Technology::default();
+    let p = capsnet();
+    let mut prev = u64::MAX;
+    for banks in [1usize, 2, 4, 8, 16, 32, 64] {
+        let mut accel = Accelerator::default();
+        accel.spm_banks = banks;
+        let tl = Timeline::build(&p, &tech, &accel);
+        let stall = tl.dma_stall_cycles();
+        assert!(stall <= prev, "banks={banks}: stall {stall} > prev {prev}");
+        prev = stall;
+    }
+    // At very few banks the fill side must actually bottleneck...
+    let mut starved = Accelerator::default();
+    starved.spm_banks = 1;
+    assert!(Timeline::build(&p, &tech, &starved).dma_stall_cycles() > 0);
+    // ...and at the paper's 16 banks it never does.
+    assert_eq!(Timeline::build(&p, &tech, &Accelerator::default()).dma_stall_cycles(), 0);
+}
+
+#[test]
+fn batch_latency_is_monotone_and_amortizes_per_inference() {
+    let tech = Technology::default();
+    let accel = Accelerator::default();
+    for net in [capsnet_mnist(), deepcaps_cifar10()] {
+        let mut prev_batch_s = 0.0;
+        let mut prev_inf_s = f64::INFINITY;
+        for b in [1usize, 2, 4, 8] {
+            let p = profile_network_batched(&net, &accel, b);
+            let tl = Timeline::build(&p, &tech, &accel);
+            assert!(
+                tl.batch_latency_s() >= prev_batch_s,
+                "{} batch {b}",
+                net.name
+            );
+            assert!(
+                tl.inference_latency_s() <= prev_inf_s,
+                "{} batch {b}",
+                net.name
+            );
+            prev_batch_s = tl.batch_latency_s();
+            prev_inf_s = tl.inference_latency_s();
+        }
+    }
+}
+
+// ------------------------------------------- 3-D DSE acceptance criterion
+
+#[test]
+fn budgeted_dse_selects_gated_design_at_ungated_latency() {
+    // `descnet dse --net capsnet --latency-budget <ms>` end to end at the
+    // library layer: a budget just above the simulated inference admits
+    // the full enumeration, the per-option selection still contains the
+    // gated options, and every selected option reports the identical
+    // latency (no performance loss) with HY-PG at the lowest energy.
+    let tech = Technology::default();
+    let accel = Accelerator::default();
+    let p = capsnet();
+    let tl = Timeline::build(&p, &tech, &accel);
+    let budget = tl.inference_latency_s() * 1.05;
+    let res = dse::run_budgeted(&Engine::new(4), &p, &tech, &accel, Some(budget)).unwrap();
+    assert_eq!(res.excluded_by_budget, 0);
+    let sel: std::collections::BTreeMap<_, _> = res.selected.iter().cloned().collect();
+    let hy_pg = &res.points[sel["HY-PG"]];
+    let sep = &res.points[sel["SEP"]];
+    assert!(hy_pg.energy_j < sep.energy_j);
+    for (name, &i) in &sel {
+        let pt = &res.points[i];
+        assert!(pt.latency_s <= budget, "{name} over budget");
+        assert_eq!(
+            pt.latency_s.to_bits(),
+            hy_pg.latency_s.to_bits(),
+            "{name} latency differs from HY-PG"
+        );
+    }
+    // A budget below the simulated latency excludes everything.
+    let err =
+        dse::run_budgeted(&Engine::new(4), &p, &tech, &accel, Some(budget / 1e6)).unwrap_err();
+    assert!(format!("{err:#}").contains("excludes all"));
+}

@@ -12,6 +12,7 @@ use descnet::memory::{cover_op, org_fits, Component, MemSpec, Organization};
 use descnet::model::{capsnet_mnist, deepcaps_cifar10};
 use descnet::pmu;
 use descnet::prop_assert;
+use descnet::sim;
 use descnet::util::prng::Prng;
 use descnet::util::prop::check;
 
@@ -166,6 +167,7 @@ fn prop_dse_selection_is_lowest_energy_per_option() {
     let profile = profile_network(&capsnet_mnist(), &accel);
     let tech = Technology::default();
     let orgs = dse::enumerate(&profile).unwrap();
+    let tl = sim::Timeline::build(&profile, &tech, &accel);
     check("dse-selection", 3, |rng| {
         // Random subsample of the enumeration, selection must be minimal.
         let mut subset = Vec::new();
@@ -177,7 +179,7 @@ fn prop_dse_selection_is_lowest_energy_per_option() {
         if subset.is_empty() {
             return Ok(());
         }
-        let points = dse::evaluate_all(&subset, &profile, &tech, 4);
+        let points = dse::evaluate_all(&subset, &profile, &tech, &tl, 4);
         for (option, idx) in dse::select_per_option(&points) {
             for p in &points {
                 if p.option() == option {
@@ -197,8 +199,9 @@ fn prop_pareto_frontier_sound_and_complete() {
     let accel = Accelerator::default();
     let profile = profile_network(&capsnet_mnist(), &accel);
     let tech = Technology::default();
+    let tl = sim::Timeline::build(&profile, &tech, &accel);
     let orgs: Vec<_> = dse::enumerate(&profile).unwrap().into_iter().take(600).collect();
-    let points = dse::evaluate_all(&orgs, &profile, &tech, 4);
+    let points = dse::evaluate_all(&orgs, &profile, &tech, &tl, 4);
     let front: std::collections::BTreeSet<usize> =
         dse::pareto_indices(&points).into_iter().collect();
     // Soundness: no frontier member dominated. Completeness: every
