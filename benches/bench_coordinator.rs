@@ -10,7 +10,7 @@ use descnet::util::prng::Prng;
 
 fn main() {
     // Pure policy throughput.
-    let policy = BatchPolicy::new(vec![1, 4], 2e-3);
+    let policy = BatchPolicy::new(vec![1, 4], 2e-3).expect("valid sizes");
     let r = time("batch planning x10k queues", 50, || {
         let mut acc = 0usize;
         for pending in 0..10_000usize {

@@ -3,8 +3,9 @@
 //! section Perf).  Reports configs/s, thread scaling vs the single-thread
 //! baseline, the CACTI cost-cache hit rate, the timeline-simulator event
 //! throughput and the full 3-D (area/energy/latency) sweep wall time, then
-//! writes the machine-readable baseline to `BENCH_dse.json` (schema v3) so
-//! future PRs have a perf trajectory to compare against.
+//! writes the machine-readable baseline to `BENCH_dse.json` (schema v4:
+//! v3 + the fleet discrete-event simulator's events/s) so future PRs have
+//! a perf trajectory to compare against.
 
 use descnet::cacti::cache;
 use descnet::config::{Accelerator, Technology};
@@ -12,6 +13,7 @@ use descnet::dataflow::profile_network;
 use descnet::dse;
 use descnet::dse::heuristic::{anneal, AnnealOptions};
 use descnet::dse::multi::{self, WorkloadSet};
+use descnet::fleet::{self, FleetConfig, RoutingPolicy, ShardPlan};
 use descnet::model::{capsnet_mnist, deepcaps_cifar10, random_networks};
 use descnet::sim::Timeline;
 use descnet::util::bench::{throughput, time};
@@ -198,8 +200,42 @@ fn main() {
         ),
     ]);
 
+    // Fleet discrete-event simulator throughput (schema v4): a synthetic
+    // 4-shard fleet (one slow-binned shard) under JSQ, events/s over a
+    // 20k-request trace — the `fleet::simulate` hot path without the
+    // design-time DSE in front of it.
+    let fleet_plans: Vec<ShardPlan> = (0..4)
+        .map(|i| {
+            let speed = if i == 3 { 0.5 } else { 1.0 };
+            ShardPlan::synthetic("bench", vec![1, 2, 4], 10e-3, 5e-3, speed, 2e-3)
+                .expect("synthetic plan")
+        })
+        .collect();
+    let fleet_cfg = FleetConfig {
+        rps: 400.0,
+        requests: 20_000,
+        seed: 7,
+        policy: RoutingPolicy::Jsq,
+        slo_s: Some(50e-3),
+    };
+    let mut fleet_events = 0u64;
+    let r = time("fleet sim (4 shards, 20k requests)", 3, || {
+        let stats = fleet::simulate(&fleet_plans, &fleet_cfg).expect("fleet sim");
+        fleet_events = stats.events;
+        std::hint::black_box(stats);
+    });
+    let fleet_events_per_s = fleet_events as f64 / r.mean_s.max(1e-12);
+    println!("    -> {} (fleet events/s)", throughput(&r, fleet_events as usize));
+    let fleet_json = Json::from_pairs(vec![
+        ("shards", fleet_plans.len().into()),
+        ("requests", fleet_cfg.requests.into()),
+        ("events", (fleet_events as usize).into()),
+        ("mean_s", r.mean_s.into()),
+        ("events_per_s", fleet_events_per_s.into()),
+    ]);
+
     let out = Json::from_pairs(vec![
-        ("schema", "descnet-bench-dse-v3".into()),
+        ("schema", "descnet-bench-dse-v4".into()),
         ("status", "recorded".into()),
         (
             "cacti_cache",
@@ -211,6 +247,7 @@ fn main() {
         ),
         ("networks", Json::Arr(nets_json)),
         ("multi_network", multi_json),
+        ("fleet", fleet_json),
     ]);
     let path = std::path::Path::new("BENCH_dse.json");
     out.write_file(path).expect("writing BENCH_dse.json");

@@ -34,13 +34,13 @@ fn main() {
         report::fig12(&ctx).expect("report generator");
     });
     time("E07 fig18+table1 capsnet DSE", 3, || {
-        report::dse_scatter(&ctx, "capsnet", threads).expect("report generator");
+        report::dse_scatter(&ctx, "capsnet", threads, None).expect("report generator");
     });
     time("E08 fig19 capsnet breakdowns", 3, || {
         report::breakdowns(&ctx, "capsnet", threads).expect("report generator");
     });
     time("E09 fig20+table2 deepcaps DSE", 2, || {
-        report::dse_scatter(&ctx, "deepcaps", threads).expect("report generator");
+        report::dse_scatter(&ctx, "deepcaps", threads, None).expect("report generator");
     });
     time("E10 fig21 deepcaps breakdowns", 2, || {
         report::breakdowns(&ctx, "deepcaps", threads).expect("report generator");
@@ -72,6 +72,9 @@ fn main() {
     });
     time("E19 multi-network co-design DSE", 2, || {
         let (set, names) = report::default_serving_mix(&ctx).expect("serving mix");
-        report::multi_dse(&ctx, &set, &names, threads).expect("report generator");
+        report::multi_dse(&ctx, &set, &names, threads, None).expect("report generator");
+    });
+    time("E22 fleet serving (co-design + simulation)", 2, || {
+        report::fleet_default(&ctx, threads).expect("report generator");
     });
 }

@@ -1,0 +1,73 @@
+//! Fleet serving walkthrough: an SLO-constrained co-designed fleet of
+//! accelerator shards serving a CapsNet/DeepCaps mix under open-loop
+//! traffic, compared policy-by-policy and against the homogeneous
+//! union-SMP baseline.
+//!
+//!   cargo run --release --example fleet_serving
+//!
+//! Equivalent CLI: `descnet fleet --shards 4 --rps 300 --policy jsq
+//! --slo-ms 25 --net capsnet` (and `descnet report fleet` for the CSV/
+//! markdown artifacts).
+
+use descnet::config::SystemConfig;
+use descnet::fleet::{design_fleet, simulate, DesignOptions, FleetConfig, RoutingPolicy};
+use descnet::model::capsnet_mnist;
+use descnet::util::exec;
+use descnet::util::units::fmt_energy;
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let slo = 25e-3;
+
+    // 1. Co-design the fleet: 4 CapsNet shards, each SPM organization
+    //    selected under a 25 ms SLO hard constraint; the design carries the
+    //    homogeneous union-SMP baseline for comparison.
+    let opts = DesignOptions {
+        shards: 4,
+        batch_sizes: vec![1, 2, 4],
+        slo_s: Some(slo),
+        flush_deadline_s: 2e-3,
+        homogeneous: false,
+        threads: exec::default_threads(),
+    };
+    let design = design_fleet(&cfg, &[capsnet_mnist()], &opts).expect("fleet co-design");
+    for (i, p) in design.plans.iter().enumerate() {
+        println!(
+            "shard {i}: {} on {} (batches {:?}, {} per inference at b{})",
+            p.workload,
+            p.org.label(),
+            p.batcher.sizes,
+            fmt_energy(p.best_energy_per_inf()),
+            p.batcher.max_batch(),
+        );
+    }
+    println!("baseline organization: {}\n", design.baseline_label);
+
+    // 2. Same seeded arrival trace under each routing policy.
+    for policy in [
+        RoutingPolicy::RoundRobin,
+        RoutingPolicy::Jsq,
+        RoutingPolicy::EnergyAware,
+    ] {
+        let fcfg = FleetConfig {
+            rps: 300.0,
+            requests: 1_000,
+            seed: 7,
+            policy,
+            slo_s: Some(slo),
+        };
+        let mut stats = simulate(&design.plans, &fcfg).expect("fleet simulation");
+        let base = simulate(&design.baseline, &fcfg).expect("baseline simulation");
+        println!(
+            "{:6}  p50 {:6.2} ms  p99 {:6.2} ms  SLO {:5.1}%  {} /request \
+             (baseline {}, saves {:.1}%)",
+            policy.label(),
+            stats.latency.p50() * 1e3,
+            stats.latency.p99() * 1e3,
+            100.0 * stats.slo_attainment(),
+            fmt_energy(stats.energy_per_request_j()),
+            fmt_energy(base.energy_per_request_j()),
+            100.0 * (1.0 - stats.energy_per_request_j() / base.energy_per_request_j()),
+        );
+    }
+}

@@ -5,6 +5,8 @@
 //! Defaults implement the calibration in DESIGN.md sections 6–7 (32nm CMOS,
 //! CapsAcc 16x16 @ 200 MHz, CACTI-P-anchored SRAM constants).
 
+use anyhow::Context;
+
 use crate::util::json::Json;
 
 /// SRAM / DRAM / accelerator energy+area constants (DESIGN.md section 7).
@@ -351,6 +353,40 @@ pub struct SystemConfig {
 }
 
 impl SystemConfig {
+    /// Rejects degenerate timing parameters before they reach the timeline
+    /// simulator: a zero/NaN clock, DRAM bandwidth or bank fill width turns
+    /// every simulated latency into NaN/inf, which would then flow silently
+    /// into the Pareto frontier and the fleet SLO accounting.  [`Self::load`]
+    /// validates every config file; defaults are valid by construction.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let positive = |name: &str, v: f64| -> anyhow::Result<()> {
+            anyhow::ensure!(
+                v.is_finite() && v > 0.0,
+                "config: {name} must be a positive finite number, got {v}"
+            );
+            Ok(())
+        };
+        positive("accelerator.clock_hz", self.accel.clock_hz)?;
+        positive("technology.dram_bandwidth_bps", self.tech.dram_bandwidth_bps)?;
+        // Zero burst latency is a legitimate idealization; negative/NaN
+        // would silently zero every DMA train in the timeline.
+        anyhow::ensure!(
+            self.tech.dram_latency_s.is_finite() && self.tech.dram_latency_s >= 0.0,
+            "config: technology.dram_latency_s must be a non-negative finite duration, got {}",
+            self.tech.dram_latency_s
+        );
+        anyhow::ensure!(
+            self.accel.spm_bank_fill_bytes > 0,
+            "config: accelerator.spm_bank_fill_bytes must be non-zero \
+             (a zero-width fill port starves the DMA timeline)"
+        );
+        anyhow::ensure!(
+            self.accel.spm_banks > 0,
+            "config: accelerator.spm_banks must be non-zero"
+        );
+        Ok(())
+    }
+
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("technology", self.tech.to_json()),
@@ -365,8 +401,13 @@ impl SystemConfig {
         }
     }
 
-    pub fn load(path: &std::path::Path) -> Result<SystemConfig, Box<dyn std::error::Error>> {
-        Ok(SystemConfig::from_json(&Json::parse_file(path)?))
+    pub fn load(path: &std::path::Path) -> anyhow::Result<SystemConfig> {
+        let cfg = SystemConfig::from_json(
+            &Json::parse_file(path).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?,
+        );
+        cfg.validate()
+            .with_context(|| format!("validating {}", path.display()))?;
+        Ok(cfg)
     }
 
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
@@ -417,6 +458,41 @@ mod tests {
         ported.sram_dyn_port_exp = 2.0;
         assert_ne!(base.cache_key(), ported.cache_key());
         assert_ne!(leaky.cache_key(), ported.cache_key());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_timing_parameters() {
+        assert!(SystemConfig::default().validate().is_ok());
+        let mut cfg = SystemConfig::default();
+        cfg.accel.clock_hz = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.accel.clock_hz = f64::NAN;
+        assert!(cfg.validate().is_err());
+        let mut cfg = SystemConfig::default();
+        cfg.tech.dram_bandwidth_bps = f64::INFINITY;
+        assert!(cfg.validate().is_err());
+        let mut cfg = SystemConfig::default();
+        cfg.tech.dram_latency_s = -1.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = SystemConfig::default();
+        cfg.tech.dram_latency_s = 0.0; // ideal DRAM: allowed
+        assert!(cfg.validate().is_ok());
+        let mut cfg = SystemConfig::default();
+        cfg.accel.spm_bank_fill_bytes = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = SystemConfig::default();
+        cfg.accel.spm_banks = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn load_rejects_invalid_config_files() {
+        let dir = std::env::temp_dir().join("descnet_cfg_invalid_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("zero_clock.json");
+        std::fs::write(&path, r#"{"accelerator": {"clock_hz": 0}}"#).unwrap();
+        let err = SystemConfig::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("clock_hz"), "{err:#}");
     }
 
     #[test]

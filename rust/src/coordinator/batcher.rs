@@ -4,6 +4,8 @@
 //! first, padding only when a request would otherwise wait beyond the
 //! flush deadline.
 
+use anyhow::{ensure, Result};
+
 /// Pure batching policy (threading-free, property-tested).
 #[derive(Debug, Clone)]
 pub struct BatchPolicy {
@@ -14,14 +16,26 @@ pub struct BatchPolicy {
 }
 
 impl BatchPolicy {
-    pub fn new(mut sizes: Vec<usize>, flush_deadline_s: f64) -> BatchPolicy {
-        assert!(!sizes.is_empty(), "need at least one batch size");
+    /// Errors (instead of asserting) on an empty size list or a zero batch
+    /// size — both reachable from user input (an SLO that filters out every
+    /// executable batch, a malformed manifest), so the serving path must be
+    /// able to report them rather than abort.
+    pub fn new(mut sizes: Vec<usize>, flush_deadline_s: f64) -> Result<BatchPolicy> {
+        ensure!(!sizes.is_empty(), "need at least one batch size");
+        ensure!(
+            sizes.iter().all(|&s| s > 0),
+            "batch sizes must be non-zero, got {sizes:?}"
+        );
+        ensure!(
+            flush_deadline_s.is_finite() && flush_deadline_s >= 0.0,
+            "flush deadline must be a non-negative duration, got {flush_deadline_s} s"
+        );
         sizes.sort_unstable();
         sizes.dedup();
-        BatchPolicy {
+        Ok(BatchPolicy {
             sizes,
             flush_deadline_s,
-        }
+        })
     }
 
     pub fn max_batch(&self) -> usize {
@@ -68,7 +82,7 @@ mod tests {
 
     #[test]
     fn greedy_largest_first() {
-        let p = BatchPolicy::new(vec![1, 4], 5e-3);
+        let p = BatchPolicy::new(vec![1, 4], 5e-3).unwrap();
         assert_eq!(p.plan(9, false), vec![4, 4, 1]);
         assert_eq!(p.plan(3, false), vec![1, 1, 1]);
         assert_eq!(p.plan(0, false), Vec::<usize>::new());
@@ -76,7 +90,7 @@ mod tests {
 
     #[test]
     fn remainder_waits_unless_flushed() {
-        let p = BatchPolicy::new(vec![4, 8], 5e-3);
+        let p = BatchPolicy::new(vec![4, 8], 5e-3).unwrap();
         assert_eq!(p.plan(3, false), Vec::<usize>::new()); // waits for peers
         assert_eq!(p.plan(3, true), vec![4]); // padded flush
         assert_eq!(p.plan(11, true), vec![8, 4]);
@@ -84,9 +98,17 @@ mod tests {
 
     #[test]
     fn sizes_are_sorted_and_deduped() {
-        let p = BatchPolicy::new(vec![4, 1, 4], 5e-3);
+        let p = BatchPolicy::new(vec![4, 1, 4], 5e-3).unwrap();
         assert_eq!(p.sizes, vec![1, 4]);
         assert_eq!(p.max_batch(), 4);
+    }
+
+    #[test]
+    fn invalid_policies_error_instead_of_asserting() {
+        assert!(BatchPolicy::new(vec![], 1e-3).is_err());
+        assert!(BatchPolicy::new(vec![0, 4], 1e-3).is_err());
+        assert!(BatchPolicy::new(vec![1], f64::NAN).is_err());
+        assert!(BatchPolicy::new(vec![1], -1.0).is_err());
     }
 
     #[test]
@@ -100,7 +122,7 @@ mod tests {
                 1 => vec![2, 8],
                 _ => vec![1, 2, 4, 8],
             };
-            let p = BatchPolicy::new(sizes.clone(), 1e-3);
+            let p = BatchPolicy::new(sizes.clone(), 1e-3).unwrap();
             let pending = rng.below(100) as usize;
             let plan = p.plan(pending, false);
             let served: usize = plan.iter().sum();
@@ -121,7 +143,7 @@ mod tests {
     #[test]
     fn prop_flush_always_serves_everything() {
         check("batcher-flush-covers", 200, |rng| {
-            let p = BatchPolicy::new(vec![1 + rng.below(4) as usize * 3], 1e-3);
+            let p = BatchPolicy::new(vec![1 + rng.below(4) as usize * 3], 1e-3).unwrap();
             let pending = rng.below(50) as usize;
             let plan = p.plan(pending, true);
             let capacity: usize = plan.iter().sum();

@@ -177,7 +177,8 @@ impl Server {
                 runtime.load_stage("capsnet", stage, b)?;
             }
         }
-        let policy = BatchPolicy::new(batches, 2e-3);
+        let policy = BatchPolicy::new(batches, 2e-3)
+            .context("building the batching policy from the admitted batch sizes")?;
 
         // Generator task: Poisson-ish arrivals on the shared engine's
         // background facility (one named producer thread).

@@ -138,10 +138,11 @@ impl MultiDseResult {
             .iter()
             .map(|&(_, i)| i)
             .min_by(|&a, &b| {
+                // total_cmp, not partial_cmp-or-Equal: a NaN energy must
+                // sort *last* (never be picked), not tie with everything.
                 self.points[a]
                     .energy_j
-                    .partial_cmp(&self.points[b].energy_j)
-                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .total_cmp(&self.points[b].energy_j)
             })
     }
 }

@@ -1,0 +1,1109 @@
+//! Sharded multi-accelerator serving simulator (DESIGN.md section 12).
+//!
+//! DESCNet's headline result is per-instance: one CapsAcc accelerator, one
+//! SPM organization, 79% energy reduction with no performance loss.  The
+//! ROADMAP's north star is a serving *fleet* of such instances.  This
+//! module closes the gap with two layers:
+//!
+//! * **[`simulate`]** — a seeded, deterministic discrete-event simulator of
+//!   N accelerator shards: open-loop Poisson request arrivals
+//!   (`util::prng`), per-shard FIFO queues batched by the same
+//!   `coordinator::batcher::BatchPolicy` the single-instance server uses,
+//!   pluggable routing policies ([`RoutingPolicy`]: round-robin,
+//!   join-shortest-queue, energy-aware), per-batch service times charged
+//!   from the timeline simulator (`sim::simulate`), and fleet-level rollups
+//!   ([`FleetStats`]: p50/p95/p99 latency, SLO attainment,
+//!   energy-per-request, per-shard utilization).  The event loop is serial
+//!   and fully ordered (event time ties broken by insertion sequence), so
+//!   a (seed, plans, config) triple reproduces bit-identically regardless
+//!   of how many threads the surrounding design pass used.
+//!
+//! * **[`design_fleet`]** — an SLO-constrained fleet co-design pass that
+//!   extends `dse::multi`: each shard's SPM organization is selected per
+//!   workload (or one organization co-designed across every shard with
+//!   `homogeneous`), under a fleet-wide energy objective with the SLO as a
+//!   hard constraint on the smallest executable batch's simulated latency.
+//!   The result carries a homogeneous union-SMP baseline fleet evaluated
+//!   under the *same* executable batch sets, so the energy comparison is
+//!   schedule-for-schedule (`rust/tests/fleet.rs` pins codesigned <=
+//!   baseline).
+//!
+//! Surfaced as `descnet fleet --shards N --rps R --policy P --slo-ms MS`,
+//! `descnet report fleet` (fleet.csv + table_fleet.md) and
+//! `examples/fleet_serving.rs`; EXPERIMENTS.md E22 records the numbers.
+
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::config::SystemConfig;
+use crate::coordinator::batcher::BatchPolicy;
+use crate::dataflow::{profile_network_batched, NetworkProfile};
+use crate::dse::multi::WorkloadSet;
+use crate::dse::{self, DsePoint};
+use crate::energy::system_with_org;
+use crate::memory::{MemSpec, Organization};
+use crate::model::Network;
+use crate::sim;
+use crate::util::exec::Engine;
+use crate::util::prng::Prng;
+use crate::util::stats::Percentiles;
+
+// ------------------------------------------------------------------ routing
+
+/// How arrivals are routed to shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Cyclic assignment, blind to queue state.
+    RoundRobin,
+    /// Fewest outstanding requests (queued + in service); ties to the
+    /// lowest shard index.
+    Jsq,
+    /// Among the shards within one request of the shortest queue, the one
+    /// with the lowest per-inference energy at its largest batch — spends
+    /// queue slack on the cheapest silicon without sacrificing latency.
+    EnergyAware,
+}
+
+impl RoutingPolicy {
+    pub fn parse(s: &str) -> Result<RoutingPolicy> {
+        match s {
+            "rr" | "round-robin" => Ok(RoutingPolicy::RoundRobin),
+            "jsq" | "join-shortest-queue" => Ok(RoutingPolicy::Jsq),
+            "energy" | "energy-aware" => Ok(RoutingPolicy::EnergyAware),
+            other => bail!("unknown routing policy '{other}' (expected rr, jsq or energy)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "rr",
+            RoutingPolicy::Jsq => "jsq",
+            RoutingPolicy::EnergyAware => "energy",
+        }
+    }
+}
+
+// -------------------------------------------------------------- shard plans
+
+/// Everything one shard needs to serve: its workload label, organization,
+/// executable batch sizes and the pre-simulated per-batch energy/latency.
+/// Plans come from [`design_fleet`] (DSE-backed) or [`ShardPlan::synthetic`]
+/// (closed-form, for property tests and benches).
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub workload: String,
+    pub org: Organization,
+    pub batcher: BatchPolicy,
+    /// Per-inference system energy [J] by executable batch size.
+    pub energy_per_inf: BTreeMap<usize, f64>,
+    /// Simulated end-to-end *batch* latency [s] by executable batch size.
+    pub batch_latency_s: BTreeMap<usize, f64>,
+    /// Clock-binning speed factor: service time divides by this (1.0 =
+    /// nominal silicon; used to model asymmetric fleets).
+    pub speed: f64,
+}
+
+impl ShardPlan {
+    pub fn new(
+        workload: &str,
+        org: Organization,
+        batcher: BatchPolicy,
+        energy_per_inf: BTreeMap<usize, f64>,
+        batch_latency_s: BTreeMap<usize, f64>,
+        speed: f64,
+    ) -> Result<ShardPlan> {
+        ensure!(
+            speed.is_finite() && speed > 0.0,
+            "shard speed must be positive, got {speed}"
+        );
+        for &b in &batcher.sizes {
+            let e = energy_per_inf
+                .get(&b)
+                .ok_or_else(|| anyhow!("no energy for executable batch {b}"))?;
+            let l = batch_latency_s
+                .get(&b)
+                .ok_or_else(|| anyhow!("no latency for executable batch {b}"))?;
+            ensure!(
+                e.is_finite() && *e >= 0.0 && l.is_finite() && *l > 0.0,
+                "degenerate per-batch cost for batch {b}: {e} J, {l} s"
+            );
+        }
+        Ok(ShardPlan {
+            workload: workload.to_string(),
+            org,
+            batcher,
+            energy_per_inf,
+            batch_latency_s,
+            speed,
+        })
+    }
+
+    /// Synthetic closed-form plan (no DSE): batch latency grows linearly
+    /// with the batch while per-inference energy amortizes — the shape the
+    /// real timeline produces, without its cost.  For tests and benches.
+    pub fn synthetic(
+        workload: &str,
+        batch_sizes: Vec<usize>,
+        base_latency_s: f64,
+        energy_per_inf_j: f64,
+        speed: f64,
+        flush_deadline_s: f64,
+    ) -> Result<ShardPlan> {
+        let batcher = BatchPolicy::new(batch_sizes, flush_deadline_s)?;
+        let mut energy = BTreeMap::new();
+        let mut latency = BTreeMap::new();
+        for &b in &batcher.sizes {
+            latency.insert(b, base_latency_s * (0.5 + 0.5 * b as f64));
+            energy.insert(b, energy_per_inf_j * (0.5 + 0.5 / b as f64));
+        }
+        ShardPlan::new(
+            workload,
+            Organization::smp(MemSpec::new(64 * 1024, 1)),
+            batcher,
+            energy,
+            latency,
+            speed,
+        )
+    }
+
+    /// Service time of one executed batch of size `b` on this shard [s].
+    pub fn service_time_s(&self, b: usize) -> f64 {
+        self.batch_latency_s[&b] / self.speed
+    }
+
+    /// Per-inference energy at the largest executable batch — the routing
+    /// figure of merit for [`RoutingPolicy::EnergyAware`].
+    pub fn best_energy_per_inf(&self) -> f64 {
+        self.energy_per_inf[&self.batcher.max_batch()]
+    }
+}
+
+// ------------------------------------------------------------ fleet config
+
+/// Arrival process + routing knobs of one simulation run.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Open-loop mean arrival rate [requests/s].
+    pub rps: f64,
+    /// Total requests injected.
+    pub requests: usize,
+    pub seed: u64,
+    pub policy: RoutingPolicy,
+    /// End-to-end latency SLO [s] for the attainment rollup (and the hard
+    /// design constraint when passed to [`design_fleet`]).
+    pub slo_s: Option<f64>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            rps: 100.0,
+            requests: 400,
+            seed: 7,
+            policy: RoutingPolicy::Jsq,
+            slo_s: None,
+        }
+    }
+}
+
+impl FleetConfig {
+    fn validate(&self) -> Result<()> {
+        ensure!(
+            self.rps.is_finite() && self.rps > 0.0,
+            "fleet rps must be positive, got {}",
+            self.rps
+        );
+        ensure!(self.requests > 0, "fleet needs at least one request");
+        if let Some(slo) = self.slo_s {
+            ensure!(
+                slo.is_finite() && slo > 0.0,
+                "SLO must be a positive duration, got {slo} s"
+            );
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------------- stats
+
+/// Per-shard rollup of one simulation run.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub workload: String,
+    pub org_label: String,
+    pub served: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub busy_s: f64,
+    pub queue_peak: usize,
+    pub energy_j: f64,
+    pub slo_met: u64,
+    pub latency: Percentiles,
+}
+
+impl ShardStats {
+    /// Fraction of the simulated horizon this shard spent executing.
+    pub fn utilization(&self, horizon_s: f64) -> f64 {
+        if horizon_s > 0.0 {
+            self.busy_s / horizon_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of this shard's requests served within the SLO (1.0 when
+    /// no SLO was configured).
+    pub fn slo_attainment(&self, slo_s: Option<f64>) -> f64 {
+        if slo_s.is_some() && self.served > 0 {
+            self.slo_met as f64 / self.served as f64
+        } else {
+            1.0
+        }
+    }
+
+    /// This shard's energy per served request [J].
+    pub fn energy_per_request_j(&self) -> f64 {
+        self.energy_j / self.served.max(1) as f64
+    }
+}
+
+/// Fleet-level rollup of one simulation run.
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    pub policy: RoutingPolicy,
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    /// Simulated time of the last completion [s].
+    pub sim_time_s: f64,
+    /// Discrete events processed (arrivals + completions + flushes) — the
+    /// bench throughput unit.
+    pub events: u64,
+    pub energy_j: f64,
+    pub slo_s: Option<f64>,
+    pub slo_met: u64,
+    /// End-to-end (enqueue -> completion) request latency.
+    pub latency: Percentiles,
+    pub per_shard: Vec<ShardStats>,
+}
+
+impl FleetStats {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.sim_time_s > 0.0 {
+            self.requests as f64 / self.sim_time_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn energy_per_request_j(&self) -> f64 {
+        self.energy_j / self.requests.max(1) as f64
+    }
+
+    pub fn slo_attainment(&self) -> f64 {
+        if self.slo_s.is_some() && self.requests > 0 {
+            self.slo_met as f64 / self.requests as f64
+        } else {
+            1.0
+        }
+    }
+
+    /// Bit-exact digest of every rollup (floats as hex bit patterns): the
+    /// determinism tests compare this across thread counts, and the golden
+    /// test pins it per (seed, config).
+    pub fn fingerprint(&mut self) -> String {
+        let h = |v: f64| format!("{:016x}", v.to_bits());
+        let mut out = format!(
+            "policy={} requests={} batches={} padded={} events={} sim_time={} energy={} \
+             p50={} p95={} p99={} slo_met={}",
+            self.policy.label(),
+            self.requests,
+            self.batches,
+            self.padded_slots,
+            self.events,
+            h(self.sim_time_s),
+            h(self.energy_j),
+            h(self.latency.p50()),
+            h(self.latency.p95()),
+            h(self.latency.p99()),
+            self.slo_met,
+        );
+        for (i, s) in self.per_shard.iter().enumerate() {
+            out.push_str(&format!(
+                " | s{i}[{}] served={} batches={} padded={} busy={} peak={} energy={} slo_met={}",
+                s.workload,
+                s.served,
+                s.batches,
+                s.padded_slots,
+                h(s.busy_s),
+                s.queue_peak,
+                h(s.energy_j),
+                s.slo_met,
+            ));
+        }
+        out
+    }
+
+    /// Human-readable report (the `descnet fleet` stdout).
+    pub fn summary(&mut self) -> String {
+        use crate::util::units::{fmt_energy, fmt_time};
+        let mut out = String::new();
+        out.push_str(&format!(
+            "fleet: {} shards, policy {}, {} requests in {} simulated ({:.1} req/s)\n",
+            self.per_shard.len(),
+            self.policy.label(),
+            self.requests,
+            fmt_time(self.sim_time_s),
+            self.throughput_rps(),
+        ));
+        out.push_str(&format!(
+            "latency: p50 {}  p95 {}  p99 {}\n",
+            fmt_time(self.latency.p50()),
+            fmt_time(self.latency.p95()),
+            fmt_time(self.latency.p99()),
+        ));
+        if let Some(slo) = self.slo_s {
+            out.push_str(&format!(
+                "SLO {}: {:.1}% attainment ({}/{} within)\n",
+                fmt_time(slo),
+                100.0 * self.slo_attainment(),
+                self.slo_met,
+                self.requests,
+            ));
+        }
+        out.push_str(&format!(
+            "energy: {} per request ({} total, {} batches, {} padded slots)\n",
+            fmt_energy(self.energy_per_request_j()),
+            fmt_energy(self.energy_j),
+            self.batches,
+            self.padded_slots,
+        ));
+        let horizon = self.sim_time_s;
+        for (i, s) in self.per_shard.iter().enumerate() {
+            out.push_str(&format!(
+                "shard {i} [{} | {}]: served {}, {} batches, util {:.1}%, peak queue {}\n",
+                s.workload,
+                s.org_label,
+                s.served,
+                s.batches,
+                100.0 * s.utilization(horizon),
+                s.queue_peak,
+            ));
+        }
+        out
+    }
+}
+
+// ------------------------------------------------------------- event engine
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EvKind {
+    Arrival,
+    ShardDone(usize),
+    Flush(usize),
+}
+
+/// Heap entry; ordered min-first by (time, insertion sequence), so
+/// simultaneous events resolve deterministically in insertion order.
+#[derive(Debug, Clone, Copy)]
+struct Ev {
+    t: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Ev) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Ev) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Ev) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the earliest event.
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct QueuedReq {
+    arrival: f64,
+    /// `arrival + flush_deadline`, precomputed so the flush comparison uses
+    /// the exact float the flush event was scheduled with.
+    deadline_t: f64,
+}
+
+/// Runs the discrete-event fleet simulation.  Serial and deterministic:
+/// the only randomness is the seeded arrival process.
+pub fn simulate(plans: &[ShardPlan], cfg: &FleetConfig) -> Result<FleetStats> {
+    ensure!(!plans.is_empty(), "fleet needs at least one shard");
+    cfg.validate()?;
+    let n = plans.len();
+
+    let mut rng = Prng::new(cfg.seed);
+    let mean_gap = 1.0 / cfg.rps;
+    let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
+    let mut seq = 0u64;
+
+    let mut queues: Vec<VecDeque<QueuedReq>> = vec![VecDeque::new(); n];
+    let mut busy = vec![false; n];
+    // Arrival times of the requests currently executing on each shard.
+    let mut exec: Vec<Vec<f64>> = vec![Vec::new(); n];
+    // One outstanding flush event per shard at most — re-dispatching while
+    // one is pending must not enqueue another (it would inflate the event
+    // count and do redundant work when it fires).
+    let mut flush_pending = vec![false; n];
+    let mut rr_next = 0usize;
+    let mut arrivals_left = cfg.requests;
+
+    let mut stats = FleetStats {
+        policy: cfg.policy,
+        requests: 0,
+        batches: 0,
+        padded_slots: 0,
+        sim_time_s: 0.0,
+        events: 0,
+        energy_j: 0.0,
+        slo_s: cfg.slo_s,
+        slo_met: 0,
+        latency: Percentiles::new(),
+        per_shard: plans
+            .iter()
+            .map(|p| ShardStats {
+                workload: p.workload.clone(),
+                org_label: p.org.label(),
+                served: 0,
+                batches: 0,
+                padded_slots: 0,
+                busy_s: 0.0,
+                queue_peak: 0,
+                energy_j: 0.0,
+                slo_met: 0,
+                latency: Percentiles::new(),
+            })
+            .collect(),
+    };
+
+    heap.push(Ev {
+        t: rng.exp(mean_gap),
+        seq,
+        kind: EvKind::Arrival,
+    });
+    seq += 1;
+
+    while let Some(ev) = heap.pop() {
+        stats.events += 1;
+        match ev.kind {
+            EvKind::Arrival => {
+                arrivals_left -= 1;
+                if arrivals_left > 0 {
+                    heap.push(Ev {
+                        t: ev.t + rng.exp(mean_gap),
+                        seq,
+                        kind: EvKind::Arrival,
+                    });
+                    seq += 1;
+                }
+                let s = route(cfg.policy, plans, &queues, &exec, &mut rr_next);
+                queues[s].push_back(QueuedReq {
+                    arrival: ev.t,
+                    deadline_t: ev.t + plans[s].batcher.flush_deadline_s,
+                });
+                stats.per_shard[s].queue_peak = stats.per_shard[s].queue_peak.max(queues[s].len());
+                dispatch(
+                    s,
+                    ev.t,
+                    plans,
+                    &mut queues,
+                    &mut busy,
+                    &mut exec,
+                    &mut flush_pending,
+                    arrivals_left,
+                    &mut stats,
+                    &mut heap,
+                    &mut seq,
+                );
+            }
+            EvKind::ShardDone(s) => {
+                busy[s] = false;
+                // The horizon is the last *completion*: a stale flush event
+                // (scheduled while waiting, overtaken by a full batch) may
+                // pop later, but it must not stretch the utilization base.
+                stats.sim_time_s = ev.t;
+                for arrival in std::mem::take(&mut exec[s]) {
+                    let lat = ev.t - arrival;
+                    stats.latency.add(lat);
+                    stats.per_shard[s].latency.add(lat);
+                    stats.per_shard[s].served += 1;
+                    stats.requests += 1;
+                    if let Some(slo) = cfg.slo_s {
+                        if lat <= slo {
+                            stats.slo_met += 1;
+                            stats.per_shard[s].slo_met += 1;
+                        }
+                    }
+                }
+                dispatch(
+                    s,
+                    ev.t,
+                    plans,
+                    &mut queues,
+                    &mut busy,
+                    &mut exec,
+                    &mut flush_pending,
+                    arrivals_left,
+                    &mut stats,
+                    &mut heap,
+                    &mut seq,
+                );
+            }
+            EvKind::Flush(s) => {
+                flush_pending[s] = false;
+                dispatch(
+                    s,
+                    ev.t,
+                    plans,
+                    &mut queues,
+                    &mut busy,
+                    &mut exec,
+                    &mut flush_pending,
+                    arrivals_left,
+                    &mut stats,
+                    &mut heap,
+                    &mut seq,
+                );
+            }
+        }
+    }
+    debug_assert_eq!(stats.requests as usize, cfg.requests, "requests lost");
+    Ok(stats)
+}
+
+fn route(
+    policy: RoutingPolicy,
+    plans: &[ShardPlan],
+    queues: &[VecDeque<QueuedReq>],
+    exec: &[Vec<f64>],
+    rr_next: &mut usize,
+) -> usize {
+    let n = plans.len();
+    let outstanding = |s: usize| queues[s].len() + exec[s].len();
+    match policy {
+        RoutingPolicy::RoundRobin => {
+            let s = *rr_next % n;
+            *rr_next += 1;
+            s
+        }
+        RoutingPolicy::Jsq => (0..n)
+            .min_by_key(|&s| (outstanding(s), s))
+            .expect("non-empty fleet"),
+        RoutingPolicy::EnergyAware => {
+            let min_out = (0..n).map(outstanding).min().expect("non-empty fleet");
+            (0..n)
+                .filter(|&s| outstanding(s) <= min_out + 1)
+                .min_by(|&a, &b| {
+                    plans[a]
+                        .best_energy_per_inf()
+                        .total_cmp(&plans[b].best_energy_per_inf())
+                        .then_with(|| outstanding(a).cmp(&outstanding(b)))
+                        .then_with(|| a.cmp(&b))
+                })
+                .expect("non-empty fleet")
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dispatch(
+    s: usize,
+    now: f64,
+    plans: &[ShardPlan],
+    queues: &mut [VecDeque<QueuedReq>],
+    busy: &mut [bool],
+    exec: &mut [Vec<f64>],
+    flush_pending: &mut [bool],
+    arrivals_left: usize,
+    stats: &mut FleetStats,
+    heap: &mut BinaryHeap<Ev>,
+    seq: &mut u64,
+) {
+    if busy[s] || queues[s].is_empty() {
+        return;
+    }
+    let plan = &plans[s];
+    // Force a padded flush once the oldest request has waited out the
+    // deadline, or when no more arrivals can complete a full batch.
+    let force = arrivals_left == 0 || now >= queues[s][0].deadline_t;
+    match plan.batcher.plan(queues[s].len(), force).first() {
+        Some(&b) => {
+            let take = b.min(queues[s].len());
+            exec[s] = queues[s].drain(..take).map(|r| r.arrival).collect();
+            let pad = (b - take) as u64;
+            let service = plan.service_time_s(b);
+            busy[s] = true;
+            heap.push(Ev {
+                t: now + service,
+                seq: *seq,
+                kind: EvKind::ShardDone(s),
+            });
+            *seq += 1;
+            stats.batches += 1;
+            stats.padded_slots += pad;
+            stats.energy_j += b as f64 * plan.energy_per_inf[&b];
+            let sh = &mut stats.per_shard[s];
+            sh.batches += 1;
+            sh.padded_slots += pad;
+            sh.busy_s += service;
+            sh.energy_j += b as f64 * plan.energy_per_inf[&b];
+        }
+        None => {
+            // Sub-batch remainder: wait for peers until the oldest
+            // request's flush deadline (the flush event re-dispatches with
+            // force=true — `deadline_t` is the exact float compared above,
+            // so the flush can never reschedule itself forever).  At most
+            // one flush is in flight per shard.
+            if !flush_pending[s] {
+                heap.push(Ev {
+                    t: queues[s][0].deadline_t.max(now),
+                    seq: *seq,
+                    kind: EvKind::Flush(s),
+                });
+                *seq += 1;
+                flush_pending[s] = true;
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------- fleet co-design
+
+/// Options of the SLO-constrained fleet co-design pass.
+#[derive(Debug, Clone)]
+pub struct DesignOptions {
+    pub shards: usize,
+    /// Candidate executable batch sizes (the SLO prunes them per shard).
+    pub batch_sizes: Vec<usize>,
+    /// Hard constraint: every shard's smallest executable batch must
+    /// simulate within this latency, and organizations that miss it are
+    /// excluded from selection.
+    pub slo_s: Option<f64>,
+    pub flush_deadline_s: f64,
+    /// One organization co-designed across every shard workload instead of
+    /// one per workload.
+    pub homogeneous: bool,
+    pub threads: usize,
+}
+
+impl Default for DesignOptions {
+    fn default() -> DesignOptions {
+        DesignOptions {
+            shards: 2,
+            batch_sizes: vec![1, 2, 4],
+            slo_s: None,
+            flush_deadline_s: 2e-3,
+            homogeneous: false,
+            threads: 1,
+        }
+    }
+}
+
+/// The designed fleet: per-shard plans plus the homogeneous union-SMP
+/// baseline fleet (same shards, same executable batch sets, the Eq.-1
+/// monolithic organization sized to the union of every shard workload) —
+/// the reference the energy comparison in E22 is made against.
+#[derive(Debug, Clone)]
+pub struct FleetDesign {
+    pub plans: Vec<ShardPlan>,
+    pub baseline: Vec<ShardPlan>,
+    /// Label of the baseline organization (for reports).
+    pub baseline_label: String,
+}
+
+/// Selects per-shard SPM organizations for `opts.shards` shards serving the
+/// `nets` workloads (assigned round-robin: shard k serves
+/// `nets[k % nets.len()]`), under a fleet-wide energy objective with the
+/// SLO as a hard constraint.
+pub fn design_fleet(
+    cfg: &SystemConfig,
+    nets: &[Network],
+    opts: &DesignOptions,
+) -> Result<FleetDesign> {
+    ensure!(opts.shards > 0, "fleet needs at least one shard");
+    ensure!(!nets.is_empty(), "fleet needs at least one workload");
+    cfg.validate()?;
+    let batcher_probe = BatchPolicy::new(opts.batch_sizes.clone(), opts.flush_deadline_s)
+        .context("fleet executable batch sizes")?;
+    let batch_sizes = batcher_probe.sizes;
+    let engine = Engine::new(opts.threads);
+
+    // Batched profiles per workload (indexes parallel to `nets`).
+    let per_net_profiles: Vec<Vec<NetworkProfile>> = nets
+        .iter()
+        .map(|net| {
+            batch_sizes
+                .iter()
+                .map(|&b| profile_network_batched(net, &cfg.accel, b))
+                .collect()
+        })
+        .collect();
+
+    // Organization per workload: SLO-feasible minimum-energy point of the
+    // co-design sweep over that workload's batch profiles (or of the whole
+    // fleet's profiles when homogeneous).  The hard constraint is checked
+    // on the smallest executable batch of every workload in the sweep.
+    let select = |profiles: Vec<NetworkProfile>,
+                  slo_checks: &[NetworkProfile],
+                  label: &str|
+     -> Result<Organization> {
+        let check_tls: Vec<sim::Timeline> = slo_checks
+            .iter()
+            .map(|p| sim::Timeline::build(p, &cfg.tech, &cfg.accel))
+            .collect();
+        // The org-independent timeline lower-bounds every organization's
+        // latency (wakeup exposure only adds): an SLO below it is
+        // unmeetable before the sweep even starts, so fail fast.
+        if let Some(slo) = opts.slo_s {
+            let fastest = check_tls
+                .iter()
+                .map(|tl| tl.batch_latency_s())
+                .fold(0.0, f64::max);
+            ensure!(
+                fastest <= slo,
+                "SLO {:.3} ms is unmeetable for {label}: the smallest executable batch \
+                 simulates to at least {:.3} ms",
+                slo * 1e3,
+                fastest * 1e3
+            );
+        }
+        let set = WorkloadSet::new(profiles)?;
+        let result = dse::multi::run_on(&engine, &set, &cfg.tech, &cfg.accel)
+            .with_context(|| format!("co-designing the organization of {label}"))?;
+        let feasible = |p: &DsePoint| match opts.slo_s {
+            None => true,
+            Some(slo) => slo_checks.iter().zip(&check_tls).all(|(b1, tl)| {
+                tl.batch_latency_s() + sim::wakeup_exposure_s(tl, b1, &p.org, &cfg.tech) <= slo
+            }),
+        };
+        let best = result
+            .points
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| feasible(p))
+            .min_by(|(_, a), (_, b)| a.energy_j.total_cmp(&b.energy_j))
+            .map(|(i, _)| i);
+        match (best, opts.slo_s) {
+            (Some(i), _) => Ok(result.points[i].org.clone()),
+            // This branch is only reachable past the fast-path check above,
+            // i.e. the org-independent timeline meets the SLO but every
+            // candidate's wakeup exposure pushes it over.
+            (None, Some(slo)) => bail!(
+                "SLO {:.3} ms excludes all {} candidate organizations for {label}: \
+                 the ungated timeline meets it, but every candidate's wakeup \
+                 exposure pushes the smallest executable batch past the SLO",
+                slo * 1e3,
+                result.points.len(),
+            ),
+            (None, None) => bail!(
+                "the co-design sweep produced no candidate organizations for {label}"
+            ),
+        }
+    };
+
+    // `batch_sizes` is ascending, so profiles[0] is each workload's
+    // smallest executable batch — the SLO check point.
+    let b1_checks: Vec<NetworkProfile> =
+        per_net_profiles.iter().map(|ps| ps[0].clone()).collect();
+    let per_net_orgs: Vec<Organization> = if opts.homogeneous {
+        let all: Vec<NetworkProfile> = per_net_profiles.iter().flatten().cloned().collect();
+        let org = select(all, &b1_checks, "the homogeneous fleet")?;
+        vec![org; nets.len()]
+    } else {
+        nets.iter()
+            .zip(&per_net_profiles)
+            .map(|(net, profiles)| {
+                select(
+                    profiles.clone(),
+                    &profiles[..1],
+                    &format!("workload '{}'", net.name),
+                )
+            })
+            .collect::<Result<_>>()?
+    };
+
+    // Homogeneous union-SMP baseline: Eq. 1 over the merged pseudo-profile
+    // of every workload at every executable batch size.
+    let all_profiles: Vec<NetworkProfile> = per_net_profiles.iter().flatten().cloned().collect();
+    let merged = WorkloadSet::new(all_profiles)?.merged_profile();
+    let smp = Organization::smp(MemSpec::new(dse::smp_size(&merged), 1));
+    let baseline_label = smp.label();
+
+    // Shard plans: shard k serves workload k % nets.len().  The baseline
+    // fleet reuses each shard's admitted batch set so the comparison is
+    // schedule-for-schedule.
+    let mut plans = Vec::with_capacity(opts.shards);
+    let mut baseline = Vec::with_capacity(opts.shards);
+    for k in 0..opts.shards {
+        let w = k % nets.len();
+        let name = &nets[w].name;
+        let plan = shard_plan(cfg, name, &per_net_profiles[w], per_net_orgs[w].clone(), opts, None)?;
+        let admitted = plan.batcher.sizes.clone();
+        let base = shard_plan(
+            cfg,
+            name,
+            &per_net_profiles[w],
+            smp.clone(),
+            opts,
+            Some(&admitted),
+        )?;
+        // Guarantee of E22: the shard never loses to the baseline on *any*
+        // admitted batch size — pointwise dominance means every realizable
+        // schedule spends <= baseline energy, not just the mix the DSE
+        // optimized.  The mix-optimal organization dominates in practice;
+        // should a degenerate workload break that, the shard falls back to
+        // the baseline organization (equality, never a regression).
+        let dominated = plan
+            .batcher
+            .sizes
+            .iter()
+            .all(|b| plan.energy_per_inf[b] <= base.energy_per_inf[b]);
+        plans.push(if dominated { plan } else { base.clone() });
+        baseline.push(base);
+    }
+    Ok(FleetDesign {
+        plans,
+        baseline,
+        baseline_label,
+    })
+}
+
+/// Builds one shard's plan: simulate every candidate batch size on the
+/// chosen organization and record per-inference energy + batch latency.
+/// With `restrict: None` the SLO prunes oversized batches; with
+/// `restrict: Some(sizes)` exactly those sizes are admitted (the baseline
+/// fleet mirrors the codesigned fleet's executable batch set so the energy
+/// comparison is schedule-for-schedule).
+fn shard_plan(
+    cfg: &SystemConfig,
+    workload: &str,
+    profiles: &[NetworkProfile],
+    org: Organization,
+    opts: &DesignOptions,
+    restrict: Option<&[usize]>,
+) -> Result<ShardPlan> {
+    let mut admitted = Vec::new();
+    let mut energy = BTreeMap::new();
+    let mut latency = BTreeMap::new();
+    for p in profiles {
+        let b = p.batch;
+        if let Some(sizes) = restrict {
+            if !sizes.contains(&b) {
+                continue;
+            }
+        }
+        let lp = sim::simulate(p, &org, &cfg.tech, &cfg.accel)
+            .with_context(|| format!("simulating batch {b} of '{workload}'"))?;
+        let batch_lat = lp.batch_latency_s();
+        if restrict.is_none() {
+            if let Some(slo) = opts.slo_s {
+                if batch_lat > slo {
+                    continue; // batch too large for the SLO: never scheduled
+                }
+            }
+        }
+        let sys = system_with_org(p, &cfg.tech, &org, "fleet")?;
+        admitted.push(b);
+        energy.insert(b, sys.total_j());
+        latency.insert(b, batch_lat);
+    }
+    ensure!(
+        !admitted.is_empty(),
+        "SLO {:.3} ms admits no executable batch for '{workload}'",
+        opts.slo_s.unwrap_or(f64::NAN) * 1e3
+    );
+    ShardPlan::new(
+        workload,
+        org,
+        BatchPolicy::new(admitted, opts.flush_deadline_s)?,
+        energy,
+        latency,
+        1.0,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(speed: f64) -> ShardPlan {
+        ShardPlan::synthetic("wl", vec![1, 2, 4], 10e-3, 5e-3, speed, 2e-3).unwrap()
+    }
+
+    fn cfg(policy: RoutingPolicy) -> FleetConfig {
+        FleetConfig {
+            rps: 150.0,
+            requests: 300,
+            seed: 11,
+            policy,
+            slo_s: Some(60e-3),
+        }
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for (s, p) in [
+            ("rr", RoutingPolicy::RoundRobin),
+            ("jsq", RoutingPolicy::Jsq),
+            ("energy", RoutingPolicy::EnergyAware),
+        ] {
+            assert_eq!(RoutingPolicy::parse(s).unwrap(), p);
+            assert_eq!(p.label(), s);
+        }
+        assert!(RoutingPolicy::parse("p2c").is_err());
+    }
+
+    #[test]
+    fn synthetic_plan_amortizes() {
+        let p = plan(1.0);
+        assert!(p.service_time_s(4) > p.service_time_s(1));
+        assert!(p.energy_per_inf[&4] < p.energy_per_inf[&1]);
+        assert!(p.service_time_s(4) / 4.0 < p.service_time_s(1));
+    }
+
+    #[test]
+    fn simulate_serves_every_request_exactly_once() {
+        let plans = vec![plan(1.0), plan(1.0)];
+        let stats = simulate(&plans, &cfg(RoutingPolicy::Jsq)).unwrap();
+        assert_eq!(stats.requests, 300);
+        assert_eq!(
+            stats.per_shard.iter().map(|s| s.served).sum::<u64>(),
+            300
+        );
+        assert!(stats.latency.count() == 300);
+        assert!(stats.sim_time_s > 0.0);
+        assert!(stats.energy_j > 0.0);
+        assert!(stats.batches > 0);
+        // Every executed slot is either a request or padding.
+        let slots: u64 = stats.requests + stats.padded_slots;
+        assert!(slots >= stats.batches); // batches are non-empty
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical_and_seeds_differ() {
+        let plans = vec![plan(1.0), plan(0.7)];
+        let c = cfg(RoutingPolicy::EnergyAware);
+        let a = simulate(&plans, &c).unwrap().fingerprint();
+        let b = simulate(&plans, &c).unwrap().fingerprint();
+        assert_eq!(a, b);
+        let mut c2 = c.clone();
+        c2.seed = 12;
+        assert_ne!(a, simulate(&plans, &c2).unwrap().fingerprint());
+    }
+
+    #[test]
+    fn utilization_and_latency_are_sane() {
+        let plans = vec![plan(1.0), plan(1.0)];
+        let mut stats = simulate(&plans, &cfg(RoutingPolicy::RoundRobin)).unwrap();
+        let horizon = stats.sim_time_s;
+        for s in &stats.per_shard {
+            let u = s.utilization(horizon);
+            assert!((0.0..=1.0 + 1e-9).contains(&u), "{u}");
+        }
+        // Latency at least one service time (batch 1 at nominal speed).
+        assert!(stats.latency.percentile(0.0) >= plans[0].service_time_s(1) - 1e-12);
+        assert!(stats.latency.p50() <= stats.latency.p99());
+    }
+
+    #[test]
+    fn slo_attainment_counts_within_budget() {
+        let plans = vec![plan(1.0), plan(1.0)];
+        let mut c = cfg(RoutingPolicy::Jsq);
+        c.slo_s = Some(1e9); // everything within
+        let stats = simulate(&plans, &c).unwrap();
+        assert_eq!(stats.slo_met, stats.requests);
+        assert_eq!(stats.slo_attainment(), 1.0);
+        c.slo_s = Some(1e-9); // nothing within
+        let stats = simulate(&plans, &c).unwrap();
+        assert_eq!(stats.slo_met, 0);
+    }
+
+    #[test]
+    fn jsq_prefers_short_queues_and_energy_prefers_cheap_shards() {
+        // One shard at quarter speed: JSQ must route most work to the fast
+        // shard; energy-aware with equal queues must prefer the cheaper
+        // shard (here: the one with lower per-inference energy).
+        let plans = vec![plan(0.25), plan(1.0)];
+        let stats = simulate(&plans, &cfg(RoutingPolicy::Jsq)).unwrap();
+        assert!(
+            stats.per_shard[1].served > stats.per_shard[0].served,
+            "fast shard served {} vs slow {}",
+            stats.per_shard[1].served,
+            stats.per_shard[0].served
+        );
+
+        let cheap = ShardPlan::synthetic("wl", vec![1, 2, 4], 10e-3, 1e-3, 1.0, 2e-3).unwrap();
+        let dear = ShardPlan::synthetic("wl", vec![1, 2, 4], 10e-3, 9e-3, 1.0, 2e-3).unwrap();
+        let plans = vec![dear, cheap];
+        let mut c = cfg(RoutingPolicy::EnergyAware);
+        c.rps = 20.0; // light load: queues stay short and symmetric
+        let stats = simulate(&plans, &c).unwrap();
+        assert!(
+            stats.per_shard[1].served > stats.per_shard[0].served,
+            "cheap shard served {} vs dear {}",
+            stats.per_shard[1].served,
+            stats.per_shard[0].served
+        );
+    }
+
+    #[test]
+    fn remainders_flush_at_the_deadline_not_immediately() {
+        // Batch sizes {4}: a lone request must wait ~flush_deadline before
+        // a padded flush, not execute instantly.
+        let p = ShardPlan::synthetic("wl", vec![4], 5e-3, 1e-3, 1.0, 2e-3).unwrap();
+        let c = FleetConfig {
+            rps: 10.0, // sparse arrivals: batches rarely fill
+            requests: 20,
+            seed: 3,
+            policy: RoutingPolicy::RoundRobin,
+            slo_s: None,
+        };
+        let mut stats = simulate(&[p.clone()], &c).unwrap();
+        assert_eq!(stats.requests, 20);
+        assert!(stats.padded_slots > 0, "padding expected on sparse load");
+        // Every latency >= service time; padded-flush latencies also carry
+        // the deadline wait.
+        let min_lat = stats.latency.percentile(0.0);
+        assert!(min_lat >= p.service_time_s(4) - 1e-12, "{min_lat}");
+    }
+
+    #[test]
+    fn invalid_inputs_error() {
+        assert!(simulate(&[], &FleetConfig::default()).is_err());
+        let p = plan(1.0);
+        let c = FleetConfig {
+            rps: 0.0,
+            ..FleetConfig::default()
+        };
+        assert!(simulate(&[p.clone()], &c).is_err());
+        let c = FleetConfig {
+            requests: 0,
+            ..FleetConfig::default()
+        };
+        assert!(simulate(&[p.clone()], &c).is_err());
+        let c = FleetConfig {
+            slo_s: Some(f64::NAN),
+            ..FleetConfig::default()
+        };
+        assert!(simulate(&[p], &c).is_err());
+        assert!(ShardPlan::synthetic("wl", vec![1], 5e-3, 1e-3, 0.0, 1e-3).is_err());
+        assert!(ShardPlan::synthetic("wl", vec![], 5e-3, 1e-3, 1.0, 1e-3).is_err());
+    }
+}

@@ -13,6 +13,7 @@ pub mod coordinator;
 pub mod dataflow;
 pub mod dse;
 pub mod energy;
+pub mod fleet;
 pub mod memory;
 pub mod model;
 pub mod pmu;

@@ -16,6 +16,7 @@ use descnet::config::SystemConfig;
 use descnet::coordinator::server::{ServeOptions, Server};
 use descnet::dataflow::{profile_network_batched, NetworkProfile};
 use descnet::dse::multi::WorkloadSet;
+use descnet::fleet;
 use descnet::model::{self, Network};
 use descnet::report::{self, ReportCtx};
 use descnet::sim;
@@ -30,6 +31,7 @@ fn main() {
     let code = match cmd {
         "analyze" => cmd_analyze(rest),
         "dse" => cmd_dse(rest),
+        "fleet" => cmd_fleet(rest),
         "report" => cmd_report(rest),
         "serve" => cmd_serve(rest),
         "headline" => cmd_headline(rest),
@@ -63,8 +65,15 @@ fn print_help() {
                     every network, per-network energy reported.  The objective\n\
                     space is 3-D (area, energy, simulated latency);\n\
                     --latency-budget MS drops configurations over budget\n\
+           fleet    [--shards N] [--rps R] [--requests N] [--policy rr|jsq|energy]\n\
+                    [--slo-ms MS] [--seed S] [--batch-max B] [--homogeneous]\n\
+                    [--net NAME[,NAME...]] [--threads N] [--out DIR]\n\
+                    sharded fleet serving simulation: SLO-constrained per-shard\n\
+                    SPM co-design (vs the homogeneous union-SMP baseline) +\n\
+                    seeded discrete-event simulation with p50/p95/p99, SLO\n\
+                    attainment, energy/request and shard utilization rollups\n\
            report   [all|fig1|fig7|fig9|fig10|fig11|fig12|fig18|fig19|fig20|fig21|\n\
-                     fig22|fig23|fig25|fig27|fig29|fig30|fig31|multi|table3|headline]\n\
+                     fig22|fig23|fig25|fig27|fig29|fig30|fig31|multi|fleet|table3|headline]\n\
                     [--out DIR] [--threads N] [--config FILE]\n\
            serve    [--artifacts DIR] [--requests N] [--batch-max B] [--stage-pipeline]\n\
                     [--slo-ms MS]  (batch sizes whose simulated batch latency\n\
@@ -125,6 +134,11 @@ impl Flags {
         }
     }
 
+    /// Strict float flag with a default (e.g. `--rps R`).
+    fn f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        Ok(self.f64_opt(key)?.unwrap_or(default))
+    }
+
     /// Strict optional float flag (e.g. `--latency-budget MS`).
     fn f64_opt(&self, key: &str) -> anyhow::Result<Option<f64>> {
         match self.kv.get(key) {
@@ -157,7 +171,7 @@ macro_rules! try_flag {
 fn load_config(flags: &Flags) -> SystemConfig {
     match flags.kv.get("config") {
         Some(path) => SystemConfig::load(std::path::Path::new(path)).unwrap_or_else(|e| {
-            eprintln!("failed to load config {path}: {e}");
+            eprintln!("failed to load config {path}: {e:#}");
             std::process::exit(2);
         }),
         None => SystemConfig::default(),
@@ -468,6 +482,85 @@ fn run_multi_dse(
     Ok(())
 }
 
+/// `descnet fleet`: SLO-constrained fleet co-design + the seeded
+/// discrete-event serving simulation, for both the codesigned fleet and
+/// the homogeneous union-SMP baseline (same arrival trace), with the
+/// artifacts of `report fleet` written alongside.
+fn cmd_fleet(args: &[String]) -> i32 {
+    let flags = parse_flags(args);
+    let cfg = load_config(&flags);
+    let out = PathBuf::from(flags.get("out", "results"));
+    let threads = try_flag!(flags.usize("threads", exec::default_threads()));
+    let shards = try_flag!(flags.usize("shards", 2));
+    let requests = try_flag!(flags.usize("requests", 400));
+    let seed = try_flag!(flags.usize("seed", 7)) as u64;
+    let batch_max = try_flag!(flags.usize("batch-max", 4));
+    let rps = try_flag!(flags.f64("rps", 100.0));
+    let slo_s = try_flag!(flags.f64_opt("slo-ms")).map(|ms| ms * 1e-3);
+    let policy = match fleet::RoutingPolicy::parse(&flags.get("policy", "jsq")) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 2;
+        }
+    };
+    let (nets, _) = match collect_networks(&flags) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("fleet failed: {e:#}");
+            return 2;
+        }
+    };
+
+    let res: anyhow::Result<()> = (|| {
+        // Executable batch sizes: powers of two up to --batch-max (the
+        // SLO further prunes them per shard).
+        let mut batch_sizes = Vec::new();
+        let mut b = 1usize;
+        while b <= batch_max.max(1) {
+            batch_sizes.push(b);
+            match b.checked_mul(2) {
+                Some(next) => b = next,
+                None => break,
+            }
+        }
+        let opts = fleet::DesignOptions {
+            shards,
+            batch_sizes,
+            slo_s,
+            flush_deadline_s: 2e-3,
+            homogeneous: flags.has("homogeneous"),
+            threads,
+        };
+        let design = fleet::design_fleet(&cfg, &nets, &opts)?;
+        let fcfg = fleet::FleetConfig {
+            rps,
+            requests,
+            seed,
+            policy,
+            slo_s,
+        };
+        let ctx = ReportCtx::new(cfg, &out);
+        let (_, _, mut stats, base) = report::fleet_report(&ctx, &design, &fcfg)?;
+        print!("{}", stats.summary());
+        println!(
+            "baseline [{}]: {:.3} mJ/request -> codesigned saves {:.1}%",
+            design.baseline_label,
+            base.energy_per_request_j() * 1e3,
+            100.0 * (1.0 - stats.energy_per_request_j() / base.energy_per_request_j()),
+        );
+        println!("results under {}", out.display());
+        Ok(())
+    })();
+    match res {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("fleet failed: {e:#}");
+            1
+        }
+    }
+}
+
 fn cmd_report(args: &[String]) -> i32 {
     let flags = parse_flags(args);
     let cfg = load_config(&flags);
@@ -505,6 +598,10 @@ fn cmd_report(args: &[String]) -> i32 {
             "multi" => {
                 let (set, names) = report::default_serving_mix(&ctx)?;
                 let (_, table, _) = report::multi_dse(&ctx, &set, &names, threads, None)?;
+                println!("{}", table.to_ascii());
+            }
+            "fleet" => {
+                let (_, table, _, _) = report::fleet_default(&ctx, threads)?;
                 println!("{}", table.to_ascii());
             }
             "table3" => println!("{}", report::table3(&ctx, threads)?.to_ascii()),

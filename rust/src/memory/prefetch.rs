@@ -5,8 +5,16 @@
 //! operation's own weight/data tiles double-buffered *during* the
 //! operation, and (b) pre-loading the next operation's first tiles while
 //! the current one computes.  Both hold as long as each op's off-chip
-//! traffic fits in its own compute window at DRAM bandwidth; the residue is
-//! a stall.
+//! traffic fits in its own compute window at the effective fill bandwidth;
+//! the residue is a stall.
+//!
+//! The stall physics has exactly **one implementation**: [`analyze`]
+//! delegates to the event timeline (`crate::sim::Timeline`), so this
+//! report and the DSE latency objective can never disagree about whether
+//! the claim holds (it used to be an independent latency+bandwidth model
+//! that ignored burst quantization and the SPM fill-port bound; the two
+//! drifted by design).  `sim::tests::prefetch_is_the_timeline_bit_exact`
+//! pins the delegation.
 //!
 //! With the calibrated workload model, every CapsNet/DeepCaps op satisfies
 //! the bound (the weight-stream-limited ClassCaps included), so the stall
@@ -14,9 +22,9 @@
 //! stalls for arbitrary configurations (used by the ablation bench that
 //! sweeps DRAM bandwidth).
 
-use super::dram::Dram;
 use crate::config::{Accelerator, Technology};
 use crate::dataflow::NetworkProfile;
+use crate::sim::Timeline;
 
 /// Per-op stall report.
 #[derive(Debug, Clone)]
@@ -50,47 +58,53 @@ impl PrefetchReport {
 
 /// Analyzes latency hiding: each op must receive its own off-chip reads and
 /// emit its writes within its compute window (double-buffered tile
-/// streaming overlaps transfer and compute).
+/// streaming overlaps transfer and compute).  Thin view over the event
+/// timeline: the per-op stalls *are* `sim::Timeline`'s `dma_stall_cycles`.
 pub fn analyze(profile: &NetworkProfile, tech: &Technology, accel: &Accelerator) -> PrefetchReport {
-    let dram = Dram::new(tech);
-    let cycle_s = accel.cycle_s();
-    let mut ops = Vec::with_capacity(profile.ops.len());
-    let mut total = 0u64;
-    for op in &profile.ops {
-        let required = op.off_rd + op.off_wr;
-        let transfer_s = dram.transfer_time_s(required);
-        let compute_s = op.cycles as f64 * cycle_s;
-        let stall_s = (transfer_s - compute_s).max(0.0);
-        let stall_cycles = (stall_s / cycle_s).ceil() as u64;
-        total += stall_cycles;
-        ops.push(OpStall {
+    let tl = Timeline::build(profile, tech, accel);
+    let ops = profile
+        .ops
+        .iter()
+        .zip(&tl.ops)
+        .map(|(op, slot)| OpStall {
             name: op.name.clone(),
             compute_cycles: op.cycles,
-            required_bytes: required,
-            stall_cycles,
-        });
-    }
+            required_bytes: op.off_rd + op.off_wr,
+            stall_cycles: slot.dma_stall_cycles,
+        })
+        .collect();
     PrefetchReport {
         ops,
-        total_stall_cycles: total,
+        total_stall_cycles: tl.dma_stall_cycles(),
         baseline_cycles: profile.total_cycles(),
     }
 }
 
 /// Minimum DRAM bandwidth [B/s] at which the profile still runs stall-free
-/// (for the bandwidth-sensitivity ablation).
+/// (for the bandwidth-sensitivity ablation).  Mirrors the timeline's DMA
+/// rule: off-chip bytes are padded to whole `dram_burst_bytes` bursts and
+/// must drain within the compute window left after one burst latency.  The
+/// returned bandwidth is only achievable while it stays below the SPM
+/// fill-port bound `spm_banks x spm_bank_fill_bytes x clock` — past that,
+/// no DRAM bandwidth removes the stalls (the fill side is the bottleneck).
 pub fn min_bandwidth_for_no_loss(
     profile: &NetworkProfile,
     tech: &Technology,
     accel: &Accelerator,
 ) -> f64 {
     let cycle_s = accel.cycle_s();
+    let burst = tech.dram_burst_bytes.max(1) as u64;
     profile
         .ops
         .iter()
         .map(|op| {
+            let bytes = op.off_rd + op.off_wr;
+            if bytes == 0 {
+                return 0.0;
+            }
+            let padded = bytes.div_ceil(burst) * burst;
             let window = (op.cycles as f64 * cycle_s - tech.dram_latency_s).max(1e-12);
-            (op.off_rd + op.off_wr) as f64 / window
+            padded as f64 / window
         })
         .fold(0.0, f64::max)
 }

@@ -14,6 +14,7 @@ use crate::dataflow::{profile_network, tpu, NetworkProfile};
 use crate::dse;
 use crate::dse::multi::WorkloadSet;
 use crate::energy::{self, system_with_org};
+use crate::fleet;
 use crate::memory::{cover_op, prefetch, Component, MemSpec, Organization};
 use crate::model::{capsnet_mnist, deepcaps_cifar10};
 use crate::pmu;
@@ -851,6 +852,149 @@ pub fn multi_dse(
     Ok((csv, table, excluded))
 }
 
+// --------------------------------------------------------------- E22 fleet
+
+/// E22: sharded fleet serving artifact.  Simulates both the codesigned
+/// fleet and the homogeneous union-SMP baseline fleet under the same
+/// seeded arrival trace, and writes per-shard + fleet-level rollups
+/// (`fleet.csv`) and the shard-selection table (`table_fleet.md`).  The
+/// acceptance row: the codesigned fleet's energy-per-request must not
+/// exceed the baseline's (same executable batch sets, same schedule).
+pub fn fleet_report(
+    ctx: &ReportCtx,
+    design: &fleet::FleetDesign,
+    cfg: &fleet::FleetConfig,
+) -> Result<(Csv, Table, fleet::FleetStats, fleet::FleetStats)> {
+    let mut stats = fleet::simulate(&design.plans, cfg)?;
+    let mut base = fleet::simulate(&design.baseline, cfg)?;
+    // Mean-across-shards utilization of each fleet (the table's Util cell).
+    let mean_util = |st: &fleet::FleetStats| -> f64 {
+        let h = st.sim_time_s.max(1e-12);
+        let busy: f64 = st.per_shard.iter().map(|sh| sh.busy_s).sum();
+        busy / (h * st.per_shard.len().max(1) as f64)
+    };
+    let (stats_util, base_util) = (mean_util(&stats), mean_util(&base));
+
+    let mut csv = Csv::new(&[
+        "scope",
+        "workload",
+        "org",
+        "policy",
+        "served",
+        "batches",
+        "padded_slots",
+        "utilization",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "slo_attainment",
+        "energy_per_req_mj",
+    ]);
+    let horizon = stats.sim_time_s;
+    let policy = stats.policy.label().to_string();
+    let slo = stats.slo_s;
+    for (i, sh) in stats.per_shard.iter_mut().enumerate() {
+        csv.row(vec![
+            s(&format!("shard{i}")),
+            s(&sh.workload),
+            s(&sh.org_label),
+            s(&policy),
+            u(sh.served as usize),
+            u(sh.batches as usize),
+            u(sh.padded_slots as usize),
+            f(sh.utilization(horizon)),
+            f(sh.latency.p50() * 1e3),
+            f(sh.latency.p95() * 1e3),
+            f(sh.latency.p99() * 1e3),
+            f(sh.slo_attainment(slo)),
+            f(sh.energy_per_request_j() * 1e3),
+        ]);
+    }
+    for (scope, st) in [("fleet", &mut stats), ("fleet-baseline", &mut base)] {
+        let label = if scope == "fleet" {
+            "codesigned".to_string()
+        } else {
+            design.baseline_label.clone()
+        };
+        let policy = st.policy.label().to_string();
+        let (requests, batches, padded) = (st.requests, st.batches, st.padded_slots);
+        let util = if scope == "fleet" { stats_util } else { base_util };
+        let (att, e_req) = (st.slo_attainment(), st.energy_per_request_j());
+        csv.row(vec![
+            s(scope),
+            s("mix"),
+            s(&label),
+            s(&policy),
+            u(requests as usize),
+            u(batches as usize),
+            u(padded as usize),
+            f(util),
+            f(st.latency.p50() * 1e3),
+            f(st.latency.p95() * 1e3),
+            f(st.latency.p99() * 1e3),
+            f(att),
+            f(e_req * 1e3),
+        ]);
+    }
+
+    let mut table = Table::new(&[
+        "Shard", "Workload", "Org", "Batches", "E/req [mJ]", "p99 [ms]", "Util",
+    ]);
+    for (i, (plan, sh)) in design.plans.iter().zip(&mut stats.per_shard).enumerate() {
+        table.row(vec![
+            format!("{i}"),
+            plan.workload.clone(),
+            plan.org.label(),
+            format!("{:?}", plan.batcher.sizes),
+            format!("{:.3}", sh.energy_per_request_j() * 1e3),
+            format!("{:.3}", sh.latency.p99() * 1e3),
+            format!("{:.1}%", 100.0 * sh.utilization(horizon)),
+        ]);
+    }
+    table.row(vec![
+        "fleet".into(),
+        "mix".into(),
+        "codesigned".into(),
+        "-".into(),
+        format!("{:.3}", stats.energy_per_request_j() * 1e3),
+        format!("{:.3}", stats.latency.p99() * 1e3),
+        format!("{:.1}%", 100.0 * stats_util),
+    ]);
+    table.row(vec![
+        "baseline".into(),
+        "mix".into(),
+        design.baseline_label.clone(),
+        "-".into(),
+        format!("{:.3}", base.energy_per_request_j() * 1e3),
+        format!("{:.3}", base.latency.p99() * 1e3),
+        format!("{:.1}%", 100.0 * base_util),
+    ]);
+
+    ctx.write("fleet.csv", &csv);
+    ctx.write_md("table_fleet.md", &table);
+    Ok((csv, table, stats, base))
+}
+
+/// The canonical E22 configuration (`descnet report fleet` / `report all`):
+/// 2 CapsNet shards, JSQ, 100 req/s, 400 requests, 20 ms SLO.
+pub fn fleet_default(
+    ctx: &ReportCtx,
+    threads: usize,
+) -> Result<(Csv, Table, fleet::FleetStats, fleet::FleetStats)> {
+    let opts = fleet::DesignOptions {
+        shards: 2,
+        slo_s: Some(20e-3),
+        threads,
+        ..fleet::DesignOptions::default()
+    };
+    let design = fleet::design_fleet(&ctx.cfg, &[capsnet_mnist()], &opts)?;
+    let cfg = fleet::FleetConfig {
+        slo_s: Some(20e-3),
+        ..fleet::FleetConfig::default()
+    };
+    fleet_report(ctx, &design, &cfg)
+}
+
 /// Regenerate everything (the `descnet report all` entry point).
 pub fn all(ctx: &ReportCtx, threads: usize) -> Result<Vec<String>> {
     let mut done = Vec::new();
@@ -894,8 +1038,10 @@ pub fn all(ctx: &ReportCtx, threads: usize) -> Result<Vec<String>> {
     headline(ctx, threads)?;
     mark("headline");
     let mix = default_serving_mix(ctx)?;
-    multi_dse(ctx, &mix.0, &mix.1, threads)?;
+    multi_dse(ctx, &mix.0, &mix.1, threads, None)?;
     mark("dse-multi");
+    fleet_default(ctx, threads)?;
+    mark("fleet");
     Ok(done)
 }
 

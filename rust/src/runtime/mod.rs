@@ -207,7 +207,12 @@ pub fn argmax_per_row(lengths: &[f32], classes: usize) -> Vec<usize> {
         .map(|row| {
             row.iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                // A NaN length (a degenerate executable output) must
+                // neither abort the serving loop mid-batch nor win the
+                // argmax (total_cmp alone would rank +NaN above every
+                // finite score); all-NaN rows fall back to class 0.
+                .filter(|(_, v)| !v.is_nan())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i)
                 .unwrap_or(0)
         })

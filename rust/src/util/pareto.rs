@@ -31,16 +31,21 @@ impl Point {
 /// ascending x.  O(n log n): sort by (x, y), then a single min-y sweep.
 pub fn frontier(points: &[Point]) -> Vec<usize> {
     let mut order: Vec<usize> = (0..points.len()).collect();
+    // total_cmp: NaN objectives (a degenerate config upstream) sort last
+    // instead of panicking mid-sweep; they then never improve best_y, so
+    // they cannot join the frontier.
     order.sort_by(|&a, &b| {
         points[a]
             .x
-            .partial_cmp(&points[b].x)
-            .unwrap()
-            .then(points[a].y.partial_cmp(&points[b].y).unwrap())
+            .total_cmp(&points[b].x)
+            .then(points[a].y.total_cmp(&points[b].y))
     });
     let mut out = Vec::new();
     let mut best_y = f64::INFINITY;
     for &i in &order {
+        if points[i].x.is_nan() || points[i].y.is_nan() {
+            continue; // degenerate objective: never a frontier member
+        }
         if points[i].y < best_y {
             // Equal-x ties: the sort put the lower-y first, which strictly
             // improves best_y, so the worse tie is skipped — correct.
@@ -86,15 +91,17 @@ pub fn frontier3(points: &[Point3]) -> Vec<usize> {
     let mut order: Vec<usize> = (0..points.len()).collect();
     order.sort_by(|&a, &b| {
         let (p, q) = (&points[a], &points[b]);
-        p.x.partial_cmp(&q.x)
-            .unwrap()
-            .then(p.y.partial_cmp(&q.y).unwrap())
-            .then(p.z.partial_cmp(&q.z).unwrap())
+        p.x.total_cmp(&q.x)
+            .then(p.y.total_cmp(&q.y))
+            .then(p.z.total_cmp(&q.z))
     });
     let mut out = Vec::new();
     let mut stair: Vec<(f64, f64)> = Vec::new(); // (y, z), y asc, z strictly desc
     for &i in &order {
         let p = &points[i];
+        if p.x.is_nan() || p.y.is_nan() || p.z.is_nan() {
+            continue; // degenerate objective: never a frontier member
+        }
         // Rightmost staircase entry with y <= p.y holds the minimal z over
         // that range; the point is dominated iff that z <= p.z (an exact
         // (y, z) duplicate counts as dominated: earlier x-ties win, like
@@ -126,21 +133,25 @@ pub fn is_non_dominated(p: &Point, points: &[Point]) -> bool {
 }
 
 /// The frontier point with minimal y (e.g. lowest-energy Pareto solution,
-/// the paper's per-design-option selection rule in section VI-A).
+/// the paper's per-design-option selection rule in section VI-A).  NaN
+/// coordinates are skipped, matching [`frontier`]'s convention.
 pub fn min_y(points: &[Point]) -> Option<usize> {
     points
         .iter()
         .enumerate()
-        .min_by(|(_, a), (_, b)| a.y.partial_cmp(&b.y).unwrap().then(a.x.partial_cmp(&b.x).unwrap()))
+        .filter(|(_, p)| !p.x.is_nan() && !p.y.is_nan())
+        .min_by(|(_, a), (_, b)| a.y.total_cmp(&b.y).then(a.x.total_cmp(&b.x)))
         .map(|(i, _)| i)
 }
 
-/// The frontier point with minimal x (lowest-area solution).
+/// The frontier point with minimal x (lowest-area solution).  NaN
+/// coordinates are skipped, matching [`frontier`]'s convention.
 pub fn min_x(points: &[Point]) -> Option<usize> {
     points
         .iter()
         .enumerate()
-        .min_by(|(_, a), (_, b)| a.x.partial_cmp(&b.x).unwrap().then(a.y.partial_cmp(&b.y).unwrap()))
+        .filter(|(_, p)| !p.x.is_nan() && !p.y.is_nan())
+        .min_by(|(_, a), (_, b)| a.x.total_cmp(&b.x).then(a.y.total_cmp(&b.y)))
         .map(|(i, _)| i)
 }
 
@@ -244,6 +255,28 @@ mod tests {
         let p = pts(&[(5.0, 1.0), (1.0, 5.0), (3.0, 3.0)]);
         assert_eq!(min_y(&p), Some(0));
         assert_eq!(min_x(&p), Some(1));
+    }
+
+    #[test]
+    fn nan_points_never_panic_or_join_the_frontier() {
+        // A NaN objective (degenerate config upstream) must neither abort
+        // the sort (the old partial_cmp().unwrap() panic) nor survive into
+        // the frontier or the min-selections.
+        let p = pts(&[(2.0, 2.0), (f64::NAN, 0.5), (0.5, f64::NAN), (1.0, 3.0)]);
+        assert_eq!(frontier(&p), vec![3, 0]);
+        assert_eq!(min_y(&p), Some(0));
+        assert_eq!(min_x(&p), Some(3));
+        let p3 = pts3(&[
+            (2.0, 2.0, 2.0),
+            (f64::NAN, 0.5, 0.5),
+            (0.5, 0.5, f64::NAN),
+            (1.0, 3.0, 1.0),
+        ]);
+        let mut f3 = frontier3(&p3);
+        f3.sort_unstable();
+        assert_eq!(f3, vec![0, 3]);
+        // All-NaN input degrades to an empty frontier, not a panic.
+        assert!(frontier(&pts(&[(f64::NAN, f64::NAN)])).is_empty());
     }
 
     // ------------------------------------------------------ 3-objective

@@ -105,7 +105,10 @@ impl Percentiles {
             return 0.0;
         }
         if !self.sorted {
-            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: a NaN sample (it would be a bug upstream, but the
+            // fleet objectives are NaN-guarded, not NaN-free by type) sorts
+            // last instead of panicking inside the percentile query.
+            self.samples.sort_by(f64::total_cmp);
             self.sorted = true;
         }
         let rank = (p / 100.0) * (self.samples.len() - 1) as f64;

@@ -137,6 +137,69 @@ fn latency_budget_dse_emits_3d_pareto_artifacts() {
 }
 
 #[test]
+fn fleet_smoke_writes_artifacts_and_reports_savings() {
+    // The ISSUE 4 acceptance/CI command (request count trimmed for test
+    // wall time): deterministic rollups + the baseline comparison line,
+    // with fleet.csv/table_fleet.md written.
+    let dir = tmp_dir("fleet_ok");
+    let out = descnet(&[
+        "fleet",
+        "--shards",
+        "2",
+        "--rps",
+        "100",
+        "--slo-ms",
+        "20",
+        "--requests",
+        "120",
+        "--threads",
+        "2",
+        "--out",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("fleet: 2 shards, policy jsq"), "{text}");
+    assert!(text.contains("p99"), "{text}");
+    assert!(text.contains("SLO"), "{text}");
+    assert!(text.contains("baseline ["), "{text}");
+    let csv = std::fs::read_to_string(dir.join("fleet.csv")).unwrap();
+    let header = csv.lines().next().unwrap();
+    for col in ["p99_ms", "slo_attainment", "energy_per_req_mj", "utilization"] {
+        assert!(header.contains(col), "{header}");
+    }
+    assert!(csv.contains("fleet-baseline"), "{csv}");
+    let table = std::fs::read_to_string(dir.join("table_fleet.md")).unwrap();
+    assert!(table.contains("E/req [mJ]"), "{table}");
+}
+
+#[test]
+fn fleet_rejects_unknown_policy_and_malformed_rps() {
+    let out = descnet(&["fleet", "--policy", "p2c"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert_clean_failure(&out, "unknown routing policy");
+
+    let out = descnet(&["fleet", "--rps", "fast"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert_clean_failure(&out, "--rps expects a number");
+}
+
+#[test]
+fn fleet_unmeetable_slo_fails_cleanly() {
+    let out = descnet(&[
+        "fleet",
+        "--net",
+        "deepcaps",
+        "--slo-ms",
+        "20",
+        "--threads",
+        "2",
+    ]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    assert_clean_failure(&out, "unmeetable");
+}
+
+#[test]
 fn infeasible_latency_budget_fails_with_fastest_achievable() {
     let dir = tmp_dir("budget_impossible");
     let out = descnet(&[

@@ -197,7 +197,7 @@ fn fig22_single_port_shared_improves_efficiency() {
         let i = front
             .iter()
             .copied()
-            .min_by(|&a, &b| pts[a].energy_j.partial_cmp(&pts[b].energy_j).unwrap())
+            .min_by(|&a, &b| pts[a].energy_j.total_cmp(&pts[b].energy_j))
             .unwrap();
         (pts[i].area_mm2, pts[i].energy_j)
     };
@@ -217,6 +217,8 @@ fn report_all_regenerates_every_artifact() {
     for file in [
         "dse_multi.csv",
         "table_multi_selected.md",
+        "fleet.csv",
+        "table_fleet.md",
         "fig01_memory_utilization.csv",
         "fig07_params_vs_time.csv",
         "fig09_cycles.csv",

@@ -87,7 +87,7 @@ fn prop_batch_plans_never_starve() {
     // flush rounds.
     check("no-starvation", 100, |rng| {
         let sizes = vec![1 + rng.below(3) as usize, 4 + rng.below(5) as usize];
-        let policy = BatchPolicy::new(sizes, 1e-3);
+        let policy = BatchPolicy::new(sizes, 1e-3).expect("valid sizes");
         let mut pending = rng.below(200) as usize;
         let mut rounds = 0;
         while pending > 0 {
