@@ -3,9 +3,10 @@
 //! section Perf).  Reports configs/s, thread scaling vs the single-thread
 //! baseline, the CACTI cost-cache hit rate, the timeline-simulator event
 //! throughput and the full 3-D (area/energy/latency) sweep wall time, then
-//! writes the machine-readable baseline to `BENCH_dse.json` (schema v4:
-//! v3 + the fleet discrete-event simulator's events/s) so future PRs have
-//! a perf trajectory to compare against.
+//! writes the machine-readable baseline to `BENCH_dse.json` (schema v5:
+//! v4 + the branch-and-bound pruning counters of the streaming sweep —
+//! enumerated/pruned/evaluated and archive statistics per network) so
+//! future PRs have a perf trajectory to compare against.
 
 use descnet::cacti::cache;
 use descnet::config::{Accelerator, Technology};
@@ -100,13 +101,21 @@ fn main() {
             std::hint::black_box(dse::pareto_indices(&points));
         });
 
-        // Full 3-D sweep wall time: enumerate + evaluate + 3-D Pareto +
-        // selection, the `descnet dse` end-to-end path.
+        // Full 3-D sweep wall time: streaming enumerate + bound + evaluate
+        // + 3-D Pareto + selection, the `descnet dse` end-to-end path.
+        let mut sweep_stats = descnet::dse::stream::SweepStats::default();
         let sweep3d = time(&format!("{} full 3-D sweep (8 threads)", net.name), 2, || {
-            std::hint::black_box(
-                dse::run_on(&Engine::new(8), &profile, &tech, &accel).expect("3-D sweep"),
-            );
+            let res = dse::run_on(&Engine::new(8), &profile, &tech, &accel).expect("3-D sweep");
+            sweep_stats = res.stats;
+            std::hint::black_box(res);
         });
+        println!(
+            "    -> branch-and-bound: {} enumerated, {} pruned ({:.1}%), {} evaluated",
+            sweep_stats.enumerated,
+            sweep_stats.pruned,
+            100.0 * sweep_stats.pruned_fraction(),
+            sweep_stats.evaluated,
+        );
         time(&format!("{} per-option selection", net.name), 5, || {
             std::hint::black_box(dse::select_per_option(&points));
         });
@@ -114,7 +123,7 @@ fn main() {
         // Heuristic (section V-D): speed/quality vs the exhaustive sweep.
         let hy_opt = points
             .iter()
-            .filter(|p| p.option().starts_with("HY"))
+            .filter(|p| p.option().label().starts_with("HY"))
             .map(|p| p.energy_j)
             .fold(f64::INFINITY, f64::min);
         // Iterations scaled to the space (DeepCaps' HY space is ~11x larger).
@@ -160,6 +169,7 @@ fn main() {
             ),
             ("anneal_best_mj", (res.best.energy_j * 1e3).into()),
             ("anneal_evaluations", res.evaluations.into()),
+            ("pruning", pruning_json(&sweep_stats)),
         ]));
     }
 
@@ -177,9 +187,11 @@ fn main() {
     let n_nets = profiles.len();
     let set = WorkloadSet::new(profiles).expect("workload set");
     let mut multi_points = 0usize;
+    let mut multi_stats = descnet::dse::stream::SweepStats::default();
     let r = time(&format!("multi co-design sweep ({n_nets} nets)"), 2, || {
         let res = multi::run_on(&Engine::new(8), &set, &tech, &accel).expect("multi DSE");
         multi_points = res.points.len();
+        multi_stats = res.stats;
         std::hint::black_box(res);
     });
     let net_points = n_nets * multi_points;
@@ -198,6 +210,7 @@ fn main() {
             "net_points_per_s",
             (net_points as f64 / r.mean_s.max(1e-12)).into(),
         ),
+        ("pruning", pruning_json(&multi_stats)),
     ]);
 
     // Fleet discrete-event simulator throughput (schema v4): a synthetic
@@ -235,7 +248,7 @@ fn main() {
     ]);
 
     let out = Json::from_pairs(vec![
-        ("schema", "descnet-bench-dse-v4".into()),
+        ("schema", "descnet-bench-dse-v5".into()),
         ("status", "recorded".into()),
         (
             "cacti_cache",
@@ -252,6 +265,20 @@ fn main() {
     let path = std::path::Path::new("BENCH_dse.json");
     out.write_file(path).expect("writing BENCH_dse.json");
     println!("wrote {}", path.display());
+}
+
+fn pruning_json(st: &descnet::dse::stream::SweepStats) -> Json {
+    Json::from_pairs(vec![
+        ("enumerated", st.enumerated.into()),
+        ("pruned", st.pruned.into()),
+        ("evaluated", st.evaluated.into()),
+        ("pruned_fraction", st.pruned_fraction().into()),
+        ("subtrees", st.subtrees.into()),
+        ("subtrees_pruned", st.subtrees_pruned.into()),
+        ("archive_inserts", st.archive_inserts.into()),
+        ("archive_len", st.archive_len.into()),
+        ("mean_bound_gap", st.mean_bound_gap().into()),
+    ])
 }
 
 fn threads_key(threads: usize) -> &'static str {

@@ -24,7 +24,7 @@ fn run_one(label: &str, tech: &Technology, engine: &Engine, csv: &mut Csv) {
     let result = dse::run_on(engine, &profile, tech, &cfg.accel).expect("DSE sweep");
     let sel: std::collections::BTreeMap<_, _> = result.selected.iter().cloned().collect();
     let frontier_opts: std::collections::BTreeSet<String> =
-        result.pareto.iter().map(|&i| result.points[i].option()).collect();
+        result.pareto.iter().map(|&i| result.points[i].option().to_string()).collect();
 
     let hy_pg = &result.points[sel["HY-PG"]];
     let sep = &result.points[sel["SEP"]];

@@ -98,7 +98,7 @@ fn main() {
             format!("{}/{}", s.on[i], s.sectors)
         };
         table.row(vec![
-            op.name.clone(),
+            op.name.to_string(),
             cell(Component::Shared),
             cell(Component::Data),
             cell(Component::Weight),

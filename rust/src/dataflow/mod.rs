@@ -31,6 +31,8 @@
 
 pub mod tpu;
 
+use std::sync::Arc;
+
 use crate::config::Accelerator;
 use crate::model::{LayerGroup, Network, OpKind, Operation, RoutingHalf};
 
@@ -54,7 +56,9 @@ pub const VOTE_RING_OVERLAY: usize = 96 * 1024;
 /// by sample), so coverage and SPM sizing are batch-invariant.
 #[derive(Debug, Clone, PartialEq)]
 pub struct OpProfile {
-    pub name: String,
+    /// Interned: cloning a profile (or building a [`sim::Timeline`] from
+    /// one) bumps a refcount instead of copying the string.
+    pub name: Arc<str>,
     pub group: LayerGroup,
     /// Clock cycles on the CapsAcc array.
     pub cycles: u64,
@@ -91,7 +95,7 @@ impl OpProfile {
 /// Profile of a full network on the accelerator.
 #[derive(Debug, Clone, PartialEq)]
 pub struct NetworkProfile {
-    pub network: String,
+    pub network: Arc<str>,
     pub ops: Vec<OpProfile>,
     pub clock_hz: f64,
     /// Inferences per batch execution (op quantities are per batch).
@@ -171,7 +175,7 @@ impl NetworkProfile {
     }
 
     pub fn op(&self, name: &str) -> Option<&OpProfile> {
-        self.ops.iter().find(|o| o.name == name)
+        self.ops.iter().find(|o| o.name.as_ref() == name)
     }
 }
 
@@ -186,7 +190,7 @@ pub fn profile_network(net: &Network, accel: &Accelerator) -> NetworkProfile {
 pub fn profile_network_batched(net: &Network, accel: &Accelerator, batch: usize) -> NetworkProfile {
     let batch = batch.max(1);
     NetworkProfile {
-        network: net.name.clone(),
+        network: net.name.as_str().into(),
         ops: net
             .ops
             .iter()
@@ -322,7 +326,7 @@ fn conv_profile(
     let wr_a = acc_updates;
 
     OpProfile {
-        name: op.name.clone(),
+        name: op.name.as_str().into(),
         group: op.group,
         cycles,
         usage_d,
@@ -389,7 +393,7 @@ fn votes_profile(
     };
 
     OpProfile {
-        name: op.name.clone(),
+        name: op.name.as_str().into(),
         group: op.group,
         cycles,
         usage_d,
@@ -515,7 +519,7 @@ fn routing_profile(
     }
 
     OpProfile {
-        name: op.name.clone(),
+        name: op.name.as_str().into(),
         group: op.group,
         cycles,
         usage_d,
@@ -740,7 +744,7 @@ mod tests {
         for op in &p.ops {
             if op.name.starts_with("Caps3D-Sum") || op.name.starts_with("Caps3D-Update") {
                 assert_eq!(op.off_rd, 0, "{}", op.name);
-                if op.name != "Caps3D-Update+Softmax3" {
+                if op.name.as_ref() != "Caps3D-Update+Softmax3" {
                     assert_eq!(op.off_wr, 0, "{}", op.name);
                 }
             }

@@ -9,10 +9,10 @@
 //! the reference implementation (see EXPERIMENTS.md section Perf/L3 for the
 //! before/after).
 
-use crate::cacti::cache;
+use crate::cacti::{cache, SramConfig};
 use crate::config::Technology;
 use crate::dataflow::NetworkProfile;
-use crate::memory::{Component, Organization};
+use crate::memory::{Component, Organization, OrgKind};
 use crate::sim;
 
 // NOTE (EXPERIMENTS.md section Perf/L3): a function-local HashMap memo was
@@ -124,6 +124,149 @@ pub fn area_energy(org: &Organization, profile: &NetworkProfile, tech: &Technolo
     }
 
     let area = comps.iter().filter(|c| c.present).map(|c| c.area).sum();
+    (area, energy / profile.batch.max(1) as f64)
+}
+
+/// Admissible subtree lower bound on (area_mm2, energy_j) for the
+/// branch-and-bound sweep (`dse::stream`).
+///
+/// Within a subtree all component SIZES are fixed and only the SECTOR
+/// counts vary over `pools`, so coverage — and with it every
+/// usage-dependent quantity in [`area_energy`] — is subtree-constant.
+/// The bound replays `area_energy`'s accumulation with the *same
+/// expression shapes in the same order*, but substitutes at every step the
+/// per-component minimum over the subtree's sector variants, and drops the
+/// (non-negative) wakeup additions.  IEEE-754 addition is monotone in both
+/// operands and multiplication by a non-negative factor is monotone, so
+/// the bound's accumulator never exceeds the real accumulator of *any*
+/// completion — the bound is admissible bit-wise, with no epsilon slack
+/// (pinned by `stream::tests::bound_is_admissible_bitwise` and
+/// `rust/tests/prune_exact.rs`).
+///
+/// `sizes`/`pools` are indexed [shared, data, weight, acc]
+/// (`Component::ALL` order).  Presence follows the constructor semantics
+/// of `kind`: SMP instantiates only the shared memory, SEP only the three
+/// dedicated ones, and HY all four — even at size 0, matching
+/// [`Organization::hy`].
+pub(crate) fn area_energy_lower_bound(
+    kind: OrgKind,
+    sizes: [usize; 4],
+    pools: &[Vec<usize>; 4],
+    profile: &NetworkProfile,
+    tech: &Technology,
+) -> (f64, f64) {
+    let costs_of = cache::for_tech(tech);
+    let present = match kind {
+        OrgKind::Smp => [true, false, false, false],
+        OrgKind::Sep => [false, true, true, true],
+        OrgKind::Hy => [true, true, true, true],
+    };
+
+    // Per-variant static-leak constants: (sectors, sector_bytes, leak_on,
+    // leak_sector_on, leak_sector_off).  At most |sector pool| ≈ 5 entries
+    // per component, all served from the shared CACTI cache.
+    #[derive(Default)]
+    struct BoundComp {
+        present: bool,
+        size: usize,
+        min_access_e: f64,
+        min_area: f64,
+        variants: Vec<(usize, usize, f64, f64, f64)>,
+    }
+    let mut comps: [BoundComp; 4] = Default::default();
+    for idx in 0..4 {
+        if !present[idx] {
+            continue;
+        }
+        let ports = if idx == 0 { 3 } else { 1 };
+        let c = &mut comps[idx];
+        c.present = true;
+        c.size = sizes[idx];
+        c.min_access_e = f64::INFINITY;
+        c.min_area = f64::INFINITY;
+        for &sc in &pools[idx] {
+            let cfg = SramConfig::new(sizes[idx], ports, sc);
+            let costs = costs_of.costs(&cfg);
+            c.min_access_e = c.min_access_e.min(costs.access_energy_j);
+            c.min_area = c.min_area.min(costs.area_mm2);
+            c.variants.push((
+                cfg.sectors,
+                cfg.sector_bytes().max(1),
+                costs.leak_on_w,
+                costs.leak_sector_on_w,
+                costs.leak_sector_off_w,
+            ));
+        }
+        if c.variants.is_empty() {
+            // Empty sector pool ⟹ the subtree has zero candidates; the
+            // sweep never asks for its bound.  Keep the terms neutral.
+            c.min_access_e = 0.0;
+            c.min_area = 0.0;
+        }
+    }
+    let [shared, data, weight, acc] = &comps;
+    let cap = |c: &BoundComp| if c.present { c.size } else { 0 };
+    let inv_clock = 1.0 / profile.clock_hz;
+
+    let mut energy = 0.0;
+    for op in &profile.ops {
+        let dur = op.cycles as f64 * inv_clock;
+
+        // Coverage: size-only, identical for every completion.
+        let ded_d = op.usage_d.min(cap(data));
+        let ded_w = op.usage_w.min(cap(weight));
+        let ded_a = op.usage_a.min(cap(acc));
+        let sh = (op.usage_d - ded_d) + (op.usage_w - ded_w) + (op.usage_a - ded_a);
+        debug_assert!(sh <= cap(shared), "subtree must fit profile");
+
+        // Dynamic energy with per-component minimum access energies —
+        // same expression tree as `area_energy`.
+        let d_acc = (op.rd_d + op.wr_d) as f64;
+        let w_acc = (op.rd_w + op.wr_w) as f64;
+        let a_acc = (op.rd_a + op.wr_a) as f64;
+        let split = |acc_count: f64, ded: usize, total: usize| -> (f64, f64) {
+            if total == 0 {
+                (0.0, 0.0)
+            } else {
+                let f = ded as f64 / total as f64;
+                (acc_count * f, acc_count * (1.0 - f))
+            }
+        };
+        let (dd, ds) = split(d_acc, ded_d, op.usage_d);
+        let (wd, ws) = split(w_acc, ded_w, op.usage_w);
+        let (ad, as_) = split(a_acc, ded_a, op.usage_a);
+        energy += dd * data.min_access_e
+            + wd * weight.min_access_e
+            + ad * acc.min_access_e
+            + (ds + ws + as_) * shared.min_access_e;
+
+        // Static energy: per component, the minimum over sector variants
+        // of that variant's exact static term (wakeup terms dropped —
+        // they only ever add energy).
+        let needs = [sh, ded_d, ded_w, ded_a];
+        for (i, c) in comps.iter().enumerate() {
+            if !c.present || c.variants.is_empty() {
+                continue;
+            }
+            let mut static_min = f64::INFINITY;
+            for &(sectors, sector_bytes, leak_on, ls_on, ls_off) in &c.variants {
+                let term = if sectors <= 1 {
+                    leak_on * dur
+                } else {
+                    let on = needs[i].div_ceil(sector_bytes);
+                    let off = sectors - on;
+                    dur * (on as f64 * ls_on + off as f64 * ls_off)
+                };
+                static_min = static_min.min(term);
+            }
+            energy += static_min;
+        }
+    }
+
+    let mut area = 0.0;
+    for c in comps.iter().filter(|c| c.present) {
+        area += c.min_area;
+    }
     (area, energy / profile.batch.max(1) as f64)
 }
 

@@ -276,7 +276,7 @@ mod tests {
         let points = dse::evaluate_all(&orgs, profile, tech, &tl, 4);
         points
             .iter()
-            .filter(|p| p.option() == "HY-PG" || p.option() == "HY")
+            .filter(|p| matches!(p.option(), dse::DesignOption::Hy | dse::DesignOption::HyPg))
             .map(|p| p.energy_j)
             .fold(f64::INFINITY, f64::min)
     }

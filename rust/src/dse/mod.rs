@@ -22,8 +22,9 @@ pub mod evaluate;
 pub mod heuristic;
 pub mod multi;
 pub mod pools;
+pub mod stream;
 
-use anyhow::{anyhow, bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::config::{Accelerator, Technology};
 use crate::dataflow::NetworkProfile;
@@ -49,10 +50,72 @@ pub struct DsePoint {
 }
 
 impl DsePoint {
-    /// Design-option bucket: "SMP", "SMP-PG", "SEP", "SEP-PG", "HY", "HY-PG".
-    pub fn option(&self) -> String {
-        let pg = if self.org.power_gated() { "-PG" } else { "" };
-        format!("{}{}", self.org.kind.label(), pg)
+    /// Design-option bucket: SMP, SMP-PG, SEP, SEP-PG, HY, HY-PG.
+    pub fn option(&self) -> DesignOption {
+        DesignOption::of(self.org.kind, self.org.power_gated())
+    }
+}
+
+/// Design-option bucket of a configuration: the organization kind crossed
+/// with power gating.  `Copy` — the sweep buckets hundreds of thousands of
+/// points, and the old `String`-returning `option()` allocated on every
+/// call.  The variant order matches the lexicographic order of the labels,
+/// so iterating [`DesignOption::ALL`] reproduces the ordering the old
+/// `BTreeMap<String, _>` selection produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum DesignOption {
+    Hy,
+    HyPg,
+    Sep,
+    SepPg,
+    Smp,
+    SmpPg,
+}
+
+impl DesignOption {
+    /// All options, in label-lexicographic order.
+    pub const ALL: [DesignOption; 6] = [
+        DesignOption::Hy,
+        DesignOption::HyPg,
+        DesignOption::Sep,
+        DesignOption::SepPg,
+        DesignOption::Smp,
+        DesignOption::SmpPg,
+    ];
+
+    pub fn of(kind: OrgKind, power_gated: bool) -> DesignOption {
+        match (kind, power_gated) {
+            (OrgKind::Hy, false) => DesignOption::Hy,
+            (OrgKind::Hy, true) => DesignOption::HyPg,
+            (OrgKind::Sep, false) => DesignOption::Sep,
+            (OrgKind::Sep, true) => DesignOption::SepPg,
+            (OrgKind::Smp, false) => DesignOption::Smp,
+            (OrgKind::Smp, true) => DesignOption::SmpPg,
+        }
+    }
+
+    /// The paper's table label ("HY-PG", "SEP", ...).
+    pub fn label(self) -> &'static str {
+        match self {
+            DesignOption::Hy => "HY",
+            DesignOption::HyPg => "HY-PG",
+            DesignOption::Sep => "SEP",
+            DesignOption::SepPg => "SEP-PG",
+            DesignOption::Smp => "SMP",
+            DesignOption::SmpPg => "SMP-PG",
+        }
+    }
+
+    /// Dense index into [`DesignOption::ALL`] (per-option accumulator
+    /// arrays in the sweep).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+impl std::fmt::Display for DesignOption {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
     }
 }
 
@@ -99,72 +162,17 @@ pub fn hy_shared_size(profile: &NetworkProfile, d: usize, w: usize, a: usize) ->
 /// Full enumeration: SMP + SEP + HY, each with every valid sector
 /// combination (Algorithm 2).  SEP and SMP boundary cases of HY are
 /// emitted once, as their own design options.
+///
+/// The enumeration order is defined by [`stream::subtrees`] — the pruned
+/// sweep and this materialized list walk the exact same sequence, which is
+/// what makes the exhaustive path a drop-in oracle for the property tests.
 pub fn enumerate(profile: &NetworkProfile) -> Result<Vec<Organization>> {
     let mut out = Vec::new();
-    let (sd, sw, sa) = sep_sizes(profile);
-
-    // --- SEP (Eq. 2) with all sector combinations.
-    for scd in pools::sector_pool_with_off(sd) {
-        for scw in pools::sector_pool_with_off(sw) {
-            for sca in pools::sector_pool_with_off(sa) {
-                out.push(Organization::sep(
-                    MemSpec::new(sd, scd),
-                    MemSpec::new(sw, scw),
-                    MemSpec::new(sa, sca),
-                ));
-            }
-        }
-    }
-
-    // --- SMP (Eq. 1).
-    for scs in pools::sector_pool_with_off(smp_size(profile)) {
-        out.push(Organization::smp(MemSpec::new(smp_size(profile), scs)));
-    }
-
-    // --- HY (Algorithm 1 x Algorithm 2).
-    for &d in &pools::size_pool(profile.max_d()) {
-        for &w in &pools::size_pool(profile.max_w()) {
-            for &a in &pools::size_pool(profile.max_a()) {
-                let s = hy_shared_size(profile, d, w, a)
-                    .context("Algorithm 1 shared-size derivation")?;
-                if s == 0 {
-                    continue; // degenerates to SEP (emitted above)
-                }
-                if d == 0 && w == 0 && a == 0 {
-                    continue; // degenerates to SMP (emitted above)
-                }
-                let scs_pool = pools::sector_pool_with_off(s);
-                let scd_pool = or_one(pools::sector_pool_with_off(d));
-                let scw_pool = or_one(pools::sector_pool_with_off(w));
-                let sca_pool = or_one(pools::sector_pool_with_off(a));
-                for &scs in &scs_pool {
-                    for &scd in &scd_pool {
-                        for &scw in &scw_pool {
-                            for &sca in &sca_pool {
-                                out.push(Organization::hy(
-                                    MemSpec::new(s, scs),
-                                    MemSpec::new(d, scd),
-                                    MemSpec::new(w, scw),
-                                    MemSpec::new(a, sca),
-                                    3,
-                                ));
-                            }
-                        }
-                    }
-                }
-            }
-        }
+    for st in stream::subtrees(profile)? {
+        st.materialize_into(&mut out);
     }
     debug_assert!(out.iter().all(|o| org_fits(o, profile)));
     Ok(out)
-}
-
-fn or_one(pool: Vec<usize>) -> Vec<usize> {
-    if pool.is_empty() {
-        vec![1] // absent memory: single no-op sector slot
-    } else {
-        pool
-    }
 }
 
 /// The Fig 22 study: HY organizations with the shared memory constrained to
@@ -245,26 +253,37 @@ pub fn pareto_indices(points: &[DsePoint]) -> Vec<usize> {
 /// "for each design option ... the Pareto-optimal solutions with
 /// lowest-energy are selected").
 pub fn select_per_option(points: &[DsePoint]) -> Vec<(String, usize)> {
-    let mut best: std::collections::BTreeMap<String, usize> = Default::default();
+    let mut best: [Option<usize>; 6] = [None; 6];
     for (i, p) in points.iter().enumerate() {
-        let key = p.option();
-        match best.get(&key) {
-            Some(&j) if points[j].energy_j <= p.energy_j => {}
-            _ => {
-                best.insert(key, i);
-            }
+        let slot = &mut best[p.option().index()];
+        match *slot {
+            Some(j) if points[j].energy_j <= p.energy_j => {}
+            _ => *slot = Some(i),
         }
     }
-    best.into_iter().collect()
+    DesignOption::ALL
+        .iter()
+        .zip(best)
+        .filter_map(|(o, b)| b.map(|i| (o.label().to_string(), i)))
+        .collect()
 }
 
 /// Convenience: the full DSE for one network profile.
+///
+/// Since the branch-and-bound sweep, `points` holds only the *surviving*
+/// candidates — configurations whose subtree the lower bound could not
+/// cull.  The frontier (`pareto`) and per-option selection (`selected`)
+/// over the survivors are bit-identical to the exhaustive sweep's (pinned
+/// by `rust/tests/prune_exact.rs`); `stats` says how much of the space was
+/// culled without evaluation.
 pub struct DseResult {
     pub points: Vec<DsePoint>,
     pub pareto: Vec<usize>,
     pub selected: Vec<(String, usize)>,
     /// Configurations dropped by the latency budget (0 when unconstrained).
     pub excluded_by_budget: usize,
+    /// Branch-and-bound counters (enumerated / pruned / evaluated / ...).
+    pub stats: stream::SweepStats,
 }
 
 pub fn run(
@@ -299,40 +318,43 @@ pub fn run_budgeted(
     accel: &Accelerator,
     latency_budget_s: Option<f64>,
 ) -> Result<DseResult> {
-    let orgs = enumerate(profile)?;
-    let timeline = sim::Timeline::build(profile, tech, accel);
-    let mut points = evaluate_all_on(engine, &orgs, profile, tech, &timeline);
-    let mut excluded = 0;
     if let Some(budget) = latency_budget_s {
         ensure!(
             budget.is_finite() && budget > 0.0,
             "latency budget must be a positive duration, got {budget} s"
         );
-        let before = points.len();
-        let fastest = points
-            .iter()
-            .map(|p| p.latency_s)
-            .fold(f64::INFINITY, f64::min);
-        points.retain(|p| p.latency_s <= budget);
-        excluded = before - points.len();
-        if points.is_empty() {
+    }
+    let timeline = sim::Timeline::build(profile, tech, accel);
+    let subtrees = stream::subtrees(profile)?;
+    let ev = stream::SingleNet {
+        profile,
+        tech,
+        timeline: &timeline,
+    };
+    let out = stream::sweep(engine, &subtrees, &ev, latency_budget_s);
+    if let Some(budget) = latency_budget_s {
+        if out.points.is_empty() {
+            // All-excluded ⟹ nothing ever entered the archive ⟹ zero
+            // pruning, so `enumerated` and `fastest` cover the full space —
+            // the message is identical to the exhaustive sweep's.
             bail!(
                 "latency budget {:.4} ms excludes all {} configurations of '{}' \
                  (fastest achievable: {:.4} ms)",
                 budget * 1e3,
-                before,
+                out.stats.enumerated,
                 profile.network,
-                fastest * 1e3
+                out.fastest * 1e3
             );
         }
     }
-    let pareto = pareto_indices(&points);
-    let selected = select_per_option(&points);
+    let pareto = pareto_indices(&out.points);
+    let selected = select_per_option(&out.points);
     Ok(DseResult {
-        points,
+        points: out.points,
         pareto,
         selected,
-        excluded_by_budget: excluded,
+        excluded_by_budget: out.excluded,
+        stats: out.stats,
     })
 }
 
@@ -447,7 +469,7 @@ mod tests {
         let pareto_opts: std::collections::BTreeSet<String> = res
             .pareto
             .iter()
-            .map(|&i| res.points[i].option())
+            .map(|&i| res.points[i].option().to_string())
             .collect();
         assert!(!pareto_opts.contains("SMP"), "SMP on frontier");
         // ... and some SEP/SEP-PG/HY-PG configuration is on the frontier.

@@ -17,9 +17,9 @@
 //!   runs unchanged over the weighted points, so Tables I/II-style
 //!   selections fall out per design option, now co-designed.
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use super::{evaluate, pareto_indices, select_per_option, DsePoint};
+use super::{evaluate, pareto_indices, select_per_option, stream, DsePoint};
 use crate::config::{Accelerator, Technology};
 use crate::dataflow::NetworkProfile;
 use crate::memory::Organization;
@@ -103,7 +103,7 @@ impl WorkloadSet {
             .flat_map(|p| {
                 p.ops.iter().map(move |op| {
                     let mut op = op.clone();
-                    op.name = format!("{}/{}", p.network, op.name);
+                    op.name = format!("{}/{}", p.network, op.name).into();
                     op
                 })
             })
@@ -128,6 +128,11 @@ pub struct MultiDseResult {
     pub per_net_latency_s: Vec<Vec<f64>>,
     pub pareto: Vec<usize>,
     pub selected: Vec<(String, usize)>,
+    /// Evaluated configurations dropped by the latency budget (0 when
+    /// unconstrained).
+    pub excluded_by_budget: usize,
+    /// Branch-and-bound counters of the co-design sweep.
+    pub stats: stream::SweepStats,
 }
 
 impl MultiDseResult {
@@ -173,31 +178,8 @@ pub fn evaluate_all_on(
     tls: &[sim::Timeline],
 ) -> (Vec<DsePoint>, Vec<Vec<f64>>, Vec<Vec<f64>>) {
     debug_assert_eq!(tls.len(), set.profiles.len());
-    let evals: Vec<(DsePoint, Vec<f64>, Vec<f64>)> = engine.map(orgs, |org| {
-        let mut per_net = Vec::with_capacity(set.profiles.len());
-        let mut per_net_lat = Vec::with_capacity(set.profiles.len());
-        let mut area = 0.0;
-        let mut energy = 0.0;
-        let mut latency = 0.0;
-        for ((p, wgt), tl) in set.profiles.iter().zip(&set.weights).zip(tls) {
-            let (a, e, l) = evaluate::area_energy_latency(org, p, tech, tl);
-            area = a; // identical for every network: one physical org
-            energy += wgt * e;
-            latency += wgt * l;
-            per_net.push(e);
-            per_net_lat.push(l);
-        }
-        (
-            DsePoint {
-                org: org.clone(),
-                area_mm2: area,
-                energy_j: energy,
-                latency_s: latency,
-            },
-            per_net,
-            per_net_lat,
-        )
-    });
+    let evals: Vec<(DsePoint, Vec<f64>, Vec<f64>)> =
+        engine.map(orgs, |org| eval_one(org, set, tech, tls));
     let mut points = Vec::with_capacity(evals.len());
     let mut per_net_j = Vec::with_capacity(evals.len());
     let mut per_net_latency_s = Vec::with_capacity(evals.len());
@@ -209,6 +191,42 @@ pub fn evaluate_all_on(
     (points, per_net_j, per_net_latency_s)
 }
 
+/// One weighted co-design evaluation — the single scoring implementation
+/// shared by [`evaluate_all_on`] and the branch-and-bound sweep
+/// (`stream::MultiSet`).  The returned point holds the mix-weighted
+/// objectives; the vectors hold the unweighted per-network energies and
+/// latencies.
+pub(crate) fn eval_one(
+    org: &Organization,
+    set: &WorkloadSet,
+    tech: &Technology,
+    tls: &[sim::Timeline],
+) -> (DsePoint, Vec<f64>, Vec<f64>) {
+    let mut per_net = Vec::with_capacity(set.profiles.len());
+    let mut per_net_lat = Vec::with_capacity(set.profiles.len());
+    let mut area = 0.0;
+    let mut energy = 0.0;
+    let mut latency = 0.0;
+    for ((p, wgt), tl) in set.profiles.iter().zip(&set.weights).zip(tls) {
+        let (a, e, l) = evaluate::area_energy_latency(org, p, tech, tl);
+        area = a; // identical for every network: one physical org
+        energy += wgt * e;
+        latency += wgt * l;
+        per_net.push(e);
+        per_net_lat.push(l);
+    }
+    (
+        DsePoint {
+            org: org.clone(),
+            area_mm2: area,
+            energy_j: energy,
+            latency_s: latency,
+        },
+        per_net,
+        per_net_lat,
+    )
+}
+
 /// The full co-design pipeline on an existing engine.
 pub fn run_on(
     engine: &Engine,
@@ -216,18 +234,64 @@ pub fn run_on(
     tech: &Technology,
     accel: &Accelerator,
 ) -> Result<MultiDseResult> {
-    let orgs = enumerate(set)?;
+    run_budgeted_on(engine, set, tech, accel, None)
+}
+
+/// The co-design pipeline with an optional hard budget on the
+/// mix-weighted per-inference latency [s]: organizations that miss the
+/// budget are excluded before Pareto extraction and per-option selection.
+/// Errors when the budget excludes every configuration (reporting the
+/// fastest achievable mix latency) or is not a positive finite number.
+pub fn run_budgeted_on(
+    engine: &Engine,
+    set: &WorkloadSet,
+    tech: &Technology,
+    accel: &Accelerator,
+    latency_budget_s: Option<f64>,
+) -> Result<MultiDseResult> {
+    if let Some(budget) = latency_budget_s {
+        ensure!(
+            budget.is_finite() && budget > 0.0,
+            "latency budget must be a positive duration, got {budget} s"
+        );
+    }
+    let merged = set.merged_profile();
+    let subtrees =
+        stream::subtrees(&merged).context("enumerating over the merged workload set")?;
     let tls = timelines(set, tech, accel);
-    let (points, per_net_j, per_net_latency_s) =
-        evaluate_all_on(engine, &orgs, set, tech, &tls);
-    let pareto = pareto_indices(&points);
-    let selected = select_per_option(&points);
+    let ev = stream::MultiSet {
+        set,
+        tech,
+        tls: &tls,
+    };
+    let out = stream::sweep(engine, &subtrees, &ev, latency_budget_s);
+    if let Some(budget) = latency_budget_s {
+        if out.points.is_empty() {
+            bail!(
+                "latency budget {:.4} ms excludes all {} co-design configurations \
+                 (fastest achievable mix latency: {:.4} ms)",
+                budget * 1e3,
+                out.stats.enumerated,
+                out.fastest * 1e3
+            );
+        }
+    }
+    let mut per_net_j = Vec::with_capacity(out.extras.len());
+    let mut per_net_latency_s = Vec::with_capacity(out.extras.len());
+    for (e, l) in out.extras {
+        per_net_j.push(e);
+        per_net_latency_s.push(l);
+    }
+    let pareto = pareto_indices(&out.points);
+    let selected = select_per_option(&out.points);
     Ok(MultiDseResult {
-        points,
+        points: out.points,
         per_net_j,
         per_net_latency_s,
         pareto,
         selected,
+        excluded_by_budget: out.excluded,
+        stats: out.stats,
     })
 }
 
@@ -239,6 +303,17 @@ pub fn run(
     threads: usize,
 ) -> Result<MultiDseResult> {
     run_on(&Engine::new(threads), set, tech, accel)
+}
+
+/// [`run_budgeted_on`] over a fresh engine.
+pub fn run_budgeted(
+    set: &WorkloadSet,
+    tech: &Technology,
+    accel: &Accelerator,
+    threads: usize,
+    latency_budget_s: Option<f64>,
+) -> Result<MultiDseResult> {
+    run_budgeted_on(&Engine::new(threads), set, tech, accel, latency_budget_s)
 }
 
 #[cfg(test)]

@@ -1,0 +1,615 @@
+//! Streaming branch-and-bound sweep over the scratchpad design space
+//! (DESIGN.md section 13).
+//!
+//! The exhaustive pipeline materialized every organization
+//! (`dse::enumerate`), evaluated all of them, and only then filtered to
+//! the Pareto frontier — paying full evaluation cost for the ~99% of
+//! candidates that provably cannot reach the frontier.  This module
+//! restructures the sweep around the *subtree* granularity Algorithm 2
+//! naturally has: within one [`Subtree`] every component SIZE is fixed
+//! and only the SECTOR counts vary over the pools, so
+//!
+//! * coverage (which bytes land in which memory) is subtree-constant,
+//!   making an admissible lower bound on (area, energy, latency) cheap —
+//!   [`evaluate::area_energy_lower_bound`] replays the exact evaluator
+//!   with per-component minima over the sector pools;
+//! * a subtree whose bound is already weakly dominated by an evaluated
+//!   point (tracked incrementally in a [`Archive3`] staircase) can be
+//!   culled wholesale *before* `evaluate::area_energy` ever runs.
+//!
+//! Exactness is non-negotiable and holds *bit-wise*, not approximately:
+//!
+//! * the bound never exceeds any completion of its subtree (IEEE-754
+//!   monotonicity of the mirrored accumulation — see
+//!   `area_energy_lower_bound`), so a culled subtree only loses points
+//!   that are weakly dominated by an earlier surviving point;
+//! * weakly dominated points can never enter the 3-D frontier
+//!   (`frontier3` keeps the first occurrence of a duplicate, and the
+//!   archive member *is* earlier in enumeration order), and by the same
+//!   first-wins rule they can never change the per-option lowest-energy
+//!   selection — pruning additionally requires an earlier selected-or-
+//!   better point per design option realized in the subtree;
+//! * a point may act as a *dominator* only if it is unconditionally at
+//!   least as good on every downstream objective too: with a nonzero
+//!   wakeup latency a power-gated dominator could expose latency on
+//!   *other* timelines (`fleet::design_fleet` re-checks SLOs against
+//!   per-network timelines), so [`SweepEval::dominator_ok`] restricts the
+//!   archive to non-gated organizations unless `wakeup_latency_s <= 0`.
+//!   At the paper's constants (wakeups mask, exposure 0) every point
+//!   qualifies and the archive has full pruning power.
+//!
+//! Determinism: subtrees are visited strictly in enumeration order;
+//! within a subtree the engine evaluates candidates with ordered
+//! collection.  Every pruning decision therefore sees the identical
+//! archive state for any thread count — `rust/tests/prune_exact.rs` pins
+//! threads=1 vs N bit-equality, and pruned-vs-exhaustive bit-identity of
+//! frontier and selection across both seed networks and seeded generator
+//! networks.
+
+use anyhow::{Context, Result};
+
+use crate::config::Technology;
+use crate::dataflow::NetworkProfile;
+use crate::memory::{MemSpec, OrgKind, Organization};
+use crate::sim;
+use crate::util::exec::Engine;
+use crate::util::pareto::{Archive3, Point3};
+
+use super::multi::WorkloadSet;
+use super::{evaluate, hy_shared_size, pools, sep_sizes, smp_size, DesignOption, DsePoint};
+
+/// One branch of the enumeration tree: component sizes fixed, sector
+/// counts free over `pools`.  Indexing is `Component::ALL` order
+/// [shared, data, weight, acc]; a pool of `[1]` stands in for an absent
+/// component (single no-op slot), an empty pool for a component whose
+/// size admits no sector choice at all (the subtree then has no
+/// candidates).
+#[derive(Debug, Clone)]
+pub struct Subtree {
+    kind: OrgKind,
+    sizes: [usize; 4],
+    pools: [Vec<usize>; 4],
+}
+
+impl Subtree {
+    pub fn kind(&self) -> OrgKind {
+        self.kind
+    }
+
+    /// Number of candidate organizations in this subtree.
+    pub fn count(&self) -> usize {
+        self.pools.iter().map(|p| p.len()).product()
+    }
+
+    fn org(&self, sc: [usize; 4]) -> Organization {
+        match self.kind {
+            OrgKind::Smp => Organization::smp(MemSpec::new(self.sizes[0], sc[0])),
+            OrgKind::Sep => Organization::sep(
+                MemSpec::new(self.sizes[1], sc[1]),
+                MemSpec::new(self.sizes[2], sc[2]),
+                MemSpec::new(self.sizes[3], sc[3]),
+            ),
+            OrgKind::Hy => Organization::hy(
+                MemSpec::new(self.sizes[0], sc[0]),
+                MemSpec::new(self.sizes[1], sc[1]),
+                MemSpec::new(self.sizes[2], sc[2]),
+                MemSpec::new(self.sizes[3], sc[3]),
+                3,
+            ),
+        }
+    }
+
+    /// Appends every candidate of this subtree in enumeration order —
+    /// the shared-memory sector count is the outermost loop, matching the
+    /// historical `dse::enumerate` nesting exactly (the exhaustive oracle
+    /// of the property tests walks the same sequence).
+    pub fn materialize_into(&self, out: &mut Vec<Organization>) {
+        for &s0 in &self.pools[0] {
+            for &s1 in &self.pools[1] {
+                for &s2 in &self.pools[2] {
+                    for &s3 in &self.pools[3] {
+                        out.push(self.org([s0, s1, s2, s3]));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Design options realized inside this subtree: the base option is
+    /// always realized (every non-empty sector pool starts at SC = 1),
+    /// the power-gated option iff some pool has a sectored entry.
+    fn options(&self) -> (DesignOption, Option<DesignOption>) {
+        let base = DesignOption::of(self.kind, false);
+        let gated = self.pools.iter().any(|p| p.iter().any(|&sc| sc > 1));
+        (base, gated.then(|| DesignOption::of(self.kind, true)))
+    }
+}
+
+/// The full design space of a profile as a sequence of subtrees, in the
+/// exact order `dse::enumerate` has always emitted candidates: the SEP
+/// subtree, the SMP subtree, then one HY subtree per (d, w, a) size
+/// triple of Algorithm 1 × Algorithm 2.
+pub fn subtrees(profile: &NetworkProfile) -> Result<Vec<Subtree>> {
+    let mut out = Vec::new();
+    let (sd, sw, sa) = sep_sizes(profile);
+
+    // --- SEP (Eq. 2): sizes fixed, all sector combinations.
+    out.push(Subtree {
+        kind: OrgKind::Sep,
+        sizes: [0, sd, sw, sa],
+        pools: [
+            vec![1],
+            pools::sector_pool_with_off(sd),
+            pools::sector_pool_with_off(sw),
+            pools::sector_pool_with_off(sa),
+        ],
+    });
+
+    // --- SMP (Eq. 1).
+    let smp = smp_size(profile);
+    out.push(Subtree {
+        kind: OrgKind::Smp,
+        sizes: [smp, 0, 0, 0],
+        pools: [
+            pools::sector_pool_with_off(smp),
+            vec![1],
+            vec![1],
+            vec![1],
+        ],
+    });
+
+    // --- HY (Algorithm 1 x Algorithm 2).
+    for &d in &pools::size_pool(profile.max_d()) {
+        for &w in &pools::size_pool(profile.max_w()) {
+            for &a in &pools::size_pool(profile.max_a()) {
+                let s = hy_shared_size(profile, d, w, a)
+                    .context("Algorithm 1 shared-size derivation")?;
+                if s == 0 {
+                    continue; // degenerates to SEP (own subtree above)
+                }
+                if d == 0 && w == 0 && a == 0 {
+                    continue; // degenerates to SMP (own subtree above)
+                }
+                out.push(Subtree {
+                    kind: OrgKind::Hy,
+                    sizes: [s, d, w, a],
+                    pools: [
+                        pools::sector_pool_with_off(s),
+                        or_one(pools::sector_pool_with_off(d)),
+                        or_one(pools::sector_pool_with_off(w)),
+                        or_one(pools::sector_pool_with_off(a)),
+                    ],
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn or_one(pool: Vec<usize>) -> Vec<usize> {
+    if pool.is_empty() {
+        vec![1] // absent memory: single no-op sector slot
+    } else {
+        pool
+    }
+}
+
+/// Branch-and-bound counters (BENCH schema v5 `pruning` section, the CLI's
+/// `dse --stats`, and the E23 pruning-effectiveness table).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SweepStats {
+    /// Candidates the full cross-product contains.
+    pub enumerated: usize,
+    /// Candidates fully evaluated (the bound could not cull them).
+    pub evaluated: usize,
+    /// Candidates culled by an admissible bound, never evaluated.
+    pub pruned: usize,
+    /// Subtrees visited (with at least one candidate) / culled wholesale.
+    pub subtrees: usize,
+    pub subtrees_pruned: usize,
+    /// Accepted archive insertions over the sweep and the final archive
+    /// size (== the frontier size of the admitted points).
+    pub archive_inserts: usize,
+    pub archive_len: usize,
+    /// Bound tightness: Σ and count of per-evaluated-subtree relative
+    /// energy gaps, (min evaluated energy − bound energy) / min energy.
+    pub bound_gap_sum: f64,
+    pub bound_gap_count: usize,
+}
+
+impl SweepStats {
+    /// Fraction of the space culled before evaluation.
+    pub fn pruned_fraction(&self) -> f64 {
+        if self.enumerated == 0 {
+            0.0
+        } else {
+            self.pruned as f64 / self.enumerated as f64
+        }
+    }
+
+    /// Mean relative energy-bound gap over evaluated subtrees (0 = the
+    /// bound is tight; large = the bound rarely bites).
+    pub fn mean_bound_gap(&self) -> f64 {
+        if self.bound_gap_count == 0 {
+            0.0
+        } else {
+            self.bound_gap_sum / self.bound_gap_count as f64
+        }
+    }
+}
+
+/// The sweep's per-objective-space adapter: single-network and
+/// multi-network (co-design) sweeps share the driver below and differ
+/// only in how a candidate is scored and bounded.
+pub(crate) trait SweepEval: Sync {
+    /// Side data carried along with each surviving point (per-network
+    /// energy/latency vectors for the co-design sweep).
+    type Extra: Send;
+
+    /// Full evaluation of one candidate.
+    fn eval(&self, org: &Organization) -> (DsePoint, Self::Extra);
+
+    /// Admissible lower bound on (area, energy, latency) over *every*
+    /// candidate of the subtree, bit-wise (never exceeds any completion).
+    fn bound(&self, st: &Subtree) -> (f64, f64, f64);
+
+    /// Whether an evaluated point may act as a dominator in the archive
+    /// (must be at least as good as any point it prunes on every
+    /// downstream objective, including latency on foreign timelines).
+    fn dominator_ok(&self, org: &Organization) -> bool;
+}
+
+/// Single-network sweep: the objective space of `dse::run`.
+pub(crate) struct SingleNet<'a> {
+    pub profile: &'a NetworkProfile,
+    pub tech: &'a Technology,
+    pub timeline: &'a sim::Timeline,
+}
+
+impl SweepEval for SingleNet<'_> {
+    type Extra = ();
+
+    fn eval(&self, org: &Organization) -> (DsePoint, ()) {
+        (super::eval_one(org, self.profile, self.tech, self.timeline), ())
+    }
+
+    fn bound(&self, st: &Subtree) -> (f64, f64, f64) {
+        let (area, energy) = evaluate::area_energy_lower_bound(
+            st.kind,
+            st.sizes,
+            &st.pools,
+            self.profile,
+            self.tech,
+        );
+        // Wakeup exposure is ≥ 0 and exactly 0 at zero wakeup latency, so
+        // the org-independent timeline is a bit-tight latency bound.
+        let latency = self.timeline.batch_latency_s() / self.profile.batch.max(1) as f64;
+        (area, energy, latency)
+    }
+
+    fn dominator_ok(&self, org: &Organization) -> bool {
+        self.tech.wakeup_latency_s <= 0.0 || !org.power_gated()
+    }
+}
+
+/// Multi-network co-design sweep: the mix-weighted objective space of
+/// `dse::multi::run_on` (subtrees come from the merged pseudo-profile,
+/// scoring from the member profiles).
+pub(crate) struct MultiSet<'a> {
+    pub set: &'a WorkloadSet,
+    pub tech: &'a Technology,
+    pub tls: &'a [sim::Timeline],
+}
+
+impl SweepEval for MultiSet<'_> {
+    type Extra = (Vec<f64>, Vec<f64>);
+
+    fn eval(&self, org: &Organization) -> (DsePoint, Self::Extra) {
+        let (point, per_net_j, per_net_lat) =
+            super::multi::eval_one(org, self.set, self.tech, self.tls);
+        (point, (per_net_j, per_net_lat))
+    }
+
+    fn bound(&self, st: &Subtree) -> (f64, f64, f64) {
+        // Mirrors `multi::eval_one`'s accumulation shape exactly (same
+        // order, `area = a` overwrite, weighted sums) with each member's
+        // per-network bound substituted — monotone step by step, so the
+        // weighted bound is admissible bit-wise, and for a 1-element set
+        // it degenerates (0.0 + 1.0·x ≡ x) to the single-network bound.
+        let mut area = 0.0;
+        let mut energy = 0.0;
+        let mut latency = 0.0;
+        for ((p, wgt), tl) in self
+            .set
+            .profiles()
+            .iter()
+            .zip(self.set.weights())
+            .zip(self.tls)
+        {
+            let (a, e) =
+                evaluate::area_energy_lower_bound(st.kind, st.sizes, &st.pools, p, self.tech);
+            let l = tl.batch_latency_s() / p.batch.max(1) as f64;
+            area = a; // identical for every network: one physical org
+            energy += wgt * e;
+            latency += wgt * l;
+        }
+        (area, energy, latency)
+    }
+
+    fn dominator_ok(&self, org: &Organization) -> bool {
+        self.tech.wakeup_latency_s <= 0.0 || !org.power_gated()
+    }
+}
+
+/// Everything a budgeted sweep produces: the surviving points (in
+/// enumeration order), their side data, and the counters.
+pub(crate) struct SweepOutcome<X> {
+    pub points: Vec<DsePoint>,
+    pub extras: Vec<X>,
+    /// Evaluated candidates dropped by the latency budget.
+    pub excluded: usize,
+    /// Minimum latency over every *evaluated* candidate, pre-budget
+    /// (INFINITY when nothing was evaluated).  When the budget excludes
+    /// everything no point ever enters the archive, so nothing is pruned
+    /// and this is the true global minimum — the "fastest achievable" of
+    /// the error message.
+    pub fastest: f64,
+    pub stats: SweepStats,
+}
+
+/// The branch-and-bound driver.  Subtrees are processed strictly in
+/// order; candidates within a subtree are evaluated engine-parallel with
+/// ordered collection, then folded sequentially — every archive and
+/// selection decision is deterministic for any thread count.
+pub(crate) fn sweep<E: SweepEval>(
+    engine: &Engine,
+    subtrees: &[Subtree],
+    ev: &E,
+    latency_budget_s: Option<f64>,
+) -> SweepOutcome<E::Extra> {
+    let mut stats = SweepStats::default();
+    let mut archive = Archive3::new();
+    // Lowest admitted energy per design option (select_per_option's keep
+    // rule: first point wins energy ties).
+    let mut best_e: [Option<f64>; 6] = [None; 6];
+    let mut points: Vec<DsePoint> = Vec::new();
+    let mut extras: Vec<E::Extra> = Vec::new();
+    let mut excluded = 0usize;
+    let mut fastest = f64::INFINITY;
+    let mut batch: Vec<Organization> = Vec::new();
+
+    for st in subtrees {
+        let count = st.count();
+        if count == 0 {
+            continue;
+        }
+        stats.enumerated += count;
+        stats.subtrees += 1;
+
+        let (lb_area, lb_e, lb_lat) = ev.bound(st);
+        // Prune only when BOTH hold: (a) an archive member weakly
+        // dominates the bound — then it weakly dominates every completion,
+        // which therefore cannot enter the frontier (first-wins on exact
+        // duplicates, transitivity for chains); and (b) every design
+        // option realized in the subtree already has an admitted point at
+        // energy ≤ the bound — then no completion can displace a
+        // per-option selection either.
+        let (base_opt, pg_opt) = st.options();
+        let covered = |o: DesignOption| matches!(best_e[o.index()], Some(e) if e <= lb_e);
+        if covered(base_opt)
+            && pg_opt.map_or(true, covered)
+            && archive.dominated(&Point3::new(lb_area, lb_e, lb_lat, 0))
+        {
+            stats.pruned += count;
+            stats.subtrees_pruned += 1;
+            continue;
+        }
+
+        batch.clear();
+        st.materialize_into(&mut batch);
+        let evaluated = engine.map(&batch, |o| ev.eval(o));
+        stats.evaluated += evaluated.len();
+
+        let mut min_e = f64::INFINITY;
+        for (p, extra) in evaluated {
+            min_e = min_e.min(p.energy_j);
+            fastest = fastest.min(p.latency_s);
+            if let Some(budget) = latency_budget_s {
+                if !(p.latency_s <= budget) {
+                    excluded += 1;
+                    continue;
+                }
+            }
+            if ev.dominator_ok(&p.org) {
+                archive.insert(Point3::new(
+                    p.area_mm2,
+                    p.energy_j,
+                    p.latency_s,
+                    points.len(),
+                ));
+            }
+            let slot = &mut best_e[p.option().index()];
+            match *slot {
+                Some(e) if e <= p.energy_j => {}
+                _ => *slot = Some(p.energy_j),
+            }
+            points.push(p);
+            extras.push(extra);
+        }
+        if min_e.is_finite() && min_e > 0.0 {
+            stats.bound_gap_sum += ((min_e - lb_e) / min_e).max(0.0);
+            stats.bound_gap_count += 1;
+        }
+    }
+    stats.archive_inserts = archive.inserts();
+    stats.archive_len = archive.len();
+    SweepOutcome {
+        points,
+        extras,
+        excluded,
+        fastest,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Accelerator;
+    use crate::dataflow::profile_network;
+    use crate::dse;
+    use crate::model::capsnet_mnist;
+
+    fn profile() -> NetworkProfile {
+        profile_network(&capsnet_mnist(), &Accelerator::default())
+    }
+
+    #[test]
+    fn subtree_flattening_reproduces_enumerate() {
+        let p = profile();
+        let sts = subtrees(&p).unwrap();
+        // SEP first, then SMP, then HY — the historical emission order.
+        assert_eq!(sts[0].kind(), OrgKind::Sep);
+        assert_eq!(sts[1].kind(), OrgKind::Smp);
+        assert!(sts[2..].iter().all(|st| st.kind() == OrgKind::Hy));
+
+        let mut flat = Vec::new();
+        for st in &sts {
+            let before = flat.len();
+            st.materialize_into(&mut flat);
+            assert_eq!(flat.len() - before, st.count(), "count() must match");
+        }
+        let legacy = dse::enumerate(&p).unwrap();
+        assert_eq!(flat.len(), legacy.len());
+        for (a, b) in flat.iter().zip(&legacy) {
+            assert_eq!(a, b);
+        }
+        let total: usize = sts.iter().map(|st| st.count()).sum();
+        assert_eq!(total, legacy.len());
+    }
+
+    #[test]
+    fn subtree_options_detection() {
+        let p = profile();
+        let sts = subtrees(&p).unwrap();
+        let (base, pg) = sts[0].options();
+        assert_eq!(base, DesignOption::Sep);
+        assert_eq!(pg, Some(DesignOption::SepPg)); // 25–64 kiB sector pools
+        let (base, pg) = sts[1].options();
+        assert_eq!(base, DesignOption::Smp);
+        assert_eq!(pg, Some(DesignOption::SmpPg));
+    }
+
+    #[test]
+    fn bound_is_admissible_bitwise() {
+        // The acid test of the whole scheme: for every subtree, the bound
+        // must be ≤ every fully evaluated candidate on all three axes —
+        // with plain f64 comparison, no epsilon.
+        let p = profile();
+        let tech = crate::config::Technology::default();
+        let accel = Accelerator::default();
+        let tl = sim::Timeline::build(&p, &tech, &accel);
+        let ev = SingleNet {
+            profile: &p,
+            tech: &tech,
+            timeline: &tl,
+        };
+        let mut batch = Vec::new();
+        for st in subtrees(&p).unwrap() {
+            if st.count() == 0 {
+                continue;
+            }
+            let (lb_area, lb_e, lb_lat) = ev.bound(&st);
+            batch.clear();
+            st.materialize_into(&mut batch);
+            for org in &batch {
+                let (point, ()) = ev.eval(org);
+                assert!(
+                    lb_area <= point.area_mm2,
+                    "{}: area bound {lb_area} > {}",
+                    org.label(),
+                    point.area_mm2
+                );
+                assert!(
+                    lb_e <= point.energy_j,
+                    "{}: energy bound {lb_e} > {}",
+                    org.label(),
+                    point.energy_j
+                );
+                assert!(
+                    lb_lat <= point.latency_s,
+                    "{}: latency bound {lb_lat} > {}",
+                    org.label(),
+                    point.latency_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_prunes_capsnet_without_changing_outcomes() {
+        // Fast smoke of the exactness property (the full property sweep
+        // over generator networks lives in rust/tests/prune_exact.rs).
+        let p = profile();
+        let tech = crate::config::Technology::default();
+        let accel = Accelerator::default();
+        let engine = Engine::new(4);
+
+        let pruned = dse::run_on(&engine, &p, &tech, &accel).unwrap();
+        assert!(
+            pruned.stats.pruned > 0,
+            "no candidates culled on capsnet: {:?}",
+            pruned.stats
+        );
+        assert_eq!(
+            pruned.stats.evaluated + pruned.stats.pruned,
+            pruned.stats.enumerated
+        );
+        assert_eq!(pruned.stats.evaluated, pruned.points.len());
+
+        // Exhaustive oracle over the same enumeration order.
+        let orgs = dse::enumerate(&p).unwrap();
+        let tl = sim::Timeline::build(&p, &tech, &accel);
+        let all = dse::evaluate_all_on(&engine, &orgs, &p, &tech, &tl);
+        let front = dse::pareto_indices(&all);
+        let sel = dse::select_per_option(&all);
+
+        // Bit-identical frontier (as point values and organizations).
+        assert_eq!(pruned.pareto.len(), front.len());
+        for (&i, &j) in pruned.pareto.iter().zip(&front) {
+            let a = &pruned.points[i];
+            let b = &all[j];
+            assert_eq!(a.org, b.org);
+            assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+        }
+        // Bit-identical per-option selection.
+        assert_eq!(pruned.selected.len(), sel.len());
+        for ((name_a, i), (name_b, j)) in pruned.selected.iter().zip(&sel) {
+            assert_eq!(name_a, name_b);
+            let a = &pruned.points[*i];
+            let b = &all[*j];
+            assert_eq!(a.org, b.org);
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_thread_counts() {
+        let p = profile();
+        let tech = crate::config::Technology::default();
+        let accel = Accelerator::default();
+        let one = dse::run_on(&Engine::new(1), &p, &tech, &accel).unwrap();
+        let many = dse::run_on(&Engine::new(8), &p, &tech, &accel).unwrap();
+        assert_eq!(one.points.len(), many.points.len());
+        assert_eq!(one.pareto, many.pareto);
+        assert_eq!(one.selected, many.selected);
+        assert_eq!(one.stats.pruned, many.stats.pruned);
+        assert_eq!(one.stats.evaluated, many.stats.evaluated);
+        for (a, b) in one.points.iter().zip(&many.points) {
+            assert_eq!(a.org, b.org);
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        }
+    }
+}

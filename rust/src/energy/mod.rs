@@ -167,7 +167,7 @@ pub fn per_op_energy(
                             + off as f64 * costs.leak_sector_off_w);
                 }
             }
-            Ok((op.name.clone(), e * per_inf))
+            Ok((op.name.to_string(), e * per_inf))
         })
         .collect()
 }

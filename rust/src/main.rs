@@ -59,7 +59,7 @@ fn print_help() {
                     breakdown and the DMA/compute timeline (busy vs stall)\n\
            dse      [--net NAME[,NAME...]] [--workload FILE] [--random N] [--seed S]\n\
                     [--batch B] [--mix W1,W2,...] [--traffic-weighted] [--ports]\n\
-                    [--latency-budget MS] [--threads N] [--out DIR]\n\
+                    [--latency-budget MS] [--stats] [--threads N] [--out DIR]\n\
                     single-network DSE, or (with a multi-network workload set)\n\
                     the dse::multi co-design stage: one organization across\n\
                     every network, per-network energy reported.  The objective\n\
@@ -232,7 +232,7 @@ fn cmd_analyze(args: &[String]) -> i32 {
         ]);
         for op in &p.ops {
             table.row(vec![
-                op.name.clone(),
+                op.name.to_string(),
                 op.group.label().to_string(),
                 fmt_count(op.cycles),
                 fmt_size(op.usage_d),
@@ -282,7 +282,7 @@ fn cmd_analyze(args: &[String]) -> i32 {
             let mut tt = Table::new(&["op", "start", "compute", "dma", "dma-stall", "bound"]);
             for op in &tl.ops {
                 tt.row(vec![
-                    op.name.clone(),
+                    op.name.to_string(),
                     fmt_count(op.start_cycle),
                     fmt_count(op.compute_cycles),
                     fmt_count(op.dma_cycles),
@@ -378,11 +378,14 @@ fn cmd_dse(args: &[String]) -> i32 {
     {
         let net = nets[0].name.clone();
         return match report::dse_scatter(&ctx, &net, threads, latency_budget_s) {
-            Ok((csv, table, excluded)) => {
+            Ok((csv, table, excluded, stats)) => {
                 println!(
-                    "{net} DSE: {} configurations evaluated (paper: {})",
-                    fmt_count((csv.len() + excluded) as u64),
+                    "{net} DSE: {} configurations enumerated (paper: {}), \
+                     {} pruned by bound, {} evaluated",
+                    fmt_count(stats.enumerated as u64),
                     if net == "capsnet" { "15,233" } else { "215,693" },
+                    fmt_count(stats.pruned as u64),
+                    fmt_count(stats.evaluated as u64),
                 );
                 if let Some(b) = latency_budget_s {
                     println!(
@@ -393,6 +396,9 @@ fn cmd_dse(args: &[String]) -> i32 {
                         fmt_count((csv.len() + excluded) as u64),
                         fmt_count(excluded as u64),
                     );
+                }
+                if flags.has("stats") {
+                    print_sweep_stats(&stats);
                 }
                 println!("{}", table.to_ascii());
                 0
@@ -455,12 +461,16 @@ fn run_multi_dse(
         WorkloadSet::new(profiles)?
     };
 
-    let (csv, table, excluded) = report::multi_dse(ctx, &mix, &names, threads, latency_budget_s)?;
+    let (csv, table, excluded, stats) =
+        report::multi_dse(ctx, &mix, &names, threads, latency_budget_s)?;
     println!(
-        "co-design DSE over {} networks ({}): {} configurations evaluated",
+        "co-design DSE over {} networks ({}): {} configurations enumerated, \
+         {} pruned by bound, {} evaluated",
         names.len(),
         names.join(", "),
-        fmt_count((csv.len() + excluded) as u64),
+        fmt_count(stats.enumerated as u64),
+        fmt_count(stats.pruned as u64),
+        fmt_count(stats.evaluated as u64),
     );
     if excluded > 0 {
         println!(
@@ -468,6 +478,9 @@ fn run_multi_dse(
             fmt_count(csv.len() as u64),
             fmt_count(excluded as u64),
         );
+    }
+    if flags.has("stats") {
+        print_sweep_stats(&stats);
     }
     println!("{}", table.to_ascii());
     println!(
@@ -480,6 +493,24 @@ fn run_multi_dse(
             .join("  ")
     );
     Ok(())
+}
+
+/// `--stats` detail line: branch-and-bound effectiveness counters from
+/// the streaming sweep (DESIGN.md section 13).
+fn print_sweep_stats(stats: &descnet::dse::stream::SweepStats) {
+    println!(
+        "pruning stats: {:.1}% culled before evaluation ({} of {}); \
+         {} of {} subtrees pruned whole; archive {} inserts / {} final; \
+         mean energy bound gap {:.1}%",
+        100.0 * stats.pruned_fraction(),
+        fmt_count(stats.pruned as u64),
+        fmt_count(stats.enumerated as u64),
+        fmt_count(stats.subtrees_pruned as u64),
+        fmt_count(stats.subtrees as u64),
+        fmt_count(stats.archive_inserts as u64),
+        fmt_count(stats.archive_len as u64),
+        100.0 * stats.mean_bound_gap(),
+    );
 }
 
 /// `descnet fleet`: SLO-constrained fleet co-design + the seeded
@@ -597,7 +628,7 @@ fn cmd_report(args: &[String]) -> i32 {
             "fig31" | "fig32" => drop(report::memory_breakdown(&ctx, "deepcaps", threads)?),
             "multi" => {
                 let (set, names) = report::default_serving_mix(&ctx)?;
-                let (_, table, _) = report::multi_dse(&ctx, &set, &names, threads, None)?;
+                let (_, table, _, _) = report::multi_dse(&ctx, &set, &names, threads, None)?;
                 println!("{}", table.to_ascii());
             }
             "fleet" => {

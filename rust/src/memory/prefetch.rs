@@ -67,7 +67,7 @@ pub fn analyze(profile: &NetworkProfile, tech: &Technology, accel: &Accelerator)
         .iter()
         .zip(&tl.ops)
         .map(|(op, slot)| OpStall {
-            name: op.name.clone(),
+            name: op.name.to_string(),
             compute_cycles: op.cycles,
             required_bytes: op.off_rd + op.off_wr,
             stall_cycles: slot.dma_stall_cycles,

@@ -285,7 +285,7 @@ mod tests {
         let report = evaluate(&sep_pg(), &p, &tech).unwrap();
         let w = report.schedule(Component::Weight).unwrap();
         assert_eq!(w.sectors, 8);
-        let idx = |name: &str| p.ops.iter().position(|o| o.name == name).unwrap();
+        let idx = |name: &str| p.ops.iter().position(|o| o.name.as_ref() == name).unwrap();
         assert_eq!(w.on[idx("Conv1")], 1); // 2,592 B -> 1 of 8 sectors
         assert_eq!(w.on[idx("Prim")], 6); // 41,472 B -> 6 sectors
         assert_eq!(w.on[idx("Class")], 7); // 53,760 B -> 7 sectors

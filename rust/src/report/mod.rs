@@ -240,14 +240,16 @@ pub fn fig12(ctx: &ReportCtx) -> Result<Csv> {
 /// timeline simulator: every row carries its simulated per-inference
 /// latency, and `latency_budget_s` (the CLI's `--latency-budget`) excludes
 /// configurations that miss the budget before Pareto/selection.  The last
-/// tuple element is the number of budget-excluded configurations (0 when
-/// unconstrained), so callers can report evaluated vs surviving counts.
+/// two tuple elements are the number of budget-excluded configurations (0
+/// when unconstrained) and the branch-and-bound counters of the sweep, so
+/// callers can report enumerated vs pruned vs evaluated counts.  Also
+/// writes the counters as `dse_stats_<net>.csv` (E23).
 pub fn dse_scatter(
     ctx: &ReportCtx,
     net: &str,
     threads: usize,
     latency_budget_s: Option<f64>,
-) -> Result<(Csv, Table, usize)> {
+) -> Result<(Csv, Table, usize, dse::stream::SweepStats)> {
     let profile = ctx.profile(net);
     let result = dse::run_budgeted(
         &crate::util::exec::Engine::new(threads),
@@ -292,7 +294,7 @@ pub fn dse_scatter(
         let (sw, scw) = spec(Component::Weight);
         let (sa, sca) = spec(Component::Acc);
         csv.row(vec![
-            s(&p.option()),
+            s(p.option().label()),
             s(&p.org.label()),
             u(ss),
             u(scs),
@@ -351,7 +353,38 @@ pub fn dse_scatter(
     };
     ctx.write(fig, &csv);
     ctx.write_md(tab, &table);
-    Ok((csv, table, result.excluded_by_budget))
+    ctx.write(&format!("dse_stats_{net}.csv"), &stats_csv(net, &result.stats));
+    Ok((csv, table, result.excluded_by_budget, result.stats))
+}
+
+/// E23 pruning-effectiveness artifact: one row of branch-and-bound
+/// counters for a sweep.
+fn stats_csv(net: &str, st: &dse::stream::SweepStats) -> Csv {
+    let mut csv = Csv::new(&[
+        "network",
+        "enumerated",
+        "pruned",
+        "evaluated",
+        "pruned_fraction",
+        "subtrees",
+        "subtrees_pruned",
+        "archive_inserts",
+        "archive_len",
+        "mean_bound_gap",
+    ]);
+    csv.row(vec![
+        s(net),
+        u(st.enumerated),
+        u(st.pruned),
+        u(st.evaluated),
+        f(st.pruned_fraction()),
+        u(st.subtrees),
+        u(st.subtrees_pruned),
+        u(st.archive_inserts),
+        u(st.archive_len),
+        f(st.mean_bound_gap()),
+    ]);
+    csv
 }
 
 // ----------------------------------------------- E08/E10 Fig 19/21 breakdown
@@ -729,46 +762,15 @@ pub fn multi_dse(
     names: &[String],
     threads: usize,
     latency_budget_s: Option<f64>,
-) -> Result<(Csv, Table, usize)> {
-    let mut result = dse::multi::run(set, &ctx.cfg.tech, &ctx.cfg.accel, threads)
-        .context("multi-network co-design DSE")?;
-    let mut excluded = 0usize;
-    if let Some(budget) = latency_budget_s {
-        anyhow::ensure!(
-            budget.is_finite() && budget > 0.0,
-            "latency budget must be a positive duration, got {budget} s"
-        );
-        let before = result.points.len();
-        let fastest = result
-            .points
-            .iter()
-            .map(|p| p.latency_s)
-            .fold(f64::INFINITY, f64::min);
-        let keep: Vec<bool> = result.points.iter().map(|p| p.latency_s <= budget).collect();
-        let filter_by = |k: &mut usize| {
-            let i = *k;
-            *k += 1;
-            keep[i]
-        };
-        let mut k = 0;
-        result.points.retain(|_| filter_by(&mut k));
-        k = 0;
-        result.per_net_j.retain(|_| filter_by(&mut k));
-        k = 0;
-        result.per_net_latency_s.retain(|_| filter_by(&mut k));
-        if result.points.is_empty() {
-            anyhow::bail!(
-                "latency budget {:.4} ms excludes all {} co-design configurations \
-                 (fastest achievable mix latency: {:.4} ms)",
-                budget * 1e3,
-                before,
-                fastest * 1e3
-            );
-        }
-        excluded = before - result.points.len();
-        result.pareto = dse::pareto_indices(&result.points);
-        result.selected = dse::select_per_option(&result.points);
-    }
+) -> Result<(Csv, Table, usize, dse::stream::SweepStats)> {
+    // The budget is enforced *inside* the branch-and-bound sweep (the old
+    // post-hoc retain here predated `multi::run_budgeted`): excluded
+    // configurations never reach the archive, and an all-excluded budget
+    // errors with the fastest achievable mix latency.
+    let result =
+        dse::multi::run_budgeted(set, &ctx.cfg.tech, &ctx.cfg.accel, threads, latency_budget_s)
+            .context("multi-network co-design DSE")?;
+    let excluded = result.excluded_by_budget;
     let pareto: std::collections::BTreeSet<usize> = result.pareto.iter().copied().collect();
     let selected: std::collections::BTreeMap<usize, String> = result
         .selected
@@ -793,7 +795,7 @@ pub fn multi_dse(
     let mut csv = Csv::new(&header_refs);
     for (i, p) in result.points.iter().enumerate() {
         let mut row = vec![
-            s(&p.option()),
+            s(p.option().label()),
             s(&p.org.label()),
             u(p.org.total_size()),
             f(p.area_mm2),
@@ -849,7 +851,8 @@ pub fn multi_dse(
 
     ctx.write("dse_multi.csv", &csv);
     ctx.write_md("table_multi_selected.md", &table);
-    Ok((csv, table, excluded))
+    ctx.write("dse_stats_multi.csv", &stats_csv("workload-set", &result.stats));
+    Ok((csv, table, excluded, result.stats))
 }
 
 // --------------------------------------------------------------- E22 fleet
@@ -1114,9 +1117,11 @@ mod tests {
         let c = ctx();
         let (set, names) = default_serving_mix(&c).unwrap();
         assert_eq!(names.len(), 3);
-        let (csv, table, excluded) = multi_dse(&c, &set, &names, 4, None).unwrap();
+        let (csv, table, excluded, stats) = multi_dse(&c, &set, &names, 4, None).unwrap();
         assert_eq!(excluded, 0);
         assert!(!csv.is_empty());
+        assert_eq!(stats.evaluated + stats.pruned, stats.enumerated);
+        assert_eq!(stats.evaluated, csv.len());
         let text = csv.to_string();
         assert!(text.contains("energy_mj_capsnet@b4"), "missing per-net column");
         assert!(text.contains("latency_weighted_ms"), "missing latency column");
@@ -1130,12 +1135,17 @@ mod tests {
     #[test]
     fn dse_scatter_reports_latency_and_honors_budget() {
         let c = ctx();
-        let (csv, table, excluded) = dse_scatter(&c, "capsnet", 4, None).unwrap();
+        let (csv, table, excluded, stats) = dse_scatter(&c, "capsnet", 4, None).unwrap();
         assert_eq!(excluded, 0);
         assert!(csv.to_string().contains("latency_ms"));
         assert!(table.to_markdown().contains("Latency [ms]"));
-        // A generous budget keeps the full enumeration...
-        let (loose, _, loose_excluded) = dse_scatter(&c, "capsnet", 4, Some(1.0)).unwrap();
+        // The branch-and-bound sweep culls a nonzero fraction on capsnet
+        // and the counters reconcile with the emitted rows.
+        assert!(stats.pruned > 0, "{stats:?}");
+        assert_eq!(stats.evaluated + stats.pruned, stats.enumerated);
+        assert_eq!(stats.evaluated, csv.len());
+        // A generous budget keeps every survivor...
+        let (loose, _, loose_excluded, _) = dse_scatter(&c, "capsnet", 4, Some(1.0)).unwrap();
         assert_eq!(loose.len(), csv.len());
         assert_eq!(loose_excluded, 0);
         // ...an impossible one errors with the fastest achievable latency.

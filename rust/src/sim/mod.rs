@@ -38,6 +38,8 @@
 //! cross-check against `pmu::evaluate`'s sector schedules lives in the
 //! tests below.
 
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
 use crate::config::{Accelerator, Technology};
@@ -56,7 +58,9 @@ pub enum Bound {
 /// One operation's slot on the timeline (all quantities in cycles).
 #[derive(Debug, Clone)]
 pub struct OpLatency {
-    pub name: String,
+    /// Interned (shared with the source [`OpProfile`]): building or cloning
+    /// a timeline bumps refcounts instead of copying strings.
+    pub name: Arc<str>,
     /// Analytical busy cycles on the array (compute occupancy).
     pub compute_cycles: u64,
     /// Cycles the DMA train needs for this op's off-chip traffic.
@@ -84,7 +88,7 @@ impl OpLatency {
 /// Org-independent event timeline of one batch execution.
 #[derive(Debug, Clone)]
 pub struct Timeline {
-    pub network: String,
+    pub network: Arc<str>,
     pub ops: Vec<OpLatency>,
     pub clock_hz: f64,
     /// Inferences per batch execution (mirrors `NetworkProfile::batch`).
@@ -178,7 +182,7 @@ impl Timeline {
     }
 
     pub fn op(&self, name: &str) -> Option<&OpLatency> {
-        self.ops.iter().find(|o| o.name == name)
+        self.ops.iter().find(|o| o.name.as_ref() == name)
     }
 }
 

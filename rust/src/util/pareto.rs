@@ -132,6 +132,122 @@ pub fn is_non_dominated(p: &Point, points: &[Point]) -> bool {
     !points.iter().any(|q| q.dominates(p))
 }
 
+/// Incremental 3-objective Pareto archive (minimization): the online dual
+/// of [`frontier3`].  Members are kept (x, y, z)-lexicographically sorted;
+/// insertion binary-searches the slot and splices, queries scan only the
+/// prefix with `x <= p.x` (the only members that can dominate `p`).
+///
+/// *Weak* dominance (`<=` on every axis, equality allowed) drives both the
+/// rejection test and member eviction, which reproduces [`frontier3`]'s
+/// exact tie conventions: a later exact duplicate is weakly dominated by
+/// the earlier member and rejected (first occurrence wins), and a strictly
+/// dominated point is rejected outright.  Invariant (induction over
+/// inserts: a member is only evicted by a weak dominator, a point is only
+/// rejected by a weakly dominating member, and weak dominance is
+/// transitive): after any insert sequence the archive holds, for every
+/// point ever offered, a member that weakly dominates it — so the final
+/// member set equals `frontier3` of the whole sequence.  Pinned by
+/// `archive_matches_frontier3_on_random_cloud` below.
+///
+/// The DSE's branch-and-bound sweep uses this as its dominance oracle:
+/// a subtree whose componentwise *lower bound* is weakly dominated by an
+/// archive member cannot contribute a frontier point (every completion is
+/// weakly dominated by that member, which was enumerated earlier).
+#[derive(Debug, Clone, Default)]
+pub struct Archive3 {
+    /// Mutually non-dominated members, (x, y, z)-lexicographically sorted.
+    members: Vec<Point3>,
+    /// Accepted inserts over the archive's lifetime (evicted members
+    /// still count — the DSE surfaces this as `archive_inserts`).
+    inserts: usize,
+}
+
+/// `a <= b` on every axis (equality allowed): the archive's rejection and
+/// eviction relation.
+fn weakly_dominates(a: &Point3, b: &Point3) -> bool {
+    a.x <= b.x && a.y <= b.y && a.z <= b.z
+}
+
+impl Archive3 {
+    pub fn new() -> Archive3 {
+        Archive3::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Accepted inserts over the archive's lifetime (>= `len()`).
+    pub fn inserts(&self) -> usize {
+        self.inserts
+    }
+
+    /// Current members, (x, y, z)-lexicographically sorted.
+    pub fn members(&self) -> &[Point3] {
+        &self.members
+    }
+
+    /// True if some member weakly dominates `p` (`<=` on all three axes).
+    /// Only the sorted prefix with `x <= p.x` can qualify, so the scan
+    /// stops at the binary-searched partition point.
+    pub fn dominated(&self, p: &Point3) -> bool {
+        let end = self.members.partition_point(|m| m.x <= p.x);
+        self.members[..end].iter().any(|m| weakly_dominates(m, p))
+    }
+
+    /// Offers `p` to the archive.  Rejected (returns `false`) if any
+    /// member weakly dominates it — including exact duplicates, so the
+    /// first occurrence wins, matching [`frontier3`].  On acceptance,
+    /// members weakly dominated by `p` are evicted and `p` is spliced
+    /// into its lexicographic slot.
+    pub fn insert(&mut self, p: Point3) -> bool {
+        if p.x.is_nan() || p.y.is_nan() || p.z.is_nan() {
+            return false; // degenerate objective: never a frontier member
+        }
+        if self.dominated(&p) {
+            return false;
+        }
+        // Evict members `p` weakly dominates: all have x >= p.x, so only
+        // the suffix after the partition point needs scanning.
+        let start = self.members.partition_point(|m| m.x < p.x);
+        let mut kept = start;
+        for i in start..self.members.len() {
+            if !weakly_dominates(&p, &self.members[i]) {
+                self.members.swap(kept, i);
+                kept += 1;
+            }
+        }
+        self.members.truncate(kept);
+        // The retained suffix kept its relative order (stable compaction),
+        // so a single binary-searched splice restores lexicographic order.
+        let slot = self.members.partition_point(|m| {
+            m.x.total_cmp(&p.x)
+                .then(m.y.total_cmp(&p.y))
+                .then(m.z.total_cmp(&p.z))
+                .is_lt()
+        });
+        self.members.insert(slot, p);
+        self.inserts += 1;
+        true
+    }
+
+    /// Folds `other` into `self` by offering its members in lexicographic
+    /// order.  Because the final member set of any insert sequence equals
+    /// `frontier3` of the sequence (order-independent as a set), merging
+    /// per-shard archives in shard order is deterministic for any shard
+    /// partition — the property `util::exec::Engine`-parallel sweeps rely
+    /// on.
+    pub fn merge(&mut self, other: &Archive3) {
+        for m in &other.members {
+            self.insert(*m);
+        }
+    }
+}
+
 /// The frontier point with minimal y (e.g. lowest-energy Pareto solution,
 /// the paper's per-design-option selection rule in section VI-A).  NaN
 /// coordinates are skipped, matching [`frontier`]'s convention.
@@ -371,5 +487,118 @@ mod tests {
     fn frontier3_empty_and_single() {
         assert!(frontier3(&[]).is_empty());
         assert_eq!(frontier3(&pts3(&[(1.0, 2.0, 3.0)])), vec![0]);
+    }
+
+    // ------------------------------------------------- incremental archive
+
+    /// LCG cloud shared by the archive tests (same draw as the frontier3
+    /// reference test, different seed).
+    fn lcg_cloud(seed: u64, n: usize) -> Vec<Point3> {
+        let mut state = seed;
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) % 100) as f64 / 4.0
+        };
+        (0..n).map(|i| Point3::new(next(), next(), next(), i)).collect()
+    }
+
+    #[test]
+    fn archive_matches_frontier3_on_random_cloud() {
+        // Online insertion must converge to exactly the offline frontier —
+        // same member set, and (lex-sorted) same order.  The coarse grid
+        // (400 draws from 100 levels per axis) forces duplicate and
+        // equal-coordinate collisions, exercising the weak-dominance ties.
+        let p = lcg_cloud(0x9E3779B97F4A7C15, 400);
+        let mut arch = Archive3::new();
+        for &q in &p {
+            arch.insert(q);
+        }
+        let mut want: Vec<Point3> = frontier3(&p).into_iter().map(|i| p[i]).collect();
+        want.sort_by(|a, b| {
+            a.x.total_cmp(&b.x).then(a.y.total_cmp(&b.y)).then(a.z.total_cmp(&b.z))
+        });
+        let got: Vec<Point3> = arch.members().to_vec();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!((g.x, g.y, g.z, g.id), (w.x, w.y, w.z, w.id));
+        }
+        assert!(arch.inserts() >= arch.len());
+    }
+
+    #[test]
+    fn archive_rejects_duplicates_and_dominated_keeps_first() {
+        let mut arch = Archive3::new();
+        assert!(arch.insert(Point3::new(1.0, 2.0, 3.0, 0)));
+        // Exact duplicate: weakly dominated by the earlier member.
+        assert!(!arch.insert(Point3::new(1.0, 2.0, 3.0, 1)));
+        // Strictly dominated.
+        assert!(!arch.insert(Point3::new(1.0, 2.0, 3.5, 2)));
+        // Dominates the member: evicts it.
+        assert!(arch.insert(Point3::new(1.0, 1.0, 3.0, 3)));
+        assert_eq!(arch.len(), 1);
+        assert_eq!(arch.members()[0].id, 3);
+        assert_eq!(arch.inserts(), 2);
+        // The evicted member's coordinates are dominated if re-offered.
+        assert!(!arch.insert(Point3::new(1.0, 2.0, 3.0, 4)));
+        assert!(arch.dominated(&Point3::new(2.0, 1.0, 3.0, 5)));
+        assert!(!arch.dominated(&Point3::new(0.5, 9.0, 9.0, 6)));
+    }
+
+    #[test]
+    fn archive_insert_keeps_lexicographic_order_and_evicts_runs() {
+        let mut arch = Archive3::new();
+        // An anti-chain along x/y with constant z.
+        for (i, x) in [4.0, 1.0, 3.0, 2.0].iter().enumerate() {
+            assert!(arch.insert(Point3::new(*x, 10.0 - x, 5.0, i)));
+        }
+        let xs: Vec<f64> = arch.members().iter().map(|m| m.x).collect();
+        assert_eq!(xs, vec![1.0, 2.0, 3.0, 4.0]);
+        // One dominator wipes the x >= 2 half in a single insert.
+        assert!(arch.insert(Point3::new(2.0, 6.0, 5.0, 9)));
+        let ids: Vec<usize> = arch.members().iter().map(|m| m.id).collect();
+        assert_eq!(ids, vec![1, 9]);
+    }
+
+    #[test]
+    fn archive_nan_rejected() {
+        let mut arch = Archive3::new();
+        assert!(!arch.insert(Point3::new(f64::NAN, 1.0, 1.0, 0)));
+        assert!(!arch.insert(Point3::new(1.0, f64::NAN, 1.0, 1)));
+        assert!(!arch.insert(Point3::new(1.0, 1.0, f64::NAN, 2)));
+        assert!(arch.is_empty());
+        assert_eq!(arch.inserts(), 0);
+    }
+
+    #[test]
+    fn archive_merge_matches_single_archive_for_any_partition() {
+        // Sharded insertion + merge must land on the same member set as
+        // one sequential archive — the determinism the engine-parallel
+        // sweep rests on.
+        let p = lcg_cloud(0xD1B54A32D192ED03, 300);
+        let mut whole = Archive3::new();
+        for &q in &p {
+            whole.insert(q);
+        }
+        for shards in [2usize, 3, 7] {
+            let mut parts: Vec<Archive3> = vec![Archive3::new(); shards];
+            for (i, &q) in p.iter().enumerate() {
+                parts[i % shards].insert(q);
+            }
+            let mut merged = Archive3::new();
+            for part in &parts {
+                merged.merge(part);
+            }
+            let a: Vec<(u64, u64, u64)> = whole
+                .members()
+                .iter()
+                .map(|m| (m.x.to_bits(), m.y.to_bits(), m.z.to_bits()))
+                .collect();
+            let b: Vec<(u64, u64, u64)> = merged
+                .members()
+                .iter()
+                .map(|m| (m.x.to_bits(), m.y.to_bits(), m.z.to_bits()))
+                .collect();
+            assert_eq!(a, b, "shards={shards}");
+        }
     }
 }

@@ -76,7 +76,7 @@ fn fig18_frontier_membership() {
     let p = profile_network(&capsnet_mnist(), &accel);
     let res = dse::run(&p, &tech, &accel, 8).unwrap();
     let frontier_opts: std::collections::BTreeSet<String> =
-        res.pareto.iter().map(|&i| res.points[i].option()).collect();
+        res.pareto.iter().map(|&i| res.points[i].option().to_string()).collect();
     assert!(!frontier_opts.contains("SMP"));
     assert!(!frontier_opts.contains("SMP-PG"));
     assert!(frontier_opts.contains("SEP") || frontier_opts.contains("SEP-PG"));

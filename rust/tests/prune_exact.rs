@@ -1,0 +1,230 @@
+//! Exactness of the branch-and-bound DSE (ISSUE 6 acceptance criteria).
+//!
+//! The streaming dominance-pruned sweep (`dse::stream`) must be a pure
+//! performance optimization: for any workload, its Pareto frontier and
+//! per-design-option selection are **bit-identical** to the exhaustive
+//! materialize-then-evaluate pipeline it replaced.  The exhaustive oracle
+//! is rebuilt here from the public pieces (`enumerate` → `evaluate_all` →
+//! `pareto_indices` → `select_per_option`), which walk the exact same
+//! enumeration order as the pruned sweep.
+//!
+//! Covered:
+//! * bit-identical frontier + selection on capsnet and deepcaps;
+//! * the same property over 20 seeded `model::generator` networks;
+//! * nonzero pruned fraction on capsnet (the sweep actually prunes) with
+//!   counter reconciliation (evaluated + pruned == enumerated);
+//! * threads=1 vs threads=8 full determinism of the pruned sweep;
+//! * budgeted sweep == budget-filtered exhaustive sweep in a regime where
+//!   latency varies across organizations (slow wakeup);
+//! * the multi-network co-design sweep against its own exhaustive oracle.
+
+use descnet::config::{Accelerator, Technology};
+use descnet::dataflow::{profile_network, NetworkProfile};
+use descnet::dse::{self, multi::WorkloadSet, DsePoint};
+use descnet::memory::Organization;
+use descnet::model::{capsnet_mnist, deepcaps_cifar10, random_networks};
+use descnet::sim;
+use descnet::util::exec::Engine;
+
+/// Frontier as *values* (org + bit patterns), independent of how the two
+/// pipelines index their point vectors.
+fn frontier_values(points: &[DsePoint], pareto: &[usize]) -> Vec<(Organization, u64, u64, u64)> {
+    pareto
+        .iter()
+        .map(|&i| {
+            let p = &points[i];
+            (
+                p.org.clone(),
+                p.area_mm2.to_bits(),
+                p.energy_j.to_bits(),
+                p.latency_s.to_bits(),
+            )
+        })
+        .collect()
+}
+
+/// Per-option selection as values: (label, org, energy bits).
+fn selection_values(
+    points: &[DsePoint],
+    selected: &[(String, usize)],
+) -> Vec<(String, Organization, u64)> {
+    selected
+        .iter()
+        .map(|(label, i)| (label.clone(), points[*i].org.clone(), points[*i].energy_j.to_bits()))
+        .collect()
+}
+
+/// The exhaustive pipeline the branch-and-bound sweep replaced.
+fn exhaustive(
+    p: &NetworkProfile,
+    tech: &Technology,
+    accel: &Accelerator,
+    threads: usize,
+) -> (Vec<DsePoint>, Vec<usize>, Vec<(String, usize)>) {
+    let orgs = dse::enumerate(p).expect("enumeration");
+    let tl = sim::Timeline::build(p, tech, accel);
+    let points = dse::evaluate_all(&orgs, p, tech, &tl, threads);
+    let pareto = dse::pareto_indices(&points);
+    let selected = dse::select_per_option(&points);
+    (points, pareto, selected)
+}
+
+fn assert_pruned_matches_exhaustive(p: &NetworkProfile, label: &str) {
+    let tech = Technology::default();
+    let accel = Accelerator::default();
+    let res = dse::run(p, &tech, &accel, 8).expect("pruned sweep");
+    let (all, pareto, selected) = exhaustive(p, &tech, &accel, 8);
+
+    // Counter reconciliation: every enumerated candidate is either culled
+    // by the bound or evaluated, and the survivors are exactly `points`.
+    assert_eq!(res.stats.enumerated, all.len(), "{label}: enumerated count");
+    assert_eq!(
+        res.stats.evaluated + res.stats.pruned,
+        res.stats.enumerated,
+        "{label}: evaluated + pruned != enumerated"
+    );
+    assert_eq!(res.stats.evaluated, res.points.len(), "{label}: survivor count");
+    assert!(res.points.len() <= all.len(), "{label}: more survivors than candidates");
+
+    // Bit-identical frontier and per-option selection.
+    assert_eq!(
+        frontier_values(&res.points, &res.pareto),
+        frontier_values(&all, &pareto),
+        "{label}: frontier differs from exhaustive"
+    );
+    assert_eq!(
+        selection_values(&res.points, &res.selected),
+        selection_values(&all, &selected),
+        "{label}: selection differs from exhaustive"
+    );
+}
+
+#[test]
+fn capsnet_pruned_sweep_is_bit_identical_and_actually_prunes() {
+    let p = profile_network(&capsnet_mnist(), &Accelerator::default());
+    assert_pruned_matches_exhaustive(&p, "capsnet");
+    // Effectiveness: the bound must cull a nonzero fraction of the space.
+    let res = dse::run(&p, &Technology::default(), &Accelerator::default(), 8).unwrap();
+    assert!(res.stats.pruned > 0, "no candidates pruned on capsnet");
+    assert!(res.stats.subtrees_pruned > 0, "no whole subtree pruned on capsnet");
+    assert!(res.stats.archive_inserts >= res.stats.archive_len);
+    assert!(res.stats.mean_bound_gap() >= 0.0);
+}
+
+#[test]
+fn deepcaps_pruned_sweep_is_bit_identical() {
+    let p = profile_network(&deepcaps_cifar10(), &Accelerator::default());
+    assert_pruned_matches_exhaustive(&p, "deepcaps");
+}
+
+#[test]
+fn generator_networks_pruned_sweep_is_bit_identical() {
+    let accel = Accelerator::default();
+    for (k, net) in random_networks(20, 11).iter().enumerate() {
+        let p = profile_network(net, &accel);
+        assert_pruned_matches_exhaustive(&p, &format!("generated #{k} ({})", net.name));
+    }
+}
+
+#[test]
+fn pruned_sweep_is_deterministic_across_thread_counts() {
+    let tech = Technology::default();
+    let accel = Accelerator::default();
+    let p = profile_network(&capsnet_mnist(), &accel);
+    let r1 = dse::run(&p, &tech, &accel, 1).unwrap();
+    let r8 = dse::run(&p, &tech, &accel, 8).unwrap();
+    assert_eq!(r1.points.len(), r8.points.len());
+    for (a, b) in r1.points.iter().zip(&r8.points) {
+        assert_eq!(a.org, b.org);
+        assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+    }
+    assert_eq!(r1.pareto, r8.pareto);
+    assert_eq!(r1.selected, r8.selected);
+    // Pruning decisions are taken sequentially per subtree, so the
+    // counters must agree exactly too.
+    assert_eq!(r1.stats.enumerated, r8.stats.enumerated);
+    assert_eq!(r1.stats.pruned, r8.stats.pruned);
+    assert_eq!(r1.stats.evaluated, r8.stats.evaluated);
+    assert_eq!(r1.stats.subtrees, r8.stats.subtrees);
+    assert_eq!(r1.stats.subtrees_pruned, r8.stats.subtrees_pruned);
+    assert_eq!(r1.stats.archive_inserts, r8.stats.archive_inserts);
+    assert_eq!(r1.stats.archive_len, r8.stats.archive_len);
+    assert_eq!(r1.stats.bound_gap_sum.to_bits(), r8.stats.bound_gap_sum.to_bits());
+    assert_eq!(r1.stats.bound_gap_count, r8.stats.bound_gap_count);
+}
+
+#[test]
+fn budgeted_sweep_matches_filtered_exhaustive_when_latency_varies() {
+    // At the paper's constants every organization has the same latency, so
+    // a budget is all-or-nothing.  With an unmaskable wakeup latency the
+    // gated organizations get slower, latency varies across the space, and
+    // a mid budget partitions it — the interesting regime for exactness.
+    let mut tech = Technology::default();
+    tech.wakeup_latency_s = 0.5;
+    let accel = Accelerator::default();
+    let p = profile_network(&capsnet_mnist(), &accel);
+    let tl = sim::Timeline::build(&p, &tech, &accel);
+    // Budget just above the ungated latency: keeps every ungated org,
+    // excludes every org with exposed wakeups.
+    let budget = tl.inference_latency_s() * 1.001;
+
+    let engine = Engine::new(8);
+    let res = dse::run_budgeted(&engine, &p, &tech, &accel, Some(budget)).expect("budgeted sweep");
+
+    // Oracle: exhaustive evaluation, then the budget filter, then
+    // Pareto/selection over the kept points.
+    let orgs = dse::enumerate(&p).unwrap();
+    let all = dse::evaluate_all(&orgs, &p, &tech, &tl, 8);
+    let kept: Vec<DsePoint> = all
+        .iter()
+        .filter(|pt| pt.latency_s <= budget)
+        .cloned()
+        .collect();
+    assert!(!kept.is_empty() && kept.len() < all.len(), "budget must partition the space");
+    let pareto = dse::pareto_indices(&kept);
+    let selected = dse::select_per_option(&kept);
+
+    assert_eq!(
+        frontier_values(&res.points, &res.pareto),
+        frontier_values(&kept, &pareto),
+        "budgeted frontier differs from filtered exhaustive"
+    );
+    assert_eq!(
+        selection_values(&res.points, &res.selected),
+        selection_values(&kept, &selected),
+        "budgeted selection differs from filtered exhaustive"
+    );
+}
+
+#[test]
+fn multi_network_pruned_sweep_is_bit_identical() {
+    let tech = Technology::default();
+    let accel = Accelerator::default();
+    let mut nets = vec![capsnet_mnist()];
+    nets.extend(random_networks(2, 5));
+    let profiles: Vec<_> = nets.iter().map(|n| profile_network(n, &accel)).collect();
+    let set = WorkloadSet::new(profiles).unwrap();
+
+    let res = dse::multi::run(&set, &tech, &accel, 8).expect("pruned co-design sweep");
+
+    let orgs = dse::multi::enumerate(&set).unwrap();
+    let tls = dse::multi::timelines(&set, &tech, &accel);
+    let (all, _, _) = dse::multi::evaluate_all_on(&Engine::new(8), &orgs, &set, &tech, &tls);
+    let pareto = dse::pareto_indices(&all);
+    let selected = dse::select_per_option(&all);
+
+    assert_eq!(res.stats.enumerated, all.len());
+    assert_eq!(res.stats.evaluated + res.stats.pruned, res.stats.enumerated);
+    assert_eq!(
+        frontier_values(&res.points, &res.pareto),
+        frontier_values(&all, &pareto),
+        "co-design frontier differs from exhaustive"
+    );
+    assert_eq!(
+        selection_values(&res.points, &res.selected),
+        selection_values(&all, &selected),
+        "co-design selection differs from exhaustive"
+    );
+}

@@ -182,7 +182,7 @@ fn prop_dse_selection_is_lowest_energy_per_option() {
         let points = dse::evaluate_all(&subset, &profile, &tech, &tl, 4);
         for (option, idx) in dse::select_per_option(&points) {
             for p in &points {
-                if p.option() == option {
+                if p.option().label() == option {
                     prop_assert!(
                         points[idx].energy_j <= p.energy_j + 1e-18,
                         "{option}: selected not minimal"
