@@ -3,23 +3,99 @@
 //! section Perf).  Reports configs/s, thread scaling vs the single-thread
 //! baseline, the CACTI cost-cache hit rate, the timeline-simulator event
 //! throughput and the full 3-D (area/energy/latency) sweep wall time, then
-//! writes the machine-readable baseline to `BENCH_dse.json` (schema v5:
-//! v4 + the branch-and-bound pruning counters of the streaming sweep —
-//! enumerated/pruned/evaluated and archive statistics per network) so
-//! future PRs have a perf trajectory to compare against.
+//! writes the machine-readable baseline to `BENCH_dse.json` (schema v6:
+//! v5 + the ISSUE 7 `evaluator` blocks — per-point points/s of the O(ops)
+//! reference vs the subtree-factored `SubtreeEval`, the `prep_s`/`eval_s`
+//! sweep wall-time split in the pruning counters, and an
+//! `evaluator_scaling` demo on a replicated large-op-count network that
+//! shows the O(ops) → O(components) asymptotic change) so future PRs have
+//! a perf trajectory to compare against.
 
 use descnet::cacti::cache;
 use descnet::config::{Accelerator, Technology};
-use descnet::dataflow::profile_network;
+use descnet::dataflow::{profile_network, NetworkProfile};
 use descnet::dse;
+use descnet::dse::evaluate::SubtreeEval;
 use descnet::dse::heuristic::{anneal, AnnealOptions};
 use descnet::dse::multi::{self, WorkloadSet};
+use descnet::dse::stream;
 use descnet::fleet::{self, FleetConfig, RoutingPolicy, ShardPlan};
 use descnet::model::{capsnet_mnist, deepcaps_cifar10, random_networks};
 use descnet::sim::Timeline;
 use descnet::util::bench::{throughput, time};
 use descnet::util::exec::Engine;
 use descnet::util::json::Json;
+
+/// Measures serial per-point evaluator throughput two ways over the same
+/// candidate sequence (whole subtrees in enumeration order, capped at
+/// `limit` points): the O(ops)-per-point reference
+/// (`evaluate::area_energy_latency`) vs the subtree-factored path
+/// (`SubtreeEval::prepare` once per subtree — *included* in the timed
+/// region — then O(components) per point).  Returns
+/// (points, reference_points_per_s, factored_points_per_s).
+fn evaluator_throughput(
+    label: &str,
+    profile: &NetworkProfile,
+    tech: &Technology,
+    accel: &Accelerator,
+    limit: usize,
+) -> (usize, f64, f64) {
+    let tl = Timeline::build(profile, tech, accel);
+    let sts = stream::subtrees(profile).expect("subtree derivation");
+    let mut used: Vec<&stream::Subtree> = Vec::new();
+    let mut points = 0usize;
+    for st in &sts {
+        if st.count() == 0 {
+            continue;
+        }
+        if points >= limit {
+            break;
+        }
+        points += st.count();
+        used.push(st);
+    }
+
+    let mut orgs = Vec::new();
+    for st in &used {
+        st.materialize_into(&mut orgs);
+    }
+    let r_ref = time(&format!("{label} reference evaluator ({points} pts)"), 3, || {
+        for org in &orgs {
+            std::hint::black_box(dse::evaluate::area_energy_latency(org, profile, tech, &tl));
+        }
+    });
+
+    let mut batch = Vec::new();
+    let r_fac = time(&format!("{label} factored evaluator ({points} pts)"), 3, || {
+        for st in &used {
+            let prep = SubtreeEval::prepare(st.kind(), st.sizes(), st.pools(), profile, tech, &tl);
+            batch.clear();
+            st.materialize_into(&mut batch);
+            for org in &batch {
+                std::hint::black_box(prep.eval(org));
+            }
+        }
+    });
+
+    let ref_pps = points as f64 / r_ref.mean_s.max(1e-12);
+    let fac_pps = points as f64 / r_fac.mean_s.max(1e-12);
+    println!(
+        "    -> evaluator: reference {:.0} pts/s, factored {:.0} pts/s ({:.1}x)",
+        ref_pps,
+        fac_pps,
+        fac_pps / ref_pps.max(1e-12),
+    );
+    (points, ref_pps, fac_pps)
+}
+
+fn evaluator_json(ref_pps: f64, fac_pps: f64, points: usize) -> Json {
+    Json::from_pairs(vec![
+        ("points", points.into()),
+        ("reference_points_per_s", ref_pps.into()),
+        ("factored_points_per_s", fac_pps.into()),
+        ("speedup", (fac_pps / ref_pps.max(1e-12)).into()),
+    ])
+}
 
 fn main() {
     let accel = Accelerator::default();
@@ -120,6 +196,11 @@ fn main() {
             std::hint::black_box(dse::select_per_option(&points));
         });
 
+        // ISSUE 7: per-point evaluator throughput, reference vs factored,
+        // over the full space (target: >= 3x points/s on capsnet).
+        let (eval_points, ref_pps, fac_pps) =
+            evaluator_throughput(&net.name, &profile, &tech, &accel, usize::MAX);
+
         // Heuristic (section V-D): speed/quality vs the exhaustive sweep.
         let hy_opt = points
             .iter()
@@ -170,8 +251,36 @@ fn main() {
             ("anneal_best_mj", (res.best.energy_j * 1e3).into()),
             ("anneal_evaluations", res.evaluations.into()),
             ("pruning", pruning_json(&sweep_stats)),
+            ("evaluator", evaluator_json(ref_pps, fac_pps, eval_points)),
         ]));
     }
+
+    // ISSUE 7 asymptotic demo: replicate the capsnet op list 32x (sizes
+    // and subtree structure unchanged — maxima are replication-invariant)
+    // so the reference pays 32x more per point while the factored path's
+    // per-point cost stays O(components).  The speedup here should dwarf
+    // the per-network numbers above.
+    let scaling_json = {
+        const REPLICAS: usize = 32;
+        let base = profile_network(&capsnet_mnist(), &accel);
+        let mut big = base.clone();
+        big.network = format!("capsnet-x{REPLICAS}").into();
+        for _ in 1..REPLICAS {
+            big.ops.extend(base.ops.iter().cloned());
+        }
+        println!("== evaluator scaling ({} ops) ==", big.ops.len());
+        let (points, ref_pps, fac_pps) =
+            evaluator_throughput("capsnet-x32", &big, &tech, &accel, 4_096);
+        Json::from_pairs(vec![
+            ("base_ops", base.ops.len().into()),
+            ("replicas", REPLICAS.into()),
+            ("ops", big.ops.len().into()),
+            ("points", points.into()),
+            ("reference_points_per_s", ref_pps.into()),
+            ("factored_points_per_s", fac_pps.into()),
+            ("speedup", (fac_pps / ref_pps.max(1e-12)).into()),
+        ])
+    };
 
     // Multi-network co-design sweep: the paper pair + 3 random networks
     // through `dse::multi` — records scenario throughput (nets x points/s).
@@ -248,7 +357,7 @@ fn main() {
     ]);
 
     let out = Json::from_pairs(vec![
-        ("schema", "descnet-bench-dse-v5".into()),
+        ("schema", "descnet-bench-dse-v6".into()),
         ("status", "recorded".into()),
         (
             "cacti_cache",
@@ -261,6 +370,7 @@ fn main() {
         ("networks", Json::Arr(nets_json)),
         ("multi_network", multi_json),
         ("fleet", fleet_json),
+        ("evaluator_scaling", scaling_json),
     ]);
     let path = std::path::Path::new("BENCH_dse.json");
     out.write_file(path).expect("writing BENCH_dse.json");
@@ -278,6 +388,8 @@ fn pruning_json(st: &descnet::dse::stream::SweepStats) -> Json {
         ("archive_inserts", st.archive_inserts.into()),
         ("archive_len", st.archive_len.into()),
         ("mean_bound_gap", st.mean_bound_gap().into()),
+        ("prep_s", st.prep_s.into()),
+        ("eval_s", st.eval_s.into()),
     ])
 }
 

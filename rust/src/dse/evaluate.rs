@@ -1,13 +1,29 @@
-//! Allocation-free fast path for the DSE inner loop.
+//! Allocation-free fast path for the DSE inner loop, plus the
+//! subtree-factored prepared evaluator the branch-and-bound sweep runs on.
 //!
 //! `energy::evaluate_org` + `pmu::evaluate` are the readable, reporting
 //! implementations — but they build `OrgEnergy`/`PmuReport`/`String`s per
 //! configuration, and the exhaustive sweep evaluates ~half a million
-//! configurations.  This module computes the identical (area, energy)
+//! configurations.  [`area_energy`] computes the identical (area, energy)
 //! objective with one pass over the operations and zero heap allocation
 //! per configuration; `tests::fast_matches_reference` pins it bit-close to
 //! the reference implementation (see EXPERIMENTS.md section Perf/L3 for the
 //! before/after).
+//!
+//! [`SubtreeEval`] (DESIGN.md section 14) goes one step further for the
+//! sweep: within a `dse::stream::Subtree` every component SIZE is fixed and
+//! only SECTOR counts vary, so coverage, access splits, op durations and
+//! therefore the entire dynamic energy are subtree-invariant, and the
+//! sector-dependent static/wakeup terms take one of |pool| values per
+//! component.  Preparing those tables once per subtree turns each point
+//! evaluation from O(ops) into O(components) — four table lookups plus an
+//! area sum.  The factored path is **bit-identical** to [`area_energy`] /
+//! [`area_energy_latency`] by construction: `area_energy`'s accumulation is
+//! deliberately structured as one dynamic accumulator plus four
+//! per-component static accumulators combined at the end, and the prepared
+//! tables replay exactly those per-accumulator addition sequences (f64
+//! addition is deterministic, so equal sequences give equal bits).  Pinned
+//! by `rust/tests/factored_eval.rs` and `rust/tests/prune_exact.rs`.
 
 use crate::cacti::{cache, SramConfig};
 use crate::config::Technology;
@@ -43,6 +59,16 @@ struct CompCosts {
 /// Fast (area_mm2, energy_j) evaluation of one organization; the energy is
 /// per inference (the profile's per-batch totals amortized over
 /// `NetworkProfile::batch`, matching `energy::evaluate_org`).
+///
+/// ACCUMULATION-ORDER CONTRACT (DESIGN.md section 14): the energy is summed
+/// as one *dynamic* accumulator plus four *per-component static*
+/// accumulators, combined only at the end as
+/// `dyn + stat[shared] + stat[data] + stat[weight] + stat[acc]` (present
+/// components in `Component::ALL` order) and then divided by the batch.
+/// [`SubtreeEval`] replays exactly these per-accumulator sequences from its
+/// prepared tables, which is what makes the factored sweep path
+/// bit-identical to this reference — do not reorder the additions here
+/// without updating the factored path and DESIGN.md section 14 together.
 pub fn area_energy(org: &Organization, profile: &NetworkProfile, tech: &Technology) -> (f64, f64) {
     // One technology fingerprint for all four component lookups.
     let costs_of = cache::for_tech(tech);
@@ -69,7 +95,8 @@ pub fn area_energy(org: &Organization, profile: &NetworkProfile, tech: &Technolo
     let cap = |c: &CompCosts| if c.present { c.size } else { 0 };
     let inv_clock = 1.0 / profile.clock_hz;
 
-    let mut energy = 0.0;
+    let mut dyn_e = 0.0;
+    let mut stat = [0.0f64; 4];
     // Previous ON-sector counts for wakeup accounting (all start OFF).
     let mut prev_on = [0usize; 4];
 
@@ -100,173 +127,36 @@ pub fn area_energy(org: &Organization, profile: &NetworkProfile, tech: &Technolo
         let (dd, ds) = split(d_acc, ded_d, op.usage_d);
         let (wd, ws) = split(w_acc, ded_w, op.usage_w);
         let (ad, as_) = split(a_acc, ded_a, op.usage_a);
-        energy += dd * data.access_e
+        dyn_e += dd * data.access_e
             + wd * weight.access_e
             + ad * acc.access_e
             + (ds + ws + as_) * shared.access_e;
 
-        // Static + wakeup per component.
+        // Static + wakeup per component, each into its own accumulator.
         let needs = [sh, ded_d, ded_w, ded_a];
         for (i, c) in comps.iter().enumerate() {
             if !c.present {
                 continue;
             }
             if c.sectors <= 1 {
-                energy += c.leak_on * dur;
+                stat[i] += c.leak_on * dur;
             } else {
                 let on = needs[i].div_ceil(c.sector_bytes);
                 let off = c.sectors - on;
-                energy += dur * (on as f64 * c.leak_sector_on + off as f64 * c.leak_sector_off);
-                energy += on.saturating_sub(prev_on[i]) as f64 * c.wakeup_e;
+                stat[i] += dur * (on as f64 * c.leak_sector_on + off as f64 * c.leak_sector_off);
+                stat[i] += on.saturating_sub(prev_on[i]) as f64 * c.wakeup_e;
                 prev_on[i] = on;
             }
         }
     }
 
+    let mut energy = dyn_e;
+    for (i, c) in comps.iter().enumerate() {
+        if c.present {
+            energy += stat[i];
+        }
+    }
     let area = comps.iter().filter(|c| c.present).map(|c| c.area).sum();
-    (area, energy / profile.batch.max(1) as f64)
-}
-
-/// Admissible subtree lower bound on (area_mm2, energy_j) for the
-/// branch-and-bound sweep (`dse::stream`).
-///
-/// Within a subtree all component SIZES are fixed and only the SECTOR
-/// counts vary over `pools`, so coverage — and with it every
-/// usage-dependent quantity in [`area_energy`] — is subtree-constant.
-/// The bound replays `area_energy`'s accumulation with the *same
-/// expression shapes in the same order*, but substitutes at every step the
-/// per-component minimum over the subtree's sector variants, and drops the
-/// (non-negative) wakeup additions.  IEEE-754 addition is monotone in both
-/// operands and multiplication by a non-negative factor is monotone, so
-/// the bound's accumulator never exceeds the real accumulator of *any*
-/// completion — the bound is admissible bit-wise, with no epsilon slack
-/// (pinned by `stream::tests::bound_is_admissible_bitwise` and
-/// `rust/tests/prune_exact.rs`).
-///
-/// `sizes`/`pools` are indexed [shared, data, weight, acc]
-/// (`Component::ALL` order).  Presence follows the constructor semantics
-/// of `kind`: SMP instantiates only the shared memory, SEP only the three
-/// dedicated ones, and HY all four — even at size 0, matching
-/// [`Organization::hy`].
-pub(crate) fn area_energy_lower_bound(
-    kind: OrgKind,
-    sizes: [usize; 4],
-    pools: &[Vec<usize>; 4],
-    profile: &NetworkProfile,
-    tech: &Technology,
-) -> (f64, f64) {
-    let costs_of = cache::for_tech(tech);
-    let present = match kind {
-        OrgKind::Smp => [true, false, false, false],
-        OrgKind::Sep => [false, true, true, true],
-        OrgKind::Hy => [true, true, true, true],
-    };
-
-    // Per-variant static-leak constants: (sectors, sector_bytes, leak_on,
-    // leak_sector_on, leak_sector_off).  At most |sector pool| ≈ 5 entries
-    // per component, all served from the shared CACTI cache.
-    #[derive(Default)]
-    struct BoundComp {
-        present: bool,
-        size: usize,
-        min_access_e: f64,
-        min_area: f64,
-        variants: Vec<(usize, usize, f64, f64, f64)>,
-    }
-    let mut comps: [BoundComp; 4] = Default::default();
-    for idx in 0..4 {
-        if !present[idx] {
-            continue;
-        }
-        let ports = if idx == 0 { 3 } else { 1 };
-        let c = &mut comps[idx];
-        c.present = true;
-        c.size = sizes[idx];
-        c.min_access_e = f64::INFINITY;
-        c.min_area = f64::INFINITY;
-        for &sc in &pools[idx] {
-            let cfg = SramConfig::new(sizes[idx], ports, sc);
-            let costs = costs_of.costs(&cfg);
-            c.min_access_e = c.min_access_e.min(costs.access_energy_j);
-            c.min_area = c.min_area.min(costs.area_mm2);
-            c.variants.push((
-                cfg.sectors,
-                cfg.sector_bytes().max(1),
-                costs.leak_on_w,
-                costs.leak_sector_on_w,
-                costs.leak_sector_off_w,
-            ));
-        }
-        if c.variants.is_empty() {
-            // Empty sector pool ⟹ the subtree has zero candidates; the
-            // sweep never asks for its bound.  Keep the terms neutral.
-            c.min_access_e = 0.0;
-            c.min_area = 0.0;
-        }
-    }
-    let [shared, data, weight, acc] = &comps;
-    let cap = |c: &BoundComp| if c.present { c.size } else { 0 };
-    let inv_clock = 1.0 / profile.clock_hz;
-
-    let mut energy = 0.0;
-    for op in &profile.ops {
-        let dur = op.cycles as f64 * inv_clock;
-
-        // Coverage: size-only, identical for every completion.
-        let ded_d = op.usage_d.min(cap(data));
-        let ded_w = op.usage_w.min(cap(weight));
-        let ded_a = op.usage_a.min(cap(acc));
-        let sh = (op.usage_d - ded_d) + (op.usage_w - ded_w) + (op.usage_a - ded_a);
-        debug_assert!(sh <= cap(shared), "subtree must fit profile");
-
-        // Dynamic energy with per-component minimum access energies —
-        // same expression tree as `area_energy`.
-        let d_acc = (op.rd_d + op.wr_d) as f64;
-        let w_acc = (op.rd_w + op.wr_w) as f64;
-        let a_acc = (op.rd_a + op.wr_a) as f64;
-        let split = |acc_count: f64, ded: usize, total: usize| -> (f64, f64) {
-            if total == 0 {
-                (0.0, 0.0)
-            } else {
-                let f = ded as f64 / total as f64;
-                (acc_count * f, acc_count * (1.0 - f))
-            }
-        };
-        let (dd, ds) = split(d_acc, ded_d, op.usage_d);
-        let (wd, ws) = split(w_acc, ded_w, op.usage_w);
-        let (ad, as_) = split(a_acc, ded_a, op.usage_a);
-        energy += dd * data.min_access_e
-            + wd * weight.min_access_e
-            + ad * acc.min_access_e
-            + (ds + ws + as_) * shared.min_access_e;
-
-        // Static energy: per component, the minimum over sector variants
-        // of that variant's exact static term (wakeup terms dropped —
-        // they only ever add energy).
-        let needs = [sh, ded_d, ded_w, ded_a];
-        for (i, c) in comps.iter().enumerate() {
-            if !c.present || c.variants.is_empty() {
-                continue;
-            }
-            let mut static_min = f64::INFINITY;
-            for &(sectors, sector_bytes, leak_on, ls_on, ls_off) in &c.variants {
-                let term = if sectors <= 1 {
-                    leak_on * dur
-                } else {
-                    let on = needs[i].div_ceil(sector_bytes);
-                    let off = sectors - on;
-                    dur * (on as f64 * ls_on + off as f64 * ls_off)
-                };
-                static_min = static_min.min(term);
-            }
-            energy += static_min;
-        }
-    }
-
-    let mut area = 0.0;
-    for c in comps.iter().filter(|c| c.present) {
-        area += c.min_area;
-    }
     (area, energy / profile.batch.max(1) as f64)
 }
 
@@ -286,6 +176,305 @@ pub fn area_energy_latency(
     let batch_s =
         timeline.batch_latency_s() + sim::wakeup_exposure_s(timeline, profile, org, tech);
     (area, energy, batch_s / profile.batch.max(1) as f64)
+}
+
+/// One candidate sector option of one component within a subtree: the full
+/// op-summed static contribution, the area, and the wakeup-boundary set.
+struct SectorOption {
+    /// The option's sector count (the lookup key within the pool).
+    sectors: usize,
+    /// Σ over ops of this component's static leak + wakeup energy [J]
+    /// (batch-undivided), accumulated in op order with the exact
+    /// leak-then-wakeup addition sequence of [`area_energy`].
+    static_e: f64,
+    area_mm2: f64,
+    /// Bit `k` set ⟺ this option's ON-sector count rises at op `k` (k > 0)
+    /// — the wake boundaries feeding the latency-exposure union.  Only
+    /// populated for gated options when some boundary charge is nonzero.
+    rise: Vec<u64>,
+    /// sectors > 1: participates in wakeup exposure.
+    gated: bool,
+}
+
+/// One component's prepared table: candidate sector counts (pool order)
+/// and their precomputed costs.
+#[derive(Default)]
+struct CompTable {
+    present: bool,
+    options: Vec<SectorOption>,
+    /// min over options of `static_e` / `area_mm2` (0.0 when the pool is
+    /// empty — the subtree then has no candidates and is never evaluated).
+    min_static_e: f64,
+    min_area: f64,
+}
+
+/// Per-subtree prepared evaluator (DESIGN.md section 14): everything
+/// size-dependent — coverage, access splits, op durations, the whole
+/// dynamic energy, and the per-sector-option static/wakeup sums — is
+/// computed once on subtree entry, so evaluating one point is O(components)
+/// table lookups instead of an O(ops) pass.
+///
+/// Bit-exactness contract: [`SubtreeEval::eval`] returns exactly the bits
+/// of [`area_energy_latency`] for every organization drawn from the
+/// prepared subtree (pinned by `rust/tests/factored_eval.rs`), because the
+/// tables replay the reference's per-accumulator addition sequences — see
+/// the accumulation-order contract on [`area_energy`].
+///
+/// The prepared tables also yield the sweep's admissible lower bound
+/// ([`SubtreeEval::bound`]): per component the minimum over the pool of the
+/// *full* per-option static sum (wakeup included — each minimum is realized
+/// by an actual option, unlike the per-op minima of the pre-factored bound,
+/// so this bound is at least as tight), combined in the evaluator's exact
+/// accumulation shape.  IEEE-754 addition and division by a positive
+/// constant are monotone, so substituting each table minimum can only lower
+/// the result — the bound never exceeds any completion, bit-wise.
+pub struct SubtreeEval {
+    comps: [CompTable; 4],
+    /// Dynamic energy Σ over ops [J], batch-undivided — subtree-invariant
+    /// because CACTI access energies depend on (size, ports) only.
+    dyn_e: f64,
+    /// `profile.batch.max(1)` — the per-inference divisor.
+    batch: f64,
+    /// Org-independent `timeline.batch_latency_s()`.
+    base_latency_s: f64,
+    /// Per-op wakeup-boundary charge `(wakeup_latency - prev_dur).max(0)`
+    /// [s]; empty when the wakeup latency is ≤ 0.  Index 0 is never
+    /// charged (op 0's sectors wake during the previous frame).
+    charge: Vec<f64>,
+    /// Some charge is > 0 (at the paper's 0.072 ns wakeup every boundary
+    /// masks and every exposure is exactly +0.0, so the whole union walk
+    /// can be skipped without changing a bit).
+    has_charge: bool,
+}
+
+impl SubtreeEval {
+    /// Prepares the factored evaluator for one subtree: `sizes`/`pools`
+    /// are indexed [shared, data, weight, acc] (`Component::ALL` order),
+    /// presence follows `kind` via [`OrgKind::presence`].  One pass over
+    /// the ops per (component, sector option) — O(ops × Σ|pool|) once,
+    /// against O(ops) per point saved for every candidate in the subtree.
+    pub fn prepare(
+        kind: OrgKind,
+        sizes: [usize; 4],
+        pools: &[Vec<usize>; 4],
+        profile: &NetworkProfile,
+        tech: &Technology,
+        timeline: &sim::Timeline,
+    ) -> SubtreeEval {
+        let costs_of = cache::for_tech(tech);
+        let present = kind.presence();
+        let n = profile.ops.len();
+        let inv_clock = 1.0 / profile.clock_hz;
+        let cap = |i: usize| if present[i] { sizes[i] } else { 0 };
+
+        // Subtree-constant per-op precomputation: coverage and durations.
+        let mut needs: Vec<[usize; 4]> = Vec::with_capacity(n);
+        let mut durs: Vec<f64> = Vec::with_capacity(n);
+        for op in &profile.ops {
+            let ded_d = op.usage_d.min(cap(1));
+            let ded_w = op.usage_w.min(cap(2));
+            let ded_a = op.usage_a.min(cap(3));
+            let sh = (op.usage_d - ded_d) + (op.usage_w - ded_w) + (op.usage_a - ded_a);
+            debug_assert!(
+                sh <= cap(0),
+                "subtree must fit profile (stream::subtrees rejects misfits)"
+            );
+            needs.push([sh, ded_d, ded_w, ded_a]);
+            durs.push(op.cycles as f64 * inv_clock);
+        }
+
+        // Access energies are sector-independent (CACTI: a function of
+        // size and ports only), so any pool entry yields the same value
+        // and the dynamic term collapses to ONE number for the subtree —
+        // accumulated in the exact per-op expression order of
+        // `area_energy`.
+        let mut access_e = [0.0f64; 4];
+        for i in 0..4 {
+            if present[i] {
+                let sc = pools[i].first().copied().unwrap_or(1);
+                let ports = if i == 0 { 3 } else { 1 };
+                access_e[i] = costs_of
+                    .costs(&SramConfig::new(sizes[i], ports, sc))
+                    .access_energy_j;
+            }
+        }
+        let mut dyn_e = 0.0;
+        for (k, op) in profile.ops.iter().enumerate() {
+            let [_, ded_d, ded_w, ded_a] = needs[k];
+            let d_acc = (op.rd_d + op.wr_d) as f64;
+            let w_acc = (op.rd_w + op.wr_w) as f64;
+            let a_acc = (op.rd_a + op.wr_a) as f64;
+            let split = |acc_count: f64, ded: usize, total: usize| -> (f64, f64) {
+                if total == 0 {
+                    (0.0, 0.0)
+                } else {
+                    let f = ded as f64 / total as f64;
+                    (acc_count * f, acc_count * (1.0 - f))
+                }
+            };
+            let (dd, ds) = split(d_acc, ded_d, op.usage_d);
+            let (wd, ws) = split(w_acc, ded_w, op.usage_w);
+            let (ad, as_) = split(a_acc, ded_a, op.usage_a);
+            dyn_e += dd * access_e[1]
+                + wd * access_e[2]
+                + ad * access_e[3]
+                + (ds + ws + as_) * access_e[0];
+        }
+
+        // Org-independent wakeup-boundary charges (`sim::wakeup_exposure_s`
+        // computes the identical expression per boundary, division and
+        // all).  At wl <= 0 the reference returns 0.0 before summing.
+        let wl = tech.wakeup_latency_s;
+        let mut charge: Vec<f64> = Vec::new();
+        let mut has_charge = false;
+        if wl > 0.0 {
+            charge = vec![0.0f64; n];
+            for k in 1..n {
+                let prev_dur = timeline.ops[k - 1].duration_cycles() as f64 / timeline.clock_hz;
+                let c = (wl - prev_dur).max(0.0);
+                charge[k] = c;
+                has_charge |= c > 0.0;
+            }
+        }
+
+        // Per-(component, sector option) static/wakeup sums and wake
+        // boundaries — the accumulation sequence mirrors `area_energy`'s
+        // per-component accumulator and `sim::wakeup_exposure_s`'s
+        // rise detection exactly.
+        let words = n.div_ceil(64);
+        let mut comps: [CompTable; 4] = Default::default();
+        for i in 0..4 {
+            let t = &mut comps[i];
+            t.present = present[i];
+            if !present[i] {
+                continue;
+            }
+            let ports = if i == 0 { 3 } else { 1 };
+            t.min_static_e = f64::INFINITY;
+            t.min_area = f64::INFINITY;
+            for &sc in &pools[i] {
+                let cfg = SramConfig::new(sizes[i], ports, sc);
+                let costs = costs_of.costs(&cfg);
+                let sector_bytes = cfg.sector_bytes().max(1);
+                let gated = cfg.sectors > 1;
+                let mut static_e = 0.0;
+                let mut rise: Vec<u64> = if gated && has_charge {
+                    vec![0u64; words]
+                } else {
+                    Vec::new()
+                };
+                if !gated {
+                    for &dur in &durs {
+                        static_e += costs.leak_on_w * dur;
+                    }
+                } else {
+                    let mut prev_on = 0usize;
+                    for k in 0..n {
+                        let on = needs[k][i].div_ceil(sector_bytes);
+                        let off = cfg.sectors - on;
+                        static_e += durs[k]
+                            * (on as f64 * costs.leak_sector_on_w
+                                + off as f64 * costs.leak_sector_off_w);
+                        static_e += on.saturating_sub(prev_on) as f64 * costs.wakeup_energy_j;
+                        if !rise.is_empty() && k > 0 && on > prev_on {
+                            rise[k / 64] |= 1u64 << (k % 64);
+                        }
+                        prev_on = on;
+                    }
+                }
+                t.min_static_e = t.min_static_e.min(static_e);
+                t.min_area = t.min_area.min(costs.area_mm2);
+                t.options.push(SectorOption {
+                    sectors: cfg.sectors,
+                    static_e,
+                    area_mm2: costs.area_mm2,
+                    rise,
+                    gated,
+                });
+            }
+            if t.options.is_empty() {
+                // Empty sector pool ⟹ zero candidates; the sweep skips
+                // the subtree, keep the bound terms neutral.
+                t.min_static_e = 0.0;
+                t.min_area = 0.0;
+            }
+        }
+
+        SubtreeEval {
+            comps,
+            dyn_e,
+            batch: profile.batch.max(1) as f64,
+            base_latency_s: timeline.batch_latency_s(),
+            charge,
+            has_charge,
+        }
+    }
+
+    /// Evaluates one organization drawn from the prepared subtree:
+    /// (area_mm2, energy_j, latency_s) per inference, bit-identical to
+    /// [`area_energy_latency`].  O(components) — four pool lookups plus,
+    /// only in exposed-wakeup regimes, a bitset walk over wake boundaries.
+    pub fn eval(&self, org: &Organization) -> (f64, f64, f64) {
+        let mut energy = self.dyn_e;
+        let mut area = 0.0;
+        let mut rises: [Option<&[u64]>; 4] = [None; 4];
+        for (i, c) in Component::ALL.iter().enumerate() {
+            let t = &self.comps[i];
+            if !t.present {
+                continue;
+            }
+            let sectors = org.spec(*c).map(|s| s.sectors).unwrap_or(1);
+            let opt = t
+                .options
+                .iter()
+                .find(|o| o.sectors == sectors)
+                .expect("organization not drawn from the prepared subtree");
+            energy += opt.static_e;
+            area += opt.area_mm2;
+            if opt.gated && !opt.rise.is_empty() {
+                rises[i] = Some(opt.rise.as_slice());
+            }
+        }
+
+        // Wakeup exposure: one charge per op where ANY gated component
+        // wakes — the union of the options' rise bitsets, summed in
+        // ascending op order (the reference's exact addition sequence).
+        let mut exposure = 0.0;
+        if self.has_charge && rises.iter().any(|r| r.is_some()) {
+            let words = self.charge.len().div_ceil(64);
+            for w in 0..words {
+                let mut m = 0u64;
+                for r in rises.iter().flatten() {
+                    m |= r[w];
+                }
+                while m != 0 {
+                    let k = w * 64 + m.trailing_zeros() as usize;
+                    exposure += self.charge[k];
+                    m &= m - 1;
+                }
+            }
+        }
+
+        let batch_s = self.base_latency_s + exposure;
+        (area, energy / self.batch, batch_s / self.batch)
+    }
+
+    /// Admissible lower bound on (area_mm2, energy_j, latency_s) over
+    /// every candidate of the prepared subtree, bit-wise (never exceeds
+    /// any completion) — see the type-level docs for the argument.
+    pub fn bound(&self) -> (f64, f64, f64) {
+        let mut energy = self.dyn_e;
+        let mut area = 0.0;
+        for t in &self.comps {
+            if t.present {
+                energy += t.min_static_e;
+                area += t.min_area;
+            }
+        }
+        // Exposure is ≥ +0.0 for every candidate, so the org-independent
+        // base timeline is a bit-tight latency bound.
+        (area, energy / self.batch, self.base_latency_s / self.batch)
+    }
 }
 
 #[cfg(test)]
@@ -347,6 +536,38 @@ mod tests {
                 "{}: energy {fast_e} vs {slow_e}",
                 org.label()
             );
+        }
+    }
+
+    #[test]
+    fn factored_eval_is_bit_identical_to_reference_on_capsnet() {
+        // Smoke of the central ISSUE 7 property (the full sweep across
+        // networks, batches and wakeup regimes lives in
+        // rust/tests/factored_eval.rs): every candidate of every subtree
+        // evaluates to the same bits through the prepared tables as
+        // through the per-point reference.
+        let accel = Accelerator::default();
+        let tech = Technology::default();
+        let p = profile_network(&capsnet_mnist(), &accel);
+        let tl = sim::Timeline::build(&p, &tech, &accel);
+        let mut batch = Vec::new();
+        for st in dse::stream::subtrees(&p).unwrap() {
+            if st.count() == 0 {
+                continue;
+            }
+            let prep = SubtreeEval::prepare(st.kind(), st.sizes(), st.pools(), &p, &tech, &tl);
+            batch.clear();
+            st.materialize_into(&mut batch);
+            for (k, org) in batch.iter().enumerate() {
+                if k % 7 != 0 {
+                    continue;
+                }
+                let fast = prep.eval(org);
+                let slow = area_energy_latency(org, &p, &tech, &tl);
+                assert_eq!(fast.0.to_bits(), slow.0.to_bits(), "{}: area", org.label());
+                assert_eq!(fast.1.to_bits(), slow.1.to_bits(), "{}: energy", org.label());
+                assert_eq!(fast.2.to_bits(), slow.2.to_bits(), "{}: latency", org.label());
+            }
         }
     }
 }

@@ -1,5 +1,5 @@
 //! Streaming branch-and-bound sweep over the scratchpad design space
-//! (DESIGN.md section 13).
+//! (DESIGN.md sections 13–14).
 //!
 //! The exhaustive pipeline materialized every organization
 //! (`dse::enumerate`), evaluated all of them, and only then filtered to
@@ -10,19 +10,27 @@
 //! and only the SECTOR counts vary over the pools, so
 //!
 //! * coverage (which bytes land in which memory) is subtree-constant,
-//!   making an admissible lower bound on (area, energy, latency) cheap —
-//!   [`evaluate::area_energy_lower_bound`] replays the exact evaluator
-//!   with per-component minima over the sector pools;
-//! * a subtree whose bound is already weakly dominated by an evaluated
-//!   point (tracked incrementally in a [`Archive3`] staircase) can be
-//!   culled wholesale *before* `evaluate::area_energy` ever runs.
+//!   and with it the whole dynamic energy: [`evaluate::SubtreeEval`]
+//!   prepares per-sector-option cost tables once on subtree entry,
+//!   turning each surviving point evaluation into O(components) table
+//!   lookups instead of an O(ops) pass (ISSUE 7);
+//! * the same prepared tables yield an admissible lower bound on
+//!   (area, energy, latency) — per component the minimum over the pool of
+//!   the full per-option sum — so a subtree whose bound is already weakly
+//!   dominated by an evaluated point (tracked incrementally in a
+//!   [`Archive3`] staircase) is culled wholesale before any candidate is
+//!   materialized.
 //!
 //! Exactness is non-negotiable and holds *bit-wise*, not approximately:
 //!
+//! * the factored evaluator replays the reference accumulation order of
+//!   `evaluate::area_energy` exactly (see its accumulation-order
+//!   contract), so surviving points carry identical bits to the
+//!   exhaustive pipeline;
 //! * the bound never exceeds any completion of its subtree (IEEE-754
-//!   monotonicity of the mirrored accumulation — see
-//!   `area_energy_lower_bound`), so a culled subtree only loses points
-//!   that are weakly dominated by an earlier surviving point;
+//!   monotonicity of the mirrored combine — see [`evaluate::SubtreeEval`]),
+//!   so a culled subtree only loses points that are weakly dominated by
+//!   an earlier surviving point;
 //! * weakly dominated points can never enter the 3-D frontier
 //!   (`frontier3` keeps the first occurrence of a duplicate, and the
 //!   archive member *is* earlier in enumeration order), and by the same
@@ -44,9 +52,12 @@
 //! archive state for any thread count — `rust/tests/prune_exact.rs` pins
 //! threads=1 vs N bit-equality, and pruned-vs-exhaustive bit-identity of
 //! frontier and selection across both seed networks and seeded generator
-//! networks.
+//! networks.  The [`SweepStats`] wall-time split (`prep_s`/`eval_s`) is
+//! the only nondeterministic output and is excluded from all fingerprints.
 
-use anyhow::{Context, Result};
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
 
 use crate::config::Technology;
 use crate::dataflow::NetworkProfile;
@@ -76,9 +87,50 @@ impl Subtree {
         self.kind
     }
 
+    /// Component sizes, `Component::ALL` order (0 for absent components).
+    pub fn sizes(&self) -> [usize; 4] {
+        self.sizes
+    }
+
+    /// Candidate sector pools, `Component::ALL` order.
+    pub fn pools(&self) -> &[Vec<usize>; 4] {
+        &self.pools
+    }
+
     /// Number of candidate organizations in this subtree.
     pub fn count(&self) -> usize {
         self.pools.iter().map(|p| p.len()).product()
+    }
+
+    /// Hard feasibility check: every op's residual (the bytes not covered
+    /// by the dedicated memories) must fit the shared memory.  The
+    /// evaluators assume this — `evaluate::area_energy` only carries a
+    /// `debug_assert!`, which vanishes in release builds and would let an
+    /// unfitting subtree produce silently wrong energies — so
+    /// [`subtrees`] rejects misfits with a hard error instead (ISSUE 7
+    /// bugfix; the Algorithm 1/2 size derivations guarantee the fit for
+    /// well-formed profiles, making this a guard against inconsistent or
+    /// hand-built inputs).
+    pub(crate) fn ensure_fits(&self, profile: &NetworkProfile) -> Result<()> {
+        let present = self.kind.presence();
+        let cap = |i: usize| if present[i] { self.sizes[i] } else { 0 };
+        for op in &profile.ops {
+            let ded_d = op.usage_d.min(cap(1));
+            let ded_w = op.usage_w.min(cap(2));
+            let ded_a = op.usage_a.min(cap(3));
+            let sh = (op.usage_d - ded_d) + (op.usage_w - ded_w) + (op.usage_a - ded_a);
+            ensure!(
+                sh <= cap(0),
+                "{} subtree (sizes {:?}) cannot hold op `{}` of `{}`: \
+                 {sh} residual bytes exceed the {}-byte shared memory",
+                self.kind.label(),
+                self.sizes,
+                op.name,
+                profile.network,
+                cap(0),
+            );
+        }
+        Ok(())
     }
 
     fn org(&self, sc: [usize; 4]) -> Organization {
@@ -128,7 +180,8 @@ impl Subtree {
 /// The full design space of a profile as a sequence of subtrees, in the
 /// exact order `dse::enumerate` has always emitted candidates: the SEP
 /// subtree, the SMP subtree, then one HY subtree per (d, w, a) size
-/// triple of Algorithm 1 × Algorithm 2.
+/// triple of Algorithm 1 × Algorithm 2.  Every emitted subtree is
+/// checked to fit the profile (see [`Subtree::ensure_fits`]).
 pub fn subtrees(profile: &NetworkProfile) -> Result<Vec<Subtree>> {
     let mut out = Vec::new();
     let (sd, sw, sa) = sep_sizes(profile);
@@ -183,6 +236,9 @@ pub fn subtrees(profile: &NetworkProfile) -> Result<Vec<Subtree>> {
             }
         }
     }
+    for st in &out {
+        st.ensure_fits(profile)?;
+    }
     Ok(out)
 }
 
@@ -194,8 +250,8 @@ fn or_one(pool: Vec<usize>) -> Vec<usize> {
     }
 }
 
-/// Branch-and-bound counters (BENCH schema v5 `pruning` section, the CLI's
-/// `dse --stats`, and the E23 pruning-effectiveness table).
+/// Branch-and-bound counters (BENCH schema v6 `pruning` section, the CLI's
+/// `dse --stats`, and the E23/E24 effectiveness tables).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SweepStats {
     /// Candidates the full cross-product contains.
@@ -215,6 +271,12 @@ pub struct SweepStats {
     /// energy gaps, (min evaluated energy − bound energy) / min energy.
     pub bound_gap_sum: f64,
     pub bound_gap_count: usize,
+    /// Wall-time split of the sweep (ISSUE 7): subtree preparation +
+    /// bounding vs point evaluation of the surviving candidates.  The
+    /// only nondeterministic fields — excluded from every fingerprint and
+    /// thread-determinism comparison.
+    pub prep_s: f64,
+    pub eval_s: f64,
 }
 
 impl SweepStats {
@@ -241,17 +303,29 @@ impl SweepStats {
 /// The sweep's per-objective-space adapter: single-network and
 /// multi-network (co-design) sweeps share the driver below and differ
 /// only in how a candidate is scored and bounded.
+///
+/// ISSUE 7 shape: the driver calls [`SweepEval::prepare`] once per
+/// subtree, and both the bound and every point evaluation run off the
+/// prepared state — the per-point cost is O(components), not O(ops).
 pub(crate) trait SweepEval: Sync {
     /// Side data carried along with each surviving point (per-network
     /// energy/latency vectors for the co-design sweep).
     type Extra: Send;
 
-    /// Full evaluation of one candidate.
-    fn eval(&self, org: &Organization) -> (DsePoint, Self::Extra);
+    /// Per-subtree prepared state (factored cost tables), shared by the
+    /// bound and all candidate evaluations of the subtree.
+    type Prep: Sync;
+
+    /// Builds the factored evaluator state for one subtree — the only
+    /// O(ops) work; paid once per subtree.
+    fn prepare(&self, st: &Subtree) -> Self::Prep;
+
+    /// Full evaluation of one candidate off the prepared state.
+    fn eval(&self, prep: &Self::Prep, org: &Organization) -> (DsePoint, Self::Extra);
 
     /// Admissible lower bound on (area, energy, latency) over *every*
     /// candidate of the subtree, bit-wise (never exceeds any completion).
-    fn bound(&self, st: &Subtree) -> (f64, f64, f64);
+    fn bound(&self, prep: &Self::Prep) -> (f64, f64, f64);
 
     /// Whether an evaluated point may act as a dominator in the archive
     /// (must be at least as good as any point it prunes on every
@@ -268,23 +342,37 @@ pub(crate) struct SingleNet<'a> {
 
 impl SweepEval for SingleNet<'_> {
     type Extra = ();
+    type Prep = evaluate::SubtreeEval;
 
-    fn eval(&self, org: &Organization) -> (DsePoint, ()) {
-        (super::eval_one(org, self.profile, self.tech, self.timeline), ())
-    }
-
-    fn bound(&self, st: &Subtree) -> (f64, f64, f64) {
-        let (area, energy) = evaluate::area_energy_lower_bound(
+    fn prepare(&self, st: &Subtree) -> Self::Prep {
+        evaluate::SubtreeEval::prepare(
             st.kind,
             st.sizes,
             &st.pools,
             self.profile,
             self.tech,
-        );
-        // Wakeup exposure is ≥ 0 and exactly 0 at zero wakeup latency, so
-        // the org-independent timeline is a bit-tight latency bound.
-        let latency = self.timeline.batch_latency_s() / self.profile.batch.max(1) as f64;
-        (area, energy, latency)
+            self.timeline,
+        )
+    }
+
+    fn eval(&self, prep: &Self::Prep, org: &Organization) -> (DsePoint, ()) {
+        // Bit-identical to `dse::eval_one` (pinned by
+        // rust/tests/factored_eval.rs + prune_exact.rs), at O(components)
+        // instead of O(ops).
+        let (area_mm2, energy_j, latency_s) = prep.eval(org);
+        (
+            DsePoint {
+                org: org.clone(),
+                area_mm2,
+                energy_j,
+                latency_s,
+            },
+            (),
+        )
+    }
+
+    fn bound(&self, prep: &Self::Prep) -> (f64, f64, f64) {
+        prep.bound()
     }
 
     fn dominator_ok(&self, org: &Organization) -> bool {
@@ -294,7 +382,7 @@ impl SweepEval for SingleNet<'_> {
 
 /// Multi-network co-design sweep: the mix-weighted objective space of
 /// `dse::multi::run_on` (subtrees come from the merged pseudo-profile,
-/// scoring from the member profiles).
+/// scoring from the member profiles — one prepared evaluator each).
 pub(crate) struct MultiSet<'a> {
     pub set: &'a WorkloadSet,
     pub tech: &'a Technology,
@@ -303,32 +391,59 @@ pub(crate) struct MultiSet<'a> {
 
 impl SweepEval for MultiSet<'_> {
     type Extra = (Vec<f64>, Vec<f64>);
+    type Prep = Vec<evaluate::SubtreeEval>;
 
-    fn eval(&self, org: &Organization) -> (DsePoint, Self::Extra) {
-        let (point, per_net_j, per_net_lat) =
-            super::multi::eval_one(org, self.set, self.tech, self.tls);
-        (point, (per_net_j, per_net_lat))
+    fn prepare(&self, st: &Subtree) -> Self::Prep {
+        self.set
+            .profiles()
+            .iter()
+            .zip(self.tls)
+            .map(|(p, tl)| {
+                evaluate::SubtreeEval::prepare(st.kind, st.sizes, &st.pools, p, self.tech, tl)
+            })
+            .collect()
     }
 
-    fn bound(&self, st: &Subtree) -> (f64, f64, f64) {
-        // Mirrors `multi::eval_one`'s accumulation shape exactly (same
-        // order, `area = a` overwrite, weighted sums) with each member's
-        // per-network bound substituted — monotone step by step, so the
-        // weighted bound is admissible bit-wise, and for a 1-element set
-        // it degenerates (0.0 + 1.0·x ≡ x) to the single-network bound.
+    fn eval(&self, prep: &Self::Prep, org: &Organization) -> (DsePoint, Self::Extra) {
+        // Mirrors `multi::eval_one`'s accumulation exactly (same order,
+        // `area = a` overwrite, weighted sums), with each member scored
+        // through its prepared tables — the per-member triples are
+        // bit-identical to `area_energy_latency`, so the fold is
+        // bit-identical to the exhaustive co-design pipeline.
+        let mut per_net = Vec::with_capacity(prep.len());
+        let mut per_net_lat = Vec::with_capacity(prep.len());
         let mut area = 0.0;
         let mut energy = 0.0;
         let mut latency = 0.0;
-        for ((p, wgt), tl) in self
-            .set
-            .profiles()
-            .iter()
-            .zip(self.set.weights())
-            .zip(self.tls)
-        {
-            let (a, e) =
-                evaluate::area_energy_lower_bound(st.kind, st.sizes, &st.pools, p, self.tech);
-            let l = tl.batch_latency_s() / p.batch.max(1) as f64;
+        for (se, wgt) in prep.iter().zip(self.set.weights()) {
+            let (a, e, l) = se.eval(org);
+            area = a; // identical for every network: one physical org
+            energy += wgt * e;
+            latency += wgt * l;
+            per_net.push(e);
+            per_net_lat.push(l);
+        }
+        (
+            DsePoint {
+                org: org.clone(),
+                area_mm2: area,
+                energy_j: energy,
+                latency_s: latency,
+            },
+            (per_net, per_net_lat),
+        )
+    }
+
+    fn bound(&self, prep: &Self::Prep) -> (f64, f64, f64) {
+        // Mirrors the eval fold above with each member's bound
+        // substituted — monotone step by step, so the weighted bound is
+        // admissible bit-wise, and for a 1-element set it degenerates
+        // (0.0 + 1.0·x ≡ x) to the single-network bound.
+        let mut area = 0.0;
+        let mut energy = 0.0;
+        let mut latency = 0.0;
+        for (se, wgt) in prep.iter().zip(self.set.weights()) {
+            let (a, e, l) = se.bound();
             area = a; // identical for every network: one physical org
             energy += wgt * e;
             latency += wgt * l;
@@ -358,9 +473,12 @@ pub(crate) struct SweepOutcome<X> {
 }
 
 /// The branch-and-bound driver.  Subtrees are processed strictly in
-/// order; candidates within a subtree are evaluated engine-parallel with
-/// ordered collection, then folded sequentially — every archive and
-/// selection decision is deterministic for any thread count.
+/// order; each is prepared once ([`SweepEval::prepare`], the only O(ops)
+/// work), bounded off the prepared tables, and — if it survives — its
+/// candidates are evaluated engine-parallel with ordered collection, then
+/// folded sequentially.  Every archive and selection decision is
+/// deterministic for any thread count; only the `prep_s`/`eval_s` wall
+/// times vary run to run.
 pub(crate) fn sweep<E: SweepEval>(
     engine: &Engine,
     subtrees: &[Subtree],
@@ -386,7 +504,10 @@ pub(crate) fn sweep<E: SweepEval>(
         stats.enumerated += count;
         stats.subtrees += 1;
 
-        let (lb_area, lb_e, lb_lat) = ev.bound(st);
+        let t_prep = Instant::now();
+        let prep = ev.prepare(st);
+        let (lb_area, lb_e, lb_lat) = ev.bound(&prep);
+        stats.prep_s += t_prep.elapsed().as_secs_f64();
         // Prune only when BOTH hold: (a) an archive member weakly
         // dominates the bound — then it weakly dominates every completion,
         // which therefore cannot enter the frontier (first-wins on exact
@@ -407,7 +528,9 @@ pub(crate) fn sweep<E: SweepEval>(
 
         batch.clear();
         st.materialize_into(&mut batch);
-        let evaluated = engine.map(&batch, |o| ev.eval(o));
+        let t_eval = Instant::now();
+        let evaluated = engine.map(&batch, |o| ev.eval(&prep, o));
+        stats.eval_s += t_eval.elapsed().as_secs_f64();
         stats.evaluated += evaluated.len();
 
         let mut min_e = f64::INFINITY;
@@ -501,6 +624,31 @@ mod tests {
     }
 
     #[test]
+    fn unfitting_subtree_is_rejected() {
+        // The ISSUE 7 bugfix: the release-mode evaluators silently assume
+        // every op fits (their fit check is a debug_assert!), so subtree
+        // construction must reject a profile that does not fit with a
+        // hard error instead of producing wrong energies.
+        let p = profile();
+        let too_small = Subtree {
+            kind: OrgKind::Sep,
+            sizes: [0, 1024, 1024, 1024], // capsnet needs far more
+            pools: [vec![1], vec![1], vec![1], vec![1]],
+        };
+        let err = too_small.ensure_fits(&p).unwrap_err();
+        assert!(
+            err.to_string().contains("cannot hold op"),
+            "unexpected error: {err}"
+        );
+        // And every subtree the real derivation emits passes the check
+        // (subtrees() already enforces this internally — double-check the
+        // property directly).
+        for st in subtrees(&p).unwrap() {
+            st.ensure_fits(&p).unwrap();
+        }
+    }
+
+    #[test]
     fn bound_is_admissible_bitwise() {
         // The acid test of the whole scheme: for every subtree, the bound
         // must be ≤ every fully evaluated candidate on all three axes —
@@ -519,11 +667,12 @@ mod tests {
             if st.count() == 0 {
                 continue;
             }
-            let (lb_area, lb_e, lb_lat) = ev.bound(&st);
+            let prep = ev.prepare(&st);
+            let (lb_area, lb_e, lb_lat) = ev.bound(&prep);
             batch.clear();
             st.materialize_into(&mut batch);
             for org in &batch {
-                let (point, ()) = ev.eval(org);
+                let (point, ()) = ev.eval(&prep, org);
                 assert!(
                     lb_area <= point.area_mm2,
                     "{}: area bound {lb_area} > {}",
@@ -566,6 +715,10 @@ mod tests {
             pruned.stats.enumerated
         );
         assert_eq!(pruned.stats.evaluated, pruned.points.len());
+        // The wall-time split is populated (non-negative, and some prep
+        // happened for a non-empty space) but carries no determinism
+        // guarantee.
+        assert!(pruned.stats.prep_s >= 0.0 && pruned.stats.eval_s >= 0.0);
 
         // Exhaustive oracle over the same enumeration order.
         let orgs = dse::enumerate(&p).unwrap();

@@ -22,7 +22,7 @@ use descnet::report::{self, ReportCtx};
 use descnet::sim;
 use descnet::util::exec;
 use descnet::util::table::Table;
-use descnet::util::units::{fmt_count, fmt_size};
+use descnet::util::units::{fmt_count, fmt_size, fmt_time};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -495,8 +495,9 @@ fn run_multi_dse(
     Ok(())
 }
 
-/// `--stats` detail line: branch-and-bound effectiveness counters from
-/// the streaming sweep (DESIGN.md section 13).
+/// `--stats` detail lines: branch-and-bound effectiveness counters and
+/// the factored-evaluator wall-time split from the streaming sweep
+/// (DESIGN.md sections 13–14).
 fn print_sweep_stats(stats: &descnet::dse::stream::SweepStats) {
     println!(
         "pruning stats: {:.1}% culled before evaluation ({} of {}); \
@@ -510,6 +511,13 @@ fn print_sweep_stats(stats: &descnet::dse::stream::SweepStats) {
         fmt_count(stats.archive_inserts as u64),
         fmt_count(stats.archive_len as u64),
         100.0 * stats.mean_bound_gap(),
+    );
+    println!(
+        "evaluator timing: subtree prep {} + point eval {} \
+         ({} points evaluated through the factored tables)",
+        fmt_time(stats.prep_s),
+        fmt_time(stats.eval_s),
+        fmt_count(stats.evaluated as u64),
     );
 }
 

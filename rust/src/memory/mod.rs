@@ -66,6 +66,19 @@ impl OrgKind {
             OrgKind::Hy => "HY",
         }
     }
+
+    /// Component presence in `Component::ALL` order [shared, data, weight,
+    /// acc], matching the constructor semantics of [`Organization::smp`] /
+    /// [`Organization::sep`] / [`Organization::hy`]: SMP instantiates only
+    /// the shared memory, SEP only the three dedicated ones, and HY all
+    /// four — even at size 0.
+    pub fn presence(self) -> [bool; 4] {
+        match self {
+            OrgKind::Smp => [true, false, false, false],
+            OrgKind::Sep => [false, true, true, true],
+            OrgKind::Hy => [true, true, true, true],
+        }
+    }
 }
 
 /// A concrete DESCNet organization: which memories exist, their sizes,

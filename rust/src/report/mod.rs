@@ -371,6 +371,11 @@ fn stats_csv(net: &str, st: &dse::stream::SweepStats) -> Csv {
         "archive_inserts",
         "archive_len",
         "mean_bound_gap",
+        // Factored-evaluator wall-time split (ISSUE 7): nondeterministic
+        // run to run, recorded for throughput accounting only — never
+        // compared by goldens or determinism tests.
+        "prep_s",
+        "eval_s",
     ]);
     csv.row(vec![
         s(net),
@@ -383,6 +388,8 @@ fn stats_csv(net: &str, st: &dse::stream::SweepStats) -> Csv {
         u(st.archive_inserts),
         u(st.archive_len),
         f(st.mean_bound_gap()),
+        f(st.prep_s),
+        f(st.eval_s),
     ]);
     csv
 }
