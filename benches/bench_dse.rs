@@ -3,13 +3,11 @@
 //! section Perf).  Reports configs/s, thread scaling vs the single-thread
 //! baseline, the CACTI cost-cache hit rate, the timeline-simulator event
 //! throughput and the full 3-D (area/energy/latency) sweep wall time, then
-//! writes the machine-readable baseline to `BENCH_dse.json` (schema v6:
-//! v5 + the ISSUE 7 `evaluator` blocks — per-point points/s of the O(ops)
-//! reference vs the subtree-factored `SubtreeEval`, the `prep_s`/`eval_s`
-//! sweep wall-time split in the pruning counters, and an
-//! `evaluator_scaling` demo on a replicated large-op-count network that
-//! shows the O(ops) → O(components) asymptotic change) so future PRs have
-//! a perf trajectory to compare against.
+//! writes the machine-readable baseline to `BENCH_dse.json` (schema v7:
+//! v6 + the ISSUE 8 `fleet.fault` block — event throughput of the same
+//! 4-shard trace with crash/recover + timeout/retry + hedging injection
+//! active, so fault-path overhead has a recorded trajectory) so future
+//! PRs have a perf trajectory to compare against.
 
 use descnet::cacti::cache;
 use descnet::config::{Accelerator, Technology};
@@ -339,6 +337,7 @@ fn main() {
         seed: 7,
         policy: RoutingPolicy::Jsq,
         slo_s: Some(50e-3),
+        fault: None,
     };
     let mut fleet_events = 0u64;
     let r = time("fleet sim (4 shards, 20k requests)", 3, || {
@@ -348,16 +347,69 @@ fn main() {
     });
     let fleet_events_per_s = fleet_events as f64 / r.mean_s.max(1e-12);
     println!("    -> {} (fleet events/s)", throughput(&r, fleet_events as usize));
+
+    // ISSUE 8: the same trace with the fault machinery fully active —
+    // crash/recover schedules on every shard, per-request timeout/retry
+    // and hedged re-dispatch.  The extra Crash/Recover/Timeout/Hedge
+    // events and the dead-entry purges are the overhead being tracked.
+    let fault_cfg = FleetConfig {
+        fault: Some(fleet::fault::FaultConfig {
+            mtbf_s: 5.0,
+            mttr_s: 0.5,
+            timeout_s: Some(100e-3),
+            retries: 2,
+            hedge_s: Some(50e-3),
+            fault_seed: 11,
+            ..fleet::fault::FaultConfig::default()
+        }),
+        ..fleet_cfg.clone()
+    };
+    let mut fault_events = 0u64;
+    let mut fault_stats_snapshot = None;
+    let rf = time("fleet sim + faults (4 shards, 20k requests)", 3, || {
+        let stats = fleet::simulate(&fleet_plans, &fault_cfg).expect("fleet fault sim");
+        fault_events = stats.events;
+        fault_stats_snapshot = Some((stats.crashes, stats.retries, stats.hedges, stats.dropped));
+        std::hint::black_box(stats);
+    });
+    let fault_events_per_s = fault_events as f64 / rf.mean_s.max(1e-12);
+    let (crashes, retries, hedges, dropped) = fault_stats_snapshot.unwrap_or((0, 0, 0, 0));
+    println!(
+        "    -> {} (fault events/s; {} crashes, {} retries, {} hedges, {} dropped)",
+        throughput(&rf, fault_events as usize),
+        crashes,
+        retries,
+        hedges,
+        dropped,
+    );
+
     let fleet_json = Json::from_pairs(vec![
         ("shards", fleet_plans.len().into()),
         ("requests", fleet_cfg.requests.into()),
         ("events", (fleet_events as usize).into()),
         ("mean_s", r.mean_s.into()),
         ("events_per_s", fleet_events_per_s.into()),
+        (
+            "fault",
+            Json::from_pairs(vec![
+                ("mtbf_s", 5.0.into()),
+                ("mttr_s", 0.5.into()),
+                ("timeout_ms", 100.0.into()),
+                ("retries", 2usize.into()),
+                ("hedge_ms", 50.0.into()),
+                ("events", (fault_events as usize).into()),
+                ("mean_s", rf.mean_s.into()),
+                ("events_per_s", fault_events_per_s.into()),
+                ("crashes", (crashes as usize).into()),
+                ("injected_retries", (retries as usize).into()),
+                ("hedges", (hedges as usize).into()),
+                ("dropped", (dropped as usize).into()),
+            ]),
+        ),
     ]);
 
     let out = Json::from_pairs(vec![
-        ("schema", "descnet-bench-dse-v6".into()),
+        ("schema", "descnet-bench-dse-v7".into()),
         ("status", "recorded".into()),
         (
             "cacti_cache",

@@ -1,0 +1,161 @@
+//! Fault-tolerant fleet serving walkthrough (ISSUE 8): deterministic
+//! crash/recover injection, timeout/retry/hedging, and N+1 provisioning.
+//!
+//!   cargo run --release --example fleet_faults
+//!
+//! Equivalent CLI: `descnet fleet --shards 4 --mtbf-s 5 --mttr-s 1
+//! --timeout-ms 100 --retries 2 --hedge-ms 50 --fault-seed 11` (and
+//! `descnet fleet --fault-budget 1 --slo-ms 25` for the N+1 pass).
+//!
+//! Three parts:
+//!   1. availability-vs-energy: sweep MTBF on a synthetic 4-shard fleet —
+//!      the same arrival trace every time (injection never perturbs it) —
+//!      and watch availability, p99 and energy/request degrade together;
+//!   2. mitigation: the worst MTBF point re-run with timeouts+retries and
+//!      then hedging on top, recovering tail latency at an energy cost;
+//!   3. N+1 provisioning: co-design a CapsNet fleet that still meets its
+//!      attainment target with its biggest shard down.
+
+use descnet::config::SystemConfig;
+use descnet::fleet::fault::FaultConfig;
+use descnet::fleet::{
+    design_fleet_n_plus, simulate, DesignOptions, FleetConfig, NPlusOptions, RoutingPolicy,
+    ShardPlan,
+};
+use descnet::model::capsnet_mnist;
+use descnet::util::exec;
+use descnet::util::units::fmt_energy;
+
+fn main() {
+    // Part 1: availability vs energy under an MTBF sweep.  Four synthetic
+    // shards, open-loop traffic; crash schedules come from a dedicated
+    // PRNG stream, so every row sees the identical arrival trace.
+    let plans: Vec<ShardPlan> = (0..4)
+        .map(|_| {
+            ShardPlan::synthetic("wl", vec![1, 2, 4], 10e-3, 5e-3, 1.0, 2e-3)
+                .expect("synthetic plan")
+        })
+        .collect();
+    let base_cfg = FleetConfig {
+        rps: 200.0,
+        requests: 2_000,
+        seed: 7,
+        policy: RoutingPolicy::Jsq,
+        slo_s: Some(50e-3),
+        fault: None,
+    };
+
+    println!("MTBF sweep (MTTR 0.5 s, crash policy requeue, no retries/hedging):");
+    println!("  mtbf_s   avail    p99_ms  slo%   energy/req  crashes  dropped");
+    for mtbf_s in [f64::INFINITY, 20.0, 5.0, 1.0] {
+        let cfg = FleetConfig {
+            fault: Some(FaultConfig {
+                mtbf_s,
+                mttr_s: 0.5,
+                fault_seed: 11,
+                ..FaultConfig::default()
+            }),
+            ..base_cfg.clone()
+        };
+        let mut stats = simulate(&plans, &cfg).expect("fleet simulation");
+        println!(
+            "  {:>6}  {:6.2}%  {:8.2}  {:4.1}  {:>10}  {:>7}  {:>7}",
+            if mtbf_s.is_finite() {
+                format!("{mtbf_s:.0}")
+            } else {
+                "inf".to_string()
+            },
+            100.0 * stats.availability,
+            stats.latency.p99() * 1e3,
+            100.0 * stats.slo_attainment(),
+            fmt_energy(stats.energy_per_request_j()),
+            stats.crashes,
+            stats.dropped,
+        );
+    }
+
+    // Part 2: mitigation at the worst point.  Timeouts pull requests off
+    // dead queues; hedging duplicates slow ones onto a second shard (the
+    // first copy to start service wins).
+    println!("\nmitigation at MTBF 1 s:");
+    let variants: [(&str, Option<f64>, u32, Option<f64>); 3] = [
+        ("none", None, 0, None),
+        ("timeout 100 ms x2 retries", Some(100e-3), 2, None),
+        ("  + hedge 50 ms", Some(100e-3), 2, Some(50e-3)),
+    ];
+    for (label, timeout_s, retries, hedge_s) in variants {
+        let cfg = FleetConfig {
+            fault: Some(FaultConfig {
+                mtbf_s: 1.0,
+                mttr_s: 0.5,
+                timeout_s,
+                retries,
+                hedge_s,
+                fault_seed: 11,
+                ..FaultConfig::default()
+            }),
+            ..base_cfg.clone()
+        };
+        let mut stats = simulate(&plans, &cfg).expect("fleet simulation");
+        println!(
+            "  {label:<28} p99 {:7.2} ms  retries {:>4}  hedges {:>4}  \
+             dropped {:>4}  {} /req",
+            stats.latency.p99() * 1e3,
+            stats.retries,
+            stats.hedges,
+            stats.dropped,
+            fmt_energy(stats.energy_per_request_j()),
+        );
+    }
+
+    // Part 3: N+1 provisioning.  Escalate the shard count until the fleet
+    // meets 95% SLO attainment with its highest-capacity shard pinned
+    // down (the adversarial worst case of losing any one shard).
+    let cfg = SystemConfig::default();
+    let slo = 25e-3;
+    let opts = DesignOptions {
+        shards: 2,
+        batch_sizes: vec![1, 2, 4],
+        slo_s: Some(slo),
+        flush_deadline_s: 2e-3,
+        homogeneous: false,
+        threads: exec::default_threads(),
+    };
+    let probe = FleetConfig {
+        rps: 150.0,
+        requests: 600,
+        seed: 7,
+        policy: RoutingPolicy::Jsq,
+        slo_s: Some(slo),
+        fault: None,
+    };
+    let np = NPlusOptions {
+        fault_budget: 1,
+        attainment_target: 0.95,
+        max_extra: 4,
+    };
+    let nd = design_fleet_n_plus(&cfg, &[capsnet_mnist()], &opts, &probe, &np)
+        .expect("N+1 provisioning");
+    println!(
+        "\nN+1 provisioning: {} shards (requested 2 + budget 1), degraded \
+         attainment {:.1}% with shards {:?} down",
+        nd.shards,
+        100.0 * nd.degraded.slo_attainment(),
+        nd.pinned,
+    );
+
+    // The provisioned fleet under live crash/recover injection.
+    let live = FleetConfig {
+        fault: Some(FaultConfig {
+            mtbf_s: 10.0,
+            mttr_s: 1.0,
+            timeout_s: Some(4.0 * slo),
+            retries: 2,
+            fault_seed: 11,
+            ..FaultConfig::default()
+        }),
+        ..probe.clone()
+    };
+    let mut stats = simulate(&nd.design.plans, &live).expect("fleet simulation");
+    print!("{}", stats.summary());
+}

@@ -36,7 +36,7 @@ fn main() {
             "shard {i}: {} on {} (batches {:?}, {} per inference at b{})",
             p.workload,
             p.org.label(),
-            p.batcher.sizes,
+            p.batcher.sizes(),
             fmt_energy(p.best_energy_per_inf()),
             p.batcher.max_batch(),
         );
@@ -55,6 +55,7 @@ fn main() {
             seed: 7,
             policy,
             slo_s: Some(slo),
+            fault: None,
         };
         let mut stats = simulate(&design.plans, &fcfg).expect("fleet simulation");
         let base = simulate(&design.baseline, &fcfg).expect("baseline simulation");

@@ -7,10 +7,18 @@
 use anyhow::{ensure, Result};
 
 /// Pure batching policy (threading-free, property-tested).
+///
+/// Non-empty by construction: the only constructor ([`BatchPolicy::new`])
+/// rejects an empty size list, and the fields are private, so
+/// [`BatchPolicy::max_batch`] / [`BatchPolicy::min_batch`] are infallible
+/// — no `unwrap` on a `last()` that user input could have emptied.
 #[derive(Debug, Clone)]
 pub struct BatchPolicy {
     /// Available executable batch sizes, ascending (e.g. [1, 4]).
-    pub sizes: Vec<usize>,
+    sizes: Vec<usize>,
+    /// Cached `sizes.last()` / `sizes[0]` (sizes is non-empty, sorted).
+    largest: usize,
+    smallest: usize,
     /// Max time a request may wait for peers before we pad-and-flush [s].
     pub flush_deadline_s: f64,
 }
@@ -32,14 +40,27 @@ impl BatchPolicy {
         );
         sizes.sort_unstable();
         sizes.dedup();
+        let largest = sizes[sizes.len() - 1];
+        let smallest = sizes[0];
         Ok(BatchPolicy {
             sizes,
+            largest,
+            smallest,
             flush_deadline_s,
         })
     }
 
+    /// Executable batch sizes, ascending and deduplicated (never empty).
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
     pub fn max_batch(&self) -> usize {
-        *self.sizes.last().unwrap()
+        self.largest
+    }
+
+    pub fn min_batch(&self) -> usize {
+        self.smallest
     }
 
     /// Greedy decomposition of `pending` requests into executable batch
@@ -61,7 +82,7 @@ impl BatchPolicy {
                 .iter()
                 .copied()
                 .find(|&s| s >= left)
-                .unwrap_or(self.max_batch());
+                .unwrap_or(self.largest);
             out.push(cover);
         }
         out
@@ -99,8 +120,9 @@ mod tests {
     #[test]
     fn sizes_are_sorted_and_deduped() {
         let p = BatchPolicy::new(vec![4, 1, 4], 5e-3).unwrap();
-        assert_eq!(p.sizes, vec![1, 4]);
+        assert_eq!(p.sizes(), &[1, 4]);
         assert_eq!(p.max_batch(), 4);
+        assert_eq!(p.min_batch(), 1);
     }
 
     #[test]

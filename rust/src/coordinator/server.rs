@@ -201,7 +201,7 @@ impl Server {
         stats.platform = platform;
         stats.slo_s = opts.slo_s;
         stats.sim_batch_latency = policy
-            .sizes
+            .sizes()
             .iter()
             .map(|b| (*b, plan.batch_latency_s[b]))
             .collect();
@@ -242,7 +242,7 @@ impl Server {
                 continue;
             }
 
-            let force = closed || pending.len() < policy.sizes[0];
+            let force = closed || pending.len() < policy.min_batch();
             let _ = force;
             let plan = policy.plan(pending.len(), true);
             for batch in plan {

@@ -1,0 +1,288 @@
+//! Deterministic fault injection for the fleet simulator (DESIGN.md
+//! section 15).
+//!
+//! A production fleet is defined by how it behaves when shards die.  This
+//! module adds the fault model around `fleet::simulate` without touching
+//! its no-fault behavior:
+//!
+//! * **Crash/recover schedule** — each shard draws alternating up-times
+//!   (mean [`FaultConfig::mtbf_s`]) and down-times (mean
+//!   [`FaultConfig::mttr_s`]) from its own PRNG stream,
+//!   `Prng::stream(fault_seed, shard)`.  Streams are split at seeding
+//!   time, so the schedule is a pure function of `(fault_seed, mtbf,
+//!   mttr, wake penalty)` — independent of arrivals, routing and thread
+//!   counts — and the arrival stream (`Prng::new(seed)`) is bit-identical
+//!   with injection on or off.
+//! * **Degraded-mode semantics** — a crash fails the in-flight batch; its
+//!   requests are re-enqueued on an up shard or dropped per
+//!   [`CrashPolicy`].  Recovery pays the power-gating cold-wake charge
+//!   (`ShardPlan::wake_penalty_s`, the `sim::wakeup_exposure_s` rule with
+//!   no previous op to mask it), extending the outage.
+//! * **Timeout + bounded retry + hedging** — a queued request that waits
+//!   out [`FaultConfig::timeout_s`] is pulled back and re-dispatched up
+//!   to [`FaultConfig::retries`] times with exponential backoff
+//!   ([`backoff_s`]); past the budget it is dropped.  With
+//!   [`FaultConfig::hedge_s`], a request still waiting after that delay
+//!   is duplicated onto the least-loaded *other* up shard; the first copy
+//!   to start service wins and the loser is cancelled.
+//!
+//! The conservation invariant the whole model is tested against
+//! (`rust/tests/fleet_faults.rs`): every arrival is eventually counted
+//! exactly once as completed or dropped, and timeout retries never exceed
+//! `retries` per request.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::prng::Prng;
+
+/// What happens to the in-flight batch of a crashing shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashPolicy {
+    /// Failed requests are re-enqueued (routed among up shards) at the
+    /// crash instant.  Crash re-enqueues do not consume the timeout-retry
+    /// budget — they are the router's doing, not the client's.
+    Requeue,
+    /// Failed requests are dropped (counted in `FleetStats::dropped`).
+    Drop,
+}
+
+impl CrashPolicy {
+    pub fn parse(s: &str) -> Result<CrashPolicy> {
+        match s {
+            "requeue" => Ok(CrashPolicy::Requeue),
+            "drop" => Ok(CrashPolicy::Drop),
+            other => bail!("unknown crash policy '{other}' (expected requeue or drop)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CrashPolicy::Requeue => "requeue",
+            CrashPolicy::Drop => "drop",
+        }
+    }
+}
+
+/// Fault-injection knobs of one simulation run.  The default is fully
+/// inert: `mtbf_s = inf`, no timeout, no hedging, nothing pinned down —
+/// a run with the default config is bit-identical to a run with no fault
+/// config at all (pinned by `rust/tests/fleet_faults.rs`).
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// Mean time between failures per shard [s]; `f64::INFINITY` disables
+    /// crash injection.
+    pub mtbf_s: f64,
+    /// Mean time to recover per shard [s] (the cold-wake charge is added
+    /// on top of each drawn down-time).
+    pub mttr_s: f64,
+    /// Per-copy queue-wait timeout [s]; `None` disables timeouts.
+    pub timeout_s: Option<f64>,
+    /// Max timeout-driven re-dispatches per request; past this the
+    /// request is dropped.
+    pub retries: u32,
+    /// Hedged re-dispatch delay [s]; `None` disables hedging.
+    pub hedge_s: Option<f64>,
+    /// Seed of the crash/recover schedule (dedicated stream, split from
+    /// the arrival stream).
+    pub fault_seed: u64,
+    pub crash_policy: CrashPolicy,
+    /// Shards held down for the entire run (degraded-capacity what-ifs
+    /// and the N+1 provisioning check).  Must leave at least one shard up.
+    pub pinned_down: Vec<usize>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig {
+            mtbf_s: f64::INFINITY,
+            mttr_s: 1.0,
+            timeout_s: None,
+            retries: 2,
+            hedge_s: None,
+            fault_seed: 0,
+            crash_policy: CrashPolicy::Requeue,
+            pinned_down: Vec::new(),
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when any fault mechanism can fire.  The simulator uses this to
+    /// gate every fault-path branch, so an inert config cannot perturb the
+    /// no-fault event sequence (the injection-off bit-identity invariant).
+    pub fn is_active(&self) -> bool {
+        self.mtbf_s.is_finite()
+            || self.timeout_s.is_some()
+            || self.hedge_s.is_some()
+            || !self.pinned_down.is_empty()
+    }
+
+    /// Validates against a fleet of `shards` shards.
+    pub fn validate(&self, shards: usize) -> Result<()> {
+        ensure!(
+            self.mtbf_s > 0.0 && !self.mtbf_s.is_nan(),
+            "MTBF must be a positive duration (or inf to disable), got {} s",
+            self.mtbf_s
+        );
+        if self.mtbf_s.is_finite() {
+            ensure!(
+                self.mttr_s.is_finite() && self.mttr_s > 0.0,
+                "MTTR must be a positive finite duration, got {} s",
+                self.mttr_s
+            );
+        }
+        if let Some(t) = self.timeout_s {
+            ensure!(
+                t.is_finite() && t > 0.0,
+                "request timeout must be a positive duration, got {t} s"
+            );
+        }
+        if let Some(h) = self.hedge_s {
+            ensure!(
+                h.is_finite() && h > 0.0,
+                "hedge delay must be a positive duration, got {h} s"
+            );
+        }
+        for &s in &self.pinned_down {
+            ensure!(
+                s < shards,
+                "pinned-down shard {s} out of range (fleet has {shards})"
+            );
+        }
+        let mut down = vec![false; shards];
+        for &s in &self.pinned_down {
+            down[s] = true;
+        }
+        ensure!(
+            down.iter().any(|d| !d),
+            "every shard is pinned down — the fleet could never serve"
+        );
+        Ok(())
+    }
+}
+
+/// Exponential backoff before timeout-retry `attempt` (1-based):
+/// `timeout * 2^(attempt-1)`, capped at 2^20 to keep the product finite
+/// for absurd retry budgets.
+pub fn backoff_s(timeout_s: f64, attempt: u32) -> f64 {
+    timeout_s * (1u64 << (attempt.saturating_sub(1)).min(20)) as f64
+}
+
+/// One shard's lazily-drawn crash/recover schedule.  Draws alternate
+/// up-time, down-time, up-time, ... from a dedicated per-shard stream, so
+/// the k-th draw of shard `s` is the same number no matter what the rest
+/// of the simulation does.
+#[derive(Debug, Clone)]
+pub struct ShardFaults {
+    rng: Prng,
+    mtbf_s: f64,
+    mttr_s: f64,
+}
+
+impl ShardFaults {
+    pub fn new(fault_seed: u64, shard: usize, mtbf_s: f64, mttr_s: f64) -> ShardFaults {
+        ShardFaults {
+            rng: Prng::stream(fault_seed, shard as u64),
+            mtbf_s,
+            mttr_s,
+        }
+    }
+
+    /// Next up-time duration [s] (time until the next crash).
+    pub fn uptime_s(&mut self) -> f64 {
+        self.rng.exp(self.mtbf_s)
+    }
+
+    /// Next down-time duration [s] (recovery delay, before the cold-wake
+    /// charge is added).
+    pub fn downtime_s(&mut self) -> f64 {
+        self.rng.exp(self.mttr_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_inert_and_valid() {
+        let c = FaultConfig::default();
+        assert!(!c.is_active());
+        c.validate(2).unwrap();
+    }
+
+    #[test]
+    fn activity_is_any_mechanism() {
+        let mut c = FaultConfig::default();
+        c.mtbf_s = 10.0;
+        assert!(c.is_active());
+        let mut c = FaultConfig::default();
+        c.timeout_s = Some(0.1);
+        assert!(c.is_active());
+        let mut c = FaultConfig::default();
+        c.hedge_s = Some(0.05);
+        assert!(c.is_active());
+        let mut c = FaultConfig::default();
+        c.pinned_down = vec![0];
+        assert!(c.is_active());
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_knobs() {
+        let mut c = FaultConfig::default();
+        c.mtbf_s = 0.0;
+        assert!(c.validate(2).is_err());
+        let mut c = FaultConfig::default();
+        c.mtbf_s = 5.0;
+        c.mttr_s = f64::INFINITY;
+        assert!(c.validate(2).is_err());
+        let mut c = FaultConfig::default();
+        c.timeout_s = Some(-1.0);
+        assert!(c.validate(2).is_err());
+        let mut c = FaultConfig::default();
+        c.hedge_s = Some(f64::NAN);
+        assert!(c.validate(2).is_err());
+        let mut c = FaultConfig::default();
+        c.pinned_down = vec![2];
+        assert!(c.validate(2).is_err());
+        let mut c = FaultConfig::default();
+        c.pinned_down = vec![0, 1];
+        assert!(c.validate(2).is_err());
+        let mut c = FaultConfig::default();
+        c.pinned_down = vec![1];
+        c.validate(2).unwrap();
+    }
+
+    #[test]
+    fn crash_policy_roundtrip() {
+        for (s, p) in [("requeue", CrashPolicy::Requeue), ("drop", CrashPolicy::Drop)] {
+            assert_eq!(CrashPolicy::parse(s).unwrap(), p);
+            assert_eq!(p.label(), s);
+        }
+        assert!(CrashPolicy::parse("retry").is_err());
+    }
+
+    #[test]
+    fn backoff_doubles_and_saturates() {
+        assert_eq!(backoff_s(0.1, 1), 0.1);
+        assert_eq!(backoff_s(0.1, 2), 0.2);
+        assert_eq!(backoff_s(0.1, 3), 0.4);
+        assert!(backoff_s(0.1, 1_000).is_finite());
+    }
+
+    #[test]
+    fn schedules_are_per_shard_deterministic() {
+        let draw = |shard: usize| {
+            let mut f = ShardFaults::new(9, shard, 5.0, 0.5);
+            (0..6).map(|_| f.uptime_s()).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(0), draw(0));
+        assert_ne!(draw(0), draw(1));
+        // Independent of the arrival seed by construction: the stream is
+        // keyed on (fault_seed, shard) only.
+        let mut a = ShardFaults::new(9, 0, 5.0, 0.5);
+        let up = a.uptime_s();
+        let down = a.downtime_s();
+        assert!(up > 0.0 && down > 0.0);
+    }
+}

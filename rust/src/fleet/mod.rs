@@ -1,9 +1,10 @@
-//! Sharded multi-accelerator serving simulator (DESIGN.md section 12).
+//! Sharded multi-accelerator serving simulator (DESIGN.md section 12),
+//! with deterministic fault injection (DESIGN.md section 15).
 //!
 //! DESCNet's headline result is per-instance: one CapsAcc accelerator, one
 //! SPM organization, 79% energy reduction with no performance loss.  The
 //! ROADMAP's north star is a serving *fleet* of such instances.  This
-//! module closes the gap with two layers:
+//! module closes the gap with three layers:
 //!
 //! * **[`simulate`]** — a seeded, deterministic discrete-event simulator of
 //!   N accelerator shards: open-loop Poisson request arrivals
@@ -18,6 +19,19 @@
 //!   a (seed, plans, config) triple reproduces bit-identically regardless
 //!   of how many threads the surrounding design pass used.
 //!
+//! * **[`fault`]** — deterministic fault injection around the same event
+//!   loop: a seeded per-shard crash/recover schedule (MTBF/MTTR from a
+//!   dedicated `Prng::stream`, so arrivals are bit-identical with
+//!   injection on or off), per-request timeout + bounded retry with
+//!   exponential backoff, optional hedged re-dispatch, routing that skips
+//!   down shards, and degraded-mode semantics: a crash fails the in-flight
+//!   batch (re-enqueued or dropped per [`fault::CrashPolicy`]) and
+//!   recovery pays the power-gating cold-wake charge
+//!   ([`ShardPlan::wake_penalty_s`], the `sim::wakeup_exposure_s` rule
+//!   with no previous op to mask it).  Every fault branch is gated on
+//!   [`fault::FaultConfig::is_active`], so an inert config cannot perturb
+//!   a single bit of the no-fault run (`rust/tests/fleet_faults.rs`).
+//!
 //! * **[`design_fleet`]** — an SLO-constrained fleet co-design pass that
 //!   extends `dse::multi`: each shard's SPM organization is selected per
 //!   workload (or one organization co-designed across every shard with
@@ -26,17 +40,23 @@
 //!   The result carries a homogeneous union-SMP baseline fleet evaluated
 //!   under the *same* executable batch sets, so the energy comparison is
 //!   schedule-for-schedule (`rust/tests/fleet.rs` pins codesigned <=
-//!   baseline).
+//!   baseline).  [`design_fleet_n_plus`] wraps it in an N+1 provisioning
+//!   loop: escalate the shard count until the min-energy design keeps its
+//!   SLO attainment with the declared fault budget's worth of shards down.
 //!
-//! Surfaced as `descnet fleet --shards N --rps R --policy P --slo-ms MS`,
-//! `descnet report fleet` (fleet.csv + table_fleet.md) and
-//! `examples/fleet_serving.rs`; EXPERIMENTS.md E22 records the numbers.
+//! Surfaced as `descnet fleet --shards N --rps R --policy P --slo-ms MS`
+//! (fault knobs: `--mtbf-s/--mttr-s/--timeout-ms/--retries/--hedge-ms/
+//! --fault-seed/--fault-budget`), `descnet report fleet` (fleet.csv +
+//! table_fleet.md) and `examples/fleet_serving.rs` /
+//! `examples/fleet_faults.rs`; EXPERIMENTS.md E22/E25 record the numbers.
+
+pub mod fault;
 
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::config::SystemConfig;
+use crate::config::{SystemConfig, Technology};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::dataflow::{profile_network_batched, NetworkProfile};
 use crate::dse::multi::WorkloadSet;
@@ -48,6 +68,8 @@ use crate::sim;
 use crate::util::exec::Engine;
 use crate::util::prng::Prng;
 use crate::util::stats::Percentiles;
+
+use fault::{CrashPolicy, FaultConfig, ShardFaults};
 
 // ------------------------------------------------------------------ routing
 
@@ -102,6 +124,10 @@ pub struct ShardPlan {
     /// Clock-binning speed factor: service time divides by this (1.0 =
     /// nominal silicon; used to model asymmetric fleets).
     pub speed: f64,
+    /// Cold-wake charge a recovery pays before serving again [s]: the
+    /// `sim::wakeup_exposure_s` physics with no previous operation to mask
+    /// the wake ([`cold_wake_s`]); 0 for ungated organizations.
+    pub wake_penalty_s: f64,
 }
 
 impl ShardPlan {
@@ -117,7 +143,7 @@ impl ShardPlan {
             speed.is_finite() && speed > 0.0,
             "shard speed must be positive, got {speed}"
         );
-        for &b in &batcher.sizes {
+        for &b in batcher.sizes() {
             let e = energy_per_inf
                 .get(&b)
                 .ok_or_else(|| anyhow!("no energy for executable batch {b}"))?;
@@ -136,7 +162,19 @@ impl ShardPlan {
             energy_per_inf,
             batch_latency_s,
             speed,
+            wake_penalty_s: 0.0,
         })
+    }
+
+    /// Sets the recovery cold-wake charge (builder-style, used by the
+    /// design pass and the fault tests).
+    pub fn with_wake_penalty(mut self, wake_penalty_s: f64) -> Result<ShardPlan> {
+        ensure!(
+            wake_penalty_s.is_finite() && wake_penalty_s >= 0.0,
+            "wake penalty must be a non-negative duration, got {wake_penalty_s} s"
+        );
+        self.wake_penalty_s = wake_penalty_s;
+        Ok(self)
     }
 
     /// Synthetic closed-form plan (no DSE): batch latency grows linearly
@@ -153,7 +191,7 @@ impl ShardPlan {
         let batcher = BatchPolicy::new(batch_sizes, flush_deadline_s)?;
         let mut energy = BTreeMap::new();
         let mut latency = BTreeMap::new();
-        for &b in &batcher.sizes {
+        for &b in batcher.sizes() {
             latency.insert(b, base_latency_s * (0.5 + 0.5 * b as f64));
             energy.insert(b, energy_per_inf_j * (0.5 + 0.5 / b as f64));
         }
@@ -179,6 +217,19 @@ impl ShardPlan {
     }
 }
 
+/// Cold-wake charge of a recovering shard [s]: a power-gated organization
+/// (any component with >1 sector) wakes from fully gated with no previous
+/// operation to mask the wake, so it pays the full `wakeup_latency_s` once
+/// — the `sim::wakeup_exposure_s` residue rule with `prev_dur = 0`.
+/// Ungated organizations pay nothing.
+pub fn cold_wake_s(org: &Organization, tech: &Technology) -> f64 {
+    if org.power_gated() {
+        tech.wakeup_latency_s
+    } else {
+        0.0
+    }
+}
+
 // ------------------------------------------------------------ fleet config
 
 /// Arrival process + routing knobs of one simulation run.
@@ -193,6 +244,9 @@ pub struct FleetConfig {
     /// End-to-end latency SLO [s] for the attainment rollup (and the hard
     /// design constraint when passed to [`design_fleet`]).
     pub slo_s: Option<f64>,
+    /// Fault injection (None and `Some(FaultConfig::default())` are both
+    /// inert and bit-identical to the pre-fault simulator).
+    pub fault: Option<FaultConfig>,
 }
 
 impl Default for FleetConfig {
@@ -203,6 +257,7 @@ impl Default for FleetConfig {
             seed: 7,
             policy: RoutingPolicy::Jsq,
             slo_s: None,
+            fault: None,
         }
     }
 }
@@ -240,6 +295,11 @@ pub struct ShardStats {
     pub energy_j: f64,
     pub slo_met: u64,
     pub latency: Percentiles,
+    /// Crashes this shard suffered (0 when injection is off).
+    pub crashes: u64,
+    /// Total time this shard spent down [s] (repair + cold wake, clipped
+    /// to the simulated horizon in the availability rollup).
+    pub downtime_s: f64,
 }
 
 impl ShardStats {
@@ -249,6 +309,16 @@ impl ShardStats {
             self.busy_s / horizon_s
         } else {
             0.0
+        }
+    }
+
+    /// Fraction of the simulated horizon this shard was up (1.0 when
+    /// injection is off).
+    pub fn availability(&self, horizon_s: f64) -> f64 {
+        if horizon_s > 0.0 {
+            (1.0 - self.downtime_s / horizon_s).clamp(0.0, 1.0)
+        } else {
+            1.0
         }
     }
 
@@ -272,13 +342,15 @@ impl ShardStats {
 #[derive(Debug, Clone)]
 pub struct FleetStats {
     pub policy: RoutingPolicy,
+    /// Requests *completed* (under faults, dropped requests are counted in
+    /// [`FleetStats::dropped`] instead; completed + dropped == arrivals).
     pub requests: u64,
     pub batches: u64,
     pub padded_slots: u64,
     /// Simulated time of the last completion [s].
     pub sim_time_s: f64,
-    /// Discrete events processed (arrivals + completions + flushes) — the
-    /// bench throughput unit.
+    /// Discrete events processed (arrivals + completions + flushes +
+    /// fault events) — the bench throughput unit.
     pub events: u64,
     pub energy_j: f64,
     pub slo_s: Option<f64>,
@@ -286,6 +358,27 @@ pub struct FleetStats {
     /// End-to-end (enqueue -> completion) request latency.
     pub latency: Percentiles,
     pub per_shard: Vec<ShardStats>,
+    /// Whether any fault mechanism was armed for this run; when false the
+    /// run (and its fingerprint) is bit-identical to the pre-fault
+    /// simulator.
+    pub faults_active: bool,
+    /// Requests dropped (timeout budget exhausted, crash policy `drop`, or
+    /// stranded at simulation end).
+    pub dropped: u64,
+    /// Timeout-driven re-dispatches (bounded by `retries` per request).
+    pub retries: u64,
+    /// Hedged duplicate dispatches (at most one per request).
+    pub hedges: u64,
+    /// In-flight requests re-enqueued by crashes (crash policy `requeue`;
+    /// does not consume the timeout-retry budget).
+    pub crash_requeues: u64,
+    /// Shard crashes across the fleet.
+    pub crashes: u64,
+    /// Total cold-wake charge paid by recoveries [s].
+    pub wake_penalty_s: f64,
+    /// Mean fraction of shard-time up over the simulated horizon (1.0 when
+    /// injection is off).
+    pub availability: f64,
 }
 
 impl FleetStats {
@@ -311,7 +404,9 @@ impl FleetStats {
 
     /// Bit-exact digest of every rollup (floats as hex bit patterns): the
     /// determinism tests compare this across thread counts, and the golden
-    /// test pins it per (seed, config).
+    /// test pins it per (seed, config).  The fault block is appended only
+    /// when injection was active, so an inert fault config reproduces the
+    /// pre-fault fingerprint byte-for-byte.
     pub fn fingerprint(&mut self) -> String {
         let h = |v: f64| format!("{:016x}", v.to_bits());
         let mut out = format!(
@@ -341,6 +436,21 @@ impl FleetStats {
                 h(s.energy_j),
                 s.slo_met,
             ));
+        }
+        if self.faults_active {
+            out.push_str(&format!(
+                " | faults crashes={} requeues={} retries={} hedges={} dropped={} wake={} avail={}",
+                self.crashes,
+                self.crash_requeues,
+                self.retries,
+                self.hedges,
+                self.dropped,
+                h(self.wake_penalty_s),
+                h(self.availability),
+            ));
+            for (i, s) in self.per_shard.iter().enumerate() {
+                out.push_str(&format!(" d{i}={}", h(s.downtime_s)));
+            }
         }
         out
     }
@@ -379,6 +489,19 @@ impl FleetStats {
             self.batches,
             self.padded_slots,
         ));
+        if self.faults_active {
+            out.push_str(&format!(
+                "availability: {:.2}% ({} crashes, {} requeues, {} retries, {} hedges, \
+                 {} dropped, wake charge {})\n",
+                100.0 * self.availability,
+                self.crashes,
+                self.crash_requeues,
+                self.retries,
+                self.hedges,
+                self.dropped,
+                fmt_time(self.wake_penalty_s),
+            ));
+        }
         let horizon = self.sim_time_s;
         for (i, s) in self.per_shard.iter().enumerate() {
             out.push_str(&format!(
@@ -400,8 +523,18 @@ impl FleetStats {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum EvKind {
     Arrival,
-    ShardDone(usize),
+    /// Batch completion; `epoch` invalidates completions of batches that
+    /// were failed by a crash in between.
+    ShardDone { s: usize, epoch: u32 },
     Flush(usize),
+    Crash(usize),
+    Recover(usize),
+    /// Queue-wait timeout of one enqueued copy (`tag`) of request `id`.
+    Timeout { id: u32, tag: u32 },
+    /// Backoff expired: re-dispatch request `id`.
+    Retry { id: u32 },
+    /// Hedge delay expired: duplicate request `id` onto another shard.
+    Hedge { id: u32 },
 }
 
 /// Heap entry; ordered min-first by (time, insertion sequence), so
@@ -436,36 +569,102 @@ impl Ord for Ev {
 
 #[derive(Debug, Clone, Copy)]
 struct QueuedReq {
-    arrival: f64,
-    /// `arrival + flush_deadline`, precomputed so the flush comparison uses
+    id: u32,
+    /// Copy tag: each enqueue of a request (initial, retry, crash-requeue,
+    /// hedge) gets a fresh tag, so a timeout event can tell whether *its*
+    /// copy is still live.
+    tag: u32,
+    /// `enqueue + flush_deadline`, precomputed so the flush comparison uses
     /// the exact float the flush event was scheduled with.
     deadline_t: f64,
 }
 
+/// Per-request bookkeeping.  Maintained on the no-fault path too (same
+/// code, no branches), but only read by the fault mechanisms.
+#[derive(Debug, Clone)]
+struct ReqState {
+    arrival: f64,
+    next_tag: u32,
+    timeout_retries: u32,
+    /// Live queued copies as (tag, shard).  Emptied when a copy enters
+    /// service (cancelling the others) or when the request resolves.
+    live: Vec<(u32, usize)>,
+    in_service: Option<usize>,
+    retry_pending: bool,
+    done: bool,
+    dropped: bool,
+    hedged: bool,
+}
+
+impl ReqState {
+    fn new(arrival: f64) -> ReqState {
+        ReqState {
+            arrival,
+            next_tag: 0,
+            timeout_retries: 0,
+            live: Vec::new(),
+            in_service: None,
+            retry_pending: false,
+            done: false,
+            dropped: false,
+            hedged: false,
+        }
+    }
+
+    fn resolved(&self) -> bool {
+        self.done || self.dropped
+    }
+}
+
+struct Sim<'a> {
+    plans: &'a [ShardPlan],
+    cfg: &'a FleetConfig,
+    fault: FaultConfig,
+    /// `fault.is_active()`, hoisted: gates every fault-path branch so the
+    /// inactive run is bit-identical to the pre-fault simulator.
+    active: bool,
+    rng: Prng,
+    mean_gap: f64,
+    heap: BinaryHeap<Ev>,
+    seq: u64,
+    queues: Vec<VecDeque<QueuedReq>>,
+    busy: Vec<bool>,
+    /// Request ids of the batch currently executing on each shard.
+    exec: Vec<Vec<u32>>,
+    /// Scheduled completion time of the in-flight batch (for the busy-time
+    /// refund when a crash fails it).
+    service_end: Vec<f64>,
+    // One outstanding flush event per shard at most — re-dispatching while
+    // one is pending must not enqueue another (it would inflate the event
+    // count and do redundant work when it fires).
+    flush_pending: Vec<bool>,
+    rr_next: usize,
+    arrivals_left: usize,
+    reqs: Vec<ReqState>,
+    up: Vec<bool>,
+    /// Bumped on every crash; stale `ShardDone` events carry the old epoch
+    /// and are discarded.
+    epoch: Vec<u32>,
+    down_since: Vec<Option<f64>>,
+    faults: Vec<Option<ShardFaults>>,
+    stats: FleetStats,
+}
+
 /// Runs the discrete-event fleet simulation.  Serial and deterministic:
-/// the only randomness is the seeded arrival process.
+/// the only randomness is the seeded arrival process and — when fault
+/// injection is armed — the per-shard crash/recover streams, which are
+/// split from the arrival stream at seeding time
+/// (`Prng::stream(fault_seed, shard)`), so the arrival sequence is
+/// bit-identical with injection on or off.
 pub fn simulate(plans: &[ShardPlan], cfg: &FleetConfig) -> Result<FleetStats> {
     ensure!(!plans.is_empty(), "fleet needs at least one shard");
     cfg.validate()?;
     let n = plans.len();
+    let fault = cfg.fault.clone().unwrap_or_default();
+    fault.validate(n)?;
+    let active = fault.is_active();
 
-    let mut rng = Prng::new(cfg.seed);
-    let mean_gap = 1.0 / cfg.rps;
-    let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
-    let mut seq = 0u64;
-
-    let mut queues: Vec<VecDeque<QueuedReq>> = vec![VecDeque::new(); n];
-    let mut busy = vec![false; n];
-    // Arrival times of the requests currently executing on each shard.
-    let mut exec: Vec<Vec<f64>> = vec![Vec::new(); n];
-    // One outstanding flush event per shard at most — re-dispatching while
-    // one is pending must not enqueue another (it would inflate the event
-    // count and do redundant work when it fires).
-    let mut flush_pending = vec![false; n];
-    let mut rr_next = 0usize;
-    let mut arrivals_left = cfg.requests;
-
-    let mut stats = FleetStats {
+    let stats = FleetStats {
         policy: cfg.policy,
         requests: 0,
         batches: 0,
@@ -489,198 +688,472 @@ pub fn simulate(plans: &[ShardPlan], cfg: &FleetConfig) -> Result<FleetStats> {
                 energy_j: 0.0,
                 slo_met: 0,
                 latency: Percentiles::new(),
+                crashes: 0,
+                downtime_s: 0.0,
             })
             .collect(),
+        faults_active: active,
+        dropped: 0,
+        retries: 0,
+        hedges: 0,
+        crash_requeues: 0,
+        crashes: 0,
+        wake_penalty_s: 0.0,
+        availability: 1.0,
     };
 
-    heap.push(Ev {
-        t: rng.exp(mean_gap),
-        seq,
-        kind: EvKind::Arrival,
-    });
-    seq += 1;
+    let sim = Sim {
+        plans,
+        cfg,
+        fault,
+        active,
+        rng: Prng::new(cfg.seed),
+        mean_gap: 1.0 / cfg.rps,
+        heap: BinaryHeap::new(),
+        seq: 0,
+        queues: vec![VecDeque::new(); n],
+        busy: vec![false; n],
+        exec: vec![Vec::new(); n],
+        service_end: vec![0.0; n],
+        flush_pending: vec![false; n],
+        rr_next: 0,
+        arrivals_left: cfg.requests,
+        reqs: Vec::with_capacity(cfg.requests),
+        up: vec![true; n],
+        epoch: vec![0; n],
+        down_since: vec![None; n],
+        faults: vec![None; n],
+        stats,
+    };
+    sim.run()
+}
 
-    while let Some(ev) = heap.pop() {
-        stats.events += 1;
-        match ev.kind {
-            EvKind::Arrival => {
-                arrivals_left -= 1;
-                if arrivals_left > 0 {
-                    heap.push(Ev {
-                        t: ev.t + rng.exp(mean_gap),
-                        seq,
-                        kind: EvKind::Arrival,
-                    });
-                    seq += 1;
+impl<'a> Sim<'a> {
+    fn push(&mut self, t: f64, kind: EvKind) {
+        self.heap.push(Ev {
+            t,
+            seq: self.seq,
+            kind,
+        });
+        self.seq += 1;
+    }
+
+    fn run(mut self) -> Result<FleetStats> {
+        let n = self.plans.len();
+        if self.active {
+            // Arm the schedules before the first arrival.  Crash times come
+            // from per-shard streams, so the values (and the arrival stream)
+            // are independent of this ordering.
+            for s in 0..n {
+                if self.fault.pinned_down.contains(&s) {
+                    self.up[s] = false;
+                    self.down_since[s] = Some(0.0);
+                } else if self.fault.mtbf_s.is_finite() {
+                    let mut f = ShardFaults::new(
+                        self.fault.fault_seed,
+                        s,
+                        self.fault.mtbf_s,
+                        self.fault.mttr_s,
+                    );
+                    let up = f.uptime_s();
+                    self.faults[s] = Some(f);
+                    self.push(up, EvKind::Crash(s));
                 }
-                let s = route(cfg.policy, plans, &queues, &exec, &mut rr_next);
-                queues[s].push_back(QueuedReq {
-                    arrival: ev.t,
-                    deadline_t: ev.t + plans[s].batcher.flush_deadline_s,
-                });
-                stats.per_shard[s].queue_peak = stats.per_shard[s].queue_peak.max(queues[s].len());
-                dispatch(
-                    s,
-                    ev.t,
-                    plans,
-                    &mut queues,
-                    &mut busy,
-                    &mut exec,
-                    &mut flush_pending,
-                    arrivals_left,
-                    &mut stats,
-                    &mut heap,
-                    &mut seq,
+            }
+        }
+        let t0 = self.rng.exp(self.mean_gap);
+        self.push(t0, EvKind::Arrival);
+
+        // Backstop against fault storms (MTBF/MTTR that leave no serving
+        // capacity): the crash/recover chain regenerates forever, so the
+        // settle check below is the normal exit and this cap is the bail.
+        let cap = 10_000_000u64.max(self.cfg.requests as u64 * 1000);
+        while let Some(ev) = self.heap.pop() {
+            self.stats.events += 1;
+            if self.active && self.stats.events > cap {
+                bail!(
+                    "fault storm: simulation exceeded {cap} events before settling \
+                     ({} served, {} dropped of {} requests) — the MTBF/MTTR likely \
+                     leave no capacity to drain the queue",
+                    self.stats.requests,
+                    self.stats.dropped,
+                    self.cfg.requests
                 );
             }
-            EvKind::ShardDone(s) => {
-                busy[s] = false;
-                // The horizon is the last *completion*: a stale flush event
-                // (scheduled while waiting, overtaken by a full batch) may
-                // pop later, but it must not stretch the utilization base.
-                stats.sim_time_s = ev.t;
-                for arrival in std::mem::take(&mut exec[s]) {
-                    let lat = ev.t - arrival;
-                    stats.latency.add(lat);
-                    stats.per_shard[s].latency.add(lat);
-                    stats.per_shard[s].served += 1;
-                    stats.requests += 1;
-                    if let Some(slo) = cfg.slo_s {
-                        if lat <= slo {
-                            stats.slo_met += 1;
-                            stats.per_shard[s].slo_met += 1;
+            match ev.kind {
+                EvKind::Arrival => self.on_arrival(ev.t),
+                EvKind::ShardDone { s, epoch } => self.on_done(s, epoch, ev.t),
+                EvKind::Flush(s) => {
+                    self.flush_pending[s] = false;
+                    self.dispatch(s, ev.t);
+                }
+                EvKind::Crash(s) => self.on_crash(s, ev.t),
+                EvKind::Recover(s) => self.on_recover(s, ev.t),
+                EvKind::Timeout { id, tag } => self.on_timeout(id, tag, ev.t),
+                EvKind::Retry { id } => self.on_retry(id, ev.t),
+                EvKind::Hedge { id } => self.on_hedge(id, ev.t),
+            }
+            // With injection on, the crash/recover chain never drains the
+            // heap, so stop once every request is accounted for.  With
+            // injection off the heap drains exactly as before (stale flush
+            // events included), keeping the event count bit-identical.
+            if self.active
+                && self.arrivals_left == 0
+                && self.stats.requests + self.stats.dropped >= self.cfg.requests as u64
+            {
+                break;
+            }
+        }
+        self.finish()
+    }
+
+    fn on_arrival(&mut self, t: f64) {
+        self.arrivals_left -= 1;
+        if self.arrivals_left > 0 {
+            let gap = self.rng.exp(self.mean_gap);
+            self.push(t + gap, EvKind::Arrival);
+        }
+        let id = self.reqs.len() as u32;
+        self.reqs.push(ReqState::new(t));
+        let s = self.route();
+        self.enqueue_copy(id, s, t);
+        if let Some(h) = self.fault.hedge_s {
+            self.push(t + h, EvKind::Hedge { id });
+        }
+        self.dispatch(s, t);
+    }
+
+    fn on_done(&mut self, s: usize, epoch: u32, t: f64) {
+        if epoch != self.epoch[s] {
+            return; // the shard crashed mid-batch: this completion is void
+        }
+        self.busy[s] = false;
+        // The horizon is the last *completion*: a stale flush event
+        // (scheduled while waiting, overtaken by a full batch) may pop
+        // later, but it must not stretch the utilization base.
+        self.stats.sim_time_s = t;
+        for id in std::mem::take(&mut self.exec[s]) {
+            let arrival = {
+                let r = &mut self.reqs[id as usize];
+                r.done = true;
+                r.in_service = None;
+                r.arrival
+            };
+            let lat = t - arrival;
+            self.stats.latency.add(lat);
+            self.stats.per_shard[s].latency.add(lat);
+            self.stats.per_shard[s].served += 1;
+            self.stats.requests += 1;
+            if let Some(slo) = self.cfg.slo_s {
+                if lat <= slo {
+                    self.stats.slo_met += 1;
+                    self.stats.per_shard[s].slo_met += 1;
+                }
+            }
+        }
+        self.dispatch(s, t);
+    }
+
+    fn on_crash(&mut self, s: usize, t: f64) {
+        if !self.up[s] {
+            return; // defensive: the schedule keeps one pending crash per up shard
+        }
+        self.up[s] = false;
+        self.epoch[s] = self.epoch[s].wrapping_add(1);
+        self.down_since[s] = Some(t);
+        self.stats.crashes += 1;
+        self.stats.per_shard[s].crashes += 1;
+        if self.busy[s] {
+            // Fail the in-flight batch.  The energy was committed at
+            // dispatch and stays spent (the silicon did the work up to the
+            // crash); the unexecuted tail of busy time is refunded so
+            // utilization stays an execution measure.
+            self.busy[s] = false;
+            let refund = (self.service_end[s] - t).max(0.0);
+            self.stats.per_shard[s].busy_s -= refund;
+            for id in std::mem::take(&mut self.exec[s]) {
+                self.reqs[id as usize].in_service = None;
+                match self.fault.crash_policy {
+                    CrashPolicy::Requeue => {
+                        self.stats.crash_requeues += 1;
+                        let target = self.route();
+                        self.enqueue_copy(id, target, t);
+                        self.dispatch(target, t);
+                    }
+                    CrashPolicy::Drop => {
+                        let r = &mut self.reqs[id as usize];
+                        if !r.resolved() {
+                            r.dropped = true;
+                            self.stats.dropped += 1;
                         }
                     }
                 }
-                dispatch(
-                    s,
-                    ev.t,
-                    plans,
-                    &mut queues,
-                    &mut busy,
-                    &mut exec,
-                    &mut flush_pending,
-                    arrivals_left,
-                    &mut stats,
-                    &mut heap,
-                    &mut seq,
-                );
-            }
-            EvKind::Flush(s) => {
-                flush_pending[s] = false;
-                dispatch(
-                    s,
-                    ev.t,
-                    plans,
-                    &mut queues,
-                    &mut busy,
-                    &mut exec,
-                    &mut flush_pending,
-                    arrivals_left,
-                    &mut stats,
-                    &mut heap,
-                    &mut seq,
-                );
             }
         }
+        // Recovery pays the drawn repair time plus the cold-wake charge.
+        let down = self
+            .faults[s]
+            .as_mut()
+            .expect("crash event without a fault schedule")
+            .downtime_s();
+        let wake = self.plans[s].wake_penalty_s;
+        self.stats.wake_penalty_s += wake;
+        self.push(t + down + wake, EvKind::Recover(s));
     }
-    debug_assert_eq!(stats.requests as usize, cfg.requests, "requests lost");
-    Ok(stats)
-}
 
-fn route(
-    policy: RoutingPolicy,
-    plans: &[ShardPlan],
-    queues: &[VecDeque<QueuedReq>],
-    exec: &[Vec<f64>],
-    rr_next: &mut usize,
-) -> usize {
-    let n = plans.len();
-    let outstanding = |s: usize| queues[s].len() + exec[s].len();
-    match policy {
-        RoutingPolicy::RoundRobin => {
-            let s = *rr_next % n;
-            *rr_next += 1;
-            s
+    fn on_recover(&mut self, s: usize, t: f64) {
+        self.up[s] = true;
+        if let Some(since) = self.down_since[s].take() {
+            self.stats.per_shard[s].downtime_s += t - since;
         }
-        RoutingPolicy::Jsq => (0..n)
-            .min_by_key(|&s| (outstanding(s), s))
-            .expect("non-empty fleet"),
-        RoutingPolicy::EnergyAware => {
-            let min_out = (0..n).map(outstanding).min().expect("non-empty fleet");
-            (0..n)
-                .filter(|&s| outstanding(s) <= min_out + 1)
-                .min_by(|&a, &b| {
-                    plans[a]
-                        .best_energy_per_inf()
-                        .total_cmp(&plans[b].best_energy_per_inf())
-                        .then_with(|| outstanding(a).cmp(&outstanding(b)))
-                        .then_with(|| a.cmp(&b))
-                })
-                .expect("non-empty fleet")
-        }
+        let up = self
+            .faults[s]
+            .as_mut()
+            .expect("recover event without a fault schedule")
+            .uptime_s();
+        self.push(t + up, EvKind::Crash(s));
+        self.dispatch(s, t);
     }
-}
 
-#[allow(clippy::too_many_arguments)]
-fn dispatch(
-    s: usize,
-    now: f64,
-    plans: &[ShardPlan],
-    queues: &mut [VecDeque<QueuedReq>],
-    busy: &mut [bool],
-    exec: &mut [Vec<f64>],
-    flush_pending: &mut [bool],
-    arrivals_left: usize,
-    stats: &mut FleetStats,
-    heap: &mut BinaryHeap<Ev>,
-    seq: &mut u64,
-) {
-    if busy[s] || queues[s].is_empty() {
-        return;
+    fn on_timeout(&mut self, id: u32, tag: u32, t: f64) {
+        let i = id as usize;
+        if self.reqs[i].resolved() || self.reqs[i].in_service.is_some() {
+            return;
+        }
+        let Some(pos) = self.reqs[i].live.iter().position(|&(tg, _)| tg == tag) else {
+            return; // this copy was already cancelled or drained
+        };
+        self.reqs[i].live.swap_remove(pos);
+        let timeout = self
+            .fault
+            .timeout_s
+            .expect("timeout event without a timeout config");
+        if self.reqs[i].timeout_retries < self.fault.retries {
+            self.reqs[i].timeout_retries += 1;
+            self.reqs[i].retry_pending = true;
+            self.stats.retries += 1;
+            let delay = fault::backoff_s(timeout, self.reqs[i].timeout_retries);
+            self.push(t + delay, EvKind::Retry { id });
+        } else if self.reqs[i].live.is_empty() && !self.reqs[i].retry_pending {
+            self.reqs[i].dropped = true;
+            self.stats.dropped += 1;
+        }
     }
-    let plan = &plans[s];
-    // Force a padded flush once the oldest request has waited out the
-    // deadline, or when no more arrivals can complete a full batch.
-    let force = arrivals_left == 0 || now >= queues[s][0].deadline_t;
-    match plan.batcher.plan(queues[s].len(), force).first() {
-        Some(&b) => {
-            let take = b.min(queues[s].len());
-            exec[s] = queues[s].drain(..take).map(|r| r.arrival).collect();
-            let pad = (b - take) as u64;
-            let service = plan.service_time_s(b);
-            busy[s] = true;
-            heap.push(Ev {
-                t: now + service,
-                seq: *seq,
-                kind: EvKind::ShardDone(s),
+
+    fn on_retry(&mut self, id: u32, t: f64) {
+        let i = id as usize;
+        self.reqs[i].retry_pending = false;
+        if self.reqs[i].resolved() || self.reqs[i].in_service.is_some() {
+            return;
+        }
+        let s = self.route();
+        self.enqueue_copy(id, s, t);
+        self.dispatch(s, t);
+    }
+
+    fn on_hedge(&mut self, id: u32, t: f64) {
+        let i = id as usize;
+        {
+            let r = &self.reqs[i];
+            if r.resolved() || r.in_service.is_some() || r.hedged || r.live.is_empty() {
+                return;
+            }
+        }
+        // Least-loaded *up* shard not already holding a copy.
+        let n = self.plans.len();
+        let target = (0..n)
+            .filter(|&s| self.up[s] && !self.reqs[i].live.iter().any(|&(_, sh)| sh == s))
+            .min_by_key(|&s| (self.live_len(s) + self.exec[s].len(), s));
+        let Some(target) = target else {
+            return; // nowhere to hedge to
+        };
+        self.reqs[i].hedged = true;
+        self.stats.hedges += 1;
+        self.enqueue_copy(id, target, t);
+        self.dispatch(target, t);
+    }
+
+    /// Live (non-cancelled) queue length of shard `s`.  On the no-fault
+    /// path every entry is live, so this is `len()` — bit-identical to the
+    /// pre-fault routing inputs.
+    fn live_len(&self, s: usize) -> usize {
+        if !self.active {
+            return self.queues[s].len();
+        }
+        self.queues[s]
+            .iter()
+            .filter(|q| self.entry_live(q, s))
+            .count()
+    }
+
+    fn entry_live(&self, q: &QueuedReq, s: usize) -> bool {
+        let r = &self.reqs[q.id as usize];
+        !r.resolved()
+            && r.in_service.is_none()
+            && r.live.iter().any(|&(tg, sh)| tg == q.tag && sh == s)
+    }
+
+    /// Routes one request: the configured policy over *up* shards (falling
+    /// back to all shards in the transient where the whole fleet is down —
+    /// the request queues and is served on recovery or dropped at the end).
+    fn route(&mut self) -> usize {
+        let n = self.plans.len();
+        let any_up = self.up.iter().any(|&u| u);
+        match self.cfg.policy {
+            RoutingPolicy::RoundRobin => loop {
+                let s = self.rr_next % n;
+                self.rr_next += 1;
+                if !any_up || self.up[s] {
+                    return s;
+                }
+            },
+            RoutingPolicy::Jsq => (0..n)
+                .filter(|&s| !any_up || self.up[s])
+                .min_by_key(|&s| (self.live_len(s) + self.exec[s].len(), s))
+                .expect("non-empty fleet"),
+            RoutingPolicy::EnergyAware => {
+                let out = |s: usize| self.live_len(s) + self.exec[s].len();
+                let min_out = (0..n)
+                    .filter(|&s| !any_up || self.up[s])
+                    .map(out)
+                    .min()
+                    .expect("non-empty fleet");
+                (0..n)
+                    .filter(|&s| !any_up || self.up[s])
+                    .filter(|&s| out(s) <= min_out + 1)
+                    .min_by(|&a, &b| {
+                        self.plans[a]
+                            .best_energy_per_inf()
+                            .total_cmp(&self.plans[b].best_energy_per_inf())
+                            .then_with(|| out(a).cmp(&out(b)))
+                            .then_with(|| a.cmp(&b))
+                    })
+                    .expect("non-empty fleet")
+            }
+        }
+    }
+
+    fn enqueue_copy(&mut self, id: u32, s: usize, now: f64) {
+        let tag = {
+            let r = &mut self.reqs[id as usize];
+            let tag = r.next_tag;
+            r.next_tag += 1;
+            r.live.push((tag, s));
+            tag
+        };
+        self.queues[s].push_back(QueuedReq {
+            id,
+            tag,
+            deadline_t: now + self.plans[s].batcher.flush_deadline_s,
+        });
+        let len = self.queues[s].len();
+        let sh = &mut self.stats.per_shard[s];
+        sh.queue_peak = sh.queue_peak.max(len);
+        if let Some(timeout) = self.fault.timeout_s {
+            self.push(now + timeout, EvKind::Timeout { id, tag });
+        }
+    }
+
+    fn dispatch(&mut self, s: usize, now: f64) {
+        if self.busy[s] || !self.up[s] {
+            return;
+        }
+        if self.active {
+            // Purge cancelled copies (drained elsewhere, timed out, or
+            // resolved) so the batcher plans over live requests only.  A
+            // no-op on the no-fault path (every entry is live).
+            let reqs = &self.reqs;
+            self.queues[s].retain(|q| {
+                let r = &reqs[q.id as usize];
+                !r.resolved()
+                    && r.in_service.is_none()
+                    && r.live.iter().any(|&(tg, sh)| tg == q.tag && sh == s)
             });
-            *seq += 1;
-            stats.batches += 1;
-            stats.padded_slots += pad;
-            stats.energy_j += b as f64 * plan.energy_per_inf[&b];
-            let sh = &mut stats.per_shard[s];
-            sh.batches += 1;
-            sh.padded_slots += pad;
-            sh.busy_s += service;
-            sh.energy_j += b as f64 * plan.energy_per_inf[&b];
         }
-        None => {
-            // Sub-batch remainder: wait for peers until the oldest
-            // request's flush deadline (the flush event re-dispatches with
-            // force=true — `deadline_t` is the exact float compared above,
-            // so the flush can never reschedule itself forever).  At most
-            // one flush is in flight per shard.
-            if !flush_pending[s] {
-                heap.push(Ev {
-                    t: queues[s][0].deadline_t.max(now),
-                    seq: *seq,
-                    kind: EvKind::Flush(s),
-                });
-                *seq += 1;
-                flush_pending[s] = true;
+        if self.queues[s].is_empty() {
+            return;
+        }
+        let plan = &self.plans[s];
+        // Force a padded flush once the oldest request has waited out the
+        // deadline, or when no more arrivals can complete a full batch.
+        let force = self.arrivals_left == 0 || now >= self.queues[s][0].deadline_t;
+        match plan.batcher.plan(self.queues[s].len(), force).first() {
+            Some(&b) => {
+                let take = b.min(self.queues[s].len());
+                let ids: Vec<u32> = self.queues[s].drain(..take).map(|r| r.id).collect();
+                for &id in &ids {
+                    let r = &mut self.reqs[id as usize];
+                    r.in_service = Some(s);
+                    // First copy to enter service wins: cancel the others
+                    // (they become dead queue entries, purged lazily).
+                    r.live.clear();
+                }
+                self.exec[s] = ids;
+                let pad = (b - take) as u64;
+                let service = plan.service_time_s(b);
+                self.busy[s] = true;
+                self.service_end[s] = now + service;
+                let epoch = self.epoch[s];
+                self.push(now + service, EvKind::ShardDone { s, epoch });
+                self.stats.batches += 1;
+                self.stats.padded_slots += pad;
+                self.stats.energy_j += b as f64 * plan.energy_per_inf[&b];
+                let sh = &mut self.stats.per_shard[s];
+                sh.batches += 1;
+                sh.padded_slots += pad;
+                sh.busy_s += service;
+                sh.energy_j += b as f64 * plan.energy_per_inf[&b];
+            }
+            None => {
+                // Sub-batch remainder: wait for peers until the oldest
+                // request's flush deadline (the flush event re-dispatches
+                // with force=true — `deadline_t` is the exact float compared
+                // above, so the flush can never reschedule itself forever).
+                // At most one flush is in flight per shard.
+                if !self.flush_pending[s] {
+                    let t = self.queues[s][0].deadline_t.max(now);
+                    self.push(t, EvKind::Flush(s));
+                    self.flush_pending[s] = true;
+                }
             }
         }
+    }
+
+    fn finish(mut self) -> Result<FleetStats> {
+        if self.active {
+            // Requests still unresolved when the heap/settle check ended the
+            // run (e.g. queued on a shard that never recovered in time with
+            // no timeout armed) are stranded: count them dropped so the
+            // conservation invariant holds.
+            for r in &mut self.reqs {
+                if !r.resolved() {
+                    r.dropped = true;
+                    self.stats.dropped += 1;
+                }
+            }
+            let horizon = self.stats.sim_time_s;
+            let mut down_total = 0.0;
+            for (s, sh) in self.stats.per_shard.iter_mut().enumerate() {
+                if let Some(since) = self.down_since[s].take() {
+                    sh.downtime_s += (horizon - since).max(0.0);
+                }
+                down_total += sh.downtime_s.min(horizon.max(0.0));
+            }
+            let n = self.plans.len() as f64;
+            self.stats.availability = if horizon > 0.0 {
+                (1.0 - down_total / (horizon * n)).clamp(0.0, 1.0)
+            } else {
+                1.0
+            };
+            debug_assert_eq!(
+                self.stats.requests + self.stats.dropped,
+                self.cfg.requests as u64,
+                "request conservation violated"
+            );
+        } else {
+            debug_assert_eq!(self.stats.requests as usize, self.cfg.requests, "requests lost");
+        }
+        Ok(self.stats)
     }
 }
 
@@ -742,7 +1215,7 @@ pub fn design_fleet(
     cfg.validate()?;
     let batcher_probe = BatchPolicy::new(opts.batch_sizes.clone(), opts.flush_deadline_s)
         .context("fleet executable batch sizes")?;
-    let batch_sizes = batcher_probe.sizes;
+    let batch_sizes = batcher_probe.sizes().to_vec();
     let engine = Engine::new(opts.threads);
 
     // Batched profiles per workload (indexes parallel to `nets`).
@@ -855,7 +1328,7 @@ pub fn design_fleet(
         let w = k % nets.len();
         let name = &nets[w].name;
         let plan = shard_plan(cfg, name, &per_net_profiles[w], per_net_orgs[w].clone(), opts, None)?;
-        let admitted = plan.batcher.sizes.clone();
+        let admitted = plan.batcher.sizes().to_vec();
         let base = shard_plan(
             cfg,
             name,
@@ -872,7 +1345,7 @@ pub fn design_fleet(
         // the baseline organization (equality, never a regression).
         let dominated = plan
             .batcher
-            .sizes
+            .sizes()
             .iter()
             .all(|b| plan.energy_per_inf[b] <= base.energy_per_inf[b]);
         plans.push(if dominated { plan } else { base.clone() });
@@ -929,6 +1402,7 @@ fn shard_plan(
         "SLO {:.3} ms admits no executable batch for '{workload}'",
         opts.slo_s.unwrap_or(f64::NAN) * 1e3
     );
+    let wake = cold_wake_s(&org, &cfg.tech);
     ShardPlan::new(
         workload,
         org,
@@ -936,6 +1410,116 @@ fn shard_plan(
         energy,
         latency,
         1.0,
+    )?
+    .with_wake_penalty(wake)
+}
+
+// ------------------------------------------------------- N+1 provisioning
+
+/// Options of the N+1 provisioning loop ([`design_fleet_n_plus`]).
+#[derive(Debug, Clone)]
+pub struct NPlusOptions {
+    /// Simultaneous shard failures the fleet must absorb.
+    pub fault_budget: usize,
+    /// Minimum SLO attainment the degraded fleet must keep.
+    pub attainment_target: f64,
+    /// Extra shards (beyond `shards + fault_budget`) the escalation may
+    /// add before giving up.
+    pub max_extra: usize,
+}
+
+impl Default for NPlusOptions {
+    fn default() -> NPlusOptions {
+        NPlusOptions {
+            fault_budget: 1,
+            attainment_target: 0.99,
+            max_extra: 4,
+        }
+    }
+}
+
+/// Result of the N+1 provisioning loop.
+#[derive(Debug, Clone)]
+pub struct NPlusDesign {
+    pub design: FleetDesign,
+    /// Provisioned shard count (>= requested shards + fault budget).
+    pub shards: usize,
+    /// Shards the worst-case degraded check pinned down.
+    pub pinned: Vec<usize>,
+    /// Stats of the degraded-mode simulation that met the target.
+    pub degraded: FleetStats,
+}
+
+/// N+1 fleet provisioning: escalates the shard count from
+/// `opts.shards + np.fault_budget` upward until the min-energy
+/// [`design_fleet`] selection keeps `np.attainment_target` SLO attainment
+/// with the fault budget's worth of shards down.  The degraded check is
+/// adversarial and deterministic: the `fault_budget` *highest-capacity*
+/// shards (capacity = max batch / its service time) are pinned down and
+/// the probe traffic is replayed over the survivors — if the fleet
+/// survives losing its biggest shards, it survives any budget-sized
+/// failure set of this design.
+pub fn design_fleet_n_plus(
+    cfg: &SystemConfig,
+    nets: &[Network],
+    opts: &DesignOptions,
+    probe: &FleetConfig,
+    np: &NPlusOptions,
+) -> Result<NPlusDesign> {
+    ensure!(
+        np.fault_budget > 0,
+        "N+1 provisioning needs a fault budget of at least one shard"
+    );
+    ensure!(
+        (0.0..=1.0).contains(&np.attainment_target),
+        "attainment target must be in [0, 1], got {}",
+        np.attainment_target
+    );
+    ensure!(
+        probe.slo_s.is_some(),
+        "N+1 provisioning needs an SLO: the attainment target is measured against it"
+    );
+    let mut last_att = 0.0;
+    for extra in 0..=np.max_extra {
+        let total = opts.shards + np.fault_budget + extra;
+        let mut o = opts.clone();
+        o.shards = total;
+        let design = design_fleet(cfg, nets, &o)?;
+        let cap = |s: usize| {
+            let p = &design.plans[s];
+            let b = p.batcher.max_batch();
+            b as f64 / p.service_time_s(b)
+        };
+        let mut by_cap: Vec<usize> = (0..total).collect();
+        by_cap.sort_by(|&a, &b| cap(b).total_cmp(&cap(a)).then_with(|| a.cmp(&b)));
+        let pinned: Vec<usize> = by_cap[..np.fault_budget].to_vec();
+        let mut degraded_cfg = probe.clone();
+        let mut f = probe.fault.clone().unwrap_or_default();
+        f.pinned_down = pinned.clone();
+        degraded_cfg.fault = Some(f);
+        let degraded = simulate(&design.plans, &degraded_cfg)
+            .with_context(|| format!("degraded-mode check of the {total}-shard fleet"))?;
+        last_att = degraded.slo_attainment();
+        if last_att >= np.attainment_target {
+            return Ok(NPlusDesign {
+                design,
+                shards: total,
+                pinned,
+                degraded,
+            });
+        }
+    }
+    bail!(
+        "N+1 provisioning failed: even {} shards (requested {} + fault budget {} + {} extra) \
+         keep only {:.1}% attainment with the {} largest shards down (target {:.1}%) — \
+         raise --shards, relax the SLO, or lower the fault budget",
+        opts.shards + np.fault_budget + np.max_extra,
+        opts.shards,
+        np.fault_budget,
+        np.max_extra,
+        100.0 * last_att,
+        np.fault_budget,
+        100.0 * np.attainment_target,
     )
 }
 
@@ -954,6 +1538,7 @@ mod tests {
             seed: 11,
             policy,
             slo_s: Some(60e-3),
+            fault: None,
         }
     }
 
@@ -1006,6 +1591,127 @@ mod tests {
         let mut c2 = c.clone();
         c2.seed = 12;
         assert_ne!(a, simulate(&plans, &c2).unwrap().fingerprint());
+    }
+
+    #[test]
+    fn inert_fault_config_is_bit_identical() {
+        // None and Some(default) must produce byte-identical fingerprints:
+        // the injection-off bit-identity invariant, also pinned end-to-end
+        // by rust/tests/fleet_faults.rs.
+        let plans = vec![plan(1.0), plan(0.7)];
+        let c = cfg(RoutingPolicy::Jsq);
+        let a = simulate(&plans, &c).unwrap().fingerprint();
+        let mut c2 = c.clone();
+        c2.fault = Some(FaultConfig::default());
+        let b = simulate(&plans, &c2).unwrap().fingerprint();
+        assert_eq!(a, b);
+        // An explicit infinite MTBF is the CLI's `--mtbf-s inf` spelling.
+        let mut c3 = c.clone();
+        c3.fault = Some(FaultConfig {
+            mtbf_s: f64::INFINITY,
+            ..FaultConfig::default()
+        });
+        assert_eq!(a, simulate(&plans, &c3).unwrap().fingerprint());
+    }
+
+    #[test]
+    fn crashes_conserve_requests_and_cost_availability() {
+        let plans = vec![plan(1.0), plan(1.0)];
+        let mut c = cfg(RoutingPolicy::Jsq);
+        c.fault = Some(FaultConfig {
+            mtbf_s: 0.2,
+            mttr_s: 0.05,
+            fault_seed: 3,
+            ..FaultConfig::default()
+        });
+        let stats = simulate(&plans, &c).unwrap();
+        assert!(stats.faults_active);
+        assert_eq!(stats.requests + stats.dropped, 300, "conservation");
+        assert!(stats.crashes > 0, "0.2 s MTBF over a ~2 s horizon must crash");
+        assert!(stats.availability < 1.0);
+        assert!(stats.availability > 0.0);
+        let down: f64 = stats.per_shard.iter().map(|s| s.downtime_s).sum();
+        assert!(down > 0.0);
+        // Requeue policy: nothing dropped by crashes alone (no timeouts).
+        assert_eq!(stats.dropped, 0);
+        assert!(stats.crash_requeues > 0 || stats.crashes > 0);
+    }
+
+    #[test]
+    fn crash_drop_policy_drops_in_flight() {
+        let plans = vec![plan(1.0), plan(1.0)];
+        let mut c = cfg(RoutingPolicy::Jsq);
+        c.fault = Some(FaultConfig {
+            mtbf_s: 0.1,
+            mttr_s: 0.05,
+            fault_seed: 3,
+            crash_policy: CrashPolicy::Drop,
+            ..FaultConfig::default()
+        });
+        let stats = simulate(&plans, &c).unwrap();
+        assert_eq!(stats.requests + stats.dropped, 300);
+        assert!(stats.dropped > 0, "0.1 s MTBF with drop policy must drop");
+        assert_eq!(stats.crash_requeues, 0);
+    }
+
+    #[test]
+    fn pinned_down_shard_serves_nothing() {
+        let plans = vec![plan(1.0), plan(1.0)];
+        let mut c = cfg(RoutingPolicy::Jsq);
+        c.fault = Some(FaultConfig {
+            pinned_down: vec![0],
+            ..FaultConfig::default()
+        });
+        let stats = simulate(&plans, &c).unwrap();
+        assert_eq!(stats.per_shard[0].served, 0);
+        assert_eq!(stats.per_shard[1].served, 300);
+        assert_eq!(stats.requests, 300);
+        let horizon = stats.sim_time_s;
+        assert!(stats.per_shard[0].availability(horizon) < 1e-9);
+        assert!((stats.per_shard[1].availability(horizon) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timeouts_drop_after_retry_budget() {
+        // One shard, batch {4} only, 10 s flush deadline: sparse arrivals
+        // wait forever for peers, so every copy times out; with retries=1
+        // each request re-dispatches once and is then dropped (unless 4
+        // happen to pool up).
+        let p = ShardPlan::synthetic("wl", vec![4], 5e-3, 1e-3, 1.0, 10.0).unwrap();
+        let c = FleetConfig {
+            rps: 10.0,
+            requests: 30,
+            seed: 3,
+            policy: RoutingPolicy::RoundRobin,
+            slo_s: None,
+            fault: Some(FaultConfig {
+                timeout_s: Some(20e-3),
+                retries: 1,
+                ..FaultConfig::default()
+            }),
+        };
+        let stats = simulate(&[p], &c).unwrap();
+        assert_eq!(stats.requests + stats.dropped, 30, "conservation");
+        assert!(stats.dropped > 0, "starved batches must drop");
+        assert!(stats.retries > 0);
+        assert!(stats.retries <= 30, "retry budget is 1 per request");
+    }
+
+    #[test]
+    fn hedging_duplicates_at_most_once_and_conserves() {
+        // One slow, one fast shard under RR: half the requests queue on the
+        // slow shard and hedge onto the fast one after 5 ms.
+        let plans = vec![plan(0.1), plan(1.0)];
+        let mut c = cfg(RoutingPolicy::RoundRobin);
+        c.fault = Some(FaultConfig {
+            hedge_s: Some(5e-3),
+            ..FaultConfig::default()
+        });
+        let stats = simulate(&plans, &c).unwrap();
+        assert_eq!(stats.requests + stats.dropped, 300, "conservation");
+        assert!(stats.hedges > 0, "slow-shard queues must trigger hedges");
+        assert!(stats.hedges <= 300, "at most one hedge per request");
+        assert_eq!(stats.dropped, 0, "hedging never drops");
     }
 
     #[test]
@@ -1074,6 +1780,7 @@ mod tests {
             seed: 3,
             policy: RoutingPolicy::RoundRobin,
             slo_s: None,
+            fault: None,
         };
         let mut stats = simulate(&[p.clone()], &c).unwrap();
         assert_eq!(stats.requests, 20);
@@ -1082,6 +1789,16 @@ mod tests {
         // the deadline wait.
         let min_lat = stats.latency.percentile(0.0);
         assert!(min_lat >= p.service_time_s(4) - 1e-12, "{min_lat}");
+    }
+
+    #[test]
+    fn cold_wake_follows_power_gating() {
+        use crate::config::Technology;
+        let tech = Technology::default();
+        let ungated = Organization::smp(MemSpec::new(64 * 1024, 1));
+        assert_eq!(cold_wake_s(&ungated, &tech), 0.0);
+        let gated = Organization::smp(MemSpec::new(64 * 1024, 4));
+        assert_eq!(cold_wake_s(&gated, &tech), tech.wakeup_latency_s);
     }
 
     #[test]
@@ -1102,8 +1819,18 @@ mod tests {
             slo_s: Some(f64::NAN),
             ..FleetConfig::default()
         };
-        assert!(simulate(&[p], &c).is_err());
+        assert!(simulate(&[p.clone()], &c).is_err());
+        // Fault configs are validated against the fleet size.
+        let c = FleetConfig {
+            fault: Some(FaultConfig {
+                pinned_down: vec![0],
+                ..FaultConfig::default()
+            }),
+            ..FleetConfig::default()
+        };
+        assert!(simulate(&[p], &c).is_err(), "all shards pinned down");
         assert!(ShardPlan::synthetic("wl", vec![1], 5e-3, 1e-3, 0.0, 1e-3).is_err());
         assert!(ShardPlan::synthetic("wl", vec![], 5e-3, 1e-3, 1.0, 1e-3).is_err());
+        assert!(plan(1.0).with_wake_penalty(-1.0).is_err());
     }
 }

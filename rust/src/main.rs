@@ -68,10 +68,18 @@ fn print_help() {
            fleet    [--shards N] [--rps R] [--requests N] [--policy rr|jsq|energy]\n\
                     [--slo-ms MS] [--seed S] [--batch-max B] [--homogeneous]\n\
                     [--net NAME[,NAME...]] [--threads N] [--out DIR]\n\
+                    [--mtbf-s S|inf] [--mttr-s S] [--timeout-ms MS] [--retries K]\n\
+                    [--hedge-ms MS] [--fault-seed S] [--crash-policy requeue|drop]\n\
+                    [--fault-budget F [--attainment FRAC]]\n\
                     sharded fleet serving simulation: SLO-constrained per-shard\n\
                     SPM co-design (vs the homogeneous union-SMP baseline) +\n\
                     seeded discrete-event simulation with p50/p95/p99, SLO\n\
-                    attainment, energy/request and shard utilization rollups\n\
+                    attainment, energy/request and shard utilization rollups.\n\
+                    Fault injection: seeded per-shard crash/recover schedules\n\
+                    (--mtbf-s/--mttr-s), per-request timeout + bounded retry\n\
+                    with exponential backoff (--timeout-ms/--retries), hedged\n\
+                    re-dispatch (--hedge-ms); --fault-budget F provisions the\n\
+                    fleet N+F so degraded attainment stays over --attainment\n\
            report   [all|fig1|fig7|fig9|fig10|fig11|fig12|fig18|fig19|fig20|fig21|\n\
                      fig22|fig23|fig25|fig27|fig29|fig30|fig31|multi|fleet|table3|headline]\n\
                     [--out DIR] [--threads N] [--config FILE]\n\
@@ -543,6 +551,42 @@ fn cmd_fleet(args: &[String]) -> i32 {
             return 2;
         }
     };
+
+    // Fault-injection block (ISSUE 8).  `--mtbf-s inf` (the default) keeps
+    // injection off; parse accepts "inf" via f64::from_str.  An explicit
+    // fault flag builds a FaultConfig even when it stays inert, so that the
+    // inert-config bit-identity contract is exercised from the CLI too.
+    let fault_flag_given = ["mtbf-s", "mttr-s", "timeout-ms", "retries", "hedge-ms",
+        "fault-seed", "crash-policy"]
+        .iter()
+        .any(|k| flags.has(k));
+    let mtbf_s = try_flag!(flags.f64("mtbf-s", f64::INFINITY));
+    let mttr_s = try_flag!(flags.f64("mttr-s", 1.0));
+    let timeout_s = try_flag!(flags.f64_opt("timeout-ms")).map(|ms| ms * 1e-3);
+    let retries = try_flag!(flags.usize("retries", 2)) as u32;
+    let hedge_s = try_flag!(flags.f64_opt("hedge-ms")).map(|ms| ms * 1e-3);
+    let fault_seed = try_flag!(flags.usize("fault-seed", 0)) as u64;
+    let crash_policy = match fleet::fault::CrashPolicy::parse(&flags.get("crash-policy", "requeue"))
+    {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 2;
+        }
+    };
+    let fault = fault_flag_given.then(|| fleet::fault::FaultConfig {
+        mtbf_s,
+        mttr_s,
+        timeout_s,
+        retries,
+        hedge_s,
+        fault_seed,
+        crash_policy,
+        pinned_down: Vec::new(),
+    });
+    let fault_budget = try_flag!(flags.usize("fault-budget", 0));
+    let attainment = try_flag!(flags.f64("attainment", 0.99));
+
     let (nets, _) = match collect_networks(&flags) {
         Ok(v) => v,
         Err(e) => {
@@ -571,13 +615,36 @@ fn cmd_fleet(args: &[String]) -> i32 {
             homogeneous: flags.has("homogeneous"),
             threads,
         };
-        let design = fleet::design_fleet(&cfg, &nets, &opts)?;
         let fcfg = fleet::FleetConfig {
             rps,
             requests,
             seed,
             policy,
             slo_s,
+            fault,
+        };
+        let design = if fault_budget > 0 {
+            // N+F provisioning: escalate shard count until the fleet still
+            // meets the attainment target with its F highest-capacity
+            // shards pinned down (adversarial worst case).
+            let np = fleet::NPlusOptions {
+                fault_budget,
+                attainment_target: attainment,
+                max_extra: 4,
+            };
+            let nd = fleet::design_fleet_n_plus(&cfg, &nets, &opts, &fcfg, &np)?;
+            println!(
+                "N+{fault_budget} provisioning: {} shards (base {}), degraded \
+                 attainment {:.1}% with shards {:?} down (target {:.1}%)",
+                nd.shards,
+                shards,
+                100.0 * nd.degraded.slo_attainment(),
+                nd.pinned,
+                100.0 * attainment,
+            );
+            nd.design
+        } else {
+            fleet::design_fleet(&cfg, &nets, &opts)?
         };
         let ctx = ReportCtx::new(cfg, &out);
         let (_, _, mut stats, base) = report::fleet_report(&ctx, &design, &fcfg)?;

@@ -899,6 +899,11 @@ pub fn fleet_report(
         "p99_ms",
         "slo_attainment",
         "energy_per_req_mj",
+        "availability",
+        "crashes",
+        "dropped",
+        "retries",
+        "hedges",
     ]);
     let horizon = stats.sim_time_s;
     let policy = stats.policy.label().to_string();
@@ -918,6 +923,13 @@ pub fn fleet_report(
             f(sh.latency.p99() * 1e3),
             f(sh.slo_attainment(slo)),
             f(sh.energy_per_request_j() * 1e3),
+            f(sh.availability(horizon)),
+            u(sh.crashes as usize),
+            // Dropped/retried/hedged are fleet-scoped (a request may touch
+            // several shards), so the per-shard rows report 0.
+            u(0),
+            u(0),
+            u(0),
         ]);
     }
     for (scope, st) in [("fleet", &mut stats), ("fleet-baseline", &mut base)] {
@@ -930,6 +942,8 @@ pub fn fleet_report(
         let (requests, batches, padded) = (st.requests, st.batches, st.padded_slots);
         let util = if scope == "fleet" { stats_util } else { base_util };
         let (att, e_req) = (st.slo_attainment(), st.energy_per_request_j());
+        let (avail, crashes, dropped, retries, hedges) =
+            (st.availability, st.crashes, st.dropped, st.retries, st.hedges);
         csv.row(vec![
             s(scope),
             s("mix"),
@@ -944,21 +958,27 @@ pub fn fleet_report(
             f(st.latency.p99() * 1e3),
             f(att),
             f(e_req * 1e3),
+            f(avail),
+            u(crashes as usize),
+            u(dropped as usize),
+            u(retries as usize),
+            u(hedges as usize),
         ]);
     }
 
     let mut table = Table::new(&[
-        "Shard", "Workload", "Org", "Batches", "E/req [mJ]", "p99 [ms]", "Util",
+        "Shard", "Workload", "Org", "Batches", "E/req [mJ]", "p99 [ms]", "Util", "Avail",
     ]);
     for (i, (plan, sh)) in design.plans.iter().zip(&mut stats.per_shard).enumerate() {
         table.row(vec![
             format!("{i}"),
             plan.workload.clone(),
             plan.org.label(),
-            format!("{:?}", plan.batcher.sizes),
+            format!("{:?}", plan.batcher.sizes()),
             format!("{:.3}", sh.energy_per_request_j() * 1e3),
             format!("{:.3}", sh.latency.p99() * 1e3),
             format!("{:.1}%", 100.0 * sh.utilization(horizon)),
+            format!("{:.2}%", 100.0 * sh.availability(horizon)),
         ]);
     }
     table.row(vec![
@@ -969,6 +989,7 @@ pub fn fleet_report(
         format!("{:.3}", stats.energy_per_request_j() * 1e3),
         format!("{:.3}", stats.latency.p99() * 1e3),
         format!("{:.1}%", 100.0 * stats_util),
+        format!("{:.2}%", 100.0 * stats.availability),
     ]);
     table.row(vec![
         "baseline".into(),
@@ -978,6 +999,7 @@ pub fn fleet_report(
         format!("{:.3}", base.energy_per_request_j() * 1e3),
         format!("{:.3}", base.latency.p99() * 1e3),
         format!("{:.1}%", 100.0 * base_util),
+        format!("{:.2}%", 100.0 * base.availability),
     ]);
 
     ctx.write("fleet.csv", &csv);

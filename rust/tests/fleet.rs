@@ -37,6 +37,7 @@ fn golden_scenario() -> (Vec<ShardPlan>, FleetConfig) {
         seed: 7,
         policy: RoutingPolicy::Jsq,
         slo_s: Some(50e-3),
+        fault: None,
     };
     (plans, cfg)
 }
@@ -86,6 +87,7 @@ fn fleet_pipeline_is_bit_identical_across_thread_counts() {
             seed: 9,
             policy: RoutingPolicy::Jsq,
             slo_s: Some(20e-3),
+            fault: None,
         };
         let mut stats = simulate(&design.plans, &fcfg).expect("fleet simulation");
         let mut base = simulate(&design.baseline, &fcfg).expect("baseline simulation");
@@ -123,6 +125,7 @@ fn jsq_never_worse_than_round_robin_p99_on_asymmetric_shards() {
                 seed,
                 policy,
                 slo_s: None,
+                fault: None,
             };
             let mut stats = simulate(&plans, &cfg).expect("fleet simulation");
             stats.latency.p99()
@@ -157,8 +160,8 @@ fn codesigned_fleet_energy_beats_the_homogeneous_smp_baseline() {
     // Pointwise: every admitted batch is cheaper (or equal) per inference
     // on the co-designed organization.
     for (plan, base) in design.plans.iter().zip(&design.baseline) {
-        assert_eq!(plan.batcher.sizes, base.batcher.sizes, "batch sets differ");
-        for b in &plan.batcher.sizes {
+        assert_eq!(plan.batcher.sizes(), base.batcher.sizes(), "batch sets differ");
+        for b in plan.batcher.sizes() {
             assert!(
                 plan.energy_per_inf[b] <= base.energy_per_inf[b] * (1.0 + 1e-12),
                 "batch {b}: codesigned {} J vs baseline {} J",
@@ -181,6 +184,7 @@ fn codesigned_fleet_energy_beats_the_homogeneous_smp_baseline() {
         seed: 7,
         policy: RoutingPolicy::Jsq,
         slo_s: Some(20e-3),
+        fault: None,
     };
     let mut stats = simulate(&design.plans, &fcfg).expect("fleet simulation");
     let mut base = simulate(&design.baseline, &fcfg).expect("baseline simulation");
@@ -196,7 +200,7 @@ fn codesigned_fleet_energy_beats_the_homogeneous_smp_baseline() {
     // The SLO gates batch 4 out at 20 ms (batch-4 CapsNet simulates past
     // it), so every shard's executable set is a strict subset.
     for plan in &design.plans {
-        assert!(plan.batcher.max_batch() <= 2, "{:?}", plan.batcher.sizes);
+        assert!(plan.batcher.max_batch() <= 2, "{:?}", plan.batcher.sizes());
     }
 }
 

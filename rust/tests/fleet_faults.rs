@@ -1,0 +1,291 @@
+//! Integration: fault injection in the fleet simulator (ISSUE 8).
+//!
+//! * conservation: every arrival is counted exactly once as completed or
+//!   dropped, under every combination of crashes, timeouts, retries,
+//!   hedging and crash policies; timeout retries never exceed the budget
+//!   and hedges never exceed one per request;
+//! * injection-off bit-identity: a `None` fault config, the inert default
+//!   config and an explicit `--mtbf-s inf` config all produce the same
+//!   fingerprint byte-for-byte — and it matches the pre-fault golden
+//!   (`rust/tests/goldens/fleet_seed7.txt`) when that file is pinned;
+//! * determinism: the full design+simulate pipeline with faults armed is
+//!   bit-identical for threads=1 vs threads=4 (crash schedules come from
+//!   dedicated PRNG streams, independent of the DSE engine);
+//! * monotonicity: pinning down more shards never improves p99 or SLO
+//!   attainment; granting more timeout retries never completes fewer
+//!   requests (summed over seeds).
+
+use std::path::PathBuf;
+
+use descnet::config::SystemConfig;
+use descnet::fleet::fault::{CrashPolicy, FaultConfig};
+use descnet::fleet::{
+    design_fleet, simulate, DesignOptions, FleetConfig, RoutingPolicy, ShardPlan,
+};
+use descnet::model::capsnet_mnist;
+
+/// The exact scenario of the pre-fault golden test (rust/tests/fleet.rs):
+/// two synthetic shards, one at 70% speed, JSQ, seed 7.
+fn golden_scenario() -> (Vec<ShardPlan>, FleetConfig) {
+    let plans = vec![
+        ShardPlan::synthetic("wl-a", vec![1, 2, 4], 10e-3, 5e-3, 1.0, 2e-3).unwrap(),
+        ShardPlan::synthetic("wl-b", vec![1, 4], 12e-3, 3e-3, 0.7, 2e-3).unwrap(),
+    ];
+    let cfg = FleetConfig {
+        rps: 150.0,
+        requests: 500,
+        seed: 7,
+        policy: RoutingPolicy::Jsq,
+        slo_s: Some(50e-3),
+        fault: None,
+    };
+    (plans, cfg)
+}
+
+fn faulty_fleet() -> Vec<ShardPlan> {
+    (0..4)
+        .map(|i| {
+            let speed = if i == 3 { 0.5 } else { 1.0 };
+            ShardPlan::synthetic("wl", vec![1, 2, 4], 10e-3, 5e-3, speed, 2e-3)
+                .unwrap()
+                .with_wake_penalty(if i % 2 == 0 { 1e-3 } else { 0.0 })
+                .unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn conservation_under_every_fault_combination() {
+    let plans = faulty_fleet();
+    for seed in [1u64, 7, 23] {
+        for policy in [RoutingPolicy::RoundRobin, RoutingPolicy::Jsq] {
+            for crash_policy in [CrashPolicy::Requeue, CrashPolicy::Drop] {
+                for (timeout_s, retries, hedge_s) in [
+                    (None, 0u32, None),
+                    (Some(60e-3), 0, None),
+                    (Some(60e-3), 2, None),
+                    (Some(60e-3), 2, Some(30e-3)),
+                    (None, 0, Some(30e-3)),
+                ] {
+                    let cfg = FleetConfig {
+                        rps: 250.0,
+                        requests: 800,
+                        seed,
+                        policy,
+                        slo_s: Some(50e-3),
+                        fault: Some(FaultConfig {
+                            mtbf_s: 0.5,
+                            mttr_s: 0.1,
+                            timeout_s,
+                            retries,
+                            hedge_s,
+                            fault_seed: seed.wrapping_add(100),
+                            crash_policy,
+                            pinned_down: Vec::new(),
+                        }),
+                    };
+                    let stats = simulate(&plans, &cfg).expect("fleet simulation");
+                    let ctx = format!(
+                        "seed {seed} policy {} crash {} timeout {timeout_s:?} \
+                         retries {retries} hedge {hedge_s:?}",
+                        policy.label(),
+                        crash_policy.label(),
+                    );
+                    assert_eq!(
+                        stats.requests + stats.dropped,
+                        cfg.requests as u64,
+                        "conservation violated ({ctx}): {} completed + {} dropped != {}",
+                        stats.requests,
+                        stats.dropped,
+                        cfg.requests,
+                    );
+                    assert!(
+                        stats.retries <= retries as u64 * cfg.requests as u64,
+                        "retry budget exceeded ({ctx}): {} > {} x {}",
+                        stats.retries,
+                        retries,
+                        cfg.requests,
+                    );
+                    assert!(
+                        stats.hedges <= cfg.requests as u64,
+                        "more than one hedge per request ({ctx}): {}",
+                        stats.hedges,
+                    );
+                    if timeout_s.is_none() && crash_policy == CrashPolicy::Requeue {
+                        assert_eq!(
+                            stats.dropped, 0,
+                            "requeue-without-timeout must never drop ({ctx})"
+                        );
+                    }
+                    assert!(stats.faults_active, "faults should be active ({ctx})");
+                    assert!(stats.crashes > 0, "MTBF 0.5 s drew no crashes ({ctx})");
+                    assert!(
+                        (0.0..=1.0).contains(&stats.availability),
+                        "availability out of range ({ctx}): {}",
+                        stats.availability,
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn inert_configs_are_bit_identical_and_match_the_golden() {
+    let (plans, cfg) = golden_scenario();
+    let mut none = simulate(&plans, &cfg).expect("no fault config");
+    let mut default = simulate(
+        &plans,
+        &FleetConfig {
+            fault: Some(FaultConfig::default()),
+            ..cfg.clone()
+        },
+    )
+    .expect("inert default config");
+    // `--mtbf-s inf` from the CLI with every other knob at a non-default
+    // (but still inert) value: the gate is is_active(), not equality with
+    // the default.
+    let mut inf = simulate(
+        &plans,
+        &FleetConfig {
+            fault: Some(FaultConfig {
+                mtbf_s: f64::INFINITY,
+                mttr_s: 9.0,
+                retries: 7,
+                fault_seed: 12345,
+                crash_policy: CrashPolicy::Drop,
+                ..FaultConfig::default()
+            }),
+            ..cfg.clone()
+        },
+    )
+    .expect("inert inf config");
+
+    let fp = none.fingerprint();
+    assert_eq!(fp, default.fingerprint(), "default FaultConfig perturbed the run");
+    assert_eq!(fp, inf.fingerprint(), "--mtbf-s inf perturbed the run");
+    assert!(!none.faults_active);
+    assert_eq!(none.availability, 1.0);
+    assert_eq!((none.dropped, none.retries, none.hedges, none.crashes), (0, 0, 0, 0));
+
+    // The fingerprint must also equal the pre-fault golden, when pinned
+    // (the golden blesses on first toolchain run; skip while pending).
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/goldens/fleet_seed7.txt");
+    let existing = std::fs::read_to_string(&path).unwrap_or_default();
+    if existing.is_empty() || existing.starts_with("pending") {
+        eprintln!("golden {} not pinned yet; skipping cross-check", path.display());
+        return;
+    }
+    let pinned = existing.lines().next().unwrap_or("");
+    assert_eq!(
+        pinned, fp,
+        "inert-fault run drifted from the pre-fault golden {}",
+        path.display()
+    );
+}
+
+#[test]
+fn faulty_pipeline_is_bit_identical_across_thread_counts() {
+    let cfg = SystemConfig::default();
+    let run = |threads: usize| {
+        let opts = DesignOptions {
+            shards: 2,
+            batch_sizes: vec![1, 2],
+            slo_s: Some(20e-3),
+            flush_deadline_s: 2e-3,
+            homogeneous: false,
+            threads,
+        };
+        let design = design_fleet(&cfg, &[capsnet_mnist()], &opts).expect("fleet design");
+        let fcfg = FleetConfig {
+            rps: 120.0,
+            requests: 200,
+            seed: 9,
+            policy: RoutingPolicy::Jsq,
+            slo_s: Some(20e-3),
+            fault: Some(FaultConfig {
+                mtbf_s: 1.0,
+                mttr_s: 0.2,
+                timeout_s: Some(80e-3),
+                retries: 2,
+                hedge_s: Some(40e-3),
+                fault_seed: 5,
+                ..FaultConfig::default()
+            }),
+        };
+        let mut stats = simulate(&design.plans, &fcfg).expect("fleet simulation");
+        stats.fingerprint()
+    };
+    assert_eq!(run(1), run(4), "faulty fleet report differs across thread counts");
+}
+
+#[test]
+fn pinning_down_more_shards_never_improves_the_tail() {
+    let plans = faulty_fleet();
+    for seed in [1u64, 7] {
+        let run = |pinned_down: Vec<usize>| {
+            let cfg = FleetConfig {
+                rps: 200.0,
+                requests: 1_000,
+                seed,
+                policy: RoutingPolicy::Jsq,
+                slo_s: Some(50e-3),
+                fault: Some(FaultConfig {
+                    pinned_down,
+                    ..FaultConfig::default()
+                }),
+            };
+            let mut stats = simulate(&plans, &cfg).expect("fleet simulation");
+            (stats.latency.p99(), stats.slo_attainment())
+        };
+        let (p99_full, att_full) = run(vec![]);
+        let (p99_one, att_one) = run(vec![0]);
+        let (p99_two, att_two) = run(vec![0, 1]);
+        assert!(
+            p99_one >= p99_full * (1.0 - 1e-9) && p99_two >= p99_one * (1.0 - 1e-9),
+            "seed {seed}: p99 improved as shards went down: {p99_full} -> {p99_one} -> {p99_two}"
+        );
+        assert!(
+            att_one <= att_full + 1e-9 && att_two <= att_one + 1e-9,
+            "seed {seed}: attainment improved as shards went down: \
+             {att_full} -> {att_one} -> {att_two}"
+        );
+    }
+}
+
+#[test]
+fn more_retries_never_complete_fewer_requests() {
+    // Crash-heavy fleet with timeouts: retries=0 drops every request whose
+    // first copy waits out the timeout; a retry budget re-dispatches them.
+    // Compared as a sum over seeds (per-seed event orders legitimately
+    // differ once retry events enter the heap).
+    let plans = faulty_fleet();
+    let completed = |retries: u32| -> u64 {
+        [1u64, 7, 23]
+            .iter()
+            .map(|&seed| {
+                let cfg = FleetConfig {
+                    rps: 250.0,
+                    requests: 600,
+                    seed,
+                    policy: RoutingPolicy::Jsq,
+                    slo_s: Some(50e-3),
+                    fault: Some(FaultConfig {
+                        mtbf_s: 0.4,
+                        mttr_s: 0.15,
+                        timeout_s: Some(50e-3),
+                        retries,
+                        fault_seed: seed.wrapping_add(7),
+                        ..FaultConfig::default()
+                    }),
+                };
+                simulate(&plans, &cfg).expect("fleet simulation").requests
+            })
+            .sum()
+    };
+    let r0 = completed(0);
+    let r2 = completed(2);
+    let r5 = completed(5);
+    assert!(r2 >= r0, "2 retries completed fewer requests than 0 ({r2} < {r0})");
+    assert!(r5 >= r2, "5 retries completed fewer requests than 2 ({r5} < {r2})");
+}
