@@ -28,6 +28,7 @@ fn main() {
     ] {
         let name = format!("compile {net}/{stage} b{b}");
         // (load is cached, so time only the first call per artifact)
+        // lint: allow(wall_clock, "bench harness wall-time measurement")
         let t = std::time::Instant::now();
         rt.load_stage(net, stage, b).expect("load");
         println!(

@@ -1,0 +1,360 @@
+//! Line lexer for `descnet lint` (DESIGN.md section 16).
+//!
+//! Reduces a Rust source file to per-line records the rule pass can match
+//! against without tripping over comments and literals:
+//!
+//! * `code` — the line with comments, string/char literals (including raw
+//!   and byte strings) removed, so a rule token inside a doc comment or an
+//!   error message never fires;
+//! * `comment` — the concatenated comment text of the line, kept verbatim
+//!   so the suppression pass can parse `lint: allow(rule, reason)`
+//!   annotations;
+//! * `in_test` — whether the line belongs to a `#[cfg(test)]` item
+//!   (typically `mod tests { ... }`): test code is exempt from every rule,
+//!   since panicking and wall-clock reads are fine in tests.
+//!
+//! The lexer is a character state machine over the whole file, so multi-line
+//! block comments (nested, as Rust allows), multi-line strings, and `{`/`}`
+//! inside literals are all handled; brace depth is then computed over the
+//! stripped code, which is what makes the `#[cfg(test)]` item-skipping
+//! sound at line granularity.
+
+/// One lexed source line.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// 1-based line number.
+    pub n: usize,
+    /// Comment- and literal-stripped code.
+    pub code: String,
+    /// Comment text (both `//` and `/* */` parts) on this line.
+    pub comment: String,
+    /// Inside a `#[cfg(test)]` item.
+    pub in_test: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    /// Nesting depth of `/* */` (Rust block comments nest).
+    BlockComment(u32),
+    Str,
+    /// Raw string, with the number of `#` marks in its delimiter.
+    RawStr(u32),
+    Char,
+}
+
+/// Splits `text` into lexed lines: literals stripped from `code`, comments
+/// collected into `comment`, `in_test` marked for `#[cfg(test)]` items.
+pub fn strip(text: &str) -> Vec<Line> {
+    let mut lines = raw_strip(text);
+    mark_tests(&mut lines);
+    lines
+}
+
+fn raw_strip(text: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut n = 1usize;
+    let mut state = State::Code;
+
+    let chars: Vec<char> = text.chars().collect();
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            out.push(Line {
+                n,
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                in_test: false,
+            });
+            n += 1;
+            // A line comment ends at the newline; everything else persists.
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !(i > 0 && is_ident(chars[i - 1])) {
+                    // Raw / byte strings: r"..", r#"..."#, br"..", b"..".
+                    // `r#ident` (raw identifiers) must fall through to code.
+                    if let Some((skip, hashes)) = raw_str_open(&chars, i) {
+                        code.push('"');
+                        state = State::RawStr(hashes);
+                        i += skip;
+                    } else if c == 'b' && next == Some('\'') {
+                        code.push('b');
+                        state = State::Char;
+                        i += 2;
+                    } else if c == 'b' && next == Some('"') {
+                        code.push('"');
+                        state = State::Str;
+                        i += 2;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime: 'x' / '\n' are literals,
+                    // 'a in `&'a T` (no closing quote nearby) is a lifetime.
+                    if next == Some('\\')
+                        || (chars.get(i + 2) == Some(&'\'') && next != Some('\''))
+                    {
+                        state = State::Char;
+                        i += 1;
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(d) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = State::BlockComment(d + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if d == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(d - 1)
+                    };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // Skip the escaped char (handles \" and \\) — but never
+                    // swallow a newline: a line-continuation escape must
+                    // still produce its Line record.
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    code.push('"');
+                    state = State::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+            State::Char => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        out.push(Line {
+            n,
+            code,
+            comment,
+            in_test: false,
+        });
+    }
+    out
+}
+
+/// At `chars[i] == 'r'` or `'b'`: does a raw-string delimiter start here?
+/// Returns (chars to skip past the opening quote, hash count).
+fn raw_str_open(chars: &[char], i: usize) -> Option<(usize, u32)> {
+    let mut j = i + 1;
+    if chars.get(i) == Some(&'b') {
+        if chars.get(j) != Some(&'r') {
+            return None;
+        }
+        j += 1;
+    }
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((j + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+/// At `chars[i] == '"'` inside a raw string: is it followed by `hashes` `#`s?
+fn closes_raw(chars: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Marks lines belonging to `#[cfg(test)]` items.  Brace depth is tracked
+/// over the stripped code; the item following the attribute (plus any
+/// intervening attributes) is skipped until depth returns to the entry
+/// level on a line that closes a block or ends a declaration.
+fn mark_tests(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut skip_entry: Option<i64> = None;
+
+    for line in lines.iter_mut() {
+        let trimmed = line.code.trim().to_string();
+        if skip_entry.is_none() {
+            if trimmed.contains("cfg(test)") || trimmed.contains("cfg(all(test") {
+                pending = true;
+                line.in_test = true;
+            } else if pending {
+                line.in_test = true;
+                if !trimmed.is_empty() && !trimmed.starts_with("#[") {
+                    // First line of the gated item.
+                    skip_entry = Some(depth);
+                    pending = false;
+                }
+            }
+        } else {
+            line.in_test = true;
+        }
+
+        let opens = trimmed.matches('{').count() as i64;
+        let closes = trimmed.matches('}').count() as i64;
+        depth += opens - closes;
+
+        if let Some(entry) = skip_entry {
+            let terminated = trimmed.contains(';') || trimmed.contains('}');
+            if depth <= entry && terminated && !trimmed.is_empty() {
+                skip_entry = None;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(text: &str) -> Vec<String> {
+        strip(text).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strips_line_comments_and_keeps_text() {
+        let lines = strip("let x = 1; // trailing words\n");
+        assert_eq!(lines[0].code.trim_end(), "let x = 1;");
+        assert_eq!(lines[0].comment, " trailing words");
+    }
+
+    #[test]
+    fn strips_string_contents() {
+        let c = codes("let s = \"tok_inside_string()\";\n");
+        assert!(!c[0].contains("tok_inside_string"));
+        assert!(c[0].contains("let s = \"\";"));
+    }
+
+    #[test]
+    fn strips_raw_and_byte_strings() {
+        let c = codes("let s = r#\"raw \"quoted\" body\"#; let b = b\"bytes\";\n");
+        assert!(!c[0].contains("raw"));
+        assert!(!c[0].contains("bytes"));
+        // Raw identifiers are NOT raw strings.
+        let c = codes("let r#fn = 1;\n");
+        assert!(c[0].contains("r#fn"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let c = codes("a /* outer /* inner */ still comment */ b\n");
+        assert_eq!(c[0].split_whitespace().collect::<Vec<_>>(), ["a", "b"]);
+    }
+
+    #[test]
+    fn multiline_block_comment_collects_text() {
+        let lines = strip("x /* one\ntwo */ y\n");
+        assert_eq!(lines[0].comment, " one");
+        assert!(lines[1].comment.contains("two"));
+        assert!(lines[1].code.contains('y'));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let c = codes("let c = '{'; fn f<'a>(x: &'a str) {}\n");
+        // The brace inside the char literal is stripped...
+        assert_eq!(c[0].matches('{').count(), 1);
+        // ...while the lifetime survives as code.
+        assert!(c[0].contains("'a"));
+    }
+
+    #[test]
+    fn escaped_quote_in_string() {
+        let c = codes("let s = \"a\\\"b{\"; let t = 1;\n");
+        assert_eq!(c[0].matches('{').count(), 0);
+        assert!(c[0].contains("let t = 1;"));
+    }
+
+    #[test]
+    fn cfg_test_mod_is_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n}\nfn after() {}\n";
+        let lines = strip(src);
+        let flags: Vec<bool> = lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(flags, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn cfg_test_single_item_is_marked() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn live() {}\n";
+        let lines = strip(src);
+        assert!(lines[1].in_test);
+        assert!(!lines[2].in_test);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_marked() {
+        let src = "#[cfg(not(test))]\nfn live() {}\n";
+        let lines = strip(src);
+        assert!(!lines[1].in_test);
+    }
+
+    #[test]
+    fn brace_in_format_string_does_not_break_depth() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() { let s = \"}\"; }\n}\nfn live() {}\n";
+        let lines = strip(src);
+        assert!(lines[2].in_test);
+        assert!(!lines[4].in_test, "stray literal brace must not end the test mod early");
+    }
+}

@@ -1,0 +1,278 @@
+//! `descnet lint` — an in-repo static analyzer enforcing the determinism,
+//! NaN-safety and panic-freedom invariants (DESIGN.md section 16, ISSUE 9).
+//!
+//! The headline numbers this repo reproduces (79% energy reduction, "no
+//! performance loss" under power-gating) rest on bit-exact, thread-count-
+//! independent evaluation.  The properties that guarantee it are global —
+//! one NaN-unsafe sort, one release-vanishing fit guard, or one hash-order
+//! iteration anywhere in `dse`/`energy`/`sim`/`fleet` silently corrupts
+//! frontiers, fingerprints and property suites.  This module turns that
+//! recurring manual audit (PRs 4–7 each hand-fixed instances) into a
+//! machine-checked gate:
+//!
+//! * [`lexer`] strips comments and string/char literals and marks
+//!   `#[cfg(test)]` items, so rules match real code only;
+//! * [`rules`] holds the catalogue (R1–R5) with module-path scoping and the
+//!   inline `lint: allow(rule, reason)` suppression mechanism — the *only*
+//!   suppression mechanism: there is no baseline file, the tree is clean by
+//!   construction;
+//! * this module walks the repo's own sources (`rust/src`, `rust/tests`,
+//!   `benches`, `examples`), maps file paths to module paths, and renders
+//!   the findings as a human table or `--format json`.
+//!
+//! Surfaced three ways: the `descnet lint` CLI subcommand, the tier-1
+//! zero-findings test (`rust/tests/lint.rs`), and a CI step.  Zero new
+//! dependencies — the lexer is ~200 lines of state machine, the rules are
+//! token/statement matchers.
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+pub use rules::{Finding, RuleInfo, RULES};
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// The source roots scanned, relative to the repo root.
+const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "benches", "examples"];
+
+/// Aggregate result of a tree lint.
+#[derive(Debug)]
+pub struct LintReport {
+    /// All findings, in (file, line) order.
+    pub findings: Vec<Finding>,
+    /// Files scanned.
+    pub files: usize,
+    /// Source lines lexed.
+    pub lines: usize,
+    /// Findings suppressed by honored `lint: allow` annotations.
+    pub suppressed: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Per-rule finding counts over the full catalogue (zeros included).
+    pub fn per_rule(&self) -> BTreeMap<&'static str, usize> {
+        let mut out: BTreeMap<&'static str, usize> =
+            RULES.iter().map(|r| (r.id, 0usize)).collect();
+        for f in &self.findings {
+            *out.entry(f.rule.id).or_default() += 1;
+        }
+        out
+    }
+
+    /// The one-line summary CI greps for.
+    pub fn summary(&self) -> String {
+        format!(
+            "lint: {} findings across {} files, {} lines ({} suppressions honored)",
+            self.findings.len(),
+            self.files,
+            self.lines,
+            self.suppressed,
+        )
+    }
+
+    /// Human-readable report: findings table (when any), rule hints, summary.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        if !self.findings.is_empty() {
+            let mut t = Table::new(&["rule", "location", "detail"]);
+            for f in &self.findings {
+                t.row(vec![
+                    format!("{} [{}]", f.rule.id, f.rule.group),
+                    format!("{}:{}", f.file, f.line),
+                    f.detail.clone(),
+                ]);
+            }
+            out.push_str(&t.to_ascii());
+            out.push('\n');
+            let mut seen: Vec<&'static str> = Vec::new();
+            for f in &self.findings {
+                if !seen.contains(&f.rule.id) {
+                    seen.push(f.rule.id);
+                    out.push_str(&format!("{}: {} — {}\n", f.rule.id, f.rule.what, f.rule.hint));
+                }
+            }
+        }
+        out.push_str(&self.summary());
+        out.push('\n');
+        out
+    }
+
+    /// Machine-readable report (`--format json`).
+    pub fn to_json(&self) -> Json {
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::from_pairs(vec![
+                    ("file", Json::Str(f.file.clone())),
+                    ("line", Json::Num(f.line as f64)),
+                    ("rule", Json::Str(f.rule.id.to_string())),
+                    ("group", Json::Str(f.rule.group.to_string())),
+                    ("detail", Json::Str(f.detail.clone())),
+                    ("hint", Json::Str(f.rule.hint.to_string())),
+                ])
+            })
+            .collect();
+        let per_rule = Json::Obj(
+            self.per_rule()
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), Json::Num(v as f64)))
+                .collect(),
+        );
+        Json::from_pairs(vec![
+            ("summary", Json::Str(self.summary())),
+            ("total", Json::Num(self.findings.len() as f64)),
+            ("files", Json::Num(self.files as f64)),
+            ("lines", Json::Num(self.lines as f64)),
+            ("suppressed", Json::Num(self.suppressed as f64)),
+            ("per_rule", per_rule),
+            ("findings", Json::Arr(findings)),
+        ])
+    }
+}
+
+/// Maps a repo-relative source path to its module path for rule scoping:
+/// `rust/src/dse/evaluate.rs` -> `dse::evaluate`, `rust/src/dse/mod.rs` ->
+/// `dse`, `rust/tests/fleet.rs` -> `tests::fleet`, `benches/bench_dse.rs`
+/// -> `benches::bench_dse`.  Returns `None` for non-Rust files.
+pub fn module_path_of(rel: &str) -> Option<String> {
+    let rel = rel.strip_suffix(".rs")?;
+    if let Some(inner) = rel.strip_prefix("rust/src/") {
+        let inner = inner.strip_suffix("/mod").unwrap_or(inner);
+        if inner == "lib" {
+            return Some(String::new());
+        }
+        return Some(inner.replace('/', "::"));
+    }
+    if let Some(inner) = rel.strip_prefix("rust/tests/") {
+        return Some(format!("tests::{}", inner.replace('/', "::")));
+    }
+    if let Some(inner) = rel.strip_prefix("benches/") {
+        return Some(format!("benches::{}", inner.replace('/', "::")));
+    }
+    if let Some(inner) = rel.strip_prefix("examples/") {
+        return Some(format!("examples::{}", inner.replace('/', "::")));
+    }
+    None
+}
+
+/// Lints one source text under an explicit module path.  The fixture entry
+/// point for the rule self-tests; [`lint_tree`] goes through it too.
+/// Returns (findings, lines lexed, suppressions honored).
+pub fn lint_source(module: &str, file: &str, text: &str) -> (Vec<Finding>, usize, usize) {
+    let lines = lexer::strip(text);
+    let n = lines.len();
+    let (findings, suppressed) = rules::check(module, file, &lines);
+    (findings, n, suppressed)
+}
+
+/// Walks `root` (the repo root) and lints every Rust source under the scan
+/// roots.  Deterministic: files are visited in sorted path order.
+pub fn lint_tree(root: &Path) -> Result<LintReport> {
+    ensure!(
+        root.join("rust/src").is_dir(),
+        "{} does not look like the repo root (no rust/src); run from the \
+         checkout or pass --root",
+        root.display()
+    );
+    let mut files: Vec<(String, PathBuf)> = Vec::new();
+    for scan in SCAN_ROOTS {
+        let dir = root.join(scan);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut |p| {
+                if let Ok(rel) = p.strip_prefix(root) {
+                    let rel = rel.to_string_lossy().replace('\\', "/");
+                    files.push((rel, p.to_path_buf()));
+                }
+            })?;
+        }
+    }
+    files.sort();
+
+    let mut report = LintReport {
+        findings: Vec::new(),
+        files: 0,
+        lines: 0,
+        suppressed: 0,
+    };
+    for (rel, path) in &files {
+        let Some(module) = module_path_of(rel) else {
+            continue;
+        };
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let (mut findings, lines, suppressed) = lint_source(&module, rel, &text);
+        report.files += 1;
+        report.lines += lines;
+        report.suppressed += suppressed;
+        report.findings.append(&mut findings);
+    }
+    report
+        .findings
+        .sort_by(|a, b| a.file.cmp(&b.file).then(a.line.cmp(&b.line)));
+    Ok(report)
+}
+
+/// Recursive `.rs` collector (no walkdir dependency); directory entries are
+/// visited in sorted order for determinism.
+fn collect_rs(dir: &Path, visit: &mut dyn FnMut(&Path)) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, visit)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            visit(&path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_mapping() {
+        assert_eq!(module_path_of("rust/src/dse/evaluate.rs").as_deref(), Some("dse::evaluate"));
+        assert_eq!(module_path_of("rust/src/dse/mod.rs").as_deref(), Some("dse"));
+        assert_eq!(module_path_of("rust/src/lib.rs").as_deref(), Some(""));
+        assert_eq!(module_path_of("rust/src/main.rs").as_deref(), Some("main"));
+        assert_eq!(module_path_of("rust/tests/fleet.rs").as_deref(), Some("tests::fleet"));
+        assert_eq!(
+            module_path_of("benches/bench_dse.rs").as_deref(),
+            Some("benches::bench_dse")
+        );
+        assert_eq!(module_path_of("rust/tests/goldens/fleet_seed7.txt"), None);
+    }
+
+    #[test]
+    fn json_report_carries_summary_and_counts() {
+        let report = LintReport {
+            findings: Vec::new(),
+            files: 3,
+            lines: 120,
+            suppressed: 2,
+        };
+        let js = report.to_json().to_string_pretty();
+        assert!(js.contains("lint: 0 findings across 3 files"));
+        assert!(js.contains("\"suppressed\": 2"));
+        // The full catalogue appears in per_rule, zeros included.
+        for r in RULES {
+            assert!(js.contains(r.id), "{} missing from per_rule", r.id);
+        }
+    }
+}

@@ -1,0 +1,388 @@
+//! The invariant catalogue of `descnet lint` (DESIGN.md section 16).
+//!
+//! Every rule guards one of the properties the repo's headline numbers rest
+//! on — bit-exact, thread-count-independent, panic-free evaluation:
+//!
+//! * `nan_cmp` (R1): NaN-unsafe float comparison; `total_cmp` is required.
+//! * `debug_guard` (R2): `debug_assert!` guarding fit/conservation
+//!   conditions in evaluation modules vanishes in release builds.
+//! * `hash_collect` / `wall_clock` / `ambient_rand` (R3): determinism —
+//!   no hash-order iteration, no wall clock, no ambient RNG outside the
+//!   allowlisted sites.
+//! * `hot_unwrap` (R4): no `.unwrap()` / `.expect()` panics in library
+//!   hot paths; `anyhow::Result` instead.
+//! * `unordered_fold` (R5): float accumulation over unordered iterators in
+//!   the accumulation-order-contracted modules.
+//!
+//! Scoping is by module path (derived from the file path); the only
+//! suppression mechanism is an inline annotation on the finding line or the
+//! comment-only line directly above it, with a mandatory reason:
+//!
+//! ```text
+//! // lint: allow(hot_unwrap, "non-empty by construction: N >= 1 checked above")
+//! ```
+//!
+//! There is deliberately no baseline file — the tree must be clean.
+
+use std::collections::BTreeMap;
+
+use super::lexer::Line;
+
+/// One rule of the catalogue.
+#[derive(Debug)]
+pub struct RuleInfo {
+    /// Stable id, the name suppression annotations reference.
+    pub id: &'static str,
+    /// Paper-facing group (R1..R5; R0 is the lint's own hygiene).
+    pub group: &'static str,
+    /// What the rule guards.
+    pub what: &'static str,
+    /// Fix hint attached to every finding.
+    pub hint: &'static str,
+}
+
+/// The catalogue, in reporting order.
+pub static RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "nan_cmp",
+        group: "R1",
+        what: "NaN-unsafe float comparison",
+        hint: "use f64::total_cmp (total order; NaN sorts last instead of panicking or tying)",
+    },
+    RuleInfo {
+        id: "debug_guard",
+        group: "R2",
+        what: "release-vanishing guard in an evaluation module",
+        hint: "promote to assert!/ensure! (always-on) or annotate why debug-only is sound",
+    },
+    RuleInfo {
+        id: "hash_collect",
+        group: "R3",
+        what: "hash-ordered collection (iteration order is nondeterministic)",
+        hint: "use BTreeMap/BTreeSet, or sort at every output edge and annotate",
+    },
+    RuleInfo {
+        id: "wall_clock",
+        group: "R3",
+        what: "wall-clock read outside the allowlisted timing sites",
+        hint: "thread simulated time through instead; wall time may only feed \
+               diagnostics excluded from fingerprints",
+    },
+    RuleInfo {
+        id: "ambient_rand",
+        group: "R3",
+        what: "ambient RNG (unseeded, irreproducible)",
+        hint: "use util::prng::Prng with an explicit seed",
+    },
+    RuleInfo {
+        id: "hot_unwrap",
+        group: "R4",
+        what: "panic path in a library hot-path module",
+        hint: "return anyhow::Result, or annotate with the structural invariant that \
+               makes the panic unreachable",
+    },
+    RuleInfo {
+        id: "unordered_fold",
+        group: "R5",
+        what: "float accumulation over an unordered iterator",
+        hint: "collect and sort keys first — f64 addition is order-dependent and these \
+               modules declare an accumulation-order contract",
+    },
+    RuleInfo {
+        id: "allow_syntax",
+        group: "R0",
+        what: "malformed suppression annotation",
+        hint: "the form is: allow(<rule>, <non-empty reason>) — a reason is mandatory",
+    },
+];
+
+/// Looks a rule up by id.
+pub fn rule(id: &str) -> Option<&'static RuleInfo> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// One finding: file:line, the violated rule, and what matched.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Repo-relative path.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    pub rule: &'static RuleInfo,
+    /// The matched token or pattern, for the report.
+    pub detail: String,
+}
+
+/// Token-set rule: fires when any token occurs in stripped code, subject to
+/// module scoping.  `include: None` means every module; `exclude` wins.
+struct TokenRule {
+    id: &'static str,
+    tokens: &'static [&'static str],
+    include: Option<&'static [&'static str]>,
+    exclude: &'static [&'static str],
+}
+
+/// R2/R4 module scopes: the evaluation/serving stack whose invariants the
+/// headline claims rest on (ISSUE 9).
+const GUARDED_DEBUG: &[&str] = &["dse", "sim", "fleet", "energy"];
+const GUARDED_PANIC: &[&str] = &["dse", "energy", "sim", "fleet", "pmu"];
+/// R3 built-in allowlists (the only module-level exemptions; everything
+/// else needs an inline annotation).
+const WALL_CLOCK_OK: &[&str] = &["util::bench", "coordinator::server"];
+const RAND_OK: &[&str] = &["util::prng"];
+/// R5 scope: the modules with a declared accumulation-order contract
+/// (DESIGN.md section 14).
+const ORDER_CONTRACT: &[&str] = &["energy", "dse::evaluate"];
+
+const TOKEN_RULES: &[TokenRule] = &[
+    TokenRule {
+        id: "nan_cmp",
+        tokens: &["partial_cmp"],
+        include: None,
+        exclude: &[],
+    },
+    TokenRule {
+        id: "debug_guard",
+        tokens: &["debug_assert!", "debug_assert_eq!", "debug_assert_ne!"],
+        include: Some(GUARDED_DEBUG),
+        exclude: &[],
+    },
+    TokenRule {
+        id: "hash_collect",
+        tokens: &["HashMap", "HashSet"],
+        include: None,
+        exclude: &[],
+    },
+    TokenRule {
+        id: "wall_clock",
+        tokens: &["Instant::now", "SystemTime"],
+        include: None,
+        exclude: WALL_CLOCK_OK,
+    },
+    TokenRule {
+        id: "ambient_rand",
+        tokens: &["thread_rng", "rand::", "StdRng", "SmallRng", "getrandom"],
+        include: None,
+        exclude: RAND_OK,
+    },
+    TokenRule {
+        id: "hot_unwrap",
+        tokens: &[".unwrap()", ".expect(", ".unwrap_unchecked()"],
+        include: Some(GUARDED_PANIC),
+        exclude: &[],
+    },
+];
+
+/// `module` is `prefix` itself or a submodule of it.
+fn in_scope(module: &str, prefix: &str) -> bool {
+    match module.strip_prefix(prefix) {
+        Some(rest) => rest.is_empty() || rest.starts_with("::"),
+        None => false,
+    }
+}
+
+fn applies(module: &str, r: &TokenRule) -> bool {
+    if r.exclude.iter().any(|p| in_scope(module, p)) {
+        return false;
+    }
+    match r.include {
+        None => true,
+        Some(list) => list.iter().any(|p| in_scope(module, p)),
+    }
+}
+
+fn ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Finds `tok` in `code` respecting identifier boundaries: a token starting
+/// (resp. ending) with an identifier char must not be preceded (resp.
+/// followed) by one — `operand::` never matches `rand::`.
+fn has_token(code: &str, tok: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(tok) {
+        let at = from + pos;
+        let left_ok = !tok.starts_with(ident_char)
+            || !code[..at].chars().next_back().is_some_and(ident_char);
+        let end = at + tok.len();
+        let right_ok =
+            !tok.ends_with(ident_char) || !code[end..].chars().next().is_some_and(ident_char);
+        if left_ok && right_ok {
+            return true;
+        }
+        from = at + tok.len().max(1);
+    }
+    false
+}
+
+/// A parsed `lint: allow(rule, reason)` annotation.  `reason: None` marks a
+/// malformed annotation (the reason is mandatory).
+#[derive(Debug, Clone)]
+struct ParsedAllow {
+    rule_id: String,
+    reason: Option<String>,
+}
+
+/// Parses every suppression annotation in one comment.
+fn parse_allows(comment: &str) -> Vec<ParsedAllow> {
+    const NEEDLE: &str = "lint: allow(";
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = comment[from..].find(NEEDLE) {
+        let body = &comment[from + pos + NEEDLE.len()..];
+        let rule_end = body.find([',', ')']).unwrap_or(body.len());
+        let rule_id = body[..rule_end].trim().to_string();
+        let rest = &body[rule_end..];
+        let reason = rest.strip_prefix(',').and_then(|tail| {
+            // Reason runs to the last ')' of the annotation tail, so
+            // reasons may themselves contain parentheses.
+            let reason_end = tail.rfind(')').unwrap_or(tail.len());
+            let r = tail[..reason_end].trim().trim_matches('"').trim();
+            (!r.is_empty()).then(|| r.to_string())
+        });
+        out.push(ParsedAllow { rule_id, reason });
+        from += pos + NEEDLE.len();
+    }
+    out
+}
+
+/// Runs the catalogue over one lexed file.  Returns the findings plus the
+/// number of findings suppressed by honored annotations.
+pub fn check(module: &str, file: &str, lines: &[Line]) -> (Vec<Finding>, usize) {
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+
+    // Per-line allow sets.  A well-formed allow on line N applies to line N
+    // and — when line N has no code of its own — to line N+1.
+    let mut allowed: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    for (idx, line) in lines.iter().enumerate() {
+        for allow in parse_allows(&line.comment) {
+            if allow.reason.is_some() {
+                allowed.entry(line.n).or_default().push(allow.rule_id.clone());
+                if line.code.trim().is_empty() {
+                    if let Some(next) = lines.get(idx + 1) {
+                        allowed.entry(next.n).or_default().push(allow.rule_id);
+                    }
+                }
+            } else if let Some(r) = rule("allow_syntax") {
+                findings.push(Finding {
+                    file: file.to_string(),
+                    line: line.n,
+                    rule: r,
+                    detail: format!("allow({}, ...) without a reason", allow.rule_id),
+                });
+            }
+        }
+    }
+    let is_allowed = |n: usize, id: &str| {
+        allowed
+            .get(&n)
+            .is_some_and(|ids| ids.iter().any(|a| a == id))
+    };
+
+    // Statement buffer for the multi-line R5 pattern: cleared at statement
+    // or block boundaries, so a chain split across lines still matches.
+    let mut stmt = String::new();
+
+    for line in lines {
+        if line.in_test {
+            stmt.clear();
+            continue;
+        }
+        let code = line.code.as_str();
+
+        for tr in TOKEN_RULES {
+            if !applies(module, tr) {
+                continue;
+            }
+            for tok in tr.tokens {
+                if has_token(code, tok) {
+                    if is_allowed(line.n, tr.id) {
+                        suppressed += 1;
+                    } else if let Some(r) = rule(tr.id) {
+                        findings.push(Finding {
+                            file: file.to_string(),
+                            line: line.n,
+                            rule: r,
+                            detail: format!("`{tok}`"),
+                        });
+                    }
+                    break; // one finding per (rule, line)
+                }
+            }
+        }
+
+        // R5: unordered float reduction, matched at statement granularity.
+        if ORDER_CONTRACT.iter().any(|p| in_scope(module, p)) {
+            stmt.push_str(code);
+            stmt.push(' ');
+            let unordered = stmt.contains(".values()") || stmt.contains(".keys()");
+            let reduces =
+                stmt.contains(".sum()") || stmt.contains(".sum::<") || stmt.contains(".fold(");
+            if unordered && reduces {
+                if is_allowed(line.n, "unordered_fold") {
+                    suppressed += 1;
+                } else if let Some(r) = rule("unordered_fold") {
+                    findings.push(Finding {
+                        file: file.to_string(),
+                        line: line.n,
+                        rule: r,
+                        detail: "float reduction over .values()/.keys()".to_string(),
+                    });
+                }
+                stmt.clear();
+            } else if code.contains(';') || code.contains('}') {
+                stmt.clear();
+            }
+        }
+    }
+    (findings, suppressed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer;
+
+    fn run(module: &str, src: &str) -> (Vec<Finding>, usize) {
+        check(module, "fixture.rs", &lexer::strip(src))
+    }
+
+    fn ids(f: &[Finding]) -> Vec<&'static str> {
+        f.iter().map(|x| x.rule.id).collect()
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(has_token("a.partial_cmp(b)", "partial_cmp"));
+        assert!(!has_token("my_partial_cmp_helper(b)", "partial_cmp"));
+        assert!(!has_token("operand::width()", "rand::"));
+        assert!(has_token("use rand::Rng;", "rand::"));
+        assert!(!has_token("MyHashMapLike::new()", "HashMap"));
+        assert!(has_token("HashMap::new()", "HashMap"));
+    }
+
+    #[test]
+    fn scoping_prefix_is_module_aware() {
+        assert!(in_scope("dse", "dse"));
+        assert!(in_scope("dse::evaluate", "dse"));
+        assert!(!in_scope("dsel::evaluate", "dse"));
+        assert!(!in_scope("report", "dse"));
+    }
+
+    #[test]
+    fn allow_reason_parses_with_parens_and_quotes() {
+        let allows = parse_allows(" lint: allow(nan_cmp, \"total Ord (see below)\")");
+        assert_eq!(allows.len(), 1);
+        assert_eq!(allows[0].rule_id, "nan_cmp");
+        let reason = allows[0].reason.as_deref().unwrap_or_default();
+        assert!(reason.contains("(see below)"));
+    }
+
+    #[test]
+    fn allow_without_reason_is_malformed() {
+        let (f, s) = run("report", "let x = 1; // lint: allow(nan_cmp)\n");
+        assert_eq!(ids(&f), vec!["allow_syntax"]);
+        assert_eq!(s, 0);
+    }
+}

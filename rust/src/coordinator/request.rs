@@ -20,6 +20,7 @@ impl Request {
             id,
             net: net.to_string(),
             image,
+            // lint: allow(wall_clock, "serving-path enqueue timestamp for latency reporting; never feeds a simulation or fingerprint")
             enqueued: Instant::now(),
         }
     }

@@ -108,7 +108,9 @@ pub fn area_energy(org: &Organization, profile: &NetworkProfile, tech: &Technolo
         let ded_w = op.usage_w.min(cap(weight));
         let ded_a = op.usage_a.min(cap(acc));
         let sh = (op.usage_d - ded_d) + (op.usage_w - ded_w) + (op.usage_a - ded_a);
-        debug_assert!(sh <= cap(shared), "org must fit profile");
+        // Always-on: a non-fitting org here would silently mis-attribute
+        // energy in release builds (lint rule debug_guard, ISSUE 9).
+        assert!(sh <= cap(shared), "org must fit profile");
 
         // Dynamic energy: accesses split proportionally to covered bytes.
         let d_acc = (op.rd_d + op.wr_d) as f64;
@@ -275,7 +277,9 @@ impl SubtreeEval {
             let ded_w = op.usage_w.min(cap(2));
             let ded_a = op.usage_a.min(cap(3));
             let sh = (op.usage_d - ded_d) + (op.usage_w - ded_w) + (op.usage_a - ded_a);
-            debug_assert!(
+            // Always-on (per subtree, not per point — negligible): the
+            // factored tables would replay a misfit into every candidate.
+            assert!(
                 sh <= cap(0),
                 "subtree must fit profile (stream::subtrees rejects misfits)"
             );
@@ -428,6 +432,7 @@ impl SubtreeEval {
                 .options
                 .iter()
                 .find(|o| o.sectors == sectors)
+                // lint: allow(hot_unwrap, "caller contract: eval() only sees orgs materialized from this subtree, whose pools built these option tables; Result here would cost the factored fast path its point")
                 .expect("organization not drawn from the prepared subtree");
             energy += opt.static_e;
             area += opt.area_mm2;

@@ -257,6 +257,7 @@ pub fn anneal_restarts(
             best = Some(run);
         }
     }
+    // lint: allow(hot_unwrap, "seeds are built from restarts.max(1) so the run list is never empty and the fold always selects a best")
     let mut out = best.expect("at least one restart");
     out.evaluations = evaluations;
     out

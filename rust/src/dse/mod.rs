@@ -171,7 +171,14 @@ pub fn enumerate(profile: &NetworkProfile) -> Result<Vec<Organization>> {
     for st in stream::subtrees(profile)? {
         st.materialize_into(&mut out);
     }
-    debug_assert!(out.iter().all(|o| org_fits(o, profile)));
+    // Real guard, not debug-only: this is the oracle the pruned sweep is
+    // checked against, so a non-fitting org must never survive in release
+    // builds either (lint rule debug_guard, ISSUE 9).
+    ensure!(
+        out.iter().all(|o| org_fits(o, profile)),
+        "enumeration produced an organization that does not fit '{}'",
+        profile.network
+    );
     Ok(out)
 }
 

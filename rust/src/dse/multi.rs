@@ -177,7 +177,9 @@ pub fn evaluate_all_on(
     tech: &Technology,
     tls: &[sim::Timeline],
 ) -> (Vec<DsePoint>, Vec<Vec<f64>>, Vec<Vec<f64>>) {
-    debug_assert_eq!(tls.len(), set.profiles.len());
+    // Always-on: a timeline/profile mismatch would charge one network's
+    // latency to another (lint rule debug_guard, ISSUE 9).
+    assert_eq!(tls.len(), set.profiles.len(), "one timeline per member profile");
     let evals: Vec<(DsePoint, Vec<f64>, Vec<f64>)> =
         engine.map(orgs, |org| eval_one(org, set, tech, tls));
     let mut points = Vec::with_capacity(evals.len());

@@ -28,9 +28,7 @@ pub fn roundup(bytes: usize) -> usize {
         .iter()
         .copied()
         .filter(|&r| r >= bytes)
-        .chain(std::iter::once(pow2))
-        .min()
-        .unwrap()
+        .fold(pow2, usize::min)
 }
 
 /// Ascending pool of candidate sizes for one HY component: {0} followed by

@@ -504,6 +504,7 @@ pub(crate) fn sweep<E: SweepEval>(
         stats.enumerated += count;
         stats.subtrees += 1;
 
+        // lint: allow(wall_clock, "feeds SweepStats::prep_s only — diagnostic timing, excluded from every fingerprint and result")
         let t_prep = Instant::now();
         let prep = ev.prepare(st);
         let (lb_area, lb_e, lb_lat) = ev.bound(&prep);
@@ -528,6 +529,7 @@ pub(crate) fn sweep<E: SweepEval>(
 
         batch.clear();
         st.materialize_into(&mut batch);
+        // lint: allow(wall_clock, "feeds SweepStats::eval_s only — diagnostic timing, excluded from every fingerprint and result")
         let t_eval = Instant::now();
         let evaluated = engine.map(&batch, |o| ev.eval(&prep, o));
         stats.eval_s += t_eval.elapsed().as_secs_f64();

@@ -7,6 +7,7 @@
 //! `rust/EXPERIMENTS.md` for the paper-vs-measured record.
 
 pub mod accel;
+pub mod analysis;
 pub mod cacti;
 pub mod config;
 pub mod coordinator;

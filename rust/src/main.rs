@@ -8,6 +8,7 @@
 //!   report    regenerate paper figures/tables into results/ (see DESIGN.md E-index)
 //!   serve     serve CapsNet inference via the PJRT runtime + coordinator
 //!   headline  print the paper-vs-ours headline metrics
+//!   lint      run the in-repo invariant analyzer over the repo's sources
 
 use std::path::PathBuf;
 
@@ -35,6 +36,7 @@ fn main() {
         "report" => cmd_report(rest),
         "serve" => cmd_serve(rest),
         "headline" => cmd_headline(rest),
+        "lint" => cmd_lint(rest),
         "config" => cmd_config(rest),
         "help" | "--help" | "-h" => {
             print_help();
@@ -87,6 +89,11 @@ fn print_help() {
                     [--slo-ms MS]  (batch sizes whose simulated batch latency\n\
                     exceeds the SLO are never scheduled)\n\
            headline [--threads N]                           paper-vs-ours summary\n\
+           lint     [--root DIR] [--format table|json]\n\
+                    in-repo static analyzer enforcing the determinism, NaN-safety\n\
+                    and panic-freedom invariants (DESIGN.md section 16); exits\n\
+                    non-zero on any finding — suppression is inline-only\n\
+                    (lint: allow(rule, reason)), there is no baseline file\n\
            config   [--save FILE] [--config FILE]           print/snapshot the technology config\n\n\
          WORKLOAD FILES (configs/workloads/*.json): a single network spec\n\
          ({{name, input, layers}}) or a set ({{networks: [...], weights: [...]}});\n\
@@ -742,6 +749,38 @@ fn cmd_headline(args: &[String]) -> i32 {
         Err(e) => {
             eprintln!("headline failed: {e:#}");
             1
+        }
+    }
+}
+
+/// `descnet lint`: the ISSUE 9 invariant analyzer over the repo's own
+/// sources.  Exit codes: 0 clean, 1 findings, 2 usage/IO error — so CI can
+/// gate on the exit status alone while also grepping the summary line
+/// (embedded in the JSON output too).
+fn cmd_lint(args: &[String]) -> i32 {
+    let flags = parse_flags(args);
+    let root = PathBuf::from(flags.get("root", "."));
+    let format = flags.get("format", "table");
+    if format != "table" && format != "json" {
+        eprintln!("--format expects 'table' or 'json', got '{format}'");
+        return 2;
+    }
+    match descnet::analysis::lint_tree(&root) {
+        Ok(report) => {
+            if format == "json" {
+                println!("{}", report.to_json().to_string_pretty());
+            } else {
+                print!("{}", report.to_text());
+            }
+            if report.is_clean() {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("lint failed: {e:#}");
+            2
         }
     }
 }

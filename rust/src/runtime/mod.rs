@@ -33,7 +33,7 @@ compile_error!(
      build uses the compiled-in stub"
 );
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -86,8 +86,10 @@ impl CompiledStage {
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    bundles: HashMap<String, WeightBundle>,
-    compiled: HashMap<String, CompiledStage>,
+    // BTreeMap, not HashMap: anything iterating the caches (diagnostics,
+    // artifact listings) sees one stable order (lint rule hash_collect).
+    bundles: BTreeMap<String, WeightBundle>,
+    compiled: BTreeMap<String, CompiledStage>,
 }
 
 impl Runtime {
@@ -97,8 +99,8 @@ impl Runtime {
         Ok(Runtime {
             client,
             manifest,
-            bundles: HashMap::new(),
-            compiled: HashMap::new(),
+            bundles: BTreeMap::new(),
+            compiled: BTreeMap::new(),
         })
     }
 

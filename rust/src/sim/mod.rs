@@ -211,7 +211,9 @@ pub fn wakeup_exposure_s(
     if wl <= 0.0 {
         return 0.0;
     }
-    debug_assert_eq!(tl.ops.len(), profile.ops.len(), "timeline/profile mismatch");
+    // Always-on (O(1)): a mismatched timeline would silently pair wake
+    // charges with the wrong ops (lint rule debug_guard, ISSUE 9).
+    assert_eq!(tl.ops.len(), profile.ops.len(), "timeline/profile mismatch");
 
     // Per-component sector geometry (shared, data, weight, acc).
     let mut sector_bytes = [0usize; 4];

@@ -1,0 +1,285 @@
+//! Tier-1 gate for `descnet lint` (ISSUE 9, DESIGN.md section 16).
+//!
+//! Two layers:
+//!
+//! * `tree_is_clean` lints the repo's own sources and asserts zero
+//!   findings — there is no baseline file, so any new violation fails this
+//!   test (and the CI step) until it is fixed or annotated with a reason;
+//! * one fixture pair per rule R1–R5: a positive fixture the rule must
+//!   flag, a negative fixture it must leave alone, and checks that the
+//!   `lint: allow(rule, reason)` annotation is the only working
+//!   suppression (reason mandatory, malformed allows are themselves
+//!   findings and suppress nothing).
+//!
+//! Fixture sources live in string literals, which the analyzer's own lexer
+//! strips — so this file stays clean under the tree-wide scan above.
+
+use descnet::analysis::{lint_source, lint_tree, Finding};
+
+fn ids(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule.id).collect()
+}
+
+/// Findings for `src` under module path `module`.
+fn run(module: &str, src: &str) -> Vec<Finding> {
+    lint_source(module, "fixture.rs", src).0
+}
+
+/// Suppression count for `src` under module path `module`.
+fn suppressed(module: &str, src: &str) -> usize {
+    lint_source(module, "fixture.rs", src).2
+}
+
+// ---------------------------------------------------------------- tree gate
+
+#[test]
+fn tree_is_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint_tree(root).expect("lint walks the tree");
+    assert!(
+        report.is_clean(),
+        "descnet lint found violations — fix them or annotate with \
+         `lint: allow(rule, reason)`:\n{}",
+        report.to_text()
+    );
+    // Sanity: the walk really covered the tree, and the bootstrap
+    // annotations (PR 9) are being honored rather than ignored.
+    assert!(report.files >= 30, "only {} files scanned", report.files);
+    assert!(report.lines >= 10_000, "only {} lines lexed", report.lines);
+    assert!(
+        report.suppressed >= 10,
+        "only {} suppressions honored — annotations not being parsed?",
+        report.suppressed
+    );
+    let summary = report.summary();
+    assert!(summary.starts_with("lint: 0 findings"), "summary was: {summary}");
+    // The JSON report embeds the same summary line CI greps for.
+    assert!(report.to_json().to_string_pretty().contains("lint: 0 findings"));
+}
+
+// ------------------------------------------------------------- R1: nan_cmp
+
+#[test]
+fn r1_nan_cmp_positive() {
+    let f = run(
+        "report",
+        "pub fn sort(xs: &mut [f64]) { xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n",
+    );
+    assert_eq!(ids(&f), vec!["nan_cmp"], "findings: {f:?}");
+    assert_eq!(f[0].line, 1);
+}
+
+#[test]
+fn r1_nan_cmp_negative_total_cmp() {
+    let f = run(
+        "report",
+        "pub fn sort(xs: &mut [f64]) { xs.sort_by(|a, b| a.total_cmp(b)); }\n",
+    );
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn r1_nan_cmp_negative_identifier_boundary() {
+    // `my_partial_cmp_like` must not match the `partial_cmp` token.
+    let f = run("report", "pub fn f() { my_partial_cmp_like(); }\n");
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn r1_nan_cmp_allow_with_reason_suppresses() {
+    let src = "// lint: allow(nan_cmp, \"delegates to a total Ord impl\")\n\
+               fn partial_cmp(&self, o: &Self) -> Option<Ordering> { Some(self.cmp(o)) }\n";
+    assert!(run("fleet", src).is_empty());
+    assert_eq!(suppressed("fleet", src), 1);
+}
+
+// --------------------------------------------------------- R2: debug_guard
+
+#[test]
+fn r2_debug_guard_positive_in_dse() {
+    let f = run("dse::evaluate", "debug_assert!(sh <= cap, \"must fit\");\n");
+    assert_eq!(ids(&f), vec!["debug_guard"], "findings: {f:?}");
+}
+
+#[test]
+fn r2_debug_guard_negative_outside_scope() {
+    // The same guard in a reporting module is out of R2 scope.
+    let f = run("report", "debug_assert!(sh <= cap, \"must fit\");\n");
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn r2_debug_guard_negative_always_on_assert() {
+    let f = run("dse::evaluate", "assert!(sh <= cap, \"must fit\");\n");
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn r2_debug_guard_allow_with_reason_suppresses() {
+    let src = "// lint: allow(debug_guard, \"re-checked by ensure! at the api boundary\")\n\
+               debug_assert_eq!(a, b);\n";
+    assert!(run("sim", src).is_empty());
+    assert_eq!(suppressed("sim", src), 1);
+}
+
+// -------------------------------------------------------- R3: hash_collect
+
+#[test]
+fn r3_hash_collect_positive() {
+    let f = run("util", "use std::collections::HashMap;\n");
+    assert_eq!(ids(&f), vec!["hash_collect"], "findings: {f:?}");
+}
+
+#[test]
+fn r3_hash_collect_negative_btreemap() {
+    let f = run("util", "use std::collections::BTreeMap;\n");
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn r3_hash_collect_allow_on_same_line() {
+    let src = "use std::collections::HashMap; // lint: allow(hash_collect, \"memo, never iterated\")\n";
+    assert!(run("cacti::cache", src).is_empty());
+    assert_eq!(suppressed("cacti::cache", src), 1);
+}
+
+// ---------------------------------------------------------- R3: wall_clock
+
+#[test]
+fn r3_wall_clock_positive() {
+    let f = run("coordinator::request", "let t = Instant::now();\n");
+    assert_eq!(ids(&f), vec!["wall_clock"], "findings: {f:?}");
+}
+
+#[test]
+fn r3_wall_clock_builtin_allowlist() {
+    // util::bench and coordinator::server are the built-in timing sites.
+    assert!(run("util::bench", "let t = Instant::now();\n").is_empty());
+    assert!(run("coordinator::server", "let t = SystemTime::now();\n").is_empty());
+}
+
+#[test]
+fn r3_wall_clock_negative_type_position() {
+    // Naming the type (a field declaration) is fine; only reads are flagged.
+    let f = run("coordinator::request", "pub enqueued: Instant,\n");
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+// -------------------------------------------------------- R3: ambient_rand
+
+#[test]
+fn r3_ambient_rand_positive() {
+    let f = run("dse::heuristic", "let mut rng = rand::thread_rng();\n");
+    assert_eq!(ids(&f), vec!["ambient_rand"], "findings: {f:?}");
+}
+
+#[test]
+fn r3_ambient_rand_negative_boundary_and_prng() {
+    // `operand::` must not match `rand::`; util::prng is the seeded home.
+    assert!(run("energy", "let w = operand::width();\n").is_empty());
+    assert!(run("util::prng", "pub fn from_rand_seed() {}\n").is_empty());
+}
+
+// ---------------------------------------------------------- R4: hot_unwrap
+
+#[test]
+fn r4_hot_unwrap_positive_in_fleet() {
+    let f = run("fleet", "let x = v.last().unwrap();\n");
+    assert_eq!(ids(&f), vec!["hot_unwrap"], "findings: {f:?}");
+}
+
+#[test]
+fn r4_hot_unwrap_positive_expect() {
+    let f = run("pmu", "let x = v.last().expect(\"non-empty\");\n");
+    assert_eq!(ids(&f), vec!["hot_unwrap"], "findings: {f:?}");
+}
+
+#[test]
+fn r4_hot_unwrap_negative_outside_scope() {
+    let f = run("report", "let x = v.last().unwrap();\n");
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn r4_hot_unwrap_allow_with_reason_suppresses() {
+    let src = "// lint: allow(hot_unwrap, \"non-empty by construction: checked above\")\n\
+               let x = v.last().unwrap();\n";
+    assert!(run("fleet", src).is_empty());
+    assert_eq!(suppressed("fleet", src), 1);
+}
+
+#[test]
+fn r4_hot_unwrap_exempt_under_cfg_test() {
+    let src = "#[cfg(test)]\n\
+               mod tests {\n\
+                   #[test]\n\
+                   fn t() { let x = v.last().unwrap(); }\n\
+               }\n";
+    assert!(run("fleet", src).is_empty());
+}
+
+// ------------------------------------------------------ R5: unordered_fold
+
+#[test]
+fn r5_unordered_fold_positive_single_line() {
+    let f = run("energy", "let total: f64 = map.values().sum();\n");
+    assert_eq!(ids(&f), vec!["unordered_fold"], "findings: {f:?}");
+}
+
+#[test]
+fn r5_unordered_fold_positive_multi_line_statement() {
+    // The reduction split across lines still matches (statement buffer).
+    let src = "let total: f64 = map\n    .values()\n    .map(|v| v.energy)\n    .sum();\n";
+    let f = run("dse::evaluate", src);
+    assert_eq!(ids(&f), vec!["unordered_fold"], "findings: {f:?}");
+}
+
+#[test]
+fn r5_unordered_fold_negative_ordered_iterator() {
+    let f = run("energy", "let total: f64 = xs.iter().sum();\n");
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn r5_unordered_fold_negative_outside_scope() {
+    // Only the accumulation-order-contracted modules are in R5 scope.
+    let f = run("report", "let total: f64 = map.values().sum();\n");
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn r5_unordered_fold_statement_boundary_resets() {
+    // `.values()` in one statement, `.sum()` in the next: no match.
+    let src = "let ks: Vec<_> = map.values().collect();\nlet t: f64 = ks.iter().map(|v| v.e).sum();\n";
+    let f = run("energy", src);
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+// ------------------------------------------------- suppression grammar (R0)
+
+#[test]
+fn allow_without_reason_is_malformed_and_suppresses_nothing() {
+    let src = "let x = v.last().unwrap(); // lint: allow(hot_unwrap)\n";
+    let (f, _, s) = lint_source("fleet", "fixture.rs", src);
+    let mut got = ids(&f);
+    got.sort_unstable();
+    // The original finding stands AND the malformed allow is reported.
+    assert_eq!(got, vec!["allow_syntax", "hot_unwrap"], "findings: {f:?}");
+    assert_eq!(s, 0);
+}
+
+#[test]
+fn allow_for_wrong_rule_does_not_suppress() {
+    let src = "// lint: allow(nan_cmp, \"wrong rule for this site\")\n\
+               let x = v.last().unwrap();\n";
+    let f = run("fleet", src);
+    assert_eq!(ids(&f), vec!["hot_unwrap"], "findings: {f:?}");
+}
+
+#[test]
+fn allow_in_string_literal_is_inert() {
+    // Annotations only count inside comments; string contents are stripped.
+    let src = "let s = \"lint: allow(hot_unwrap, reason)\";\nlet x = v.last().unwrap();\n";
+    let f = run("fleet", src);
+    assert_eq!(ids(&f), vec!["hot_unwrap"], "findings: {f:?}");
+}
