@@ -11,6 +11,7 @@
 
 use descnet::cacti::cache;
 use descnet::config::{Accelerator, Technology};
+use descnet::ctx::EvalCtx;
 use descnet::dataflow::{profile_network, NetworkProfile};
 use descnet::dse;
 use descnet::dse::evaluate::SubtreeEval;
@@ -21,7 +22,6 @@ use descnet::fleet::{self, FleetConfig, RoutingPolicy, ShardPlan};
 use descnet::model::{capsnet_mnist, deepcaps_cifar10, random_networks};
 use descnet::sim::Timeline;
 use descnet::util::bench::{throughput, time};
-use descnet::util::exec::Engine;
 use descnet::util::json::Json;
 
 /// Measures serial per-point evaluator throughput two ways over the same
@@ -98,6 +98,7 @@ fn evaluator_json(ref_pps: f64, fac_pps: f64, points: usize) -> Json {
 fn main() {
     let accel = Accelerator::default();
     let tech = Technology::default();
+    let ctx = |threads: usize| EvalCtx::new(tech.clone(), accel.clone()).threads(threads);
     let mut nets_json: Vec<Json> = Vec::new();
 
     for net in [capsnet_mnist(), deepcaps_cifar10()] {
@@ -114,7 +115,7 @@ fn main() {
             throughput(&r, orgs.len())
         );
 
-        // Org-independent timeline, built once per sweep like dse::run_on.
+        // Org-independent timeline, built once per sweep like dse::run.
         let timeline = Timeline::build(&profile, &tech, &accel);
 
         // Timeline-simulator throughput: schedule events (fill/compute/
@@ -131,29 +132,19 @@ fn main() {
 
         // Serial baseline through the same engine code path (threads=1),
         // then the engine-parallel sweep at increasing worker counts.
+        let serial_ctx = ctx(1);
         let serial = time(&format!("{} evaluate (serial baseline)", net.name), 2, || {
-            std::hint::black_box(dse::evaluate_all_on(
-                &Engine::new(1),
-                &orgs,
-                &profile,
-                &tech,
-                &timeline,
-            ));
+            std::hint::black_box(dse::evaluate_all(&serial_ctx, &orgs, &profile, &timeline));
         });
         println!("    -> {}", throughput(&serial, orgs.len()));
         let mut parallel_means: Vec<(usize, f64)> = Vec::new();
         for threads in [2usize, 4, 8] {
+            let par_ctx = ctx(threads);
             let r = time(
                 &format!("{} evaluate (engine, {} threads)", net.name, threads),
                 2,
                 || {
-                    std::hint::black_box(dse::evaluate_all_on(
-                        &Engine::new(threads),
-                        &orgs,
-                        &profile,
-                        &tech,
-                        &timeline,
-                    ));
+                    std::hint::black_box(dse::evaluate_all(&par_ctx, &orgs, &profile, &timeline));
                 },
             );
             println!("    -> {}", throughput(&r, orgs.len()));
@@ -170,7 +161,7 @@ fn main() {
             None => println!("    -> no 4-thread measurement in this run"),
         }
 
-        let points = dse::evaluate_all_on(&Engine::new(8), &orgs, &profile, &tech, &timeline);
+        let points = dse::evaluate_all(&ctx(8), &orgs, &profile, &timeline);
         time(&format!("{} pareto extraction (3-D)", net.name), 5, || {
             std::hint::black_box(dse::pareto_indices(&points));
         });
@@ -178,8 +169,9 @@ fn main() {
         // Full 3-D sweep wall time: streaming enumerate + bound + evaluate
         // + 3-D Pareto + selection, the `descnet dse` end-to-end path.
         let mut sweep_stats = descnet::dse::stream::SweepStats::default();
+        let sweep_ctx = ctx(8);
         let sweep3d = time(&format!("{} full 3-D sweep (8 threads)", net.name), 2, || {
-            let res = dse::run_on(&Engine::new(8), &profile, &tech, &accel).expect("3-D sweep");
+            let res = dse::run(&sweep_ctx, &profile).expect("3-D sweep");
             sweep_stats = res.stats;
             std::hint::black_box(res);
         });
@@ -212,11 +204,12 @@ fn main() {
         };
         let iters_label = opts.iterations / 1000;
         let mut result = None;
+        let anneal_ctx = ctx(1);
         let r = time(
             &format!("{} simulated annealing ({}k iters)", net.name, iters_label),
             3,
             || {
-                result = Some(anneal(&profile, &tech, &accel, &opts));
+                result = Some(anneal(&anneal_ctx, &profile, &opts));
             },
         );
         let res = result.unwrap();
@@ -295,8 +288,9 @@ fn main() {
     let set = WorkloadSet::new(profiles).expect("workload set");
     let mut multi_points = 0usize;
     let mut multi_stats = descnet::dse::stream::SweepStats::default();
+    let multi_ctx = ctx(8);
     let r = time(&format!("multi co-design sweep ({n_nets} nets)"), 2, || {
-        let res = multi::run_on(&Engine::new(8), &set, &tech, &accel).expect("multi DSE");
+        let res = multi::run(&multi_ctx, &set).expect("multi DSE");
         multi_points = res.points.len();
         multi_stats = res.stats;
         std::hint::black_box(res);

@@ -4,15 +4,17 @@
 //! reports how long each piece takes.
 
 use descnet::config::SystemConfig;
+use descnet::ctx::EvalCtx;
 use descnet::report::{self, ReportCtx};
 use descnet::util::bench::time;
 
 fn main() {
     let dir = std::env::temp_dir().join("descnet_bench_tables");
-    let ctx = ReportCtx::new(SystemConfig::default(), &dir);
     let threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4);
+    let eval = EvalCtx::for_config(&SystemConfig::default()).threads(threads);
+    let ctx = ReportCtx::new(eval, &dir);
 
     println!("== per-figure/table regeneration (E01-E18) ==");
     time("E01 fig1  memory utilization (CapsAcc vs TPU)", 20, || {
@@ -34,47 +36,47 @@ fn main() {
         report::fig12(&ctx).expect("report generator");
     });
     time("E07 fig18+table1 capsnet DSE", 3, || {
-        report::dse_scatter(&ctx, "capsnet", threads, None).expect("report generator");
+        report::dse_scatter(&ctx, "capsnet").expect("report generator");
     });
     time("E08 fig19 capsnet breakdowns", 3, || {
-        report::breakdowns(&ctx, "capsnet", threads).expect("report generator");
+        report::breakdowns(&ctx, "capsnet").expect("report generator");
     });
     time("E09 fig20+table2 deepcaps DSE", 2, || {
-        report::dse_scatter(&ctx, "deepcaps", threads, None).expect("report generator");
+        report::dse_scatter(&ctx, "deepcaps").expect("report generator");
     });
     time("E10 fig21 deepcaps breakdowns", 2, || {
-        report::breakdowns(&ctx, "deepcaps", threads).expect("report generator");
+        report::breakdowns(&ctx, "deepcaps").expect("report generator");
     });
     time("E11 fig22 port-constrained HY-PG DSE", 2, || {
-        report::fig22(&ctx, threads).expect("report generator");
+        report::fig22(&ctx).expect("report generator");
     });
     time("E12 fig23/24 capsnet whole accelerator", 3, || {
-        report::whole_accelerator(&ctx, "capsnet", threads).expect("report generator");
+        report::whole_accelerator(&ctx, "capsnet").expect("report generator");
     });
     time("E13 fig25/26 deepcaps whole accelerator", 2, || {
-        report::whole_accelerator(&ctx, "deepcaps", threads).expect("report generator");
+        report::whole_accelerator(&ctx, "deepcaps").expect("report generator");
     });
     time("E14 table3 full area/energy table", 2, || {
-        report::table3(&ctx, threads).expect("report generator");
+        report::table3(&ctx).expect("report generator");
     });
     time("E15 fig27/28 off-chip accesses", 20, || {
         report::fig27_28(&ctx);
     });
     time("E16 fig29/31 memory breakdowns", 3, || {
-        report::memory_breakdown(&ctx, "capsnet", threads).expect("report generator");
-        report::memory_breakdown(&ctx, "deepcaps", threads).expect("report generator");
+        report::memory_breakdown(&ctx, "capsnet").expect("report generator");
+        report::memory_breakdown(&ctx, "deepcaps").expect("report generator");
     });
     time("E17 fig30 HY-PG sector schedule", 3, || {
-        report::fig30(&ctx, threads).expect("report generator");
+        report::fig30(&ctx).expect("report generator");
     });
     time("E18 headline summary", 3, || {
-        report::headline(&ctx, threads).expect("report generator");
+        report::headline(&ctx).expect("report generator");
     });
     time("E19 multi-network co-design DSE", 2, || {
         let (set, names) = report::default_serving_mix(&ctx).expect("serving mix");
-        report::multi_dse(&ctx, &set, &names, threads, None).expect("report generator");
+        report::multi_dse(&ctx, &set, &names).expect("report generator");
     });
     time("E22 fleet serving (co-design + simulation)", 2, || {
-        report::fleet_default(&ctx, threads).expect("report generator");
+        report::fleet_default(&ctx).expect("report generator");
     });
 }

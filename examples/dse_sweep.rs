@@ -12,16 +12,17 @@
 
 use descnet::cacti::cache;
 use descnet::config::{SystemConfig, Technology};
+use descnet::ctx::EvalCtx;
 use descnet::dataflow::profile_network;
 use descnet::dse;
 use descnet::model::capsnet_mnist;
 use descnet::util::csv::{f, s, Csv};
-use descnet::util::exec::Engine;
 
-fn run_one(label: &str, tech: &Technology, engine: &Engine, csv: &mut Csv) {
+fn run_one(label: &str, tech: &Technology, csv: &mut Csv) {
     let cfg = SystemConfig::default();
     let profile = profile_network(&capsnet_mnist(), &cfg.accel);
-    let result = dse::run_on(engine, &profile, tech, &cfg.accel).expect("DSE sweep");
+    let ctx = EvalCtx::new(tech.clone(), cfg.accel.clone());
+    let result = dse::run(&ctx, &profile).expect("DSE sweep");
     let sel: std::collections::BTreeMap<_, _> = result.selected.iter().cloned().collect();
     let frontier_opts: std::collections::BTreeSet<String> =
         result.pareto.iter().map(|&i| result.points[i].option().to_string()).collect();
@@ -75,23 +76,22 @@ fn main() {
         "smp_on_frontier",
     ]);
 
-    let engine = Engine::auto();
-    run_one("baseline-32nm", &Technology::default(), &engine, &mut csv);
+    run_one("baseline-32nm", &Technology::default(), &mut csv);
 
     for scale in [0.25, 0.5, 2.0, 4.0] {
         let mut t = Technology::default();
         t.sram_leak_w_per_byte *= scale;
-        run_one(&format!("leakage x{scale}"), &t, &engine, &mut csv);
+        run_one(&format!("leakage x{scale}"), &t, &mut csv);
     }
     for scale in [0.25, 0.5, 2.0, 4.0] {
         let mut t = Technology::default();
         t.dram_j_per_byte *= scale;
-        run_one(&format!("dram-energy x{scale}"), &t, &engine, &mut csv);
+        run_one(&format!("dram-energy x{scale}"), &t, &mut csv);
     }
     for exp in [1.2, 1.7, 2.0] {
         let mut t = Technology::default();
         t.sram_dyn_port_exp = exp;
-        run_one(&format!("port-exp {exp}"), &t, &engine, &mut csv);
+        run_one(&format!("port-exp {exp}"), &t, &mut csv);
     }
 
     let out = std::path::PathBuf::from("results/dse_sweep.csv");

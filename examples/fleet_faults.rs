@@ -17,13 +17,13 @@
 //!      attainment target with its biggest shard down.
 
 use descnet::config::SystemConfig;
+use descnet::ctx::EvalCtx;
 use descnet::fleet::fault::FaultConfig;
 use descnet::fleet::{
     design_fleet_n_plus, simulate, DesignOptions, FleetConfig, NPlusOptions, RoutingPolicy,
     ShardPlan,
 };
 use descnet::model::capsnet_mnist;
-use descnet::util::exec;
 use descnet::util::units::fmt_energy;
 
 fn main() {
@@ -119,7 +119,6 @@ fn main() {
         slo_s: Some(slo),
         flush_deadline_s: 2e-3,
         homogeneous: false,
-        threads: exec::default_threads(),
     };
     let probe = FleetConfig {
         rps: 150.0,
@@ -134,7 +133,7 @@ fn main() {
         attainment_target: 0.95,
         max_extra: 4,
     };
-    let nd = design_fleet_n_plus(&cfg, &[capsnet_mnist()], &opts, &probe, &np)
+    let nd = design_fleet_n_plus(&EvalCtx::for_config(&cfg), &[capsnet_mnist()], &opts, &probe, &np)
         .expect("N+1 provisioning");
     println!(
         "\nN+1 provisioning: {} shards (requested 2 + budget 1), degraded \

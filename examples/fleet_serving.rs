@@ -10,9 +10,9 @@
 //! markdown artifacts).
 
 use descnet::config::SystemConfig;
+use descnet::ctx::EvalCtx;
 use descnet::fleet::{design_fleet, simulate, DesignOptions, FleetConfig, RoutingPolicy};
 use descnet::model::capsnet_mnist;
-use descnet::util::exec;
 use descnet::util::units::fmt_energy;
 
 fn main() {
@@ -28,9 +28,9 @@ fn main() {
         slo_s: Some(slo),
         flush_deadline_s: 2e-3,
         homogeneous: false,
-        threads: exec::default_threads(),
     };
-    let design = design_fleet(&cfg, &[capsnet_mnist()], &opts).expect("fleet co-design");
+    let ctx = EvalCtx::for_config(&cfg);
+    let design = design_fleet(&ctx, &[capsnet_mnist()], &opts).expect("fleet co-design");
     for (i, p) in design.plans.iter().enumerate() {
         println!(
             "shard {i}: {} on {} (batches {:?}, {} per inference at b{})",

@@ -10,10 +10,10 @@
 //! mix with explicit serving weights).
 
 use descnet::config::SystemConfig;
+use descnet::ctx::EvalCtx;
 use descnet::dataflow::{profile_network, profile_network_batched};
 use descnet::dse::multi::{self, WorkloadSet};
 use descnet::model::{capsnet_mnist, deepcaps_cifar10, random_network};
-use descnet::util::exec::Engine;
 use descnet::util::units::{fmt_energy, fmt_size};
 
 fn main() {
@@ -45,8 +45,7 @@ fn main() {
 
     // 3. Co-design: union sizing, mix-weighted energy objective, the usual
     //    Pareto / per-option selection.
-    let result =
-        multi::run_on(&Engine::auto(), &set, &cfg.tech, &cfg.accel).expect("co-design DSE");
+    let result = multi::run(&EvalCtx::for_config(&cfg), &set).expect("co-design DSE");
     println!(
         "\nco-design space: {} organizations, {} on the Pareto frontier",
         result.points.len(),

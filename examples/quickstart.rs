@@ -7,11 +7,11 @@
 //! headline savings vs the all-on-chip baseline of [1].
 
 use descnet::config::SystemConfig;
+use descnet::ctx::EvalCtx;
 use descnet::dataflow::profile_network;
 use descnet::dse;
 use descnet::energy;
 use descnet::model::capsnet_mnist;
-use descnet::util::exec::Engine;
 use descnet::util::units::{fmt_energy, fmt_size};
 
 fn main() {
@@ -38,7 +38,7 @@ fn main() {
 
     // 3. Exhaustive DSE (Algorithms 1-2) on the shared engine + Pareto
     //    selection (Fig 18).
-    let result = dse::run_on(&Engine::auto(), &profile, &cfg.tech, &cfg.accel)
+    let result = dse::run(&EvalCtx::for_config(&cfg), &profile)
         .expect("DSE over the paper profile");
     println!(
         "DSE: {} configurations, {} on the Pareto frontier",

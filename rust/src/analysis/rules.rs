@@ -13,6 +13,9 @@
 //!   hot paths; `anyhow::Result` instead.
 //! * `unordered_fold` (R5): float accumulation over unordered iterators in
 //!   the accumulation-order-contracted modules.
+//! * `ctx_bypass` (R6): raw `Engine::new(` in the evaluation stack — every
+//!   entry point takes an `EvalCtx` (DESIGN.md section 17), so a privately
+//!   constructed engine bypasses the context's thread-count contract.
 //!
 //! Scoping is by module path (derived from the file path); the only
 //! suppression mechanism is an inline annotation on the finding line or the
@@ -89,6 +92,13 @@ pub static RULES: &[RuleInfo] = &[
                modules declare an accumulation-order contract",
     },
     RuleInfo {
+        id: "ctx_bypass",
+        group: "R6",
+        what: "raw Engine construction in a context-threaded evaluation module",
+        hint: "take &EvalCtx and use ctx.engine() — private engines bypass the unified \
+               evaluation context (DESIGN.md section 17)",
+    },
+    RuleInfo {
         id: "allow_syntax",
         group: "R0",
         what: "malformed suppression annotation",
@@ -133,6 +143,10 @@ const RAND_OK: &[&str] = &["util::prng"];
 /// R5 scope: the modules with a declared accumulation-order contract
 /// (DESIGN.md section 14).
 const ORDER_CONTRACT: &[&str] = &["energy", "dse::evaluate"];
+/// R6 scope: the evaluation stack whose entry points take `&EvalCtx`
+/// (DESIGN.md section 17).  `ctx` itself and `util::exec` construct engines
+/// by design and are simply out of scope.
+const CTX_THREADED: &[&str] = &["dse", "sim", "fleet", "report"];
 
 const TOKEN_RULES: &[TokenRule] = &[
     TokenRule {
@@ -169,6 +183,12 @@ const TOKEN_RULES: &[TokenRule] = &[
         id: "hot_unwrap",
         tokens: &[".unwrap()", ".expect(", ".unwrap_unchecked()"],
         include: Some(GUARDED_PANIC),
+        exclude: &[],
+    },
+    TokenRule {
+        id: "ctx_bypass",
+        tokens: &["Engine::new(", "Engine::auto("],
+        include: Some(CTX_THREADED),
         exclude: &[],
     },
 ];
@@ -384,5 +404,29 @@ mod tests {
         let (f, s) = run("report", "let x = 1; // lint: allow(nan_cmp)\n");
         assert_eq!(ids(&f), vec!["allow_syntax"]);
         assert_eq!(s, 0);
+    }
+
+    #[test]
+    fn ctx_bypass_scoped_to_evaluation_stack() {
+        let (f, _) = run("dse::stream", "let e = Engine::new(4);\n");
+        assert_eq!(ids(&f), vec!["ctx_bypass"]);
+        let (f, _) = run("fleet", "let e = Engine::auto();\n");
+        assert_eq!(ids(&f), vec!["ctx_bypass"]);
+        // `ctx` and `util::exec` construct engines by design: out of scope.
+        let (f, _) = run("ctx", "let e = Engine::new(4);\n");
+        assert!(f.is_empty());
+        let (f, _) = run("util::exec", "let e = Engine::auto();\n");
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn ctx_bypass_suppression_is_honored() {
+        let (f, s) = run(
+            "report",
+            "// lint: allow(ctx_bypass, \"one-off probe engine, never fingerprinted\")\n\
+             let e = Engine::new(1);\n",
+        );
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(s, 1);
     }
 }

@@ -17,6 +17,7 @@ use super::batcher::BatchPolicy;
 use super::request::{Request, Response};
 use super::stats::ServeStats;
 use crate::config::SystemConfig;
+use crate::ctx::EvalCtx;
 use crate::dataflow::{profile_network_batched, NetworkProfile};
 use crate::dse::multi::{self, WorkloadSet};
 use crate::energy::system_with_org;
@@ -96,15 +97,16 @@ pub(crate) struct ServingCodesign {
 /// actually rode in (weight traffic and static energy amortize as batches
 /// fill), and batch-size selection can charge the simulated per-batch
 /// latency against an SLO instead of energy alone.
-pub(crate) fn codesign_serving(cfg: &SystemConfig, batches: &[usize]) -> Result<ServingCodesign> {
+pub(crate) fn codesign_serving(ctx: &EvalCtx, batches: &[usize]) -> Result<ServingCodesign> {
     anyhow::ensure!(!batches.is_empty(), "no batch sizes to co-design for");
+    let cfg = ctx.config();
     let net = capsnet_mnist();
     let profiles: Vec<NetworkProfile> = batches
         .iter()
         .map(|&b| profile_network_batched(&net, &cfg.accel, b))
         .collect();
     let set = WorkloadSet::new(profiles)?;
-    let result = multi::run(&set, &cfg.tech, &cfg.accel, exec::default_threads())
+    let result = multi::run(ctx, &set)
         .context("co-designing the serving organization")?;
     let best = result
         .codesigned()
@@ -147,7 +149,7 @@ impl Server {
         // batcher may execute; each served inference is then accounted
         // with the per-inference energy of its actual batch, and the
         // simulated per-batch latency gates batch sizes against the SLO.
-        let plan = codesign_serving(&cfg, &batches)?;
+        let plan = codesign_serving(&EvalCtx::for_config(&cfg), &batches)?;
         let batches = match opts.slo_s {
             Some(slo) => {
                 let ok: Vec<usize> = batches
@@ -366,8 +368,8 @@ mod tests {
 
     #[test]
     fn codesigned_energy_is_millijoule_scale_and_amortizes() {
-        let cfg = SystemConfig::default();
-        let plan = codesign_serving(&cfg, &[1, 2, 4]).unwrap();
+        let ctx = EvalCtx::for_config(&SystemConfig::default());
+        let plan = codesign_serving(&ctx, &[1, 2, 4]).unwrap();
         assert!(plan.org.total_size() > 0);
         for (&b, &e) in &plan.energy_per_inf {
             assert!(e > 1e-4 && e < 0.1, "batch {b}: {e}");
@@ -379,7 +381,8 @@ mod tests {
 
     #[test]
     fn codesigned_energy_rejects_empty_batch_list() {
-        assert!(codesign_serving(&SystemConfig::default(), &[]).is_err());
+        let ctx = EvalCtx::for_config(&SystemConfig::default());
+        assert!(codesign_serving(&ctx, &[]).is_err());
     }
 
     #[test]
@@ -387,8 +390,8 @@ mod tests {
         // Charging an SLO needs the *batch* latency: it must grow with the
         // batch while the per-inference latency shrinks — the exact
         // batching trade-off the coordinator navigates.
-        let cfg = SystemConfig::default();
-        let plan = codesign_serving(&cfg, &[1, 2, 4]).unwrap();
+        let ctx = EvalCtx::for_config(&SystemConfig::default());
+        let plan = codesign_serving(&ctx, &[1, 2, 4]).unwrap();
         let l1 = plan.batch_latency_s[&1];
         let l2 = plan.batch_latency_s[&2];
         let l4 = plan.batch_latency_s[&4];

@@ -1,0 +1,222 @@
+//! Unified evaluation context (DESIGN.md section 17).
+//!
+//! Every evaluation layer — `dse`, `dse::multi`, `dse::stream`,
+//! `dse::heuristic`, `fleet`, `report`, the coordinator's co-design path —
+//! used to thread the same tuple of shared state positionally: an
+//! execution [`Engine`], a [`Technology`], an [`Accelerator`], a thread
+//! count, a batch size, an optional latency budget.  Each widening of that
+//! tuple rippled through dozens of call sites as an arity break.
+//!
+//! [`EvalCtx`] is the one bundle every entry point takes instead
+//! (`dse::run(&ctx, &profile)`, `fleet::design_fleet(&ctx, ...)`,
+//! `report::*` through [`crate::report::ReportCtx`]).  It carries:
+//!
+//! * the shared parallel [`Engine`] (`util::exec`, DESIGN.md section 5) —
+//!   one engine per command, so thread-count determinism is a property of
+//!   the context, not of each call site;
+//! * the [`SystemConfig`] (technology constants + accelerator geometry);
+//! * the process-global CACTI cost-cache handle ([`CostCache`]) the deep
+//!   evaluation layers memoize through;
+//! * a [`Budget`] of per-run options: batch size, optional hard latency
+//!   budget, stats toggle.
+//!
+//! Construction is a chained builder whose defaults are exactly the CLI's
+//! historical defaults, so `EvalCtx::new(tech, accel)` behaves like
+//! `descnet <cmd>` with no flags:
+//!
+//! ```
+//! use descnet::config::{Accelerator, Technology};
+//! use descnet::ctx::EvalCtx;
+//!
+//! let ctx = EvalCtx::new(Technology::default(), Accelerator::default())
+//!     .threads(2)
+//!     .batch(1)
+//!     .latency_budget_s(Some(15e-3))
+//!     .expect("a positive finite budget");
+//! assert_eq!(ctx.engine().threads(), 2);
+//! ```
+//!
+//! Adding a future evaluation knob means adding a [`Budget`] field plus a
+//! builder method — no entry-point signature changes, no arity ripple.
+
+use anyhow::{ensure, Result};
+
+use crate::cacti::cache::{self, CostCache};
+use crate::config::{Accelerator, SystemConfig, Technology};
+use crate::util::exec::Engine;
+
+/// Per-run evaluation options, bundled so new knobs never widen an entry
+/// point's signature.  Defaults match the CLI's no-flag behavior.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Budget {
+    /// Inference batch size profiles are built at (CLI `--batch`; 1 =
+    /// single-inference, the paper's configuration).
+    pub batch: usize,
+    /// Optional hard per-inference latency budget [s] (CLI
+    /// `--latency-budget`, which takes milliseconds): configurations whose
+    /// simulated latency exceeds it are excluded before Pareto extraction
+    /// and per-option selection.  `None` = unconstrained.
+    pub latency_budget_s: Option<f64>,
+    /// Whether to report sweep diagnostics (CLI `--stats`): branch-and-bound
+    /// counters, evaluator wall-time split, cost-cache hit rates.
+    pub stats: bool,
+}
+
+impl Default for Budget {
+    fn default() -> Budget {
+        Budget {
+            batch: 1,
+            latency_budget_s: None,
+            stats: false,
+        }
+    }
+}
+
+/// The shared evaluation context: engine + system configuration + CACTI
+/// cost-cache handle + per-run [`Budget`].  Built once per command (or
+/// test) and passed by reference to every evaluation entry point.
+#[derive(Clone)]
+pub struct EvalCtx {
+    engine: Engine,
+    cfg: SystemConfig,
+    cache: &'static CostCache,
+    budget: Budget,
+}
+
+impl EvalCtx {
+    /// A context over the given technology and accelerator with the CLI's
+    /// defaults: an [`Engine::auto`] sized to the machine, batch 1, no
+    /// latency budget, stats off, and the process-global cost cache.
+    pub fn new(tech: Technology, accel: Accelerator) -> EvalCtx {
+        EvalCtx::for_config(&SystemConfig { tech, accel })
+    }
+
+    /// [`EvalCtx::new`] over a bundled [`SystemConfig`] (the shape the CLI
+    /// loads from `--config` files).
+    pub fn for_config(cfg: &SystemConfig) -> EvalCtx {
+        EvalCtx {
+            engine: Engine::auto(),
+            cfg: cfg.clone(),
+            cache: cache::global(),
+            budget: Budget::default(),
+        }
+    }
+
+    /// Replaces the engine with one of `n` workers (clamped to at least 1,
+    /// like the CLI's `--threads`).
+    pub fn threads(mut self, n: usize) -> EvalCtx {
+        self.engine = Engine::new(n);
+        self
+    }
+
+    /// Sets the inference batch size (CLI `--batch`).
+    pub fn batch(mut self, batch: usize) -> EvalCtx {
+        self.budget.batch = batch;
+        self
+    }
+
+    /// Sets (or clears, with `None`) the hard latency budget [s].
+    ///
+    /// Validation happens here, at construction — not deep inside a sweep —
+    /// so every downstream consumer may assume a well-formed budget.
+    /// Errors on a NaN, infinite, zero or negative duration.
+    pub fn latency_budget_s(mut self, budget: Option<f64>) -> Result<EvalCtx> {
+        if let Some(b) = budget {
+            ensure!(
+                b.is_finite() && b > 0.0,
+                "latency budget must be a positive duration, got {b} s"
+            );
+        }
+        self.budget.latency_budget_s = budget;
+        Ok(self)
+    }
+
+    /// Toggles sweep diagnostics (CLI `--stats`).
+    pub fn stats(mut self, on: bool) -> EvalCtx {
+        self.budget.stats = on;
+        self
+    }
+
+    /// The shared parallel execution engine.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// The full system configuration (technology + accelerator).
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    /// The technology constants (CACTI anchors, DRAM, MAC energies).
+    pub fn tech(&self) -> &Technology {
+        &self.cfg.tech
+    }
+
+    /// The accelerator geometry (array, clock, SPM banking, tiling).
+    pub fn accel(&self) -> &Accelerator {
+        &self.cfg.accel
+    }
+
+    /// The memoized CACTI cost cache this context's evaluations go
+    /// through.  Today this is always the process-global cache
+    /// (`cacti::cache::global`) — the handle exists so diagnostics
+    /// (`--stats` hit rates) and any future per-context cache read the
+    /// same object the deep layers write.
+    pub fn cache(&self) -> &'static CostCache {
+        self.cache
+    }
+
+    /// The per-run options bundle.
+    pub fn budget(&self) -> &Budget {
+        &self.budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::exec;
+
+    #[test]
+    fn defaults_match_cli_defaults() {
+        // The no-flag CLI: threads = available parallelism, batch 1, no
+        // budget, stats off (rust/tests/ctx.rs pins this contract too).
+        let ctx = EvalCtx::new(Technology::default(), Accelerator::default());
+        assert_eq!(ctx.engine().threads(), exec::default_threads());
+        assert_eq!(ctx.budget().batch, 1);
+        assert_eq!(ctx.budget().latency_budget_s, None);
+        assert!(!ctx.budget().stats);
+        assert_eq!(ctx.config(), &SystemConfig::default());
+    }
+
+    #[test]
+    fn builder_sets_every_knob() {
+        let ctx = EvalCtx::for_config(&SystemConfig::default())
+            .threads(3)
+            .batch(8)
+            .stats(true)
+            .latency_budget_s(Some(20e-3))
+            .unwrap();
+        assert_eq!(ctx.engine().threads(), 3);
+        assert_eq!(ctx.budget().batch, 8);
+        assert!(ctx.budget().stats);
+        assert_eq!(ctx.budget().latency_budget_s, Some(20e-3));
+    }
+
+    #[test]
+    fn invalid_budgets_rejected_at_construction() {
+        let mk = || EvalCtx::new(Technology::default(), Accelerator::default());
+        for bad in [f64::NAN, f64::INFINITY, 0.0, -1.0] {
+            let err = mk().latency_budget_s(Some(bad)).err();
+            assert!(err.is_some(), "budget {bad} accepted");
+        }
+        assert!(mk().latency_budget_s(None).is_ok());
+        assert!(mk().latency_budget_s(Some(1e-3)).is_ok());
+    }
+
+    #[test]
+    fn cache_handle_is_the_global_cache() {
+        let ctx = EvalCtx::new(Technology::default(), Accelerator::default());
+        assert!(std::ptr::eq(ctx.cache(), cache::global()));
+    }
+}

@@ -13,11 +13,10 @@
 //! the `bench_dse` target reports the speed/quality trade-off.
 
 use super::{evaluate, hy_shared_size, pools, DsePoint};
-use crate::config::{Accelerator, Technology};
+use crate::ctx::EvalCtx;
 use crate::dataflow::NetworkProfile;
 use crate::memory::{MemSpec, Organization};
 use crate::sim;
-use crate::util::exec::Engine;
 use crate::util::prng::Prng;
 
 /// Annealing options.
@@ -104,22 +103,17 @@ pub struct AnnealResult {
 /// The scalarized objective is energy + `area_weight` x area (the Table
 /// I/II selection rule at weight 0); the timeline latency is carried along
 /// in every candidate point so callers can inspect it.
-pub fn anneal(
-    profile: &NetworkProfile,
-    tech: &Technology,
-    accel: &Accelerator,
-    opts: &AnnealOptions,
-) -> AnnealResult {
+pub fn anneal(ctx: &EvalCtx, profile: &NetworkProfile, opts: &AnnealOptions) -> AnnealResult {
     let space = Space {
         d_pool: pools::size_pool(profile.max_d()),
         w_pool: pools::size_pool(profile.max_w()),
         a_pool: pools::size_pool(profile.max_a()),
     };
-    let timeline = sim::Timeline::build(profile, tech, accel);
+    let timeline = sim::Timeline::build(profile, ctx.tech(), ctx.accel());
     let mut rng = Prng::new(opts.seed);
     let objective = |org: &Organization| -> (f64, f64, f64, f64) {
         let (area, energy, latency) =
-            evaluate::area_energy_latency(org, profile, tech, &timeline);
+            evaluate::area_energy_latency(org, profile, ctx.tech(), &timeline);
         (energy + opts.area_weight * area, area, energy, latency)
     };
 
@@ -221,15 +215,14 @@ pub fn anneal(
 }
 
 /// Engine-parallel multi-start annealing: `restarts` independent chains
-/// (seeds `opts.seed`, `opts.seed + 1`, ...) run concurrently on the shared
-/// execution engine; the chain with the best scalarized objective wins.
-/// Ties resolve to the lowest seed, so the result is deterministic for any
-/// thread count.  `evaluations` reports the total across all chains.
+/// (seeds `opts.seed`, `opts.seed + 1`, ...) run concurrently on the
+/// context's execution engine; the chain with the best scalarized
+/// objective wins.  Ties resolve to the lowest seed, so the result is
+/// deterministic for any thread count.  `evaluations` reports the total
+/// across all chains.
 pub fn anneal_restarts(
-    engine: &Engine,
+    ctx: &EvalCtx,
     profile: &NetworkProfile,
-    tech: &Technology,
-    accel: &Accelerator,
     opts: &AnnealOptions,
     restarts: usize,
 ) -> AnnealResult {
@@ -239,10 +232,10 @@ pub fn anneal_restarts(
     // map_coarse: a chain is seconds of work, so parallelize even a
     // handful of restarts (Engine::map's serial cutoff is tuned for
     // microsecond DSE items and would serialize any restarts < 32).
-    let runs = engine.map_coarse(&seeds, |&seed| {
+    let runs = ctx.engine().map_coarse(&seeds, |&seed| {
         let mut chain_opts = opts.clone();
         chain_opts.seed = seed;
-        anneal(profile, tech, accel, &chain_opts)
+        anneal(ctx, profile, &chain_opts)
     });
     let evaluations: usize = runs.iter().map(|r| r.evaluations).sum();
     let objective =
@@ -266,15 +259,19 @@ pub fn anneal_restarts(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Accelerator;
+    use crate::config::{Accelerator, Technology};
     use crate::dataflow::profile_network;
     use crate::dse;
     use crate::model::capsnet_mnist;
 
-    fn exhaustive_hy_optimum(profile: &NetworkProfile, tech: &Technology) -> f64 {
+    fn ctx(threads: usize) -> EvalCtx {
+        EvalCtx::new(Technology::default(), Accelerator::default()).threads(threads)
+    }
+
+    fn exhaustive_hy_optimum(ctx: &EvalCtx, profile: &NetworkProfile) -> f64 {
         let orgs = dse::enumerate(profile).unwrap();
-        let tl = sim::Timeline::build(profile, tech, &Accelerator::default());
-        let points = dse::evaluate_all(&orgs, profile, tech, &tl, 4);
+        let tl = sim::Timeline::build(profile, ctx.tech(), ctx.accel());
+        let points = dse::evaluate_all(ctx, &orgs, profile, &tl);
         points
             .iter()
             .filter(|p| matches!(p.option(), dse::DesignOption::Hy | dse::DesignOption::HyPg))
@@ -287,10 +284,10 @@ mod tests {
         // Section V-D's premise quantified: the heuristic reaches within 5%
         // of the exhaustive HY optimum using ~50x fewer evaluations.
         let accel = Accelerator::default();
-        let tech = Technology::default();
+        let c = ctx(4);
         let profile = profile_network(&capsnet_mnist(), &accel);
-        let optimum = exhaustive_hy_optimum(&profile, &tech);
-        let result = anneal(&profile, &tech, &accel, &AnnealOptions::default());
+        let optimum = exhaustive_hy_optimum(&c, &profile);
+        let result = anneal(&c, &profile, &AnnealOptions::default());
         let gap = result.best.energy_j / optimum - 1.0;
         assert!(gap < 0.05, "gap {gap:.3} (best {} vs {optimum})", result.best.energy_j);
         assert!(
@@ -303,9 +300,8 @@ mod tests {
     #[test]
     fn trace_is_monotone_nonincreasing() {
         let accel = Accelerator::default();
-        let tech = Technology::default();
         let profile = profile_network(&capsnet_mnist(), &accel);
-        let result = anneal(&profile, &tech, &accel, &AnnealOptions::default());
+        let result = anneal(&ctx(1), &profile, &AnnealOptions::default());
         for w in result.trace.windows(2) {
             assert!(w[1] <= w[0] + 1e-18);
         }
@@ -314,14 +310,14 @@ mod tests {
     #[test]
     fn deterministic_per_seed() {
         let accel = Accelerator::default();
-        let tech = Technology::default();
+        let cx = ctx(1);
         let profile = profile_network(&capsnet_mnist(), &accel);
-        let a = anneal(&profile, &tech, &accel, &AnnealOptions::default());
-        let b = anneal(&profile, &tech, &accel, &AnnealOptions::default());
+        let a = anneal(&cx, &profile, &AnnealOptions::default());
+        let b = anneal(&cx, &profile, &AnnealOptions::default());
         assert_eq!(a.best.energy_j, b.best.energy_j);
         let mut opts = AnnealOptions::default();
         opts.seed = 99;
-        let c = anneal(&profile, &tech, &accel, &opts);
+        let c = anneal(&cx, &profile, &opts);
         // Different seed may land elsewhere but must still be valid HY.
         assert!(c.best.org.shared.is_some());
     }
@@ -329,14 +325,13 @@ mod tests {
     #[test]
     fn multi_start_never_worse_than_single_and_is_deterministic() {
         let accel = Accelerator::default();
-        let tech = Technology::default();
         let profile = profile_network(&capsnet_mnist(), &accel);
         let opts = AnnealOptions::default();
-        let single = anneal(&profile, &tech, &accel, &opts);
+        let single = anneal(&ctx(1), &profile, &opts);
         // The restart fan includes the single run's seed, so the winner can
         // only match or beat it, whatever the worker count.
-        let multi_a = anneal_restarts(&Engine::new(1), &profile, &tech, &accel, &opts, 3);
-        let multi_b = anneal_restarts(&Engine::new(4), &profile, &tech, &accel, &opts, 3);
+        let multi_a = anneal_restarts(&ctx(1), &profile, &opts, 3);
+        let multi_b = anneal_restarts(&ctx(4), &profile, &opts, 3);
         assert!(multi_a.best.energy_j <= single.best.energy_j + 1e-18);
         assert_eq!(multi_a.best.energy_j, multi_b.best.energy_j);
         assert_eq!(multi_a.best.area_mm2, multi_b.best.area_mm2);
@@ -347,12 +342,12 @@ mod tests {
     #[test]
     fn area_weight_trades_energy_for_area() {
         let accel = Accelerator::default();
-        let tech = Technology::default();
+        let cx = ctx(1);
         let profile = profile_network(&capsnet_mnist(), &accel);
-        let pure = anneal(&profile, &tech, &accel, &AnnealOptions::default());
+        let pure = anneal(&cx, &profile, &AnnealOptions::default());
         let mut opts = AnnealOptions::default();
         opts.area_weight = 5e-3; // 5 mJ per mm²: area matters a lot
-        let weighted = anneal(&profile, &tech, &accel, &opts);
+        let weighted = anneal(&cx, &profile, &opts);
         assert!(weighted.best.area_mm2 <= pure.best.area_mm2 * 1.001);
     }
 }

@@ -14,9 +14,13 @@
 //! objective space is three-dimensional — area, energy *and* per-inference
 //! latency (compute + dma-stall + wakeup exposure).  The org-independent
 //! [`sim::Timeline`] is built once per sweep; each evaluation adds only
-//! the organization's wakeup exposure.  [`run_budgeted`] additionally
-//! enforces a latency budget as a hard constraint (the CLI's
+//! the organization's wakeup exposure.  [`run`] additionally enforces the
+//! context's latency budget as a hard constraint (the CLI's
 //! `--latency-budget`).
+//!
+//! Every entry point takes the unified evaluation context
+//! ([`crate::ctx::EvalCtx`], DESIGN.md section 17): engine, technology,
+//! accelerator and budget travel as one bundle instead of positionally.
 
 pub mod evaluate;
 pub mod heuristic;
@@ -26,12 +30,12 @@ pub mod stream;
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::config::{Accelerator, Technology};
+use crate::config::Technology;
+use crate::ctx::EvalCtx;
 use crate::dataflow::NetworkProfile;
 use crate::sim;
 
 use crate::memory::{cover_op, org_fits, required_shared_ports, MemSpec, OrgKind, Organization};
-use crate::util::exec::Engine;
 use crate::util::pareto::{frontier3, Point3};
 
 /// One evaluated configuration: the DSE objective space of Figs 18/20/22,
@@ -200,29 +204,18 @@ pub fn enumerate_hy_ports(profile: &NetworkProfile, ports: usize) -> Result<Vec<
     Ok(out)
 }
 
-/// Evaluates organizations on the shared execution engine.  Results come
-/// back in input order, bit-identical for any worker count.  `timeline` is
-/// the org-independent simulated timeline of the same profile (build it
-/// once with [`sim::Timeline::build`]).
-pub fn evaluate_all_on(
-    engine: &Engine,
-    orgs: &[Organization],
-    profile: &NetworkProfile,
-    tech: &Technology,
-    timeline: &sim::Timeline,
-) -> Vec<DsePoint> {
-    engine.map(orgs, |o| eval_one(o, profile, tech, timeline))
-}
-
-/// Evaluates organizations in parallel over `threads` workers.
+/// Evaluates organizations on the context's execution engine.  Results
+/// come back in input order, bit-identical for any worker count.
+/// `timeline` is the org-independent simulated timeline of the same
+/// profile (build it once with [`sim::Timeline::build`]).
 pub fn evaluate_all(
+    ctx: &EvalCtx,
     orgs: &[Organization],
     profile: &NetworkProfile,
-    tech: &Technology,
     timeline: &sim::Timeline,
-    threads: usize,
 ) -> Vec<DsePoint> {
-    evaluate_all_on(&Engine::new(threads), orgs, profile, tech, timeline)
+    ctx.engine()
+        .map(orgs, |o| eval_one(o, profile, ctx.tech(), timeline))
 }
 
 fn eval_one(
@@ -293,52 +286,31 @@ pub struct DseResult {
     pub stats: stream::SweepStats,
 }
 
-pub fn run(
-    profile: &NetworkProfile,
-    tech: &Technology,
-    accel: &Accelerator,
-    threads: usize,
-) -> Result<DseResult> {
-    run_on(&Engine::new(threads), profile, tech, accel)
-}
-
-/// The full pipeline on an existing engine: enumerate → evaluate → Pareto
-/// → per-option selection.
-pub fn run_on(
-    engine: &Engine,
-    profile: &NetworkProfile,
-    tech: &Technology,
-    accel: &Accelerator,
-) -> Result<DseResult> {
-    run_budgeted(engine, profile, tech, accel, None)
-}
-
-/// The full pipeline with an optional hard per-inference latency budget
-/// [s]: configurations whose simulated latency exceeds the budget are
-/// excluded before Pareto extraction and per-option selection.  Errors
-/// when the budget excludes every configuration (reporting the fastest
-/// achievable latency) or is not a positive finite number.
-pub fn run_budgeted(
-    engine: &Engine,
-    profile: &NetworkProfile,
-    tech: &Technology,
-    accel: &Accelerator,
-    latency_budget_s: Option<f64>,
-) -> Result<DseResult> {
+/// The full pipeline: enumerate → evaluate (engine-parallel) → Pareto →
+/// per-option selection, under the context's optional hard per-inference
+/// latency budget ([`crate::ctx::Budget::latency_budget_s`]):
+/// configurations whose simulated latency exceeds the budget are excluded
+/// before Pareto extraction and per-option selection.  Errors when the
+/// budget excludes every configuration (reporting the fastest achievable
+/// latency) or is not a positive finite number (the builder already
+/// rejects such budgets; this guards direct [`crate::ctx::Budget`]
+/// construction).
+pub fn run(ctx: &EvalCtx, profile: &NetworkProfile) -> Result<DseResult> {
+    let latency_budget_s = ctx.budget().latency_budget_s;
     if let Some(budget) = latency_budget_s {
         ensure!(
             budget.is_finite() && budget > 0.0,
             "latency budget must be a positive duration, got {budget} s"
         );
     }
-    let timeline = sim::Timeline::build(profile, tech, accel);
+    let timeline = sim::Timeline::build(profile, ctx.tech(), ctx.accel());
     let subtrees = stream::subtrees(profile)?;
     let ev = stream::SingleNet {
         profile,
-        tech,
+        tech: ctx.tech(),
         timeline: &timeline,
     };
-    let out = stream::sweep(engine, &subtrees, &ev, latency_budget_s);
+    let out = stream::sweep(ctx, &subtrees, &ev);
     if let Some(budget) = latency_budget_s {
         if out.points.is_empty() {
             // All-excluded ⟹ nothing ever entered the archive ⟹ zero
@@ -379,6 +351,10 @@ mod tests {
 
     fn timeline(p: &NetworkProfile) -> sim::Timeline {
         sim::Timeline::build(p, &Technology::default(), &Accelerator::default())
+    }
+
+    fn ctx(threads: usize) -> EvalCtx {
+        EvalCtx::new(Technology::default(), Accelerator::default()).threads(threads)
     }
 
     #[test]
@@ -437,11 +413,10 @@ mod tests {
     #[test]
     fn evaluation_is_deterministic_and_parallel_consistent() {
         let p = profile();
-        let tech = Technology::default();
         let tl = timeline(&p);
         let orgs: Vec<_> = enumerate(&p).unwrap().into_iter().take(300).collect();
-        let seq = evaluate_all(&orgs, &p, &tech, &tl, 1);
-        let par = evaluate_all(&orgs, &p, &tech, &tl, 4);
+        let seq = evaluate_all(&ctx(1), &orgs, &p, &tl);
+        let par = evaluate_all(&ctx(4), &orgs, &p, &tl);
         assert_eq!(seq.len(), par.len());
         for (a, b) in seq.iter().zip(&par) {
             assert_eq!(a.org, b.org);
@@ -454,8 +429,7 @@ mod tests {
     #[test]
     fn selected_sep_matches_table_i_and_frontier_shape() {
         let p = profile();
-        let tech = Technology::default();
-        let res = run(&p, &tech, &Accelerator::default(), 4).unwrap();
+        let res = run(&ctx(4), &p).unwrap();
         let sel: std::collections::BTreeMap<_, _> = res.selected.iter().cloned().collect();
 
         // SEP selection == Table I sizes by construction.
@@ -513,9 +487,8 @@ mod tests {
         assert!(select_per_option(&[]).is_empty());
         assert!(pareto_indices(&[]).is_empty());
         let p = profile();
-        let tech = Technology::default();
         let tl = timeline(&p);
-        assert!(evaluate_all(&[], &p, &tech, &tl, 4).is_empty());
+        assert!(evaluate_all(&ctx(4), &[], &p, &tl).is_empty());
     }
 
     #[test]
@@ -525,11 +498,10 @@ mod tests {
         // the full-enumeration bit-equality pin lives in
         // rust/tests/engine_cache.rs).
         let p = profile();
-        let tech = Technology::default();
         let tl = timeline(&p);
         let orgs: Vec<_> = enumerate(&p).unwrap().into_iter().take(800).collect();
-        let serial = evaluate_all_on(&Engine::new(1), &orgs, &p, &tech, &tl);
-        let parallel = evaluate_all_on(&Engine::new(4), &orgs, &p, &tech, &tl);
+        let serial = evaluate_all(&ctx(1), &orgs, &p, &tl);
+        let parallel = evaluate_all(&ctx(4), &orgs, &p, &tl);
         for (a, b) in serial.iter().zip(&parallel) {
             assert_eq!(a.org, b.org);
             assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
@@ -578,10 +550,9 @@ mod tests {
         // the org-independent timeline — the 3-D frontier degenerates to
         // the paper's 2-D one.
         let p = profile();
-        let tech = Technology::default();
         let tl = timeline(&p);
         let orgs: Vec<_> = enumerate(&p).unwrap().into_iter().take(500).collect();
-        let points = evaluate_all(&orgs, &p, &tech, &tl, 4);
+        let points = evaluate_all(&ctx(4), &orgs, &p, &tl);
         let expect = tl.inference_latency_s();
         for pt in &points {
             assert_eq!(pt.latency_s.to_bits(), expect.to_bits(), "{}", pt.org.label());
@@ -591,22 +562,22 @@ mod tests {
     #[test]
     fn budget_below_fastest_errors_and_above_keeps_everything() {
         let p = profile();
-        let tech = Technology::default();
-        let accel = Accelerator::default();
-        let engine = Engine::new(2);
-        let err = run_budgeted(&engine, &p, &tech, &accel, Some(1e-9)).unwrap_err();
+        let tight = ctx(2).latency_budget_s(Some(1e-9)).unwrap();
+        let err = run(&tight, &p).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("excludes all"), "{msg}");
         assert!(msg.contains("fastest achievable"), "{msg}");
 
-        let loose = run_budgeted(&engine, &p, &tech, &accel, Some(1.0)).unwrap();
-        let unconstrained = run_on(&engine, &p, &tech, &accel).unwrap();
+        let loose = run(&ctx(2).latency_budget_s(Some(1.0)).unwrap(), &p).unwrap();
+        let unconstrained = run(&ctx(2), &p).unwrap();
         assert_eq!(loose.points.len(), unconstrained.points.len());
         assert_eq!(loose.excluded_by_budget, 0);
         assert_eq!(loose.selected, unconstrained.selected);
 
-        assert!(run_budgeted(&engine, &p, &tech, &accel, Some(f64::NAN)).is_err());
-        assert!(run_budgeted(&engine, &p, &tech, &accel, Some(-1.0)).is_err());
+        // Malformed budgets never reach the sweep: the context builder
+        // rejects them at construction (rust/tests/ctx.rs pins messages).
+        assert!(ctx(2).latency_budget_s(Some(f64::NAN)).is_err());
+        assert!(ctx(2).latency_budget_s(Some(-1.0)).is_err());
     }
 
     #[test]
@@ -626,9 +597,8 @@ mod tests {
     #[test]
     fn pareto_members_not_dominated() {
         let p = profile();
-        let tech = Technology::default();
         let orgs: Vec<_> = enumerate(&p).unwrap().into_iter().take(2_000).collect();
-        let points = evaluate_all(&orgs, &p, &tech, &timeline(&p), 4);
+        let points = evaluate_all(&ctx(4), &orgs, &p, &timeline(&p));
         let front = pareto_indices(&points);
         assert!(!front.is_empty());
         for &i in &front {

@@ -20,11 +20,11 @@
 use anyhow::{bail, ensure, Context, Result};
 
 use super::{evaluate, pareto_indices, select_per_option, stream, DsePoint};
-use crate::config::{Accelerator, Technology};
+use crate::config::Technology;
+use crate::ctx::EvalCtx;
 use crate::dataflow::NetworkProfile;
 use crate::memory::Organization;
 use crate::sim;
-use crate::util::exec::Engine;
 
 /// A set of network profiles plus the serving-mix weights (normalized to
 /// sum 1) used for the weighted-energy objective.
@@ -159,29 +159,30 @@ pub fn enumerate(set: &WorkloadSet) -> Result<Vec<Organization>> {
 }
 
 /// Builds the org-independent timeline of every member profile (same
-/// index order as [`WorkloadSet::profiles`]).
-pub fn timelines(set: &WorkloadSet, tech: &Technology, accel: &Accelerator) -> Vec<sim::Timeline> {
+/// index order as [`WorkloadSet::profiles`]) under the context's
+/// technology and accelerator.
+pub fn timelines(ctx: &EvalCtx, set: &WorkloadSet) -> Vec<sim::Timeline> {
     set.profiles
         .iter()
-        .map(|p| sim::Timeline::build(p, tech, accel))
+        .map(|p| sim::Timeline::build(p, ctx.tech(), ctx.accel()))
         .collect()
 }
 
 /// Engine-parallel weighted evaluation; deterministic in input order for
 /// any worker count (same engine contract as the single-network sweep).
 /// `tls` are the member timelines from [`timelines`].
-pub fn evaluate_all_on(
-    engine: &Engine,
+pub fn evaluate_all(
+    ctx: &EvalCtx,
     orgs: &[Organization],
     set: &WorkloadSet,
-    tech: &Technology,
     tls: &[sim::Timeline],
 ) -> (Vec<DsePoint>, Vec<Vec<f64>>, Vec<Vec<f64>>) {
     // Always-on: a timeline/profile mismatch would charge one network's
     // latency to another (lint rule debug_guard, ISSUE 9).
     assert_eq!(tls.len(), set.profiles.len(), "one timeline per member profile");
-    let evals: Vec<(DsePoint, Vec<f64>, Vec<f64>)> =
-        engine.map(orgs, |org| eval_one(org, set, tech, tls));
+    let evals: Vec<(DsePoint, Vec<f64>, Vec<f64>)> = ctx
+        .engine()
+        .map(orgs, |org| eval_one(org, set, ctx.tech(), tls));
     let mut points = Vec::with_capacity(evals.len());
     let mut per_net_j = Vec::with_capacity(evals.len());
     let mut per_net_latency_s = Vec::with_capacity(evals.len());
@@ -194,7 +195,7 @@ pub fn evaluate_all_on(
 }
 
 /// One weighted co-design evaluation — the single scoring implementation
-/// shared by [`evaluate_all_on`] and the branch-and-bound sweep
+/// shared by [`evaluate_all`] and the branch-and-bound sweep
 /// (`stream::MultiSet`).  The returned point holds the mix-weighted
 /// objectives; the vectors hold the unweighted per-network energies and
 /// latencies.
@@ -229,28 +230,16 @@ pub(crate) fn eval_one(
     )
 }
 
-/// The full co-design pipeline on an existing engine.
-pub fn run_on(
-    engine: &Engine,
-    set: &WorkloadSet,
-    tech: &Technology,
-    accel: &Accelerator,
-) -> Result<MultiDseResult> {
-    run_budgeted_on(engine, set, tech, accel, None)
-}
-
-/// The co-design pipeline with an optional hard budget on the
-/// mix-weighted per-inference latency [s]: organizations that miss the
-/// budget are excluded before Pareto extraction and per-option selection.
-/// Errors when the budget excludes every configuration (reporting the
-/// fastest achievable mix latency) or is not a positive finite number.
-pub fn run_budgeted_on(
-    engine: &Engine,
-    set: &WorkloadSet,
-    tech: &Technology,
-    accel: &Accelerator,
-    latency_budget_s: Option<f64>,
-) -> Result<MultiDseResult> {
+/// The full co-design pipeline under the context's optional hard budget
+/// on the mix-weighted per-inference latency
+/// ([`crate::ctx::Budget::latency_budget_s`]): organizations that miss
+/// the budget are excluded before Pareto extraction and per-option
+/// selection.  Errors when the budget excludes every configuration
+/// (reporting the fastest achievable mix latency) or is not a positive
+/// finite number (the builder already rejects such budgets; this guards
+/// direct [`crate::ctx::Budget`] construction).
+pub fn run(ctx: &EvalCtx, set: &WorkloadSet) -> Result<MultiDseResult> {
+    let latency_budget_s = ctx.budget().latency_budget_s;
     if let Some(budget) = latency_budget_s {
         ensure!(
             budget.is_finite() && budget > 0.0,
@@ -260,13 +249,13 @@ pub fn run_budgeted_on(
     let merged = set.merged_profile();
     let subtrees =
         stream::subtrees(&merged).context("enumerating over the merged workload set")?;
-    let tls = timelines(set, tech, accel);
+    let tls = timelines(ctx, set);
     let ev = stream::MultiSet {
         set,
-        tech,
+        tech: ctx.tech(),
         tls: &tls,
     };
-    let out = stream::sweep(engine, &subtrees, &ev, latency_budget_s);
+    let out = stream::sweep(ctx, &subtrees, &ev);
     if let Some(budget) = latency_budget_s {
         if out.points.is_empty() {
             bail!(
@@ -297,27 +286,6 @@ pub fn run_budgeted_on(
     })
 }
 
-/// Convenience over a fresh engine.
-pub fn run(
-    set: &WorkloadSet,
-    tech: &Technology,
-    accel: &Accelerator,
-    threads: usize,
-) -> Result<MultiDseResult> {
-    run_on(&Engine::new(threads), set, tech, accel)
-}
-
-/// [`run_budgeted_on`] over a fresh engine.
-pub fn run_budgeted(
-    set: &WorkloadSet,
-    tech: &Technology,
-    accel: &Accelerator,
-    threads: usize,
-    latency_budget_s: Option<f64>,
-) -> Result<MultiDseResult> {
-    run_budgeted_on(&Engine::new(threads), set, tech, accel, latency_budget_s)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -334,6 +302,10 @@ mod tests {
             profile_network(&deepcaps_cifar10(), &accel),
         ])
         .unwrap()
+    }
+
+    fn ctx(threads: usize) -> EvalCtx {
+        EvalCtx::new(Technology::default(), Accelerator::default()).threads(threads)
     }
 
     #[test]
@@ -366,7 +338,6 @@ mod tests {
     #[test]
     fn weighted_energy_is_the_mix_of_per_net_energies() {
         let accel = Accelerator::default();
-        let tech = Technology::default();
         let profiles = vec![
             profile_network(&capsnet_mnist(), &accel),
             profile_network(&deepcaps_cifar10(), &accel),
@@ -374,9 +345,9 @@ mod tests {
         let set = WorkloadSet::with_weights(profiles, vec![3.0, 1.0]).unwrap();
         assert!((set.weights()[0] - 0.75).abs() < 1e-12);
         let orgs: Vec<_> = enumerate(&set).unwrap().into_iter().take(50).collect();
-        let tls = timelines(&set, &tech, &accel);
-        let (points, per_net, per_lat) =
-            evaluate_all_on(&Engine::new(2), &orgs, &set, &tech, &tls);
+        let c = ctx(2);
+        let tls = timelines(&c, &set);
+        let (points, per_net, per_lat) = evaluate_all(&c, &orgs, &set, &tls);
         for ((pt, nets), lats) in points.iter().zip(&per_net).zip(&per_lat) {
             let expect = 0.75 * nets[0] + 0.25 * nets[1];
             assert!(
@@ -398,11 +369,11 @@ mod tests {
         // Equal machinery: a 1-element set must select exactly what the
         // single-network sweep selects (modulo the name prefix).
         let accel = Accelerator::default();
-        let tech = Technology::default();
+        let c = ctx(2);
         let p = profile_network(&capsnet_mnist(), &accel);
-        let single = dse::run(&p, &tech, &accel, 2).unwrap();
+        let single = dse::run(&c, &p).unwrap();
         let set = WorkloadSet::new(vec![p]).unwrap();
-        let multi = run(&set, &tech, &accel, 2).unwrap();
+        let multi = run(&c, &set).unwrap();
         assert_eq!(single.points.len(), multi.points.len());
         assert_eq!(single.selected, multi.selected);
         for (a, b) in single.points.iter().zip(&multi.points) {
@@ -415,14 +386,13 @@ mod tests {
     #[test]
     fn codesign_over_three_networks_selects_one_org() {
         let accel = Accelerator::default();
-        let tech = Technology::default();
         let set = WorkloadSet::new(vec![
             profile_network(&capsnet_mnist(), &accel),
             profile_network_batched(&capsnet_mnist(), &accel, 4),
             profile_network(&random_network(3), &accel),
         ])
         .unwrap();
-        let res = run(&set, &tech, &accel, 4).unwrap();
+        let res = run(&ctx(4), &set).unwrap();
         assert!(!res.points.is_empty());
         assert!(!res.selected.is_empty());
         let best = res.codesigned().unwrap();
@@ -443,12 +413,10 @@ mod tests {
     #[test]
     fn deterministic_across_thread_counts() {
         let set = set2();
-        let tech = Technology::default();
-        let accel = Accelerator::default();
-        let tls = timelines(&set, &tech, &accel);
+        let tls = timelines(&ctx(1), &set);
         let orgs: Vec<_> = enumerate(&set).unwrap().into_iter().take(400).collect();
-        let (p1, n1, l1) = evaluate_all_on(&Engine::new(1), &orgs, &set, &tech, &tls);
-        let (p4, n4, l4) = evaluate_all_on(&Engine::new(4), &orgs, &set, &tech, &tls);
+        let (p1, n1, l1) = evaluate_all(&ctx(1), &orgs, &set, &tls);
+        let (p4, n4, l4) = evaluate_all(&ctx(4), &orgs, &set, &tls);
         for ((a, b), (na, nb)) in p1.iter().zip(&p4).zip(n1.iter().zip(&n4)) {
             assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
             assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());

@@ -60,10 +60,10 @@ use std::time::Instant;
 use anyhow::{ensure, Context, Result};
 
 use crate::config::Technology;
+use crate::ctx::EvalCtx;
 use crate::dataflow::NetworkProfile;
 use crate::memory::{MemSpec, OrgKind, Organization};
 use crate::sim;
-use crate::util::exec::Engine;
 use crate::util::pareto::{Archive3, Point3};
 
 use super::multi::WorkloadSet;
@@ -381,7 +381,7 @@ impl SweepEval for SingleNet<'_> {
 }
 
 /// Multi-network co-design sweep: the mix-weighted objective space of
-/// `dse::multi::run_on` (subtrees come from the merged pseudo-profile,
+/// `dse::multi::run` (subtrees come from the merged pseudo-profile,
 /// scoring from the member profiles — one prepared evaluator each).
 pub(crate) struct MultiSet<'a> {
     pub set: &'a WorkloadSet,
@@ -476,15 +476,16 @@ pub(crate) struct SweepOutcome<X> {
 /// order; each is prepared once ([`SweepEval::prepare`], the only O(ops)
 /// work), bounded off the prepared tables, and — if it survives — its
 /// candidates are evaluated engine-parallel with ordered collection, then
-/// folded sequentially.  Every archive and selection decision is
+/// folded sequentially.  The engine and the optional latency budget come
+/// from the evaluation context.  Every archive and selection decision is
 /// deterministic for any thread count; only the `prep_s`/`eval_s` wall
 /// times vary run to run.
 pub(crate) fn sweep<E: SweepEval>(
-    engine: &Engine,
+    ctx: &EvalCtx,
     subtrees: &[Subtree],
     ev: &E,
-    latency_budget_s: Option<f64>,
 ) -> SweepOutcome<E::Extra> {
+    let latency_budget_s = ctx.budget().latency_budget_s;
     let mut stats = SweepStats::default();
     let mut archive = Archive3::new();
     // Lowest admitted energy per design option (select_per_option's keep
@@ -531,7 +532,7 @@ pub(crate) fn sweep<E: SweepEval>(
         st.materialize_into(&mut batch);
         // lint: allow(wall_clock, "feeds SweepStats::eval_s only — diagnostic timing, excluded from every fingerprint and result")
         let t_eval = Instant::now();
-        let evaluated = engine.map(&batch, |o| ev.eval(&prep, o));
+        let evaluated = ctx.engine().map(&batch, |o| ev.eval(&prep, o));
         stats.eval_s += t_eval.elapsed().as_secs_f64();
         stats.evaluated += evaluated.len();
 
@@ -702,11 +703,10 @@ mod tests {
         // Fast smoke of the exactness property (the full property sweep
         // over generator networks lives in rust/tests/prune_exact.rs).
         let p = profile();
-        let tech = crate::config::Technology::default();
-        let accel = Accelerator::default();
-        let engine = Engine::new(4);
+        let ctx = EvalCtx::new(crate::config::Technology::default(), Accelerator::default())
+            .threads(4);
 
-        let pruned = dse::run_on(&engine, &p, &tech, &accel).unwrap();
+        let pruned = dse::run(&ctx, &p).unwrap();
         assert!(
             pruned.stats.pruned > 0,
             "no candidates culled on capsnet: {:?}",
@@ -724,8 +724,8 @@ mod tests {
 
         // Exhaustive oracle over the same enumeration order.
         let orgs = dse::enumerate(&p).unwrap();
-        let tl = sim::Timeline::build(&p, &tech, &accel);
-        let all = dse::evaluate_all_on(&engine, &orgs, &p, &tech, &tl);
+        let tl = sim::Timeline::build(&p, ctx.tech(), ctx.accel());
+        let all = dse::evaluate_all(&ctx, &orgs, &p, &tl);
         let front = dse::pareto_indices(&all);
         let sel = dse::select_per_option(&all);
 
@@ -753,10 +753,12 @@ mod tests {
     #[test]
     fn sweep_is_deterministic_across_thread_counts() {
         let p = profile();
-        let tech = crate::config::Technology::default();
-        let accel = Accelerator::default();
-        let one = dse::run_on(&Engine::new(1), &p, &tech, &accel).unwrap();
-        let many = dse::run_on(&Engine::new(8), &p, &tech, &accel).unwrap();
+        let mk = |threads| {
+            EvalCtx::new(crate::config::Technology::default(), Accelerator::default())
+                .threads(threads)
+        };
+        let one = dse::run(&mk(1), &p).unwrap();
+        let many = dse::run(&mk(8), &p).unwrap();
         assert_eq!(one.points.len(), many.points.len());
         assert_eq!(one.pareto, many.pareto);
         assert_eq!(one.selected, many.selected);

@@ -58,6 +58,7 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::config::{SystemConfig, Technology};
 use crate::coordinator::batcher::BatchPolicy;
+use crate::ctx::EvalCtx;
 use crate::dataflow::{profile_network_batched, NetworkProfile};
 use crate::dse::multi::WorkloadSet;
 use crate::dse::{self, DsePoint};
@@ -65,7 +66,6 @@ use crate::energy::system_with_org;
 use crate::memory::{MemSpec, Organization};
 use crate::model::Network;
 use crate::sim;
-use crate::util::exec::Engine;
 use crate::util::prng::Prng;
 use crate::util::stats::Percentiles;
 
@@ -1191,7 +1191,6 @@ pub struct DesignOptions {
     /// One organization co-designed across every shard workload instead of
     /// one per workload.
     pub homogeneous: bool,
-    pub threads: usize,
 }
 
 impl Default for DesignOptions {
@@ -1202,7 +1201,6 @@ impl Default for DesignOptions {
             slo_s: None,
             flush_deadline_s: 2e-3,
             homogeneous: false,
-            threads: 1,
         }
     }
 }
@@ -1224,17 +1222,17 @@ pub struct FleetDesign {
 /// `nets[k % nets.len()]`), under a fleet-wide energy objective with the
 /// SLO as a hard constraint.
 pub fn design_fleet(
-    cfg: &SystemConfig,
+    ctx: &EvalCtx,
     nets: &[Network],
     opts: &DesignOptions,
 ) -> Result<FleetDesign> {
     ensure!(opts.shards > 0, "fleet needs at least one shard");
     ensure!(!nets.is_empty(), "fleet needs at least one workload");
+    let cfg = ctx.config();
     cfg.validate()?;
     let batcher_probe = BatchPolicy::new(opts.batch_sizes.clone(), opts.flush_deadline_s)
         .context("fleet executable batch sizes")?;
     let batch_sizes = batcher_probe.sizes().to_vec();
-    let engine = Engine::new(opts.threads);
 
     // Batched profiles per workload (indexes parallel to `nets`).
     let per_net_profiles: Vec<Vec<NetworkProfile>> = nets
@@ -1276,7 +1274,7 @@ pub fn design_fleet(
             );
         }
         let set = WorkloadSet::new(profiles)?;
-        let result = dse::multi::run_on(&engine, &set, &cfg.tech, &cfg.accel)
+        let result = dse::multi::run(ctx, &set)
             .with_context(|| format!("co-designing the organization of {label}"))?;
         let feasible = |p: &DsePoint| match opts.slo_s {
             None => true,
@@ -1478,7 +1476,7 @@ pub struct NPlusDesign {
 /// survives losing its biggest shards, it survives any budget-sized
 /// failure set of this design.
 pub fn design_fleet_n_plus(
-    cfg: &SystemConfig,
+    ctx: &EvalCtx,
     nets: &[Network],
     opts: &DesignOptions,
     probe: &FleetConfig,
@@ -1502,7 +1500,7 @@ pub fn design_fleet_n_plus(
         let total = opts.shards + np.fault_budget + extra;
         let mut o = opts.clone();
         o.shards = total;
-        let design = design_fleet(cfg, nets, &o)?;
+        let design = design_fleet(ctx, nets, &o)?;
         let cap = |s: usize| {
             let p = &design.plans[s];
             let b = p.batcher.max_batch();

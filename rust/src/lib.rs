@@ -3,22 +3,45 @@
 //!
 //! See `rust/DESIGN.md` for the system inventory (section 5 covers the
 //! shared execution engine `util::exec` and the memoized CACTI cost cache
-//! `cacti::cache` every evaluation layer goes through) and
+//! `cacti::cache` every evaluation layer goes through, section 17 the
+//! unified evaluation context `ctx` every entry point takes) and
 //! `rust/EXPERIMENTS.md` for the paper-vs-measured record.
 
+// The public `ctx` API is fully documented; legacy modules predate the
+// missing_docs gate and are allow-listed item-by-item below until their
+// public surfaces are documented too (ISSUE 10 satellite).
+#![warn(missing_docs)]
+
+#[allow(missing_docs)]
 pub mod accel;
+#[allow(missing_docs)]
 pub mod analysis;
+#[allow(missing_docs)]
 pub mod cacti;
+#[allow(missing_docs)]
 pub mod config;
+#[allow(missing_docs)]
 pub mod coordinator;
+pub mod ctx;
+#[allow(missing_docs)]
 pub mod dataflow;
+#[allow(missing_docs)]
 pub mod dse;
+#[allow(missing_docs)]
 pub mod energy;
+#[allow(missing_docs)]
 pub mod fleet;
+#[allow(missing_docs)]
 pub mod memory;
+#[allow(missing_docs)]
 pub mod model;
+#[allow(missing_docs)]
 pub mod pmu;
+#[allow(missing_docs)]
 pub mod report;
+#[allow(missing_docs)]
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod sim;
+#[allow(missing_docs)]
 pub mod util;

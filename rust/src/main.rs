@@ -15,6 +15,7 @@ use std::path::PathBuf;
 use descnet::accel;
 use descnet::config::SystemConfig;
 use descnet::coordinator::server::{ServeOptions, Server};
+use descnet::ctx::EvalCtx;
 use descnet::dataflow::{profile_network_batched, NetworkProfile};
 use descnet::dse::multi::WorkloadSet;
 use descnet::fleet;
@@ -168,6 +169,25 @@ impl Flags {
     fn has(&self, key: &str) -> bool {
         self.kv.contains_key(key)
     }
+
+    /// Rejects unrecognized `--flags`, listing the command's known set — a
+    /// typo like `--lateny-budget` must not silently run an unbudgeted
+    /// sweep with the flag ignored.
+    fn check_known(&self, known: &[&str]) -> anyhow::Result<()> {
+        for key in self.kv.keys() {
+            if !known.contains(&key.as_str()) {
+                anyhow::bail!(
+                    "unknown flag --{key}; known flags: {}",
+                    known
+                        .iter()
+                        .map(|k| format!("--{k}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Unwraps a strict flag parse or exits with usage code 2.
@@ -231,6 +251,9 @@ fn collect_networks(flags: &Flags) -> anyhow::Result<(Vec<Network>, Option<Vec<f
 
 fn cmd_analyze(args: &[String]) -> i32 {
     let flags = parse_flags(args);
+    try_flag!(flags.check_known(&[
+        "batch", "config", "net", "random", "seed", "sim", "workload",
+    ]));
     let cfg = load_config(&flags);
     let batch = try_flag!(flags.usize("batch", 1));
     let (nets, _) = match collect_networks(&flags) {
@@ -327,18 +350,42 @@ fn cmd_analyze(args: &[String]) -> i32 {
 
 fn cmd_dse(args: &[String]) -> i32 {
     let flags = parse_flags(args);
+    try_flag!(flags.check_known(&[
+        "batch",
+        "config",
+        "latency-budget",
+        "mix",
+        "net",
+        "out",
+        "ports",
+        "random",
+        "seed",
+        "stats",
+        "threads",
+        "traffic-weighted",
+        "workload",
+    ]));
     let cfg = load_config(&flags);
     let out = PathBuf::from(flags.get("out", "results"));
     let threads = try_flag!(flags.usize("threads", exec::default_threads()));
     let batch = try_flag!(flags.usize("batch", 1));
     let latency_budget_s = try_flag!(flags.f64_opt("latency-budget")).map(|ms| ms * 1e-3);
-    if let Some(b) = latency_budget_s {
-        if !(b.is_finite() && b > 0.0) {
+    // Budget validation lives in the EvalCtx builder; keep the CLI's exact
+    // diagnostic for a malformed value.
+    let eval = match EvalCtx::for_config(&cfg)
+        .threads(threads)
+        .batch(batch)
+        .stats(flags.has("stats"))
+        .latency_budget_s(latency_budget_s)
+    {
+        Ok(eval) => eval,
+        Err(_) => {
+            let b = latency_budget_s.unwrap_or(f64::NAN);
             eprintln!("--latency-budget expects a positive duration in ms, got {}", b * 1e3);
             return 2;
         }
-    }
-    let ctx = ReportCtx::new(cfg, &out);
+    };
+    let ctx = ReportCtx::new(eval, &out);
 
     if flags.has("ports") {
         // The Fig 22 artifact is defined for builtin DeepCaps at batch 1;
@@ -358,7 +405,7 @@ fn cmd_dse(args: &[String]) -> i32 {
             );
             return 2;
         }
-        return match report::fig22(&ctx, threads) {
+        return match report::fig22(&ctx) {
             Ok(csv) => {
                 println!(
                     "port-constrained HY-PG DSE: {} configurations (paper: 113,337)",
@@ -392,7 +439,7 @@ fn cmd_dse(args: &[String]) -> i32 {
         && matches!(nets[0].name.as_str(), "capsnet" | "deepcaps")
     {
         let net = nets[0].name.clone();
-        return match report::dse_scatter(&ctx, &net, threads, latency_budget_s) {
+        return match report::dse_scatter(&ctx, &net) {
             Ok((csv, table, excluded, stats)) => {
                 println!(
                     "{net} DSE: {} configurations enumerated (paper: {}), \
@@ -412,7 +459,7 @@ fn cmd_dse(args: &[String]) -> i32 {
                         fmt_count(excluded as u64),
                     );
                 }
-                if flags.has("stats") {
+                if ctx.eval.budget().stats {
                     print_sweep_stats(&stats);
                 }
                 println!("{}", table.to_ascii());
@@ -426,7 +473,7 @@ fn cmd_dse(args: &[String]) -> i32 {
     }
 
     // Workload-set path: co-design one organization across every network.
-    match run_multi_dse(&ctx, &nets, weights, batch, threads, latency_budget_s, &flags) {
+    match run_multi_dse(&ctx, &nets, weights, &flags) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("dse failed: {e:#}");
@@ -435,19 +482,16 @@ fn cmd_dse(args: &[String]) -> i32 {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn run_multi_dse(
     ctx: &ReportCtx,
     nets: &[Network],
     weights: Option<Vec<f64>>,
-    batch: usize,
-    threads: usize,
-    latency_budget_s: Option<f64>,
     flags: &Flags,
 ) -> anyhow::Result<()> {
+    let batch = ctx.eval.budget().batch;
     let profiles: Vec<NetworkProfile> = nets
         .iter()
-        .map(|n| profile_network_batched(n, &ctx.cfg.accel, batch))
+        .map(|n| profile_network_batched(n, ctx.eval.accel(), batch))
         .collect();
     let names: Vec<String> = nets
         .iter()
@@ -476,8 +520,7 @@ fn run_multi_dse(
         WorkloadSet::new(profiles)?
     };
 
-    let (csv, table, excluded, stats) =
-        report::multi_dse(ctx, &mix, &names, threads, latency_budget_s)?;
+    let (csv, table, excluded, stats) = report::multi_dse(ctx, &mix, &names)?;
     println!(
         "co-design DSE over {} networks ({}): {} configurations enumerated, \
          {} pruned by bound, {} evaluated",
@@ -494,7 +537,7 @@ fn run_multi_dse(
             fmt_count(excluded as u64),
         );
     }
-    if flags.has("stats") {
+    if ctx.eval.budget().stats {
         print_sweep_stats(&stats);
     }
     println!("{}", table.to_ascii());
@@ -542,9 +585,35 @@ fn print_sweep_stats(stats: &descnet::dse::stream::SweepStats) {
 /// artifacts of `report fleet` written alongside.
 fn cmd_fleet(args: &[String]) -> i32 {
     let flags = parse_flags(args);
+    try_flag!(flags.check_known(&[
+        "attainment",
+        "batch-max",
+        "config",
+        "crash-policy",
+        "fault-budget",
+        "fault-seed",
+        "hedge-ms",
+        "homogeneous",
+        "mtbf-s",
+        "mttr-s",
+        "net",
+        "out",
+        "policy",
+        "random",
+        "requests",
+        "retries",
+        "rps",
+        "seed",
+        "shards",
+        "slo-ms",
+        "threads",
+        "timeout-ms",
+        "workload",
+    ]));
     let cfg = load_config(&flags);
     let out = PathBuf::from(flags.get("out", "results"));
     let threads = try_flag!(flags.usize("threads", exec::default_threads()));
+    let eval = EvalCtx::for_config(&cfg).threads(threads);
     let shards = try_flag!(flags.usize("shards", 2));
     let requests = try_flag!(flags.usize("requests", 400));
     let seed = try_flag!(flags.usize("seed", 7)) as u64;
@@ -620,7 +689,6 @@ fn cmd_fleet(args: &[String]) -> i32 {
             slo_s,
             flush_deadline_s: 2e-3,
             homogeneous: flags.has("homogeneous"),
-            threads,
         };
         let fcfg = fleet::FleetConfig {
             rps,
@@ -639,7 +707,7 @@ fn cmd_fleet(args: &[String]) -> i32 {
                 attainment_target: attainment,
                 max_extra: 4,
             };
-            let nd = fleet::design_fleet_n_plus(&cfg, &nets, &opts, &fcfg, &np)?;
+            let nd = fleet::design_fleet_n_plus(&eval, &nets, &opts, &fcfg, &np)?;
             println!(
                 "N+{fault_budget} provisioning: {} shards (base {}), degraded \
                  attainment {:.1}% with shards {:?} down (target {:.1}%)",
@@ -651,9 +719,9 @@ fn cmd_fleet(args: &[String]) -> i32 {
             );
             nd.design
         } else {
-            fleet::design_fleet(&cfg, &nets, &opts)?
+            fleet::design_fleet(&eval, &nets, &opts)?
         };
-        let ctx = ReportCtx::new(cfg, &out);
+        let ctx = ReportCtx::new(eval, &out);
         let (_, _, mut stats, base) = report::fleet_report(&ctx, &design, &fcfg)?;
         print!("{}", stats.summary());
         println!(
@@ -676,6 +744,7 @@ fn cmd_fleet(args: &[String]) -> i32 {
 
 fn cmd_report(args: &[String]) -> i32 {
     let flags = parse_flags(args);
+    try_flag!(flags.check_known(&["config", "out", "threads"]));
     let cfg = load_config(&flags);
     let out = PathBuf::from(flags.get("out", "results"));
     let threads = try_flag!(flags.usize("threads", exec::default_threads()));
@@ -684,11 +753,11 @@ fn cmd_report(args: &[String]) -> i32 {
         .first()
         .cloned()
         .unwrap_or_else(|| "all".to_string());
-    let ctx = ReportCtx::new(cfg, &out);
+    let ctx = ReportCtx::new(EvalCtx::for_config(&cfg).threads(threads), &out);
     let res: anyhow::Result<()> = (|| {
         match what.as_str() {
             "all" => {
-                let done = report::all(&ctx, threads)?;
+                let done = report::all(&ctx)?;
                 println!("regenerated: {}", done.join(", "));
             }
             "fig1" => drop(report::fig1(&ctx)),
@@ -697,28 +766,28 @@ fn cmd_report(args: &[String]) -> i32 {
             "fig10" => drop(report::fig10(&ctx)),
             "fig11" => drop(report::fig11(&ctx)),
             "fig12" => drop(report::fig12(&ctx)?),
-            "fig18" => drop(report::dse_scatter(&ctx, "capsnet", threads, None)?),
-            "fig19" => drop(report::breakdowns(&ctx, "capsnet", threads)?),
-            "fig20" => drop(report::dse_scatter(&ctx, "deepcaps", threads, None)?),
-            "fig21" => drop(report::breakdowns(&ctx, "deepcaps", threads)?),
-            "fig22" => drop(report::fig22(&ctx, threads)?),
-            "fig23" | "fig24" => drop(report::whole_accelerator(&ctx, "capsnet", threads)?),
-            "fig25" | "fig26" => drop(report::whole_accelerator(&ctx, "deepcaps", threads)?),
+            "fig18" => drop(report::dse_scatter(&ctx, "capsnet")?),
+            "fig19" => drop(report::breakdowns(&ctx, "capsnet")?),
+            "fig20" => drop(report::dse_scatter(&ctx, "deepcaps")?),
+            "fig21" => drop(report::breakdowns(&ctx, "deepcaps")?),
+            "fig22" => drop(report::fig22(&ctx)?),
+            "fig23" | "fig24" => drop(report::whole_accelerator(&ctx, "capsnet")?),
+            "fig25" | "fig26" => drop(report::whole_accelerator(&ctx, "deepcaps")?),
             "fig27" | "fig28" => drop(report::fig27_28(&ctx)),
-            "fig29" => drop(report::memory_breakdown(&ctx, "capsnet", threads)?),
-            "fig30" => drop(report::fig30(&ctx, threads)?),
-            "fig31" | "fig32" => drop(report::memory_breakdown(&ctx, "deepcaps", threads)?),
+            "fig29" => drop(report::memory_breakdown(&ctx, "capsnet")?),
+            "fig30" => drop(report::fig30(&ctx)?),
+            "fig31" | "fig32" => drop(report::memory_breakdown(&ctx, "deepcaps")?),
             "multi" => {
                 let (set, names) = report::default_serving_mix(&ctx)?;
-                let (_, table, _, _) = report::multi_dse(&ctx, &set, &names, threads, None)?;
+                let (_, table, _, _) = report::multi_dse(&ctx, &set, &names)?;
                 println!("{}", table.to_ascii());
             }
             "fleet" => {
-                let (_, table, _, _) = report::fleet_default(&ctx, threads)?;
+                let (_, table, _, _) = report::fleet_default(&ctx)?;
                 println!("{}", table.to_ascii());
             }
-            "table3" => println!("{}", report::table3(&ctx, threads)?.to_ascii()),
-            "headline" => println!("{}", report::headline(&ctx, threads)?),
+            "table3" => println!("{}", report::table3(&ctx)?.to_ascii()),
+            "headline" => println!("{}", report::headline(&ctx)?),
             other => anyhow::bail!("unknown report target '{other}'"),
         }
         Ok(())
@@ -737,11 +806,12 @@ fn cmd_report(args: &[String]) -> i32 {
 
 fn cmd_headline(args: &[String]) -> i32 {
     let flags = parse_flags(args);
+    try_flag!(flags.check_known(&["config", "threads"]));
     let cfg = load_config(&flags);
     let threads = try_flag!(flags.usize("threads", exec::default_threads()));
     let dir = std::env::temp_dir().join("descnet_headline");
-    let ctx = ReportCtx::new(cfg, &dir);
-    match report::headline(&ctx, threads) {
+    let ctx = ReportCtx::new(EvalCtx::for_config(&cfg).threads(threads), &dir);
+    match report::headline(&ctx) {
         Ok(csv) => {
             println!("{csv}");
             0
@@ -759,6 +829,7 @@ fn cmd_headline(args: &[String]) -> i32 {
 /// (embedded in the JSON output too).
 fn cmd_lint(args: &[String]) -> i32 {
     let flags = parse_flags(args);
+    try_flag!(flags.check_known(&["format", "root"]));
     let root = PathBuf::from(flags.get("root", "."));
     let format = flags.get("format", "table");
     if format != "table" && format != "json" {
@@ -789,6 +860,7 @@ fn cmd_lint(args: &[String]) -> i32 {
 /// defaults so experiments can pin/modify them (DESIGN.md section 7).
 fn cmd_config(args: &[String]) -> i32 {
     let flags = parse_flags(args);
+    try_flag!(flags.check_known(&["config", "save"]));
     let cfg = load_config(&flags);
     match flags.kv.get("save") {
         Some(path) => {
@@ -806,6 +878,9 @@ fn cmd_config(args: &[String]) -> i32 {
 
 fn cmd_serve(args: &[String]) -> i32 {
     let flags = parse_flags(args);
+    try_flag!(flags.check_known(&[
+        "artifacts", "batch-max", "requests", "seed", "slo-ms", "stage-pipeline",
+    ]));
     let slo_s = try_flag!(flags.f64_opt("slo-ms")).map(|ms| ms * 1e-3);
     let opts = ServeOptions {
         artifacts_dir: PathBuf::from(flags.get("artifacts", "artifacts")),

@@ -9,7 +9,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::config::SystemConfig;
+use crate::ctx::EvalCtx;
 use crate::dataflow::{profile_network, tpu, NetworkProfile};
 use crate::dse;
 use crate::dse::multi::WorkloadSet;
@@ -22,20 +22,24 @@ use crate::util::csv::{f, s, u, Csv};
 use crate::util::table::Table;
 use crate::util::units::fmt_size;
 
-/// Everything the generators need, computed once.
+/// Everything the generators need, computed once: the unified evaluation
+/// context (engine, technology, accelerator, CACTI cache, budget — DESIGN.md
+/// section 17) plus the pre-profiled paper networks and the output
+/// directory.  Thread count and latency budget are read from `eval`, so no
+/// generator takes them positionally.
 pub struct ReportCtx {
-    pub cfg: SystemConfig,
+    pub eval: EvalCtx,
     pub capsnet: NetworkProfile,
     pub deepcaps: NetworkProfile,
     pub out_dir: PathBuf,
 }
 
 impl ReportCtx {
-    pub fn new(cfg: SystemConfig, out_dir: &Path) -> ReportCtx {
-        let capsnet = profile_network(&capsnet_mnist(), &cfg.accel);
-        let deepcaps = profile_network(&deepcaps_cifar10(), &cfg.accel);
+    pub fn new(eval: EvalCtx, out_dir: &Path) -> ReportCtx {
+        let capsnet = profile_network(&capsnet_mnist(), eval.accel());
+        let deepcaps = profile_network(&deepcaps_cifar10(), eval.accel());
         ReportCtx {
-            cfg,
+            eval,
             capsnet,
             deepcaps,
             out_dir: out_dir.to_path_buf(),
@@ -86,7 +90,7 @@ pub fn fig1(ctx: &ReportCtx) -> Csv {
         "tpu_total_B",
     ]);
     let net = capsnet_mnist();
-    let tpu_usage = tpu::profile_tpu(&net, &ctx.cfg.accel);
+    let tpu_usage = tpu::profile_tpu(&net, ctx.eval.accel());
     for (op, t) in ctx.capsnet.ops.iter().zip(&tpu_usage) {
         csv.row(vec![
             s(&op.name),
@@ -210,8 +214,8 @@ pub fn fig11(ctx: &ReportCtx) -> Csv {
 /// Fig 12: energy breakdown of versions (a) and (b).
 pub fn fig12(ctx: &ReportCtx) -> Result<Csv> {
     let mut csv = Csv::new(&["version", "component", "energy_mj", "share"]);
-    let a = energy::version_a(&ctx.capsnet, &ctx.cfg.tech)?;
-    let b = energy::version_b(&ctx.capsnet, &ctx.cfg.tech, dse::smp_size(&ctx.capsnet))?;
+    let a = energy::version_a(&ctx.capsnet, ctx.eval.tech())?;
+    let b = energy::version_b(&ctx.capsnet, ctx.eval.tech(), dse::smp_size(&ctx.capsnet))?;
     for sys in [&a, &b] {
         let total = sys.total_j();
         let mut rows: Vec<(&str, f64)> = vec![
@@ -238,26 +242,18 @@ pub fn fig12(ctx: &ReportCtx) -> Result<Csv> {
 /// Runs the full DSE for one network and dumps scatter + frontier +
 /// selected configurations (Fig 18/20, Tables I/II) — 3-D since the
 /// timeline simulator: every row carries its simulated per-inference
-/// latency, and `latency_budget_s` (the CLI's `--latency-budget`) excludes
-/// configurations that miss the budget before Pareto/selection.  The last
-/// two tuple elements are the number of budget-excluded configurations (0
-/// when unconstrained) and the branch-and-bound counters of the sweep, so
-/// callers can report enumerated vs pruned vs evaluated counts.  Also
-/// writes the counters as `dse_stats_<net>.csv` (E23).
+/// latency, and the context's latency budget (the CLI's `--latency-budget`)
+/// excludes configurations that miss the budget before Pareto/selection.
+/// The last two tuple elements are the number of budget-excluded
+/// configurations (0 when unconstrained) and the branch-and-bound counters
+/// of the sweep, so callers can report enumerated vs pruned vs evaluated
+/// counts.  Also writes the counters as `dse_stats_<net>.csv` (E23).
 pub fn dse_scatter(
     ctx: &ReportCtx,
     net: &str,
-    threads: usize,
-    latency_budget_s: Option<f64>,
 ) -> Result<(Csv, Table, usize, dse::stream::SweepStats)> {
     let profile = ctx.profile(net);
-    let result = dse::run_budgeted(
-        &crate::util::exec::Engine::new(threads),
-        profile,
-        &ctx.cfg.tech,
-        &ctx.cfg.accel,
-        latency_budget_s,
-    )?;
+    let result = dse::run(&ctx.eval, profile)?;
     let pareto: std::collections::BTreeSet<usize> = result.pareto.iter().copied().collect();
     let selected: std::collections::BTreeMap<usize, String> = result
         .selected
@@ -398,9 +394,9 @@ fn stats_csv(net: &str, st: &dse::stream::SweepStats) -> Csv {
 
 /// Figs 19/21 (a)-(d): per-component area/energy breakdowns and per-op
 /// energy for the per-option selected configurations.
-pub fn breakdowns(ctx: &ReportCtx, net: &str, threads: usize) -> Result<Csv> {
+pub fn breakdowns(ctx: &ReportCtx, net: &str) -> Result<Csv> {
     let profile = ctx.profile(net);
-    let result = dse::run(profile, &ctx.cfg.tech, &ctx.cfg.accel, threads)?;
+    let result = dse::run(&ctx.eval, profile)?;
     let mut csv = Csv::new(&[
         "option",
         "component",
@@ -414,7 +410,7 @@ pub fn breakdowns(ctx: &ReportCtx, net: &str, threads: usize) -> Result<Csv> {
     let mut per_op = Csv::new(&["option", "op", "energy_mj"]);
     for (name, i) in &result.selected {
         let org = &result.points[*i].org;
-        let e = energy::evaluate_org(org, profile, &ctx.cfg.tech)?;
+        let e = energy::evaluate_org(org, profile, ctx.eval.tech())?;
         for m in &e.memories {
             csv.row(vec![
                 s(name),
@@ -427,7 +423,7 @@ pub fn breakdowns(ctx: &ReportCtx, net: &str, threads: usize) -> Result<Csv> {
                 f(m.wakeup_j * 1e9),
             ]);
         }
-        for (op, ej) in energy::per_op_energy(org, profile, &ctx.cfg.tech)? {
+        for (op, ej) in energy::per_op_energy(org, profile, ctx.eval.tech())? {
             per_op.row(vec![s(name), s(&op), f(ej * 1e3)]);
         }
     }
@@ -443,13 +439,13 @@ pub fn breakdowns(ctx: &ReportCtx, net: &str, threads: usize) -> Result<Csv> {
 // --------------------------------------------------------------- E11 Fig 22
 
 /// Fig 22: HY-PG DSE with constrained shared-memory ports.
-pub fn fig22(ctx: &ReportCtx, threads: usize) -> Result<Csv> {
+pub fn fig22(ctx: &ReportCtx) -> Result<Csv> {
     let profile = &ctx.deepcaps;
-    let timeline = crate::sim::Timeline::build(profile, &ctx.cfg.tech, &ctx.cfg.accel);
+    let timeline = crate::sim::Timeline::build(profile, ctx.eval.tech(), ctx.eval.accel());
     let mut csv = Csv::new(&["ports", "label", "area_mm2", "energy_mj", "pareto"]);
     for ports in [1usize, 2, 3] {
         let orgs = dse::enumerate_hy_ports(profile, ports)?;
-        let points = dse::evaluate_all(&orgs, profile, &ctx.cfg.tech, &timeline, threads);
+        let points = dse::evaluate_all(&ctx.eval, &orgs, profile, &timeline);
         let front: std::collections::BTreeSet<usize> =
             dse::pareto_indices(&points).into_iter().collect();
         for (i, p) in points.iter().enumerate() {
@@ -470,13 +466,13 @@ pub fn fig22(ctx: &ReportCtx, threads: usize) -> Result<Csv> {
 
 /// Figs 23–26: whole-accelerator energy/area for the chosen organizations,
 /// plus the headline savings vs version (a) (E18).
-pub fn whole_accelerator(ctx: &ReportCtx, net: &str, threads: usize) -> Result<Csv> {
+pub fn whole_accelerator(ctx: &ReportCtx, net: &str) -> Result<Csv> {
     let profile = ctx.profile(net);
-    let result = dse::run(profile, &ctx.cfg.tech, &ctx.cfg.accel, threads)?;
+    let result = dse::run(&ctx.eval, profile)?;
     let selected: std::collections::BTreeMap<String, usize> =
         result.selected.iter().cloned().collect();
 
-    let a = energy::version_a(profile, &ctx.cfg.tech)?;
+    let a = energy::version_a(profile, ctx.eval.tech())?;
     let mut csv = Csv::new(&[
         "system",
         "total_energy_mj",
@@ -502,10 +498,10 @@ pub fn whole_accelerator(ctx: &ReportCtx, net: &str, threads: usize) -> Result<C
         s("1"),
     ]);
 
-    let report = prefetch::analyze(profile, &ctx.cfg.tech, &ctx.cfg.accel);
+    let report = prefetch::analyze(profile, ctx.eval.tech(), ctx.eval.accel());
     for option in ["SEP", "SEP-PG", "HY-PG"] {
         let Some(&i) = selected.get(option) else { continue };
-        let sys = system_with_org(profile, &ctx.cfg.tech, &result.points[i].org, "DESCNet")?;
+        let sys = system_with_org(profile, ctx.eval.tech(), &result.points[i].org, "DESCNet")?;
         csv.row(vec![
             s(&sys.label),
             f(sys.total_j() * 1e3),
@@ -531,17 +527,17 @@ pub fn whole_accelerator(ctx: &ReportCtx, net: &str, threads: usize) -> Result<C
 
 /// Table III: per-memory area/dynamic/static/wakeup for the selected
 /// configurations of both networks.
-pub fn table3(ctx: &ReportCtx, threads: usize) -> Result<Table> {
+pub fn table3(ctx: &ReportCtx) -> Result<Table> {
     let mut table = Table::new(&[
         "NN", "Mem", "Component", "Size", "SC", "Area [mm2]", "Dyn [mJ]", "Static [mJ]",
         "Wakeup [nJ]",
     ]);
     for net in ["capsnet", "deepcaps"] {
         let profile = ctx.profile(net);
-        let result = dse::run(profile, &ctx.cfg.tech, &ctx.cfg.accel, threads)?;
+        let result = dse::run(&ctx.eval, profile)?;
         for (name, i) in &result.selected {
             let org = &result.points[*i].org;
-            let e = energy::evaluate_org(org, profile, &ctx.cfg.tech)?;
+            let e = energy::evaluate_org(org, profile, ctx.eval.tech())?;
             for m in &e.memories {
                 table.row(vec![
                     net.to_string(),
@@ -583,9 +579,9 @@ pub fn fig27_28(ctx: &ReportCtx) -> Csv {
 
 /// Figs 29/31: operation-wise memory breakdown (which physical memory holds
 /// which value class) for the selected design options.
-pub fn memory_breakdown(ctx: &ReportCtx, net: &str, threads: usize) -> Result<Csv> {
+pub fn memory_breakdown(ctx: &ReportCtx, net: &str) -> Result<Csv> {
     let profile = ctx.profile(net);
-    let result = dse::run(profile, &ctx.cfg.tech, &ctx.cfg.accel, threads)?;
+    let result = dse::run(&ctx.eval, profile)?;
     let mut csv = Csv::new(&[
         "option", "op", "ded_d", "ded_w", "ded_a", "sh_d", "sh_w", "sh_a", "shared_types",
     ]);
@@ -618,16 +614,16 @@ pub fn memory_breakdown(ctx: &ReportCtx, net: &str, threads: usize) -> Result<Cs
 // --------------------------------------------------------------- E17 Fig 30
 
 /// Fig 30: the HY-PG sector ON/OFF schedule across operations.
-pub fn fig30(ctx: &ReportCtx, threads: usize) -> Result<Csv> {
+pub fn fig30(ctx: &ReportCtx) -> Result<Csv> {
     let profile = &ctx.capsnet;
-    let result = dse::run(profile, &ctx.cfg.tech, &ctx.cfg.accel, threads)?;
+    let result = dse::run(&ctx.eval, profile)?;
     let selected: std::collections::BTreeMap<String, usize> =
         result.selected.iter().cloned().collect();
     let i = *selected
         .get("HY-PG")
         .ok_or_else(|| anyhow!("DSE selected no HY-PG configuration"))?;
     let org = &result.points[i].org;
-    let report = pmu::evaluate(org, profile, &ctx.cfg.tech)?;
+    let report = pmu::evaluate(org, profile, ctx.eval.tech())?;
     let mut csv = Csv::new(&["component", "sectors", "op", "sectors_on"]);
     for sched in &report.schedules {
         for (i, op) in profile.ops.iter().enumerate() {
@@ -646,13 +642,13 @@ pub fn fig30(ctx: &ReportCtx, threads: usize) -> Result<Csv> {
 // ------------------------------------------------------------- E18 headline
 
 /// The headline claims, as one summary CSV (and returned for the CLI).
-pub fn headline(ctx: &ReportCtx, threads: usize) -> Result<Csv> {
+pub fn headline(ctx: &ReportCtx) -> Result<Csv> {
     let mut csv = Csv::new(&["metric", "paper", "ours"]);
     let p = &ctx.capsnet;
-    let tech = &ctx.cfg.tech;
+    let tech = ctx.eval.tech();
     let a = energy::version_a(p, tech)?;
     let b = energy::version_b(p, tech, dse::smp_size(p))?;
-    let result = dse::run(p, tech, &ctx.cfg.accel, threads)?;
+    let result = dse::run(&ctx.eval, p)?;
     let selected: std::collections::BTreeMap<String, usize> =
         result.selected.iter().cloned().collect();
     let pick = |name: &str| -> Result<usize> {
@@ -663,7 +659,7 @@ pub fn headline(ctx: &ReportCtx, threads: usize) -> Result<Csv> {
     };
     let sep_sys = system_with_org(p, tech, &result.points[pick("SEP")?].org, "DESCNet")?;
     let hy_sys = system_with_org(p, tech, &result.points[pick("HY-PG")?].org, "DESCNet")?;
-    let report = prefetch::analyze(p, tech, &ctx.cfg.accel);
+    let report = prefetch::analyze(p, tech, ctx.eval.accel());
 
     csv.row(vec![s("capsnet_fps"), s("116"), f(p.fps())]);
     csv.row(vec![s("deepcaps_fps"), s("9.7"), f(ctx.deepcaps.fps())]);
@@ -712,12 +708,12 @@ pub fn headline(ctx: &ReportCtx, threads: usize) -> Result<Csv> {
     // ungated baseline's latency — the "no performance loss" claim as a
     // ratio — and the absolute simulated latency must match 1/116 fps.
     let sep_ungated = ctx.table1_sep();
-    let lp_ungated = crate::sim::simulate(p, &sep_ungated, tech, &ctx.cfg.accel)?;
+    let lp_ungated = crate::sim::simulate(p, &sep_ungated, tech, ctx.eval.accel())?;
     let lp_gated = crate::sim::simulate(
         p,
         &result.points[pick("HY-PG")?].org,
         tech,
-        &ctx.cfg.accel,
+        ctx.eval.accel(),
     )?;
     csv.row(vec![
         s("sim_capsnet_latency_ms"),
@@ -746,7 +742,7 @@ pub fn headline(ctx: &ReportCtx, threads: usize) -> Result<Csv> {
 pub fn default_serving_mix(ctx: &ReportCtx) -> Result<(WorkloadSet, Vec<String>)> {
     let b4 = crate::dataflow::profile_network_batched(
         &capsnet_mnist(),
-        &ctx.cfg.accel,
+        ctx.eval.accel(),
         4,
     );
     let names = vec![
@@ -760,23 +756,19 @@ pub fn default_serving_mix(ctx: &ReportCtx) -> Result<(WorkloadSet, Vec<String>)
 
 /// Multi-network co-design DSE artifact: the weighted scatter
 /// (`dse_multi.csv`) and the selected co-designed organizations with
-/// per-network energy columns (`table_multi_selected.md`).  With
-/// `latency_budget_s`, organizations whose mix-weighted per-inference
+/// per-network energy columns (`table_multi_selected.md`).  With a latency
+/// budget in the context, organizations whose mix-weighted per-inference
 /// latency misses the budget are dropped before Pareto/selection.
 pub fn multi_dse(
     ctx: &ReportCtx,
     set: &WorkloadSet,
     names: &[String],
-    threads: usize,
-    latency_budget_s: Option<f64>,
 ) -> Result<(Csv, Table, usize, dse::stream::SweepStats)> {
     // The budget is enforced *inside* the branch-and-bound sweep (the old
-    // post-hoc retain here predated `multi::run_budgeted`): excluded
+    // post-hoc retain here predated the budgeted sweep): excluded
     // configurations never reach the archive, and an all-excluded budget
     // errors with the fastest achievable mix latency.
-    let result =
-        dse::multi::run_budgeted(set, &ctx.cfg.tech, &ctx.cfg.accel, threads, latency_budget_s)
-            .context("multi-network co-design DSE")?;
+    let result = dse::multi::run(&ctx.eval, set).context("multi-network co-design DSE")?;
     let excluded = result.excluded_by_budget;
     let pareto: std::collections::BTreeSet<usize> = result.pareto.iter().copied().collect();
     let selected: std::collections::BTreeMap<usize, String> = result
@@ -1011,15 +1003,13 @@ pub fn fleet_report(
 /// 2 CapsNet shards, JSQ, 100 req/s, 400 requests, 20 ms SLO.
 pub fn fleet_default(
     ctx: &ReportCtx,
-    threads: usize,
 ) -> Result<(Csv, Table, fleet::FleetStats, fleet::FleetStats)> {
     let opts = fleet::DesignOptions {
         shards: 2,
         slo_s: Some(20e-3),
-        threads,
         ..fleet::DesignOptions::default()
     };
-    let design = fleet::design_fleet(&ctx.cfg, &[capsnet_mnist()], &opts)?;
+    let design = fleet::design_fleet(&ctx.eval, &[capsnet_mnist()], &opts)?;
     let cfg = fleet::FleetConfig {
         slo_s: Some(20e-3),
         ..fleet::FleetConfig::default()
@@ -1028,7 +1018,7 @@ pub fn fleet_default(
 }
 
 /// Regenerate everything (the `descnet report all` entry point).
-pub fn all(ctx: &ReportCtx, threads: usize) -> Result<Vec<String>> {
+pub fn all(ctx: &ReportCtx) -> Result<Vec<String>> {
     let mut done = Vec::new();
     let mut mark = |name: &str| done.push(name.to_string());
     fig1(ctx);
@@ -1043,36 +1033,36 @@ pub fn all(ctx: &ReportCtx, threads: usize) -> Result<Vec<String>> {
     mark("fig11");
     fig12(ctx)?;
     mark("fig12");
-    dse_scatter(ctx, "capsnet", threads, None)?;
+    dse_scatter(ctx, "capsnet")?;
     mark("fig18+table1");
-    breakdowns(ctx, "capsnet", threads)?;
+    breakdowns(ctx, "capsnet")?;
     mark("fig19");
-    dse_scatter(ctx, "deepcaps", threads, None)?;
+    dse_scatter(ctx, "deepcaps")?;
     mark("fig20+table2");
-    breakdowns(ctx, "deepcaps", threads)?;
+    breakdowns(ctx, "deepcaps")?;
     mark("fig21");
-    fig22(ctx, threads)?;
+    fig22(ctx)?;
     mark("fig22");
-    whole_accelerator(ctx, "capsnet", threads)?;
+    whole_accelerator(ctx, "capsnet")?;
     mark("fig23-24");
-    whole_accelerator(ctx, "deepcaps", threads)?;
+    whole_accelerator(ctx, "deepcaps")?;
     mark("fig25-26");
-    table3(ctx, threads)?;
+    table3(ctx)?;
     mark("table3");
     fig27_28(ctx);
     mark("fig27-28");
-    memory_breakdown(ctx, "capsnet", threads)?;
+    memory_breakdown(ctx, "capsnet")?;
     mark("fig29");
-    memory_breakdown(ctx, "deepcaps", threads)?;
+    memory_breakdown(ctx, "deepcaps")?;
     mark("fig31");
-    fig30(ctx, threads)?;
+    fig30(ctx)?;
     mark("fig30");
-    headline(ctx, threads)?;
+    headline(ctx)?;
     mark("headline");
     let mix = default_serving_mix(ctx)?;
-    multi_dse(ctx, &mix.0, &mix.1, threads, None)?;
+    multi_dse(ctx, &mix.0, &mix.1)?;
     mark("dse-multi");
-    fleet_default(ctx, threads)?;
+    fleet_default(ctx)?;
     mark("fleet");
     Ok(done)
 }
@@ -1080,10 +1070,20 @@ pub fn all(ctx: &ReportCtx, threads: usize) -> Result<Vec<String>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::SystemConfig;
 
     fn ctx() -> ReportCtx {
+        ctx_with(None)
+    }
+
+    /// A 4-thread context with an optional latency budget (must be valid).
+    fn ctx_with(budget: Option<f64>) -> ReportCtx {
         let dir = std::env::temp_dir().join("descnet_report_tests");
-        ReportCtx::new(SystemConfig::default(), &dir)
+        let eval = EvalCtx::for_config(&SystemConfig::default())
+            .threads(4)
+            .latency_budget_s(budget)
+            .expect("valid latency budget");
+        ReportCtx::new(eval, &dir)
     }
 
     #[test]
@@ -1115,7 +1115,7 @@ mod tests {
     #[test]
     fn headline_metrics_present() {
         let c = ctx();
-        let text = headline(&c, 4).unwrap().to_string();
+        let text = headline(&c).unwrap().to_string();
         for metric in [
             "capsnet_fps",
             "hy_pg_total_energy_saving_vs_a",
@@ -1135,7 +1135,7 @@ mod tests {
     #[test]
     fn fig30_schedule_rows_cover_components_times_ops() {
         let c = ctx();
-        let csv = fig30(&c, 4).unwrap();
+        let csv = fig30(&c).unwrap();
         // HY-PG has 4 memories x 9 ops.
         assert_eq!(csv.len() % 9, 0);
         assert!(csv.len() >= 18);
@@ -1146,7 +1146,7 @@ mod tests {
         let c = ctx();
         let (set, names) = default_serving_mix(&c).unwrap();
         assert_eq!(names.len(), 3);
-        let (csv, table, excluded, stats) = multi_dse(&c, &set, &names, 4, None).unwrap();
+        let (csv, table, excluded, stats) = multi_dse(&c, &set, &names).unwrap();
         assert_eq!(excluded, 0);
         assert!(!csv.is_empty());
         assert_eq!(stats.evaluated + stats.pruned, stats.enumerated);
@@ -1164,7 +1164,7 @@ mod tests {
     #[test]
     fn dse_scatter_reports_latency_and_honors_budget() {
         let c = ctx();
-        let (csv, table, excluded, stats) = dse_scatter(&c, "capsnet", 4, None).unwrap();
+        let (csv, table, excluded, stats) = dse_scatter(&c, "capsnet").unwrap();
         assert_eq!(excluded, 0);
         assert!(csv.to_string().contains("latency_ms"));
         assert!(table.to_markdown().contains("Latency [ms]"));
@@ -1174,18 +1174,19 @@ mod tests {
         assert_eq!(stats.evaluated + stats.pruned, stats.enumerated);
         assert_eq!(stats.evaluated, csv.len());
         // A generous budget keeps every survivor...
-        let (loose, _, loose_excluded, _) = dse_scatter(&c, "capsnet", 4, Some(1.0)).unwrap();
+        let (loose, _, loose_excluded, _) =
+            dse_scatter(&ctx_with(Some(1.0)), "capsnet").unwrap();
         assert_eq!(loose.len(), csv.len());
         assert_eq!(loose_excluded, 0);
         // ...an impossible one errors with the fastest achievable latency.
-        let err = dse_scatter(&c, "capsnet", 4, Some(1e-9)).unwrap_err();
+        let err = dse_scatter(&ctx_with(Some(1e-9)), "capsnet").unwrap_err();
         assert!(format!("{err:#}").contains("excludes all"));
     }
 
     #[test]
     fn headline_includes_no_performance_loss_ratio() {
         let c = ctx();
-        let text = headline(&c, 4).unwrap().to_string();
+        let text = headline(&c).unwrap().to_string();
         assert!(text.contains("sim_capsnet_latency_ms"), "{text}");
         assert!(text.contains("gated_vs_ungated_latency_ratio"), "{text}");
         // The ratio row must report exactly 1 (no performance loss).

@@ -12,6 +12,7 @@
 //!   end on it.
 
 use descnet::config::{Accelerator, Technology};
+use descnet::ctx::EvalCtx;
 use descnet::dataflow::{profile_network, profile_network_batched};
 use descnet::dse;
 use descnet::dse::multi::WorkloadSet;
@@ -177,12 +178,12 @@ fn random_networks_satisfy_workload_invariants() {
 #[test]
 fn random_networks_run_through_the_full_dse_pipeline() {
     let accel = Accelerator::default();
-    let tech = Technology::default();
+    let ctx = EvalCtx::new(Technology::default(), accel.clone()).threads(4);
     for seed in [1u64, 11, 29] {
         let net = random_network(seed);
         let p = profile_network(&net, &accel);
         let res =
-            dse::run(&p, &tech, &accel, 4).unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+            dse::run(&ctx, &p).unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
         assert!(!res.points.is_empty(), "seed {seed}");
         assert!(!res.pareto.is_empty(), "seed {seed}");
         assert!(!res.selected.is_empty(), "seed {seed}");
@@ -211,11 +212,11 @@ fn three_network_codesign_acceptance() {
     // The ISSUE 2 acceptance shape: a >= 3-network workload set emits a
     // single co-designed organization with per-network energy.
     let accel = Accelerator::default();
-    let tech = Technology::default();
     let nets = [capsnet_mnist(), deepcaps_cifar10(), random_network(5)];
     let profiles = nets.iter().map(|n| profile_network(n, &accel)).collect();
     let set = WorkloadSet::new(profiles).unwrap();
-    let res = dse::multi::run(&set, &tech, &accel, 4).unwrap();
+    let ctx = EvalCtx::new(Technology::default(), accel).threads(4);
+    let res = dse::multi::run(&ctx, &set).unwrap();
     let best = res.codesigned().expect("a co-designed organization");
     let org = &res.points[best].org;
     assert_eq!(res.per_net_j[best].len(), 3);

@@ -200,6 +200,45 @@ fn fleet_unmeetable_slo_fails_cleanly() {
 }
 
 #[test]
+fn misspelled_flag_is_rejected_not_ignored() {
+    // The ISSUE 10 bugfix: `--lateny-budget` used to be silently ignored,
+    // running a full *unbudgeted* sweep instead of erroring.
+    let out = descnet(&["dse", "--net", "capsnet", "--lateny-budget", "15"]);
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", stderr(&out));
+    assert_clean_failure(&out, "unknown flag --lateny-budget");
+    // The diagnostic lists the command's known set, including the flag
+    // the user was reaching for.
+    assert!(stderr(&out).contains("--latency-budget"), "{}", stderr(&out));
+}
+
+#[test]
+fn unknown_flags_are_rejected_per_command() {
+    for (cmd, bad) in [
+        ("analyze", "--threds"),
+        ("fleet", "--polcy"),
+        ("report", "--nets"),
+        ("headline", "--out"),
+        ("serve", "--shards"),
+    ] {
+        let out = descnet(&[cmd, bad, "x"]);
+        assert_eq!(out.status.code(), Some(2), "{cmd} {bad}: {}", stderr(&out));
+        assert_clean_failure(&out, "unknown flag ");
+        assert!(
+            stderr(&out).contains("known flags:"),
+            "{cmd} {bad}: {}",
+            stderr(&out)
+        );
+    }
+}
+
+#[test]
+fn known_flags_still_parse_after_the_unknown_flag_check() {
+    // Regression guard: the rejection must not break ordinary flag use.
+    let out = descnet(&["headline", "--threads", "2"]);
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+}
+
+#[test]
 fn infeasible_latency_budget_fails_with_fastest_achievable() {
     let dir = tmp_dir("budget_impossible");
     let out = descnet(&[

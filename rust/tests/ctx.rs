@@ -1,0 +1,126 @@
+//! Integration: the unified evaluation context (ISSUE 10).
+//!
+//! `EvalCtx` is the one bundle of shared evaluation state (engine,
+//! technology, accelerator, cost-cache handle, budget) threaded through
+//! every sweep entry point.  Covered here, at the public API level:
+//!
+//! * builder defaults equal the CLI's defaults (batch 1, no latency
+//!   budget, stats off, the process-global cost cache);
+//! * invalid budgets (NaN, infinite, zero, negative) are rejected at
+//!   construction — not deep inside a sweep;
+//! * threads=1 vs threads=N bit-identity of the full `dse::run` pipeline
+//!   through the ctx path (the determinism contract of DESIGN.md
+//!   section 14, restated over the new entry points);
+//! * the context's budget flows into the sweep: a ctx-carried budget
+//!   partitions the space exactly like the old explicit-argument path.
+
+use descnet::cacti::cache;
+use descnet::config::{Accelerator, SystemConfig, Technology};
+use descnet::ctx::{Budget, EvalCtx};
+use descnet::dataflow::profile_network;
+use descnet::dse;
+use descnet::model::capsnet_mnist;
+use descnet::sim;
+
+#[test]
+fn builder_defaults_match_the_cli_defaults() {
+    let ctx = EvalCtx::new(Technology::default(), Accelerator::default());
+    assert_eq!(ctx.budget(), &Budget::default());
+    assert_eq!(ctx.budget().batch, 1, "CLI --batch default");
+    assert_eq!(ctx.budget().latency_budget_s, None, "no --latency-budget");
+    assert!(!ctx.budget().stats, "CLI --stats default");
+    assert_eq!(ctx.config(), &SystemConfig::default());
+    assert!(
+        std::ptr::eq(ctx.cache(), cache::global()),
+        "the context must hand out the process-global cost cache"
+    );
+}
+
+#[test]
+fn for_config_carries_the_loaded_config() {
+    let mut cfg = SystemConfig::default();
+    cfg.tech.wakeup_latency_s = 0.25;
+    cfg.accel.clock_hz = 123e6;
+    let ctx = EvalCtx::for_config(&cfg);
+    assert_eq!(ctx.tech(), &cfg.tech);
+    assert_eq!(ctx.accel(), &cfg.accel);
+    assert_eq!(ctx.config(), &cfg);
+}
+
+#[test]
+fn invalid_budgets_are_rejected_at_construction() {
+    let ctx = || EvalCtx::new(Technology::default(), Accelerator::default());
+    for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.0, -1.0] {
+        let err = ctx().latency_budget_s(Some(bad)).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("positive duration"),
+            "budget {bad}: {err:#}"
+        );
+    }
+    // Valid budgets construct, and `None` clears a previous budget.
+    let ok = ctx().latency_budget_s(Some(1e-3)).unwrap();
+    assert_eq!(ok.budget().latency_budget_s, Some(1e-3));
+    let cleared = ok.latency_budget_s(None).unwrap();
+    assert_eq!(cleared.budget().latency_budget_s, None);
+}
+
+#[test]
+fn knobs_set_every_budget_field() {
+    let ctx = EvalCtx::new(Technology::default(), Accelerator::default())
+        .threads(3)
+        .batch(4)
+        .stats(true)
+        .latency_budget_s(Some(0.5))
+        .unwrap();
+    assert_eq!(ctx.budget().batch, 4);
+    assert_eq!(ctx.budget().latency_budget_s, Some(0.5));
+    assert!(ctx.budget().stats);
+}
+
+#[test]
+fn dse_run_is_bit_identical_across_thread_counts_through_the_ctx() {
+    let p = profile_network(&capsnet_mnist(), &Accelerator::default());
+    let ctx = |n: usize| EvalCtx::new(Technology::default(), Accelerator::default()).threads(n);
+    let r1 = dse::run(&ctx(1), &p).unwrap();
+    for n in [2usize, 8] {
+        let rn = dse::run(&ctx(n), &p).unwrap();
+        assert_eq!(r1.points.len(), rn.points.len(), "threads={n}");
+        for (a, b) in r1.points.iter().zip(&rn.points) {
+            assert_eq!(a.org, b.org, "threads={n}");
+            assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits(), "threads={n}");
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "threads={n}");
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "threads={n}");
+        }
+        assert_eq!(r1.pareto, rn.pareto, "threads={n}");
+        assert_eq!(r1.selected, rn.selected, "threads={n}");
+    }
+}
+
+#[test]
+fn ctx_budget_flows_into_the_sweep() {
+    // A mid budget in the slow-wakeup regime (where latency varies across
+    // the space) must exclude some configurations but not all — proving
+    // the sweep reads the budget off the context, not a vestigial
+    // argument.
+    let mut tech = Technology::default();
+    tech.wakeup_latency_s = 0.5;
+    let accel = Accelerator::default();
+    let p = profile_network(&capsnet_mnist(), &accel);
+    let tl = sim::Timeline::build(&p, &tech, &accel);
+    let budget = tl.inference_latency_s() * 1.001;
+
+    let unbounded = EvalCtx::new(tech.clone(), accel.clone()).threads(2);
+    let full = dse::run(&unbounded, &p).unwrap();
+
+    let bounded = unbounded
+        .clone()
+        .latency_budget_s(Some(budget))
+        .unwrap();
+    let res = dse::run(&bounded, &p).unwrap();
+    assert!(res.excluded_by_budget > 0, "budget must exclude something");
+    assert!(
+        res.points.len() < full.points.len(),
+        "budgeted sweep must keep fewer survivors"
+    );
+    assert!(res.points.iter().all(|pt| pt.latency_s <= budget));
+}

@@ -8,6 +8,7 @@
 
 use descnet::cacti::cache;
 use descnet::config::{Accelerator, Technology};
+use descnet::ctx::EvalCtx;
 use descnet::dataflow::{profile_network, NetworkProfile};
 use descnet::dse;
 use descnet::energy;
@@ -15,7 +16,6 @@ use descnet::memory::{MemSpec, Organization};
 use descnet::model::capsnet_mnist;
 use descnet::pmu;
 use descnet::sim;
-use descnet::util::exec::Engine;
 use descnet::util::units::KIB;
 
 fn profile() -> NetworkProfile {
@@ -26,15 +26,18 @@ fn timeline(p: &NetworkProfile) -> sim::Timeline {
     sim::Timeline::build(p, &Technology::default(), &Accelerator::default())
 }
 
+fn ctx(threads: usize) -> EvalCtx {
+    EvalCtx::new(Technology::default(), Accelerator::default()).threads(threads)
+}
+
 #[test]
 fn dse_points_bit_identical_across_thread_counts() {
-    let tech = Technology::default();
     let p = profile();
     let orgs = dse::enumerate(&p).unwrap();
     let tl = timeline(&p);
-    let serial = dse::evaluate_all_on(&Engine::new(1), &orgs, &p, &tech, &tl);
+    let serial = dse::evaluate_all(&ctx(1), &orgs, &p, &tl);
     for threads in [2usize, 5] {
-        let parallel = dse::evaluate_all_on(&Engine::new(threads), &orgs, &p, &tech, &tl);
+        let parallel = dse::evaluate_all(&ctx(threads), &orgs, &p, &tl);
         assert_eq!(serial.len(), parallel.len());
         for (a, b) in serial.iter().zip(&parallel) {
             assert_eq!(a.org, b.org, "threads={threads}");
@@ -62,11 +65,9 @@ fn dse_points_bit_identical_across_thread_counts() {
 
 #[test]
 fn full_dse_pipeline_identical_across_engines() {
-    let tech = Technology::default();
     let p = profile();
-    let accel = Accelerator::default();
-    let res1 = dse::run(&p, &tech, &accel, 1).unwrap();
-    let res8 = dse::run_on(&Engine::new(8), &p, &tech, &accel).unwrap();
+    let res1 = dse::run(&ctx(1), &p).unwrap();
+    let res8 = dse::run(&ctx(8), &p).unwrap();
     assert_eq!(res1.points.len(), res8.points.len());
     assert_eq!(res1.pareto, res8.pareto);
     assert_eq!(res1.selected, res8.selected);
@@ -90,7 +91,7 @@ fn cost_cache_is_shared_by_dse_and_energy_pmu_layers() {
     let orgs = vec![org.clone()];
     let tl = timeline(&p);
     let touched_before = cache::global().hits() + cache::global().misses();
-    let points = dse::evaluate_all_on(&Engine::new(1), &orgs, &p, &tech, &tl);
+    let points = dse::evaluate_all(&ctx(1), &orgs, &p, &tl);
     let touched_after = cache::global().hits() + cache::global().misses();
     assert!(
         touched_after > touched_before,

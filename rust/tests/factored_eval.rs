@@ -20,6 +20,7 @@
 //!   (wall times are intentionally excluded from all fingerprints).
 
 use descnet::config::{Accelerator, Technology};
+use descnet::ctx::EvalCtx;
 use descnet::dataflow::{profile_network, profile_network_batched, NetworkProfile};
 use descnet::dse::{self, evaluate::SubtreeEval, stream};
 use descnet::model::{capsnet_mnist, deepcaps_cifar10, random_networks};
@@ -127,8 +128,8 @@ fn sweep_timing_split_is_sane_and_counts_stay_deterministic() {
     let tech = Technology::default();
     let accel = Accelerator::default();
     let p = profile_network(&capsnet_mnist(), &accel);
-    let r1 = dse::run(&p, &tech, &accel, 1).unwrap();
-    let r8 = dse::run(&p, &tech, &accel, 8).unwrap();
+    let r1 = dse::run(&EvalCtx::new(tech.clone(), accel.clone()).threads(1), &p).unwrap();
+    let r8 = dse::run(&EvalCtx::new(tech, accel).threads(8), &p).unwrap();
     for r in [&r1, &r8] {
         assert!(r.stats.prep_s.is_finite() && r.stats.prep_s >= 0.0);
         assert!(r.stats.eval_s.is_finite() && r.stats.eval_s >= 0.0);

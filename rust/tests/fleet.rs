@@ -14,6 +14,7 @@
 use std::path::PathBuf;
 
 use descnet::config::SystemConfig;
+use descnet::ctx::EvalCtx;
 use descnet::fleet::{
     design_fleet, simulate, DesignOptions, FleetConfig, RoutingPolicy, ShardPlan,
 };
@@ -72,15 +73,15 @@ fn golden_fleet_stats_for_pinned_seed() {
 fn fleet_pipeline_is_bit_identical_across_thread_counts() {
     let cfg = SystemConfig::default();
     let run = |threads: usize| {
+        let ctx = EvalCtx::for_config(&cfg).threads(threads);
         let opts = DesignOptions {
             shards: 2,
             batch_sizes: vec![1, 2],
             slo_s: Some(20e-3),
             flush_deadline_s: 2e-3,
             homogeneous: false,
-            threads,
         };
-        let design = design_fleet(&cfg, &[capsnet_mnist()], &opts).expect("fleet design");
+        let design = design_fleet(&ctx, &[capsnet_mnist()], &opts).expect("fleet design");
         let fcfg = FleetConfig {
             rps: 120.0,
             requests: 150,
@@ -146,16 +147,15 @@ fn codesigned_fleet_energy_beats_the_homogeneous_smp_baseline() {
     // must not spend more energy per request than the union-SMP baseline —
     // and must serve at identical latency (wakeups mask at the paper
     // constants, so the organizations cannot differ in schedule).
-    let cfg = SystemConfig::default();
+    let ctx = EvalCtx::for_config(&SystemConfig::default()).threads(4);
     let opts = DesignOptions {
         shards: 2,
         batch_sizes: vec![1, 2, 4],
         slo_s: Some(20e-3),
         flush_deadline_s: 2e-3,
         homogeneous: false,
-        threads: 4,
     };
-    let design = design_fleet(&cfg, &[capsnet_mnist()], &opts).expect("fleet design");
+    let design = design_fleet(&ctx, &[capsnet_mnist()], &opts).expect("fleet design");
 
     // Pointwise: every admitted batch is cheaper (or equal) per inference
     // on the co-designed organization.
@@ -206,7 +206,7 @@ fn codesigned_fleet_energy_beats_the_homogeneous_smp_baseline() {
 
 #[test]
 fn slo_infeasible_designs_error_with_context() {
-    let cfg = SystemConfig::default();
+    let ctx = EvalCtx::for_config(&SystemConfig::default()).threads(2);
     // DeepCaps simulates to ~103 ms/batch at batch 1: a 20 ms SLO is
     // unmeetable and must error out of the design pass, not panic or
     // silently drop the constraint.
@@ -216,9 +216,8 @@ fn slo_infeasible_designs_error_with_context() {
         slo_s: Some(20e-3),
         flush_deadline_s: 2e-3,
         homogeneous: false,
-        threads: 2,
     };
-    let err = design_fleet(&cfg, &[deepcaps_cifar10()], &opts).unwrap_err();
+    let err = design_fleet(&ctx, &[deepcaps_cifar10()], &opts).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("SLO"), "{msg}");
     assert!(msg.contains("unmeetable"), "{msg}");
@@ -226,17 +225,16 @@ fn slo_infeasible_designs_error_with_context() {
 
 #[test]
 fn homogeneous_codesign_shares_one_organization() {
-    let cfg = SystemConfig::default();
+    let ctx = EvalCtx::for_config(&SystemConfig::default()).threads(4);
     let opts = DesignOptions {
         shards: 3,
         batch_sizes: vec![1, 2],
         slo_s: None,
         flush_deadline_s: 2e-3,
         homogeneous: true,
-        threads: 4,
     };
     let design =
-        design_fleet(&cfg, &[capsnet_mnist(), deepcaps_cifar10()], &opts).expect("design");
+        design_fleet(&ctx, &[capsnet_mnist(), deepcaps_cifar10()], &opts).expect("design");
     assert_eq!(design.plans.len(), 3);
     let first = design.plans[0].org.label();
     assert!(design.plans.iter().all(|p| p.org.label() == first));

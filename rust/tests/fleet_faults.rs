@@ -18,6 +18,7 @@
 use std::path::PathBuf;
 
 use descnet::config::SystemConfig;
+use descnet::ctx::EvalCtx;
 use descnet::fleet::fault::{CrashPolicy, FaultConfig};
 use descnet::fleet::{
     design_fleet, simulate, DesignOptions, FleetConfig, RoutingPolicy, ShardPlan,
@@ -188,15 +189,15 @@ fn inert_configs_are_bit_identical_and_match_the_golden() {
 fn faulty_pipeline_is_bit_identical_across_thread_counts() {
     let cfg = SystemConfig::default();
     let run = |threads: usize| {
+        let ctx = EvalCtx::for_config(&cfg).threads(threads);
         let opts = DesignOptions {
             shards: 2,
             batch_sizes: vec![1, 2],
             slo_s: Some(20e-3),
             flush_deadline_s: 2e-3,
             homogeneous: false,
-            threads,
         };
-        let design = design_fleet(&cfg, &[capsnet_mnist()], &opts).expect("fleet design");
+        let design = design_fleet(&ctx, &[capsnet_mnist()], &opts).expect("fleet design");
         let fcfg = FleetConfig {
             rps: 120.0,
             requests: 200,

@@ -5,7 +5,7 @@
 //! * `tree_is_clean` lints the repo's own sources and asserts zero
 //!   findings — there is no baseline file, so any new violation fails this
 //!   test (and the CI step) until it is fixed or annotated with a reason;
-//! * one fixture pair per rule R1–R5: a positive fixture the rule must
+//! * one fixture pair per rule R1–R6: a positive fixture the rule must
 //!   flag, a negative fixture it must leave alone, and checks that the
 //!   `lint: allow(rule, reason)` annotation is the only working
 //!   suppression (reason mandatory, malformed allows are themselves
@@ -253,6 +253,54 @@ fn r5_unordered_fold_statement_boundary_resets() {
     let src = "let ks: Vec<_> = map.values().collect();\nlet t: f64 = ks.iter().map(|v| v.e).sum();\n";
     let f = run("energy", src);
     assert!(f.is_empty(), "findings: {f:?}");
+}
+
+// -------------------------------------------------------- R6: ctx_bypass
+
+#[test]
+fn r6_ctx_bypass_positive_in_dse() {
+    let f = run("dse::stream", "let engine = Engine::new(threads);\n");
+    assert_eq!(ids(&f), vec!["ctx_bypass"], "findings: {f:?}");
+}
+
+#[test]
+fn r6_ctx_bypass_positive_auto_in_report() {
+    let f = run("report", "let points = Engine::auto().map(&orgs, eval);\n");
+    assert_eq!(ids(&f), vec!["ctx_bypass"], "findings: {f:?}");
+}
+
+#[test]
+fn r6_ctx_bypass_negative_outside_scope() {
+    // The context layer and the engine's own module construct engines by
+    // design; so may anything outside the evaluation stack.
+    assert!(run("ctx", "self.engine = Engine::new(n);\n").is_empty());
+    assert!(run("util::exec", "let e = Engine::auto();\n").is_empty());
+    assert!(run("coordinator::server", "let e = Engine::new(2);\n").is_empty());
+}
+
+#[test]
+fn r6_ctx_bypass_negative_ctx_accessor() {
+    // Going through the context is the sanctioned path.
+    let f = run("dse", "let points = ctx.engine().map(&orgs, eval);\n");
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn r6_ctx_bypass_allow_with_reason_suppresses() {
+    let src = "// lint: allow(ctx_bypass, \"one-off probe engine, never fingerprinted\")\n\
+               let engine = Engine::new(1);\n";
+    assert!(run("fleet", src).is_empty());
+    assert_eq!(suppressed("fleet", src), 1);
+}
+
+#[test]
+fn r6_ctx_bypass_exempt_under_cfg_test() {
+    let src = "#[cfg(test)]\n\
+               mod tests {\n\
+                   #[test]\n\
+                   fn t() { let e = Engine::new(4); }\n\
+               }\n";
+    assert!(run("dse", src).is_empty());
 }
 
 // ------------------------------------------------- suppression grammar (R0)

@@ -4,6 +4,7 @@
 //! Each test cites the claim it reproduces.
 
 use descnet::config::{Accelerator, SystemConfig, Technology};
+use descnet::ctx::EvalCtx;
 use descnet::dataflow::profile_network;
 use descnet::dse;
 use descnet::energy::{self, system_with_org};
@@ -21,14 +22,17 @@ fn selected(
         .collect()
 }
 
+fn ctx8() -> EvalCtx {
+    EvalCtx::new(Technology::default(), Accelerator::default()).threads(8)
+}
+
 #[test]
 fn table_i_selected_configurations() {
     // "TABLE I: Selected memory configurations for the CapsNet": SEP =
     // 25/64/32 kiB, SMP = 108 kiB; HY shared+dedicated in the same ranges.
     let accel = Accelerator::default();
-    let tech = Technology::default();
     let p = profile_network(&capsnet_mnist(), &accel);
-    let res = dse::run(&p, &tech, &accel, 8).unwrap();
+    let res = dse::run(&ctx8(), &p).unwrap();
     let sel = selected(&res);
 
     let sep = &sel["SEP"].org;
@@ -54,9 +58,8 @@ fn table_ii_selected_configurations() {
     // "TABLE II": SEP = 256 kiB / 128 kiB / 8 MiB (our weight pool admits
     // the 108 kiB random size below 128 kiB), SMP = 8 MiB.
     let accel = Accelerator::default();
-    let tech = Technology::default();
     let p = profile_network(&deepcaps_cifar10(), &accel);
-    let res = dse::run(&p, &tech, &accel, 8).unwrap();
+    let res = dse::run(&ctx8(), &p).unwrap();
     let sel = selected(&res);
 
     let sep = &sel["SEP"].org;
@@ -72,9 +75,8 @@ fn fig18_frontier_membership() {
     // and SMP-PG are dominated" — we assert the SMP half strictly and the
     // presence of SEP/SEP-PG/HY-PG configurations on the frontier.
     let accel = Accelerator::default();
-    let tech = Technology::default();
     let p = profile_network(&capsnet_mnist(), &accel);
-    let res = dse::run(&p, &tech, &accel, 8).unwrap();
+    let res = dse::run(&ctx8(), &p).unwrap();
     let frontier_opts: std::collections::BTreeSet<String> =
         res.pareto.iter().map(|&i| res.points[i].option().to_string()).collect();
     assert!(!frontier_opts.contains("SMP"));
@@ -92,9 +94,8 @@ fn hy_pg_lowest_energy_sep_lowest_area() {
     // assertion allows a 2% tie band — recorded in EXPERIMENTS.md.
     for net in [capsnet_mnist(), deepcaps_cifar10()] {
         let accel = Accelerator::default();
-        let tech = Technology::default();
         let p = profile_network(&net, &accel);
-        let res = dse::run(&p, &tech, &accel, 8).unwrap();
+        let res = dse::run(&ctx8(), &p).unwrap();
         let sel = selected(&res);
         for (name, point) in &sel {
             assert!(
@@ -121,7 +122,7 @@ fn headline_energy_and_area_savings() {
     let p = profile_network(&capsnet_mnist(), &cfg.accel);
     let a = energy::version_a(&p, &cfg.tech).unwrap();
     let b = energy::version_b(&p, &cfg.tech, dse::smp_size(&p)).unwrap();
-    let res = dse::run(&p, &cfg.tech, &cfg.accel, 8).unwrap();
+    let res = dse::run(&EvalCtx::for_config(&cfg).threads(8), &p).unwrap();
     let sel = selected(&res);
 
     let b_saving = 1.0 - b.total_j() / a.total_j();
@@ -174,7 +175,7 @@ fn deepcaps_does_not_fit_version_a_but_fits_descnet() {
         weights as usize > 8 * MIB,
         "DeepCaps params {weights} should exceed the 8 MiB of [1]"
     );
-    let res = dse::run(&p, &tech, &accel, 8).unwrap();
+    let res = dse::run(&ctx8(), &p).unwrap();
     let sel = selected(&res);
     assert!(sel["SEP"].org.total_size() < 9 * MIB);
     assert!(prefetch::analyze(&p, &tech, &accel).no_performance_loss());
@@ -192,7 +193,7 @@ fn fig22_single_port_shared_improves_efficiency() {
 
     let best = |ports: usize| -> (f64, f64) {
         let orgs = dse::enumerate_hy_ports(&p, ports).unwrap();
-        let pts = dse::evaluate_all(&orgs, &p, &tech, &tl, 8);
+        let pts = dse::evaluate_all(&ctx8(), &orgs, &p, &tl);
         let front = dse::pareto_indices(&pts);
         let i = front
             .iter()
@@ -210,8 +211,9 @@ fn fig22_single_port_shared_improves_efficiency() {
 fn report_all_regenerates_every_artifact() {
     let dir = std::env::temp_dir().join("descnet_report_integration");
     let _ = std::fs::remove_dir_all(&dir);
-    let ctx = ReportCtx::new(SystemConfig::default(), &dir);
-    let done = report::all(&ctx, 8).unwrap();
+    let eval = EvalCtx::for_config(&SystemConfig::default()).threads(8);
+    let ctx = ReportCtx::new(eval, &dir);
+    let done = report::all(&ctx).unwrap();
     assert!(done.len() >= 19, "{done:?}");
     // Every generator produced its file.
     for file in [

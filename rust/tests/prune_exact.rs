@@ -19,12 +19,12 @@
 //! * the multi-network co-design sweep against its own exhaustive oracle.
 
 use descnet::config::{Accelerator, Technology};
+use descnet::ctx::EvalCtx;
 use descnet::dataflow::{profile_network, NetworkProfile};
 use descnet::dse::{self, multi::WorkloadSet, DsePoint};
 use descnet::memory::Organization;
 use descnet::model::{capsnet_mnist, deepcaps_cifar10, random_networks};
 use descnet::sim;
-use descnet::util::exec::Engine;
 
 /// Frontier as *values* (org + bit patterns), independent of how the two
 /// pipelines index their point vectors.
@@ -56,24 +56,21 @@ fn selection_values(
 
 /// The exhaustive pipeline the branch-and-bound sweep replaced.
 fn exhaustive(
+    ctx: &EvalCtx,
     p: &NetworkProfile,
-    tech: &Technology,
-    accel: &Accelerator,
-    threads: usize,
 ) -> (Vec<DsePoint>, Vec<usize>, Vec<(String, usize)>) {
     let orgs = dse::enumerate(p).expect("enumeration");
-    let tl = sim::Timeline::build(p, tech, accel);
-    let points = dse::evaluate_all(&orgs, p, tech, &tl, threads);
+    let tl = sim::Timeline::build(p, ctx.tech(), ctx.accel());
+    let points = dse::evaluate_all(ctx, &orgs, p, &tl);
     let pareto = dse::pareto_indices(&points);
     let selected = dse::select_per_option(&points);
     (points, pareto, selected)
 }
 
 fn assert_pruned_matches_exhaustive(p: &NetworkProfile, label: &str) {
-    let tech = Technology::default();
-    let accel = Accelerator::default();
-    let res = dse::run(p, &tech, &accel, 8).expect("pruned sweep");
-    let (all, pareto, selected) = exhaustive(p, &tech, &accel, 8);
+    let ctx = EvalCtx::new(Technology::default(), Accelerator::default()).threads(8);
+    let res = dse::run(&ctx, p).expect("pruned sweep");
+    let (all, pareto, selected) = exhaustive(&ctx, p);
 
     // Counter reconciliation: every enumerated candidate is either culled
     // by the bound or evaluated, and the survivors are exactly `points`.
@@ -104,7 +101,8 @@ fn capsnet_pruned_sweep_is_bit_identical_and_actually_prunes() {
     let p = profile_network(&capsnet_mnist(), &Accelerator::default());
     assert_pruned_matches_exhaustive(&p, "capsnet");
     // Effectiveness: the bound must cull a nonzero fraction of the space.
-    let res = dse::run(&p, &Technology::default(), &Accelerator::default(), 8).unwrap();
+    let ctx = EvalCtx::new(Technology::default(), Accelerator::default()).threads(8);
+    let res = dse::run(&ctx, &p).unwrap();
     assert!(res.stats.pruned > 0, "no candidates pruned on capsnet");
     assert!(res.stats.subtrees_pruned > 0, "no whole subtree pruned on capsnet");
     assert!(res.stats.archive_inserts >= res.stats.archive_len);
@@ -131,8 +129,8 @@ fn pruned_sweep_is_deterministic_across_thread_counts() {
     let tech = Technology::default();
     let accel = Accelerator::default();
     let p = profile_network(&capsnet_mnist(), &accel);
-    let r1 = dse::run(&p, &tech, &accel, 1).unwrap();
-    let r8 = dse::run(&p, &tech, &accel, 8).unwrap();
+    let r1 = dse::run(&EvalCtx::new(tech.clone(), accel.clone()).threads(1), &p).unwrap();
+    let r8 = dse::run(&EvalCtx::new(tech, accel).threads(8), &p).unwrap();
     assert_eq!(r1.points.len(), r8.points.len());
     for (a, b) in r1.points.iter().zip(&r8.points) {
         assert_eq!(a.org, b.org);
@@ -176,13 +174,16 @@ fn budgeted_sweep_matches_filtered_exhaustive_when_latency_varies() {
     // excludes every org with exposed wakeups.
     let budget = tl.inference_latency_s() * 1.001;
 
-    let engine = Engine::new(8);
-    let res = dse::run_budgeted(&engine, &p, &tech, &accel, Some(budget)).expect("budgeted sweep");
+    let ctx = EvalCtx::new(tech, accel)
+        .threads(8)
+        .latency_budget_s(Some(budget))
+        .expect("valid latency budget");
+    let res = dse::run(&ctx, &p).expect("budgeted sweep");
 
     // Oracle: exhaustive evaluation, then the budget filter, then
     // Pareto/selection over the kept points.
     let orgs = dse::enumerate(&p).unwrap();
-    let all = dse::evaluate_all(&orgs, &p, &tech, &tl, 8);
+    let all = dse::evaluate_all(&ctx, &orgs, &p, &tl);
     let kept: Vec<DsePoint> = all
         .iter()
         .filter(|pt| pt.latency_s <= budget)
@@ -213,11 +214,12 @@ fn multi_network_pruned_sweep_is_bit_identical() {
     let profiles: Vec<_> = nets.iter().map(|n| profile_network(n, &accel)).collect();
     let set = WorkloadSet::new(profiles).unwrap();
 
-    let res = dse::multi::run(&set, &tech, &accel, 8).expect("pruned co-design sweep");
+    let ctx = EvalCtx::new(tech, accel).threads(8);
+    let res = dse::multi::run(&ctx, &set).expect("pruned co-design sweep");
 
     let orgs = dse::multi::enumerate(&set).unwrap();
-    let tls = dse::multi::timelines(&set, &tech, &accel);
-    let (all, _, _) = dse::multi::evaluate_all_on(&Engine::new(8), &orgs, &set, &tech, &tls);
+    let tls = dse::multi::timelines(&ctx, &set);
+    let (all, _, _) = dse::multi::evaluate_all(&ctx, &orgs, &set, &tls);
     let pareto = dse::pareto_indices(&all);
     let selected = dse::select_per_option(&all);
 

@@ -6,12 +6,12 @@
 //! increase dma-stall cycles; batching never shrinks batch latency).
 
 use descnet::config::{Accelerator, Technology};
+use descnet::ctx::EvalCtx;
 use descnet::dataflow::{profile_network, profile_network_batched, NetworkProfile};
 use descnet::dse;
 use descnet::memory::{MemSpec, Organization};
 use descnet::model::{capsnet_mnist, deepcaps_cifar10};
 use descnet::sim::{simulate, Bound, Timeline};
-use descnet::util::exec::Engine;
 use descnet::util::units::KIB;
 
 fn capsnet() -> NetworkProfile {
@@ -101,13 +101,8 @@ fn golden_no_performance_loss_gated_vs_ungated() {
     );
     // And the gated design really does save energy at that equal latency.
     let tl = Timeline::build(&p, &tech, &accel);
-    let points = dse::evaluate_all_on(
-        &Engine::new(2),
-        &[table1_sep(), table1_hy_pg()],
-        &p,
-        &tech,
-        &tl,
-    );
+    let ctx = EvalCtx::new(tech, accel).threads(2);
+    let points = dse::evaluate_all(&ctx, &[table1_sep(), table1_hy_pg()], &p, &tl);
     assert!(points[1].energy_j < points[0].energy_j);
     assert_eq!(points[1].latency_s.to_bits(), points[0].latency_s.to_bits());
 }
@@ -200,7 +195,11 @@ fn budgeted_dse_selects_gated_design_at_ungated_latency() {
     let p = capsnet();
     let tl = Timeline::build(&p, &tech, &accel);
     let budget = tl.inference_latency_s() * 1.05;
-    let res = dse::run_budgeted(&Engine::new(4), &p, &tech, &accel, Some(budget)).unwrap();
+    let ctx = EvalCtx::new(tech, accel)
+        .threads(4)
+        .latency_budget_s(Some(budget))
+        .expect("valid latency budget");
+    let res = dse::run(&ctx, &p).unwrap();
     assert_eq!(res.excluded_by_budget, 0);
     let sel: std::collections::BTreeMap<_, _> = res.selected.iter().cloned().collect();
     let hy_pg = &res.points[sel["HY-PG"]];
@@ -216,7 +215,10 @@ fn budgeted_dse_selects_gated_design_at_ungated_latency() {
         );
     }
     // A budget below the simulated latency excludes everything.
-    let err =
-        dse::run_budgeted(&Engine::new(4), &p, &tech, &accel, Some(budget / 1e6)).unwrap_err();
+    let tight = ctx
+        .clone()
+        .latency_budget_s(Some(budget / 1e6))
+        .expect("valid latency budget");
+    let err = dse::run(&tight, &p).unwrap_err();
     assert!(format!("{err:#}").contains("excludes all"));
 }

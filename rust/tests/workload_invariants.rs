@@ -5,6 +5,7 @@
 
 use descnet::cacti::{Sram, SramConfig};
 use descnet::config::{Accelerator, Technology};
+use descnet::ctx::EvalCtx;
 use descnet::dataflow::profile_network;
 use descnet::dse;
 use descnet::energy;
@@ -168,6 +169,7 @@ fn prop_dse_selection_is_lowest_energy_per_option() {
     let tech = Technology::default();
     let orgs = dse::enumerate(&profile).unwrap();
     let tl = sim::Timeline::build(&profile, &tech, &accel);
+    let ctx = EvalCtx::new(tech, accel).threads(4);
     check("dse-selection", 3, |rng| {
         // Random subsample of the enumeration, selection must be minimal.
         let mut subset = Vec::new();
@@ -179,7 +181,7 @@ fn prop_dse_selection_is_lowest_energy_per_option() {
         if subset.is_empty() {
             return Ok(());
         }
-        let points = dse::evaluate_all(&subset, &profile, &tech, &tl, 4);
+        let points = dse::evaluate_all(&ctx, &subset, &profile, &tl);
         for (option, idx) in dse::select_per_option(&points) {
             for p in &points {
                 if p.option().label() == option {
@@ -201,7 +203,8 @@ fn prop_pareto_frontier_sound_and_complete() {
     let tech = Technology::default();
     let tl = sim::Timeline::build(&profile, &tech, &accel);
     let orgs: Vec<_> = dse::enumerate(&profile).unwrap().into_iter().take(600).collect();
-    let points = dse::evaluate_all(&orgs, &profile, &tech, &tl, 4);
+    let ctx = EvalCtx::new(tech, accel).threads(4);
+    let points = dse::evaluate_all(&ctx, &orgs, &profile, &tl);
     let front: std::collections::BTreeSet<usize> =
         dse::pareto_indices(&points).into_iter().collect();
     // Soundness: no frontier member dominated. Completeness: every
